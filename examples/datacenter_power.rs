@@ -1,0 +1,42 @@
+//! Datacenter scenario (Fig. 6): the full benchmark suite under the two
+//! deployment corners the paper evaluates — a mid-size still-air device at
+//! 40 °C (θ_JA = 12 °C/W) and a high-end forced-air device at 65 °C
+//! (θ_JA = 2 °C/W). Reports per-benchmark optimal rails and the
+//! activity-dependent power-saving range.
+//!
+//! Pass `--full` for full placer effort and the complete 10-benchmark suite
+//! (several minutes); the default quick mode runs the small/medium set.
+
+use thermovolt::config::Config;
+use thermovolt::flow::Effort;
+use thermovolt::report;
+use thermovolt::synth::benchmark_names;
+
+fn main() -> anyhow::Result<()> {
+    let full = std::env::args().any(|a| a == "--full");
+    let effort = if full { Effort::Full } else { Effort::Quick };
+    let names: Vec<&str> = if full {
+        benchmark_names()
+    } else {
+        benchmark_names()
+            .into_iter()
+            .filter(|n| !matches!(*n, "mcml" | "bgm" | "LU8PEEng"))
+            .collect()
+    };
+    let cfg = Config::new();
+    let out = std::path::Path::new("results");
+
+    let a = report::fig6(&cfg, effort, 40.0, 12.0, &names)?;
+    a.emit(out, "example_fig6a")?;
+    let b = report::fig6(&cfg, effort, 65.0, 2.0, &names)?;
+    b.emit(out, "example_fig6b")?;
+
+    let avg_a = a.rows.last().unwrap();
+    let avg_b = b.rows.last().unwrap();
+    println!("paper Fig. 6: avg 28.3–36.0 % @40 °C, 20.0–25.0 % @65 °C");
+    println!(
+        "ours:         avg {}–{} % @40 °C, {}–{} % @65 °C",
+        avg_a[3], avg_a[4], avg_b[3], avg_b[4]
+    );
+    Ok(())
+}

@@ -1,0 +1,98 @@
+//! END-TO-END driver (DESIGN.md §5): the full system on a real small
+//! workload, proving all layers compose:
+//!
+//!   L3 rust: synthesize → pack → place → route → activities → STA
+//!   RT  pjrt: thermal steady-state via the AOT Pallas/JAX artifact
+//!   L3 rust: Algorithm 1 voltage selection to the thermal fixed point
+//!   RT  pjrt: LeNet + HD inference with flow-derived error injection
+//!
+//! Prints the paper's headline metric (average iso-performance power
+//! saving) plus the over-scaling accuracy checkpoints, and appends a
+//! machine-readable summary to results/e2e_summary.csv. Quick mode runs the
+//! small/medium benchmarks; `--full` runs all ten with full placer effort.
+
+use std::time::Instant;
+use thermovolt::config::Config;
+use thermovolt::flow::{alg1, overscale, Design, Effort};
+use thermovolt::ml::{HdWorkload, LenetWorkload};
+use thermovolt::report;
+use thermovolt::runtime::{select_backend, Runtime};
+use thermovolt::sim::ml_error_rates;
+use thermovolt::synth::{self, benchmark_names};
+
+fn main() -> anyhow::Result<()> {
+    let full = std::env::args().any(|a| a == "--full");
+    let effort = if full { Effort::Full } else { Effort::Quick };
+    let t0 = Instant::now();
+    let mut cfg = Config::new();
+    cfg.flow.t_amb = 40.0;
+    cfg.thermal.theta_ja = 12.0;
+
+    // ---- phase 1: the headline Fig. 6(a) sweep on the PJRT hot path ----
+    let names: Vec<&str> = if full {
+        benchmark_names()
+    } else {
+        benchmark_names()
+            .into_iter()
+            .filter(|n| !matches!(*n, "mcml" | "bgm" | "LU8PEEng"))
+            .collect()
+    };
+    println!("== phase 1: thermal-aware voltage scaling over {} benchmarks ==", names.len());
+    let t = report::fig6(&cfg, effort, 40.0, 12.0, &names)?;
+    println!("{}", t.render());
+    let avg = t.rows.last().unwrap().clone();
+
+    // ---- phase 2: ML over-scaling through the AOT executables ----
+    println!("== phase 2: over-scaling the ML accelerators ==");
+    let lenet_profile = synth::lenet_accel();
+    let hd_profile = synth::hd_accel();
+    let lenet_design =
+        Design::from_netlist(synth::generate(&lenet_profile), &lenet_profile, &cfg, effort)?;
+    let hd_design = Design::from_netlist(synth::generate(&hd_profile), &hd_profile, &cfg, effort)?;
+    let mut rt = Runtime::new(&cfg.artifacts_dir)?;
+    let lenet = LenetWorkload::load(&cfg.artifacts_dir)?;
+    let hd = HdWorkload::load(&cfg.artifacts_dir)?;
+    let mut bl = select_backend(&cfg.artifacts_dir, lenet_design.dev.rows, lenet_design.dev.cols, &cfg.thermal);
+    let mut bh = select_backend(&cfg.artifacts_dir, hd_design.dev.rows, hd_design.dev.cols, &cfg.thermal);
+    let base_l = alg1::baseline(&lenet_design, &cfg, bl.as_mut());
+    let base_h = alg1::baseline(&hd_design, &cfg, bh.as_mut());
+    let mut rows = Vec::new();
+    for rate in [1.0, 1.35] {
+        let ol = overscale::overscale(&lenet_design, &cfg, bl.as_mut(), rate);
+        let oh = overscale::overscale(&hd_design, &cfg, bh.as_mut(), rate);
+        let rl = ml_error_rates(&lenet_design, &ol.alg1, &ol.error);
+        let rh = ml_error_rates(&hd_design, &oh.alg1, &oh.error);
+        let acc_l = lenet.accuracy(&mut rt, rl.mac_rate, 0xE2E)?;
+        let acc_h = hd.accuracy(&mut rt, rh.fabric_rate, 0xE2F)?;
+        println!(
+            "rate {rate:.2}: lenet saving {:.1} % acc {:.1} %   hd saving {:.1} % acc {:.1} %",
+            (1.0 - ol.alg1.power / base_l.power) * 100.0,
+            acc_l * 100.0,
+            (1.0 - oh.alg1.power / base_h.power) * 100.0,
+            acc_h * 100.0,
+        );
+        rows.push((rate, acc_l, acc_h));
+    }
+
+    // ---- summary ----
+    let elapsed = t0.elapsed().as_secs_f64();
+    println!("\n== e2e summary ({elapsed:.1} s wall) ==");
+    println!(
+        "HEADLINE: avg power saving @40 C = {}–{} %   (paper: 28.3–36.0 %)",
+        avg[3], avg[4]
+    );
+    println!(
+        "LeNet clean {:.1} %, HD clean {:.1} % (trained at build time in jax)",
+        lenet.clean_acc * 100.0,
+        hd.clean_acc * 100.0
+    );
+    std::fs::create_dir_all("results")?;
+    let mut csv = String::from("metric,lo,hi\n");
+    csv.push_str(&format!("avg_saving_40C_pct,{},{}\n", avg[3], avg[4]));
+    for (rate, a, h) in rows {
+        csv.push_str(&format!("acc_at_{rate}x,lenet={a:.4},hd={h:.4}\n"));
+    }
+    std::fs::write("results/e2e_summary.csv", csv)?;
+    println!("summary written to results/e2e_summary.csv");
+    Ok(())
+}

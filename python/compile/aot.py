@@ -1,0 +1,333 @@
+"""AOT pipeline: lower every L2 graph to HLO text, train the ML workloads,
+and emit the data artifacts the rust runtime loads.
+
+Run once by ``make artifacts``:
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Outputs (all under artifacts/):
+    thermal.hlo.txt           steady-state thermal solve (600 SOR sweeps)
+    thermal_feedback.hlo.txt  fused leakage-feedback solve
+    lenet.hlo.txt             error-injected LeNet forward pass (B=256)
+    hd.hlo.txt                error-injected HD associative search (B=256)
+    lenet_data.bin            trained weights + test set (TVTENS1 format)
+    hd_data.bin               prototypes + encoded test set + labels
+    MANIFEST.txt              shapes and build metadata
+
+HLO *text* is the interchange format (not serialized protos): jax ≥ 0.5
+emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import os
+import struct
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+# ------------------------------------------------------------- lowering --
+
+def to_hlo_text(fn, *args):
+    lowered = jax.jit(fn).lower(*args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# ------------------------------------------------------ tensor container --
+
+MAGIC = b"TVTENS1\n"
+
+
+def write_tensors(path, tensors):
+    """tensors: list of (name, np.ndarray float32/int32)."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors:
+            arr = np.ascontiguousarray(arr)
+            if arr.dtype == np.float64:
+                arr = arr.astype(np.float32)
+            if arr.dtype == np.int64:
+                arr = arr.astype(np.int32)
+            assert arr.dtype in (np.float32, np.int32), arr.dtype
+            nb = name.encode()
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(struct.pack("<B", 0 if arr.dtype == np.float32 else 1))
+            f.write(arr.tobytes())
+
+
+# ------------------------------------------------------ synthetic digits --
+
+GLYPHS = [
+    "111101101101111",  # 0
+    "010110010010111",  # 1
+    "111001111100111",  # 2
+    "111001111001111",  # 3
+    "101101111001001",  # 4
+    "111100111001111",  # 5
+    "111100111101111",  # 6
+    "111001010010010",  # 7
+    "111101111101111",  # 8
+    "111101111001111",  # 9
+]
+
+
+def glyph_bitmap(digit):
+    g = GLYPHS[digit]
+    bm = np.array([int(c) for c in g], dtype=np.float32).reshape(5, 3)
+    return np.kron(bm, np.ones((2, 2), dtype=np.float32))  # 10×6
+
+
+def make_digits(n, rng):
+    """Synthetic glyph-digit dataset: shifted, intensity-jittered, noisy."""
+    xs = np.zeros((n, model.IMG, model.IMG), dtype=np.float32)
+    ys = rng.integers(0, 10, size=n).astype(np.int32)
+    for i in range(n):
+        bm = glyph_bitmap(ys[i])
+        dy = rng.integers(0, model.IMG - 10 + 1)
+        dx = rng.integers(0, model.IMG - 6 + 1)
+        canvas = np.zeros((model.IMG, model.IMG), dtype=np.float32)
+        canvas[dy : dy + 10, dx : dx + 6] = bm * rng.uniform(0.7, 1.0)
+        canvas += rng.normal(0, 0.15, canvas.shape).astype(np.float32)
+        xs[i] = np.clip(canvas, 0.0, 1.0)
+    return xs.reshape(n, -1), ys
+
+
+# -------------------------------------------------------- lenet training --
+
+def lenet_forward_plain(x, weights):
+    """Pure-jnp twin of model.lenet_infer (no pallas) for fast training."""
+    w1, b1, w2, b2, w3, b3, w4, b4 = weights
+    b = x.shape[0]
+    img = x.reshape(b, model.IMG, model.IMG, 1)
+    col1, oh1, ow1 = model._im2col(img, 3)
+    y1 = jax.nn.relu(col1.reshape(b * oh1 * ow1, 9) @ w1)
+    y1 = y1.reshape(b, oh1, ow1, model.C1) + b1
+    p1 = model._maxpool2(jax.nn.relu(y1))
+    col2, oh2, ow2 = model._im2col(p1, 3)
+    y2 = jax.nn.relu(
+        (col2.reshape(b * oh2 * ow2, 9 * model.C1) @ w2).reshape(
+            b, oh2, ow2, model.C2
+        )
+        + b2
+    )
+    flat = y2.reshape(b, oh2 * ow2 * model.C2)
+    y3 = jax.nn.relu(flat @ w3 + b3)
+    return y3 @ w4 + b4
+
+
+def lenet_activation_scales(weights, x):
+    """Per-layer output std — the rust coordinator sets the timing-error
+    corruption magnitude as an MSB-weight multiple of these."""
+    w1, b1, w2, b2, w3, b3, w4, b4 = weights
+    b = x.shape[0]
+    img = x.reshape(b, model.IMG, model.IMG, 1)
+    col1, oh1, ow1 = model._im2col(img, 3)
+    y1 = col1.reshape(b * oh1 * ow1, 9) @ w1
+    s1 = float(jnp.std(y1))
+    p1 = model._maxpool2(jax.nn.relu(y1.reshape(b, oh1, ow1, model.C1) + b1))
+    col2, oh2, ow2 = model._im2col(p1, 3)
+    y2 = col2.reshape(b * oh2 * ow2, 9 * model.C1) @ w2
+    s2 = float(jnp.std(y2))
+    f = jax.nn.relu(y2.reshape(b, oh2, ow2, model.C2) + b2).reshape(b, -1)
+    y3 = f @ w3
+    s3 = float(jnp.std(y3))
+    y4 = jax.nn.relu(y3 + b3) @ w4
+    s4 = float(jnp.std(y4))
+    return np.asarray([s1, s2, s3, s4], dtype=np.float32)
+
+
+def train_lenet(seed=0, steps=400, lr=0.08):
+    rng = np.random.default_rng(seed)
+    xtr, ytr = make_digits(8192, rng)
+    xte, yte = make_digits(1024, rng)
+    weights = model.lenet_init(jax.random.PRNGKey(seed))
+
+    def loss_fn(w, xb, yb):
+        logits = lenet_forward_plain(xb, w)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(logp[jnp.arange(xb.shape[0]), yb])
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+
+    @jax.jit
+    def sgd(w, g):
+        return tuple(wi - lr * gi for wi, gi in zip(w, g))
+
+    bs = 256
+    losses = []
+    for step in range(steps):
+        i0 = (step * bs) % (xtr.shape[0] - bs)
+        xb, yb = xtr[i0 : i0 + bs], ytr[i0 : i0 + bs]
+        loss, g = grad_fn(weights, xb, yb)
+        weights = sgd(weights, g)
+        losses.append(float(loss))
+
+    logits = jax.jit(lenet_forward_plain)(xte, weights)
+    acc = float(np.mean(np.argmax(np.asarray(logits), axis=1) == yte))
+    return weights, (xte, yte), acc, losses
+
+
+# --------------------------------------------------------------- hd data --
+
+def build_hd(seed=1):
+    rng = np.random.default_rng(seed)
+    feat_dim = 64
+    # two-class gaussian mixture (face / non-face proxy; DESIGN.md §3)
+    mu = rng.normal(0, 1.0, feat_dim).astype(np.float32)
+    mu /= np.linalg.norm(mu)
+    sep = 1.9
+    xtr = rng.normal(0, 1.0, (2000, feat_dim)).astype(np.float32)
+    ytr = rng.integers(0, 2, 2000).astype(np.int32)
+    xtr += np.where(ytr[:, None] == 1, sep * mu, -sep * mu)
+    xte = rng.normal(0, 1.0, (model.HD_BATCH * 4, feat_dim)).astype(np.float32)
+    yte = rng.integers(0, 2, model.HD_BATCH * 4).astype(np.int32)
+    xte += np.where(yte[:, None] == 1, sep * mu, -sep * mu)
+
+    projection = rng.normal(0, 1.0, (feat_dim, model.HD_DIM)).astype(np.float32)
+    enc = lambda x: np.sign(x @ projection + 1e-9).astype(np.float32)
+    etr = enc(xtr)
+    prototypes = np.stack(
+        [np.sign(etr[ytr == c].sum(axis=0) + 1e-9) for c in (0, 1)]
+    ).astype(np.float32)
+    ete = enc(xte)
+    clean_pred = np.argmax(ete @ prototypes.T, axis=1)
+    acc = float(np.mean(clean_pred == yte))
+    return prototypes, ete, yte, acc
+
+
+# ------------------------------------------------------------------ main --
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifacts dir")
+    ap.add_argument("--skip-ml", action="store_true", help="thermal only")
+    args = ap.parse_args()
+    out = args.out
+    os.makedirs(out, exist_ok=True)
+    manifest = []
+
+    g = model.GRID
+    # ---- thermal ----
+    hlo = to_hlo_text(
+        model.thermal_solve,
+        spec((g, g)),
+        spec((g, g)),
+        spec((g, g)),
+        spec((4,)),
+    )
+    with open(f"{out}/thermal.hlo.txt", "w") as f:
+        f.write(hlo)
+    manifest.append(f"thermal.hlo.txt: (t0[{g},{g}], p[{g},{g}], mask[{g},{g}], params[4]) -> T  [{model.N_SWEEPS} sweeps]")
+    print("wrote thermal.hlo.txt", len(hlo))
+
+    hlo = to_hlo_text(
+        model.thermal_solve_feedback,
+        spec((g, g)),
+        spec((g, g)),
+        spec((g, g)),
+        spec((g, g)),
+        spec((5,)),
+    )
+    with open(f"{out}/thermal_feedback.hlo.txt", "w") as f:
+        f.write(hlo)
+    manifest.append(
+        f"thermal_feedback.hlo.txt: (t0, p_dyn, lkg25, mask, params[5]) -> T  "
+        f"[{model.FEEDBACK_ROUNDS}×{model.SWEEPS_PER_ROUND} sweeps]"
+    )
+    print("wrote thermal_feedback.hlo.txt", len(hlo))
+
+    if not args.skip_ml:
+        # ---- lenet ----
+        b = model.LENET_BATCH
+        weights, (xte, yte), acc, losses = train_lenet()
+        print(f"lenet synthetic-digit test accuracy: {acc:.4f}")
+        assert acc > 0.9, "lenet failed to train"
+        wspecs = tuple(spec(np.asarray(w).shape) for w in weights)
+        mspecs = (
+            spec((b * 100, model.C1)),
+            spec((b * 9, model.C2)),
+            spec((b, model.FC1)),
+            spec((b, model.CLASSES)),
+        )
+        hlo = to_hlo_text(
+            lambda x, *rest: model.lenet_infer(
+                x, rest[:8], rest[8:12], rest[12]
+            ),
+            spec((b, model.IMG * model.IMG)),
+            *wspecs,
+            *mspecs,
+            spec((4,)),
+        )
+        with open(f"{out}/lenet.hlo.txt", "w") as f:
+            f.write(hlo)
+        manifest.append(
+            f"lenet.hlo.txt: (x[{b},144], w*8, m*4, mags[4]) -> logits[{b},10]"
+        )
+        print("wrote lenet.hlo.txt", len(hlo))
+        tensors = [
+            (f"w{i}", np.asarray(w)) for i, w in enumerate(weights)
+        ]
+        scales = lenet_activation_scales(weights, jnp.asarray(xte[:256]))
+        tensors += [
+            ("x_test", xte.astype(np.float32)),
+            ("y_test", yte.astype(np.int32)),
+            ("clean_acc", np.asarray([acc], dtype=np.float32)),
+            ("loss_curve", np.asarray(losses, dtype=np.float32)),
+            ("act_scales", scales),
+        ]
+        write_tensors(f"{out}/lenet_data.bin", tensors)
+        manifest.append(f"lenet_data.bin: weights + {xte.shape[0]} test images (clean acc {acc:.4f})")
+
+        # ---- hd ----
+        prototypes, ete, yte_hd, hd_acc = build_hd()
+        print(f"hd synthetic face/non-face accuracy: {hd_acc:.4f}")
+        assert hd_acc > 0.9, "hd failed to train"
+        hlo = to_hlo_text(
+            model.hd_infer,
+            spec((model.HD_BATCH, model.HD_DIM)),
+            spec((model.HD_CLASSES, model.HD_DIM)),
+            spec((model.HD_BATCH, model.HD_DIM)),
+        )
+        with open(f"{out}/hd.hlo.txt", "w") as f:
+            f.write(hlo)
+        manifest.append(
+            f"hd.hlo.txt: (q[{model.HD_BATCH},{model.HD_DIM}], protos, mask) -> sims"
+        )
+        print("wrote hd.hlo.txt", len(hlo))
+        write_tensors(
+            f"{out}/hd_data.bin",
+            [
+                ("prototypes", prototypes),
+                ("q_test", ete),
+                ("y_test", yte_hd),
+                ("clean_acc", np.asarray([hd_acc], dtype=np.float32)),
+            ],
+        )
+        manifest.append(f"hd_data.bin: prototypes + {ete.shape[0]} encoded queries (clean acc {hd_acc:.4f})")
+
+    with open(f"{out}/MANIFEST.txt", "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print("AOT done.")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

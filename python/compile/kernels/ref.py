@@ -1,0 +1,87 @@
+"""Pure-jnp / numpy oracles for the Pallas kernels.
+
+Everything here is straight-line reference code used only by pytest: the
+SOR sweep re-implemented without pallas, a dense direct solve of the thermal
+system for small grids, the systolic matmul + corruption mask, and the HD
+associative search.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------- thermal --
+
+def sor_sweep_ref(t, p, mask, g_v, g_l, t_amb, omega):
+    """One red+black SOR sweep, plain jnp (mirrors kernels.thermal)."""
+    rows, cols = t.shape
+    rr = jnp.arange(rows)[:, None]
+    cc = jnp.arange(cols)[None, :]
+    checker = (rr + cc) % 2
+    for parity in (0, 1):
+        tm = t * mask
+        nsum = (
+            jnp.pad(tm[:-1, :], ((1, 0), (0, 0)))
+            + jnp.pad(tm[1:, :], ((0, 1), (0, 0)))
+            + jnp.pad(tm[:, :-1], ((0, 0), (1, 0)))
+            + jnp.pad(tm[:, 1:], ((0, 0), (0, 1)))
+        )
+        deg = (
+            jnp.pad(mask[:-1, :], ((1, 0), (0, 0)))
+            + jnp.pad(mask[1:, :], ((0, 1), (0, 0)))
+            + jnp.pad(mask[:, :-1], ((0, 0), (1, 0)))
+            + jnp.pad(mask[:, 1:], ((0, 0), (0, 1)))
+        )
+        gauss = (p + g_v * t_amb + g_l * nsum) / (g_v + g_l * deg)
+        t_new = t + omega * (gauss - t)
+        update = (checker == parity) & (mask > 0.5)
+        t = jnp.where(update, t_new, t)
+    return t
+
+
+def dense_solve_ref(p, g_v, g_l, t_amb):
+    """Direct dense solve of the steady-state system on a full (unmasked)
+    rows×cols grid. Ground truth for small grids."""
+    rows, cols = p.shape
+    n = rows * cols
+    a = np.zeros((n, n))
+    b = np.asarray(p, dtype=np.float64).reshape(-1) + g_v * t_amb
+
+    def idx(r, c):
+        return r * cols + c
+
+    for r in range(rows):
+        for c in range(cols):
+            i = idx(r, c)
+            deg = 0
+            for nr, nc in ((r - 1, c), (r + 1, c), (r, c - 1), (r, c + 1)):
+                if 0 <= nr < rows and 0 <= nc < cols:
+                    a[i, idx(nr, nc)] -= g_l
+                    deg += 1
+            a[i, i] = g_v + g_l * deg
+    return np.linalg.solve(a, b).reshape(rows, cols)
+
+
+def power_update_ref(p_dyn, lkg25, t, kappa):
+    return p_dyn + lkg25 * jnp.exp(kappa * (t - 25.0))
+
+
+# ---------------------------------------------------------------- systolic --
+
+def corrupt_matmul_ref(x, w, flip_mask, magnitude):
+    """Reference for the error-injected systolic matmul: y = x @ w, then
+    outputs flagged by flip_mask get a signed perturbation of `magnitude`
+    (timing-error model: an MSB-weighted bit caught mid-transition)."""
+    y = x @ w
+    return jnp.where(flip_mask > 0.5, y + magnitude * jnp.sign(y + 1e-30), y)
+
+
+# ---------------------------------------------------------------------- hd --
+
+def hd_infer_ref(queries, prototypes, flip_mask):
+    """Reference HD associative search: bipolar queries (B, D) against class
+    prototypes (C, D); flip_mask (B, D) in {0,1} flips query bits (voltage
+    over-scaling bit errors). Returns argmax class per query."""
+    q = queries * (1.0 - 2.0 * flip_mask)
+    sims = q @ prototypes.T
+    return jnp.argmax(sims, axis=1)

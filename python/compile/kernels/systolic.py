@@ -1,0 +1,42 @@
+"""L1 Pallas kernel: tiled systolic matmul with timing-error injection.
+
+The paper's over-scaling study maps LeNet onto a systolic-array accelerator
+[48] and injects timing-violation errors. On TPU the systolic array *is* the
+MXU, so the faithful mapping is: im2col'd conv tiles as matmuls feeding the
+MXU, with the per-PE timing-error model applied as a corruption mask on the
+output tile in VMEM (a violated MAC latches a stale/metastable MSB, modeled
+as a signed perturbation of the affected output — the FATE-style bit-weight
+model, DESIGN.md §3).
+
+The mask and magnitude are *inputs*: the rust coordinator derives per-output
+failure probabilities from the routed netlist's slack histogram under the
+over-scaled voltage and samples the masks, so the same artifact serves every
+over-scaling point.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, w_ref, mask_ref, mag_ref, out_ref):
+    y = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    mag = mag_ref[0]
+    corrupted = y + mag * jnp.sign(y + 1e-30)
+    out_ref[...] = jnp.where(mask_ref[...] > 0.5, corrupted, y)
+
+
+def corrupt_matmul(x, w, flip_mask, magnitude):
+    """y = x @ w with per-output timing-error corruption.
+
+    x: (M, K) f32; w: (K, N) f32; flip_mask: (M, N) f32 in {0, 1};
+    magnitude: scalar f32 — the bit-weight of the failing MSB.
+    """
+    m, _ = x.shape
+    _, n = w.shape
+    mag = jnp.reshape(jnp.asarray(magnitude, jnp.float32), (1,))
+    return pl.pallas_call(
+        _matmul_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w, flip_mask, mag)

@@ -1,0 +1,99 @@
+"""L1 Pallas kernel: one red-black SOR sweep of the steady-state heat solve.
+
+The FPGA tile grid (padded to GRID×GRID, masked to the device extent) is the
+state; one kernel invocation performs a full red+black successive
+over-relaxation sweep of
+
+    g_v (T - T_amb) + g_l * sum_j (T - T_j) = P
+
+with adiabatic edges (neighbour sums and degrees are mask-weighted, so
+out-of-device cells contribute nothing).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the whole grid lives in VMEM
+(128·128·4 B ≈ 65 KiB per buffer), BlockSpec keeps it resident across the
+L2 `fori_loop` over sweeps, and the update is pure VPU elementwise work —
+the dense recast of what HotSpot does with a sparse CPU solver.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; lowering through the interpreter emits plain HLO that the rust
+runtime compiles and runs (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+GRID = 128
+OMEGA = 1.8
+
+
+def _neighbour_sums(t, mask):
+    """Mask-weighted 4-neighbour sum and degree, adiabatic edges."""
+    tm = t * mask
+    up = jnp.pad(tm[:-1, :], ((1, 0), (0, 0)))
+    down = jnp.pad(tm[1:, :], ((0, 1), (0, 0)))
+    left = jnp.pad(tm[:, :-1], ((0, 0), (1, 0)))
+    right = jnp.pad(tm[:, 1:], ((0, 0), (0, 1)))
+    nsum = up + down + left + right
+    mu = jnp.pad(mask[:-1, :], ((1, 0), (0, 0)))
+    md = jnp.pad(mask[1:, :], ((0, 1), (0, 0)))
+    ml = jnp.pad(mask[:, :-1], ((0, 0), (1, 0)))
+    mr = jnp.pad(mask[:, 1:], ((0, 0), (0, 1)))
+    deg = mu + md + ml + mr
+    return nsum, deg
+
+
+def _sor_kernel(t_ref, p_ref, mask_ref, params_ref, out_ref):
+    """params = [g_v, g_l, t_amb, omega]."""
+    t = t_ref[...]
+    p = p_ref[...]
+    mask = mask_ref[...]
+    g_v = params_ref[0]
+    g_l = params_ref[1]
+    t_amb = params_ref[2]
+    omega = params_ref[3]
+
+    rows = jax.lax.broadcasted_iota(jnp.int32, (GRID, GRID), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (GRID, GRID), 1)
+    checker = (rows + cols) % 2
+
+    for parity in (0, 1):
+        nsum, deg = _neighbour_sums(t, mask)
+        gauss = (p + g_v * t_amb + g_l * nsum) / (g_v + g_l * deg)
+        t_new = t + omega * (gauss - t)
+        update = (checker == parity) & (mask > 0.5)
+        t = jnp.where(update, t_new, t)
+
+    out_ref[...] = t
+
+
+@functools.partial(jax.jit, static_argnames=())
+def sor_sweep(t, p, mask, params):
+    """One full red+black SOR sweep as a pallas_call."""
+    return pl.pallas_call(
+        _sor_kernel,
+        out_shape=jax.ShapeDtypeStruct((GRID, GRID), jnp.float32),
+        interpret=True,
+    )(t, p, mask, params)
+
+
+def _power_update_kernel(p_dyn_ref, lkg25_ref, t_ref, params_ref, out_ref):
+    """Leakage-feedback power map: P = P_dyn + L25 * exp(k * (T - 25)).
+
+    params = [kappa_lkg_t].
+    """
+    out_ref[...] = p_dyn_ref[...] + lkg25_ref[...] * jnp.exp(
+        params_ref[0] * (t_ref[...] - 25.0)
+    )
+
+
+def power_update(p_dyn, lkg25, t, kappa):
+    """Fused leakage-feedback power update (L1)."""
+    params = jnp.asarray([kappa], dtype=jnp.float32)
+    return pl.pallas_call(
+        _power_update_kernel,
+        out_shape=jax.ShapeDtypeStruct((GRID, GRID), jnp.float32),
+        interpret=True,
+    )(p_dyn, lkg25, t, params)

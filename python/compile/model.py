@@ -1,0 +1,167 @@
+"""L2 JAX models — the compute graphs AOT-lowered to HLO for the rust
+runtime. Each graph calls the L1 Pallas kernels; nothing here runs at flow
+time (build-time only).
+
+Graphs:
+* ``thermal_solve``      — steady-state thermal fixed point: N_SWEEPS
+                           red-black SOR sweeps (kernels.thermal) under
+                           ``lax.fori_loop`` so the whole solve is one HLO
+                           module / one PJRT execution (no host round-trips).
+* ``thermal_solve_feedback`` — same, with the leakage-temperature feedback
+                           (P = P_dyn + L25·e^{κ(T−25)}) fused between sweep
+                           batches: the full Algorithm-1 inner loop in one
+                           artifact.
+* ``lenet_infer``        — LeNet-style CNN forward pass on the systolic
+                           (MXU) matmul kernel with per-layer timing-error
+                           masks (Fig. 8 workload 1).
+* ``hd_infer``           — hyperdimensional associative search with bit-flip
+                           mask (Fig. 8 workload 2).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import hd as hd_kernels
+from compile.kernels import systolic
+from compile.kernels import thermal as thermal_kernels
+
+GRID = thermal_kernels.GRID
+N_SWEEPS = 200
+FEEDBACK_ROUNDS = 6
+SWEEPS_PER_ROUND = 150
+
+# LeNet geometry (synthetic 12×12 glyph digits, batch fixed at AOT time)
+LENET_BATCH = 256
+IMG = 12
+C1 = 8  # conv1 channels (3×3 valid: 12→10, pool→5)
+C2 = 16  # conv2 channels (3×3 valid: 5→3)
+FC1 = 32
+CLASSES = 10
+
+HD_BATCH = 256
+HD_DIM = 4096
+HD_CLASSES = 2
+
+
+# ---------------------------------------------------------------- thermal --
+
+def thermal_solve(t0, power, mask, params):
+    """params = [g_v, g_l, t_amb, omega] (f32[4])."""
+
+    def body(_, t):
+        return thermal_kernels.sor_sweep(t, power, mask, params)
+
+    return jax.lax.fori_loop(0, N_SWEEPS, body, t0)
+
+
+def thermal_solve_feedback(t0, p_dyn, lkg25, mask, params):
+    """Fused leakage-feedback solve.
+
+    params = [g_v, g_l, t_amb, omega, kappa_lkg_t] (f32[5]).
+    Alternates SWEEPS_PER_ROUND SOR sweeps with a leakage-map update,
+    FEEDBACK_ROUNDS times — the paper's Algorithm-1 lines 5–10 inner
+    structure collapsed into one artifact.
+    """
+    sor_params = params[:4]
+    kappa = params[4]
+
+    def round_body(_, t):
+        p = thermal_kernels.power_update(p_dyn, lkg25, t, kappa)
+
+        def sweep_body(_, tt):
+            return thermal_kernels.sor_sweep(tt, p, mask, sor_params)
+
+        return jax.lax.fori_loop(0, SWEEPS_PER_ROUND, sweep_body, t)
+
+    return jax.lax.fori_loop(0, FEEDBACK_ROUNDS, round_body, t0)
+
+
+# ------------------------------------------------------------------ lenet --
+
+def _im2col(x, k):
+    """x: (B, H, W, C) → (B, H-k+1, W-k+1, k*k*C) via static slicing."""
+    b, h, w, c = x.shape
+    oh, ow = h - k + 1, w - k + 1
+    cols = []
+    for di in range(k):
+        for dj in range(k):
+            cols.append(x[:, di : di + oh, dj : dj + ow, :])
+    return jnp.concatenate(cols, axis=-1), oh, ow
+
+
+def _maxpool2(x):
+    b, h, w, c = x.shape
+    x = x[:, : h - h % 2, : w - w % 2, :]
+    x = x.reshape(b, h // 2, 2, w // 2, 2, c)
+    return jnp.max(x, axis=(2, 4))
+
+
+def lenet_infer(x, weights, masks, mags):
+    """Forward pass with timing-error injection.
+
+    x: (B, 144) flattened 12×12 images.
+    weights: (w1 (9*1, C1) … ) — see `lenet_init`.
+    masks: per-layer flip masks (m1 (B*100, C1), m2 (B*9, C2),
+           m3 (B, FC1), m4 (B, CLASSES)).
+    mags: f32[4] per-layer corruption magnitudes.
+    Returns logits (B, CLASSES).
+    """
+    w1, b1, w2, b2, w3, b3, w4, b4 = weights
+    m1, m2, m3, m4 = masks
+    b = x.shape[0]
+    img = x.reshape(b, IMG, IMG, 1)
+
+    col1, oh1, ow1 = _im2col(img, 3)  # (B,10,10,9)
+    y1 = systolic.corrupt_matmul(col1.reshape(b * oh1 * ow1, 9), w1, m1, mags[0])
+    y1 = jax.nn.relu(y1.reshape(b, oh1, ow1, C1) + b1)
+    p1 = _maxpool2(y1)  # (B,5,5,C1)
+
+    col2, oh2, ow2 = _im2col(p1, 3)  # (B,3,3,9*C1)
+    y2 = systolic.corrupt_matmul(
+        col2.reshape(b * oh2 * ow2, 9 * C1), w2, m2, mags[1]
+    )
+    y2 = jax.nn.relu(y2.reshape(b, oh2, ow2, C2) + b2)
+
+    flat = y2.reshape(b, oh2 * ow2 * C2)  # (B,144)
+    y3 = jax.nn.relu(systolic.corrupt_matmul(flat, w3, m3, mags[2]) + b3)
+    logits = systolic.corrupt_matmul(y3, w4, m4, mags[3]) + b4
+    return logits
+
+
+def lenet_infer_clean(x, weights):
+    """Error-free reference forward pass (training / eval baseline)."""
+    b = x.shape[0]
+    zeros = (
+        jnp.zeros((b * 100, C1)),
+        jnp.zeros((b * 9, C2)),
+        jnp.zeros((b, FC1)),
+        jnp.zeros((b, CLASSES)),
+    )
+    return lenet_infer(x, weights, zeros, jnp.zeros(4))
+
+
+def lenet_init(key):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    g = jax.nn.initializers.glorot_normal()
+    return (
+        g(k1, (9, C1)),
+        jnp.zeros(C1),
+        g(k2, (9 * C1, C2)),
+        jnp.zeros(C2),
+        g(k3, (9 * C2, FC1)),
+        jnp.zeros(FC1),
+        g(k4, (FC1, CLASSES)),
+        jnp.zeros(CLASSES),
+    )
+
+
+# --------------------------------------------------------------------- hd --
+
+def hd_infer(queries, prototypes, flip_mask):
+    """Similarity scores via the HD kernel."""
+    return hd_kernels.hd_similarities(queries, prototypes, flip_mask)
+
+
+def hd_encode(features, projection):
+    """Bipolar HD encoding: sign of a random projection."""
+    return jnp.sign(features @ projection + 1e-9)

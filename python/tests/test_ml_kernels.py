@@ -1,0 +1,113 @@
+"""Systolic + HD Pallas kernels vs references, and LeNet model shape/error
+behaviour."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import hd as hdk
+from compile.kernels import ref, systolic
+from compile import model
+
+
+def test_corrupt_matmul_no_mask_is_plain_matmul():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(32, 16)).astype(np.float32)
+    w = rng.normal(size=(16, 8)).astype(np.float32)
+    m = np.zeros((32, 8), np.float32)
+    y = systolic.corrupt_matmul(x, w, m, 0.5)
+    np.testing.assert_allclose(np.asarray(y), x @ w, rtol=1e-5, atol=1e-5)
+
+
+def test_corrupt_matmul_matches_ref_with_mask():
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(17, 9)).astype(np.float32)
+    w = rng.normal(size=(9, 5)).astype(np.float32)
+    m = (rng.uniform(size=(17, 5)) < 0.3).astype(np.float32)
+    y = systolic.corrupt_matmul(x, w, m, 0.7)
+    y_ref = ref.corrupt_matmul_ref(jnp.asarray(x), jnp.asarray(w), jnp.asarray(m), 0.7)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.integers(1, 64),
+    k=st.integers(1, 64),
+    n=st.integers(1, 32),
+    mag=st.floats(0.0, 4.0),
+    seed=st.integers(0, 2**31),
+)
+def test_corrupt_matmul_hypothesis_shapes(m, k, n, mag, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(m, k)).astype(np.float32)
+    w = rng.normal(size=(k, n)).astype(np.float32)
+    mask = (rng.uniform(size=(m, n)) < 0.2).astype(np.float32)
+    y = np.asarray(systolic.corrupt_matmul(x, w, mask, mag))
+    y_ref = np.asarray(ref.corrupt_matmul_ref(jnp.asarray(x), jnp.asarray(w), jnp.asarray(mask), mag))
+    np.testing.assert_allclose(y, y_ref, rtol=1e-4, atol=1e-4)
+    # corruption only where masked
+    clean = x @ w
+    off = np.abs(y - clean)
+    assert np.all(off[mask < 0.5] < 1e-4)
+
+
+def test_hd_kernel_matches_ref():
+    rng = np.random.default_rng(2)
+    q = np.sign(rng.normal(size=(16, 256))).astype(np.float32)
+    protos = np.sign(rng.normal(size=(2, 256))).astype(np.float32)
+    mask = (rng.uniform(size=(16, 256)) < 0.1).astype(np.float32)
+    sims = np.asarray(hdk.hd_similarities(q, protos, mask))
+    pred_ref = np.asarray(ref.hd_infer_ref(jnp.asarray(q), jnp.asarray(protos), jnp.asarray(mask)))
+    assert sims.shape == (16, 2)
+    np.testing.assert_array_equal(np.argmax(sims, axis=1), pred_ref)
+
+
+def test_hd_flips_degrade_similarity_gracefully():
+    rng = np.random.default_rng(3)
+    d = 1024
+    proto = np.sign(rng.normal(size=(1, d))).astype(np.float32)
+    q = proto.copy()
+    sims = []
+    for rate in (0.0, 0.1, 0.3):
+        mask = (rng.uniform(size=(1, d)) < rate).astype(np.float32)
+        s = float(np.asarray(hdk.hd_similarities(q, proto, mask))[0, 0])
+        sims.append(s / d)
+    # self-similarity 1.0 declines roughly as 1-2·rate (orthogonality story)
+    assert abs(sims[0] - 1.0) < 1e-6
+    assert abs(sims[1] - 0.8) < 0.05
+    assert abs(sims[2] - 0.4) < 0.07
+
+
+def test_lenet_infer_shapes_and_clean_path():
+    b = 8
+    weights = model.lenet_init(jax.random.PRNGKey(0))
+    x = np.random.default_rng(4).uniform(0, 1, (b, model.IMG * model.IMG)).astype(np.float32)
+    logits = model.lenet_infer_clean(jnp.asarray(x), weights)
+    assert logits.shape == (b, model.CLASSES)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_lenet_errors_change_logits_only_when_masked():
+    b = 4
+    weights = model.lenet_init(jax.random.PRNGKey(1))
+    x = np.random.default_rng(5).uniform(0, 1, (b, 144)).astype(np.float32)
+    zero_masks = (
+        jnp.zeros((b * 100, model.C1)),
+        jnp.zeros((b * 9, model.C2)),
+        jnp.zeros((b, model.FC1)),
+        jnp.zeros((b, model.CLASSES)),
+    )
+    clean = model.lenet_infer(jnp.asarray(x), weights, zero_masks, jnp.ones(4))
+    # full last-layer mask with magnitude 2 must shift logits
+    full_last = (
+        zero_masks[0],
+        zero_masks[1],
+        zero_masks[2],
+        jnp.ones((b, model.CLASSES)),
+    )
+    dirty = model.lenet_infer(jnp.asarray(x), weights, full_last, jnp.asarray([0.0, 0.0, 0.0, 2.0]))
+    assert np.abs(np.asarray(dirty) - np.asarray(clean)).max() > 1.0
+    # magnitude 0 ⇒ identical even with mask set
+    same = model.lenet_infer(jnp.asarray(x), weights, full_last, jnp.zeros(4))
+    np.testing.assert_allclose(np.asarray(same), np.asarray(clean), atol=1e-5)

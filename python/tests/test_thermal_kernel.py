@@ -1,0 +1,128 @@
+"""Pallas thermal kernel vs pure-jnp reference + dense ground truth."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels import thermal as tk
+from compile import model
+
+G = tk.GRID
+
+
+def mk_inputs(rows, cols, seed, total_power=0.5):
+    rng = np.random.default_rng(seed)
+    p = np.zeros((G, G), np.float32)
+    sub = rng.uniform(0, 1, (cols, rows)).astype(np.float32)
+    sub *= total_power / sub.sum()
+    p[:cols, :rows] = sub
+    mask = np.zeros((G, G), np.float32)
+    mask[:cols, :rows] = 1.0
+    return p, mask
+
+
+def test_single_sweep_matches_ref():
+    p, mask = mk_inputs(40, 40, 0)
+    t0 = np.full((G, G), 25.0, np.float32)
+    g_v, g_l, t_amb, omega = 1e-3, 8e-3, 25.0, 1.8
+    params = jnp.asarray([g_v, g_l, t_amb, omega], jnp.float32)
+    out_k = tk.sor_sweep(t0, p, mask, params)
+    out_r = ref.sor_sweep_ref(
+        jnp.asarray(t0), jnp.asarray(p), jnp.asarray(mask), g_v, g_l, t_amb, omega
+    )
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), rtol=1e-6, atol=1e-5)
+
+
+def test_converged_solve_matches_dense_ground_truth():
+    # small unmasked region solved directly
+    rows = cols = 10
+    p, mask = mk_inputs(rows, cols, 1, total_power=0.2)
+    n = rows * cols
+    theta = 12.0
+    g_v = 1.0 / (n * theta)
+    g_l = 8.0 * g_v
+    t_amb = 40.0
+    params = jnp.asarray([g_v, g_l, t_amb, 1.8], jnp.float32)
+    t = jnp.full((G, G), t_amb, jnp.float32)
+    t = model.thermal_solve(t, jnp.asarray(p), jnp.asarray(mask), params)
+    sub = np.asarray(t)[:cols, :rows]
+    dense = ref.dense_solve_ref(np.asarray(p)[:cols, :rows], g_v, g_l, t_amb)
+    np.testing.assert_allclose(sub, dense, atol=0.05)
+
+
+def test_mean_rise_is_theta_ja_times_power():
+    rows = cols = 64
+    total = 0.75
+    p, mask = mk_inputs(rows, cols, 2, total_power=total)
+    theta = 2.0
+    n = rows * cols
+    g_v = 1.0 / (n * theta)
+    params = jnp.asarray([g_v, 8 * g_v, 60.0, 1.8], jnp.float32)
+    t = jnp.full((G, G), 60.0, jnp.float32)
+    t = model.thermal_solve(t, jnp.asarray(p), jnp.asarray(mask), params)
+    sub = np.asarray(t)[:cols, :rows]
+    assert abs(sub.mean() - (60.0 + theta * total)) < 0.05
+
+
+def test_masked_cells_stay_at_initial_value():
+    p, mask = mk_inputs(20, 20, 3)
+    t0 = np.full((G, G), 33.0, np.float32)
+    params = jnp.asarray([1e-3, 8e-3, 33.0, 1.8], jnp.float32)
+    out = np.asarray(tk.sor_sweep(t0, p, mask, params))
+    assert np.all(out[30:, 30:] == 33.0)
+
+
+def test_power_update_kernel_matches_ref():
+    rng = np.random.default_rng(4)
+    p_dyn = rng.uniform(0, 1e-3, (G, G)).astype(np.float32)
+    lkg = rng.uniform(0, 5e-4, (G, G)).astype(np.float32)
+    t = rng.uniform(25, 90, (G, G)).astype(np.float32)
+    out_k = tk.power_update(p_dyn, lkg, t, 0.015)
+    out_r = ref.power_update_ref(jnp.asarray(p_dyn), jnp.asarray(lkg), jnp.asarray(t), 0.015)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), rtol=1e-5)
+
+
+def test_feedback_solve_raises_power_and_temperature():
+    rows = cols = 32
+    n = rows * cols
+    theta = 12.0
+    g_v = 1.0 / (n * theta)
+    p_dyn, mask = mk_inputs(rows, cols, 5, total_power=0.2)
+    lkg = np.zeros((G, G), np.float32)
+    lkg[:cols, :rows] = 0.3 / n  # 0.3 W leakage at 25 °C
+    t0 = jnp.full((G, G), 50.0, jnp.float32)
+    params = jnp.asarray([g_v, 8 * g_v, 50.0, 1.8, 0.015], jnp.float32)
+    t = model.thermal_solve_feedback(t0, jnp.asarray(p_dyn), jnp.asarray(lkg), jnp.asarray(mask), params)
+    sub = np.asarray(t)[:cols, :rows]
+    # with feedback, rise must exceed θ·(P_dyn + L25): leakage grows with T
+    no_feedback_rise = theta * (0.2 + 0.3 * np.exp(0.015 * 25.0))
+    assert sub.mean() > 50.0 + no_feedback_rise * 0.95
+    assert sub.mean() < 50.0 + no_feedback_rise * 2.0
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    rows=st.integers(8, 100),
+    cols=st.integers(8, 100),
+    theta=st.sampled_from([2.0, 12.0]),
+    t_amb=st.floats(0.0, 85.0),
+    seed=st.integers(0, 2**31),
+)
+def test_sweep_invariants_hypothesis(rows, cols, theta, t_amb, seed):
+    """One sweep from a uniform start must keep temperatures within physical
+    bounds and leave masked-out cells untouched, for any geometry."""
+    p, mask = mk_inputs(rows, cols, seed, total_power=1.0)
+    n = rows * cols
+    g_v = 1.0 / (n * theta)
+    params = jnp.asarray([g_v, 8 * g_v, t_amb, 1.8], jnp.float32)
+    t0 = np.full((G, G), t_amb, np.float32)
+    out = np.asarray(tk.sor_sweep(t0, p, mask, params))
+    assert np.isfinite(out).all()
+    # no cell below ambient after the first sweep from ambient
+    assert out.min() >= t_amb - 1e-3
+    # masked cells untouched
+    outside = out[(np.asarray(mask) < 0.5)]
+    if outside.size:
+        assert np.allclose(outside, t_amb)

@@ -1,0 +1,108 @@
+//! Bench harness (`cargo bench`) — regenerates every table and figure from
+//! the paper's evaluation and times each stage. criterion is not available
+//! offline, so this is a plain harness=false binary with wall-clock timing;
+//! the per-experiment CSVs land in results/.
+//!
+//! Experiments (DESIGN.md §5):
+//!   T1  Table I   architecture parameters
+//!   F2  Fig. 2    characterized delay/power curves (+ anchor checks)
+//!   F3  Fig. 3    activity transfer + DSP gate-sim curve (+ raw ablation)
+//!   F4  Fig. 4    mkDelayWorker T_amb sweep
+//!   T2  Table II  Algorithm-1 iteration log @ 60 °C
+//!   F6  Fig. 6    power reduction, both deployment corners
+//!   F7  Fig. 7    energy optimization @ 65 °C
+//!   F8  Fig. 8    ML over-scaling (PJRT inference)
+//!   RT  runtime   convergence/pruning claims
+//!   LK  leakage   e^{0.015T} fit
+//!
+//! Pass --quick (default when RUN_FULL_BENCH is unset) to run the reduced
+//! benchmark set with quick placer effort.
+
+use std::path::Path;
+use std::time::Instant;
+
+use thermovolt::chardb::{CharDb, CharTable};
+use thermovolt::config::Config;
+use thermovolt::flow::Effort;
+use thermovolt::report;
+use thermovolt::synth::benchmark_names;
+
+fn timed<T>(label: &str, f: impl FnOnce() -> T) -> T {
+    let t0 = Instant::now();
+    let out = f();
+    println!("[bench] {label}: {:.2} s", t0.elapsed().as_secs_f64());
+    out
+}
+
+fn main() -> anyhow::Result<()> {
+    let full = std::env::var("RUN_FULL_BENCH").is_ok()
+        || std::env::args().any(|a| a == "--full");
+    let effort = if full { Effort::Full } else { Effort::Quick };
+    let names_all = benchmark_names();
+    let names: Vec<&str> = if full {
+        names_all.clone()
+    } else {
+        names_all
+            .iter()
+            .copied()
+            .filter(|n| !matches!(*n, "mcml" | "bgm" | "LU8PEEng"))
+            .collect()
+    };
+    let cfg = Config::new();
+    let out = Path::new("results");
+    std::fs::create_dir_all(out)?;
+    println!(
+        "== thermovolt bench harness ({} mode, {} benchmarks) ==\n",
+        if full { "FULL" } else { "quick" },
+        names.len()
+    );
+
+    timed("T1 table1", || report::table1(&cfg).emit(out, "table1"))?;
+
+    let table = timed("characterize", || CharTable::generate(&CharDb::analytic()));
+    timed("F2 fig2", || -> anyhow::Result<()> {
+        let (a, b, c) = report::fig2(&table);
+        a.emit(out, "fig2a")?;
+        b.emit(out, "fig2b")?;
+        c.emit(out, "fig2c")?;
+        Ok(())
+    })?;
+
+    timed("F3 fig3", || -> anyhow::Result<()> {
+        let (l, r) = report::fig3(&cfg, !full);
+        l.emit(out, "fig3_left")?;
+        r.emit(out, "fig3_right")?;
+        // ablation: the raw (independence-assumption) DSP curve
+        let mut raw = thermovolt::util::table::Table::new(
+            "Fig. 3 ablation — raw gate-sim DSP curve (no input-offset correction)",
+            &["alpha", "P_rel"],
+        );
+        for (a, p) in thermovolt::activity::dsp_sim::raw_activity_curve(600, 7) {
+            raw.row(vec![format!("{a:.2}"), format!("{p:.3}")]);
+        }
+        raw.emit(out, "fig3_right_raw")?;
+        Ok(())
+    })?;
+
+    timed("F4 fig4", || report::fig4(&cfg, effort))?.emit(out, "fig4")?;
+    timed("T2 table2", || report::table2(&cfg, effort))?.emit(out, "table2")?;
+
+    timed("F6a fig6 @40C", || report::fig6(&cfg, effort, 40.0, 12.0, &names))?
+        .emit(out, "fig6a")?;
+    timed("F6b fig6 @65C", || report::fig6(&cfg, effort, 65.0, 2.0, &names))?
+        .emit(out, "fig6b")?;
+    timed("F7 fig7", || report::fig7(&cfg, effort, &names))?.emit(out, "fig7")?;
+
+    if cfg.artifacts_dir.join("lenet.hlo.txt").exists() {
+        timed("F8 fig8", || report::fig8(&cfg, effort))?.emit(out, "fig8")?;
+    } else {
+        println!("[bench] F8 fig8: SKIPPED (run `make artifacts` first)");
+    }
+
+    timed("RT runtime-claims", || report::runtime_claims(&cfg, effort))?
+        .emit(out, "runtime_claims")?;
+    timed("LK leakage-fit", || report::leakage_fit(&cfg))?.emit(out, "leakage_fit")?;
+
+    println!("\nall experiment CSVs under results/");
+    Ok(())
+}

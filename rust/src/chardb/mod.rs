@@ -1,0 +1,31 @@
+//! Characterization library — the COFFE + HSPICE substitute.
+//!
+//! The paper characterizes every FPGA resource type for delay and power
+//! across (temperature, voltage) with circuit-level HSPICE simulation of
+//! COFFE-generated netlists at 22 nm PTM. We replace SPICE with analytical
+//! transistor-level models (alpha-power-law delay with temperature-dependent
+//! threshold and mobility; exponential-in-T and exponential-in-V
+//! subthreshold leakage; CV² dynamic energy), with per-resource parameters
+//! calibrated to every anchor the paper publishes:
+//!
+//! * SB delay @40 °C = 0.85× of @100 °C (Fig. 2a);
+//! * SB delay @(40 °C, 0.68 V) ≈ SB delay @(100 °C, 0.8 V) — i.e. 120 mV of
+//!   scaling uses up exactly the 40 °C thermal margin (Fig. 2b);
+//! * that 120 mV shrinks SB power by ≈32 % (Fig. 2c);
+//! * leakage ∝ e^{0.015·T} (§III-B case study);
+//! * BRAM has steeper delay–V *and* power–V slopes than core resources
+//!   (insight (c), Fig. 2);
+//! * LUT delay degrades faster than SB at low voltage, so LUT-bounded paths
+//!   can overtake SB-bounded ones (insight (b));
+//! * full-device leakage of the 92×92 mkDelayWorker device ≈ 0.367 W at
+//!   25 °C (§III-B case study).
+//!
+//! The flow itself only ever consumes the characterized `(T, V) → delay /
+//! power` tables (`CharTable`), exactly as the paper's flow consumes the
+//! HSPICE-characterized library, so the substitution is behavior-preserving.
+
+pub mod model;
+pub mod table;
+
+pub use model::{CharDb, ResourceParams, ResourceType, Rail, ALL_RESOURCES, DSP_ACTIVITY_CURVE};
+pub use table::CharTable;

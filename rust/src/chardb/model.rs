@@ -1,0 +1,403 @@
+//! Analytical delay / power models per FPGA resource type.
+//!
+//! Delay: alpha-power law with temperature-dependent threshold voltage and
+//! carrier mobility:
+//!
+//! ```text
+//! d(V, T) = K · μ(T) · V / (V − V_th(T))^α ,
+//! V_th(T) = V_th0 − κ_vt · (T − 25 °C) ,
+//! μ(T)    = (T_K / 298.15 K)^m .
+//! ```
+//!
+//! At nominal voltage the mobility term dominates (hotter ⇒ slower); at low
+//! voltage the V_th term dominates (hotter ⇒ faster — temperature-effect
+//! inversion), matching the measured FPGA behavior the paper builds on
+//! ([11], [37]).
+//!
+//! Leakage per instance: `P_lkg = I₀·(V/V_nom)·e^{κ_v (V − V_nom)}·e^{0.015 (T − 25)}`
+//! — the e^{0.015 T} exponent is the one the paper reports observing, and the
+//! voltage exponential reflects DIBL + subthreshold slope.
+//!
+//! Dynamic energy per output toggle: `E = ½·C_eff·V²`.
+
+/// Which supply rail feeds a resource (§I challenge (b): separate rails).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Rail {
+    /// V_core — soft fabric, DSP.
+    Core,
+    /// V_bram — memory blocks.
+    Bram,
+}
+
+/// FPGA resource types characterized by the library (Fig. 1 right).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ResourceType {
+    /// K-input look-up table (pass-transistor mux tree + input drivers).
+    Lut,
+    /// Switch-box mux + output buffer driving an L=4 wire segment.
+    SbMux,
+    /// Connection-box mux feeding cluster inputs.
+    CbMux,
+    /// Intra-cluster (local) crossbar mux.
+    LocalMux,
+    /// Flip-flop (clk→Q; setup handled by the timing graph).
+    Ff,
+    /// Per-bit carry-chain stage.
+    Carry,
+    /// Block RAM access (decoder + wordline + SA + output), V_bram rail.
+    Bram,
+    /// DSP slice (Stratix-IV-style 16×16 multiplier path, std-cell).
+    Dsp,
+}
+
+pub const ALL_RESOURCES: [ResourceType; 8] = [
+    ResourceType::Lut,
+    ResourceType::SbMux,
+    ResourceType::CbMux,
+    ResourceType::LocalMux,
+    ResourceType::Ff,
+    ResourceType::Carry,
+    ResourceType::Bram,
+    ResourceType::Dsp,
+];
+
+impl ResourceType {
+    pub fn rail(self) -> Rail {
+        match self {
+            ResourceType::Bram => Rail::Bram,
+            _ => Rail::Core,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ResourceType::Lut => "LUT",
+            ResourceType::SbMux => "SB",
+            ResourceType::CbMux => "CB",
+            ResourceType::LocalMux => "local",
+            ResourceType::Ff => "FF",
+            ResourceType::Carry => "carry",
+            ResourceType::Bram => "BRAM",
+            ResourceType::Dsp => "DSP",
+        }
+    }
+
+    pub fn index(self) -> usize {
+        ALL_RESOURCES.iter().position(|&r| r == self).unwrap()
+    }
+}
+
+/// Per-resource model parameters (22 nm PTM-class devices).
+#[derive(Clone, Copy, Debug)]
+pub struct ResourceParams {
+    /// Threshold voltage at 25 °C (V).
+    pub vth0: f64,
+    /// Alpha-power-law exponent (velocity saturation ⇒ 1.1–1.8).
+    pub alpha: f64,
+    /// Mobility temperature exponent.
+    pub m: f64,
+    /// Nominal-condition delay, seconds, at (T=100 °C, V=rail nominal).
+    pub d_nom: f64,
+    /// Leakage power per instance at (25 °C, rail nominal), watts.
+    pub i_lkg: f64,
+    /// Leakage voltage sensitivity κ_v (1/V).
+    pub kappa_v: f64,
+    /// Effective switched capacitance per output toggle (F).
+    pub c_eff: f64,
+}
+
+/// V_th temperature coefficient (V/°C) — ~1 mV/K at 22 nm.
+pub const KAPPA_VT: f64 = 0.001;
+/// Near-threshold delay correction: the alpha-power law under-predicts
+/// delay once V_gs − V_th falls below ~200 mV (subthreshold conduction
+/// takes over); delay gains a factor `1 + e^{(V_th + NT_V0 − V)/NT_SLOPE}`.
+/// Negligible above V_th + 0.3 V (all the Fig. 2 anchors), decisive below
+/// 0.65 V — this is what pushes the Alg-2 energy optimum away from the
+/// 0.55 V floor to the paper's ~0.37 frequency ratio.
+pub const NT_V0: f64 = 0.20;
+pub const NT_SLOPE: f64 = 0.035;
+/// Leakage temperature exponent (1/°C) — the paper's observed e^{0.015 T}.
+pub const KAPPA_LKG_T: f64 = 0.015;
+/// Reference temperature for characterization anchors (°C).
+pub const T_REF: f64 = 25.0;
+/// Characterization anchor temperature for d_nom (°C): worst-case junction.
+pub const T_WORST: f64 = 100.0;
+
+/// DSP power vs input activity (Fig. 3, right axis): power rises ~37 % from
+/// α=0.1 to α=0.3, saturates over [0.3, 0.7], then *declines* because
+/// frequently-toggling inputs offset each other inside the multiplier array
+/// (XOR-style cancellation). Values are relative to α=0.1. The gate-level
+/// toggle simulation in `activity::dsp_sim` reproduces this shape; this
+/// table is the characterized curve the power model consumes.
+pub const DSP_ACTIVITY_CURVE: [(f64, f64); 8] = [
+    (0.00, 0.55),
+    (0.10, 1.00),
+    (0.20, 1.22),
+    (0.30, 1.37),
+    (0.50, 1.38),
+    (0.70, 1.37),
+    (0.85, 1.31),
+    (1.00, 1.25),
+];
+
+/// The characterization library. Constructed analytically (the "HSPICE run");
+/// the flow normally consumes the dense-table form (`CharTable`), which is
+/// generated from this and serialized to `artifacts/chardb.bin`.
+#[derive(Clone, Debug)]
+pub struct CharDb {
+    params: [ResourceParams; 8],
+    /// Nominal rail voltages used for anchoring (core, bram).
+    pub v_core_nom: f64,
+    pub v_bram_nom: f64,
+    /// Internal K factors so that delay(T_WORST, V_nom) == d_nom.
+    k_delay: [f64; 8],
+}
+
+impl CharDb {
+    /// Build the calibrated 22 nm library.
+    pub fn analytic() -> CharDb {
+        CharDb::with_nominals(0.8, 0.95)
+    }
+
+    pub fn with_nominals(v_core_nom: f64, v_bram_nom: f64) -> CharDb {
+        // Parameters calibrated against the paper's anchors; see module docs
+        // and the tests below. d_nom values are in the range VTR/COFFE report
+        // for a 22 nm Stratix-like architecture.
+        let params = [
+            // vth0,  alpha,  m,    d_nom,     i_lkg,    kappa_v, c_eff
+            p(0.400, 1.48, 1.35, 235e-12, 1.40e-6, 3.5, 9.0e-15), // Lut
+            p(0.320, 1.17, 1.69, 180e-12, 0.25e-6, 3.5, 55.0e-15), // SbMux (+L4 wire)
+            p(0.325, 1.24, 1.62, 95e-12, 0.22e-6, 3.5, 30.0e-15), // CbMux
+            p(0.330, 1.28, 1.55, 45e-12, 0.13e-6, 3.5, 8.0e-15),  // LocalMux
+            p(0.340, 1.25, 1.50, 60e-12, 0.32e-6, 3.5, 6.0e-15),  // Ff
+            p(0.300, 1.14, 1.60, 18e-12, 0.05e-6, 3.5, 2.0e-15),  // Carry
+            p(0.380, 1.60, 1.30, 1800e-12, 8.00e-6, 5.5, 22.0e-12 / 0.95 / 0.95 * 2.0), // Bram: E/access ≈ 20 pJ @0.95 V
+            p(0.330, 1.26, 1.58, 3200e-12, 18.0e-6, 3.5, 37.5e-12 / 0.8 / 0.8 * 2.0), // Dsp: E/cycle ≈ 12 pJ @0.8 V, α=0.3
+        ];
+        let mut db = CharDb {
+            params,
+            v_core_nom,
+            v_bram_nom,
+            k_delay: [1.0; 8],
+        };
+        for (i, &r) in ALL_RESOURCES.iter().enumerate() {
+            let vnom = db.rail_nominal(r.rail());
+            let raw = db.delay_unscaled(r, T_WORST, vnom);
+            db.k_delay[i] = db.params[i].d_nom / raw;
+        }
+        db
+    }
+
+    pub fn params(&self, r: ResourceType) -> &ResourceParams {
+        &self.params[r.index()]
+    }
+
+    pub fn rail_nominal(&self, rail: Rail) -> f64 {
+        match rail {
+            Rail::Core => self.v_core_nom,
+            Rail::Bram => self.v_bram_nom,
+        }
+    }
+
+    fn delay_unscaled(&self, r: ResourceType, t_c: f64, v: f64) -> f64 {
+        let pr = &self.params[r.index()];
+        let vth = pr.vth0 - KAPPA_VT * (t_c - T_REF);
+        let vov = (v - vth).max(0.05);
+        let mu = ((t_c + 273.15) / 298.15).powf(pr.m);
+        let nt = 1.0 + ((vth + NT_V0 - v) / NT_SLOPE).exp();
+        mu * v / vov.powf(pr.alpha) * nt
+    }
+
+    /// Propagation delay (seconds) of one instance at junction temperature
+    /// `t_c` (°C) and rail voltage `v` (V).
+    pub fn delay(&self, r: ResourceType, t_c: f64, v: f64) -> f64 {
+        self.k_delay[r.index()] * self.delay_unscaled(r, t_c, v)
+    }
+
+    /// Leakage power (W) of one instance at (T, V).
+    pub fn leakage(&self, r: ResourceType, t_c: f64, v: f64) -> f64 {
+        let pr = &self.params[r.index()];
+        let vnom = self.rail_nominal(r.rail());
+        pr.i_lkg
+            * (v / vnom)
+            * ((pr.kappa_v * (v - vnom)).exp())
+            * ((KAPPA_LKG_T * (t_c - T_REF)).exp())
+    }
+
+    /// Dynamic energy (J) for one output toggle at rail voltage `v`.
+    pub fn dyn_energy(&self, r: ResourceType, v: f64) -> f64 {
+        0.5 * self.params[r.index()].c_eff * v * v
+    }
+
+    /// DSP power multiplier for input activity α (Fig. 3 right), relative to
+    /// the α = 0.3 characterization point used for `c_eff`.
+    pub fn dsp_activity_factor(alpha: f64) -> f64 {
+        let xs: Vec<f64> = DSP_ACTIVITY_CURVE.iter().map(|&(a, _)| a).collect();
+        let ys: Vec<f64> = DSP_ACTIVITY_CURVE.iter().map(|&(_, p)| p).collect();
+        let at_03 = crate::util::stats::interp1(&xs, &ys, 0.3);
+        crate::util::stats::interp1(&xs, &ys, alpha) / at_03
+    }
+}
+
+const fn p(
+    vth0: f64,
+    alpha: f64,
+    m: f64,
+    d_nom: f64,
+    i_lkg: f64,
+    kappa_v: f64,
+    c_eff: f64,
+) -> ResourceParams {
+    ResourceParams {
+        vth0,
+        alpha,
+        m,
+        d_nom,
+        i_lkg,
+        kappa_v,
+        c_eff,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::fit_exponential;
+
+    fn db() -> CharDb {
+        CharDb::analytic()
+    }
+
+    // ---- Fig. 2(a): SB delay @40 °C is ~0.85× of @100 °C at 0.8 V ----
+    #[test]
+    fn anchor_sb_thermal_margin() {
+        let db = db();
+        let r = db.delay(ResourceType::SbMux, 40.0, 0.8) / db.delay(ResourceType::SbMux, 100.0, 0.8);
+        assert!((0.83..=0.87).contains(&r), "SB 40/100 ratio = {r}");
+    }
+
+    // ---- Fig. 2(b): at 40 °C, 0.68 V uses up the margin exactly ----
+    #[test]
+    fn anchor_sb_068v_equals_worst_case() {
+        let db = db();
+        let scaled = db.delay(ResourceType::SbMux, 40.0, 0.68);
+        let worst = db.delay(ResourceType::SbMux, 100.0, 0.8);
+        let rel = (scaled - worst).abs() / worst;
+        assert!(rel < 0.03, "rel diff = {rel}");
+    }
+
+    // ---- Fig. 2(c): the 120 mV reduction shrinks SB power by ~32 % ----
+    #[test]
+    fn anchor_sb_power_reduction_at_068v() {
+        let db = db();
+        // Fig. 2(c) characterizes the SB circuit under continuous HSPICE
+        // drive — dynamic-dominated with a leakage floor. Blend at the
+        // characterization drive conditions.
+        let f = 100e6;
+        let act = 0.45;
+        let power = |v: f64| {
+            db.leakage(ResourceType::SbMux, 40.0, v)
+                + act * f * db.dyn_energy(ResourceType::SbMux, v)
+        };
+        let ratio = power(0.68) / power(0.8);
+        assert!(
+            (0.63..=0.73).contains(&ratio),
+            "SB power ratio @0.68 V = {ratio}"
+        );
+    }
+
+    // ---- §III-B: leakage ∝ e^{0.015 T} ----
+    #[test]
+    fn anchor_leakage_temperature_exponent() {
+        let db = db();
+        let ts: Vec<f64> = (0..=100).step_by(5).map(|t| t as f64).collect();
+        let ys: Vec<f64> = ts
+            .iter()
+            .map(|&t| db.leakage(ResourceType::Lut, t, 0.8))
+            .collect();
+        let (_, b) = fit_exponential(&ts, &ys);
+        assert!((0.013..=0.017).contains(&b), "leakage exponent = {b}");
+    }
+
+    // ---- Insight (b): LUT delay degrades faster than SB at low voltage ----
+    #[test]
+    fn anchor_lut_overtakes_sb_at_low_voltage() {
+        let db = db();
+        let deg = |r: ResourceType, v: f64| db.delay(r, 40.0, v) / db.delay(r, 40.0, 0.8);
+        assert!(
+            deg(ResourceType::Lut, 0.6) > deg(ResourceType::SbMux, 0.6) * 1.1,
+            "LUT low-V degradation must exceed SB's: lut={} sb={}",
+            deg(ResourceType::Lut, 0.6),
+            deg(ResourceType::SbMux, 0.6)
+        );
+    }
+
+    // ---- Insight (c): BRAM has the steepest delay–V *and* power–V ----
+    #[test]
+    fn anchor_bram_steepest_voltage_slopes() {
+        let db = db();
+        // Delay degradation for a 100 mV drop below each rail's nominal.
+        let bram_deg = db.delay(ResourceType::Bram, 40.0, 0.85) / db.delay(ResourceType::Bram, 40.0, 0.95);
+        let sb_deg = db.delay(ResourceType::SbMux, 40.0, 0.70) / db.delay(ResourceType::SbMux, 40.0, 0.80);
+        assert!(bram_deg > sb_deg, "bram={bram_deg} sb={sb_deg}");
+        // Leakage reduction for the same 100 mV drop is larger for BRAM.
+        let bram_lkg = db.leakage(ResourceType::Bram, 40.0, 0.85) / db.leakage(ResourceType::Bram, 40.0, 0.95);
+        let sb_lkg = db.leakage(ResourceType::SbMux, 40.0, 0.70) / db.leakage(ResourceType::SbMux, 40.0, 0.80);
+        assert!(bram_lkg < sb_lkg, "bram={bram_lkg} sb={sb_lkg}");
+    }
+
+    // ---- Temperature-effect inversion: at low V, hotter gets *faster* ----
+    #[test]
+    fn temperature_inversion_at_low_voltage() {
+        let db = db();
+        // Nominal V: hotter ⇒ slower (mobility-dominated).
+        assert!(db.delay(ResourceType::Lut, 100.0, 0.8) > db.delay(ResourceType::Lut, 20.0, 0.8));
+        // Deep-scaled V: hotter ⇒ faster (Vth-dominated) for the high-Vth LUT.
+        assert!(db.delay(ResourceType::Lut, 100.0, 0.52) < db.delay(ResourceType::Lut, 20.0, 0.52));
+    }
+
+    #[test]
+    fn delay_monotone_in_voltage() {
+        let db = db();
+        for &r in ALL_RESOURCES.iter() {
+            let mut prev = f64::INFINITY;
+            for i in 0..=40 {
+                let v = 0.55 + i as f64 * 0.01;
+                let d = db.delay(r, 60.0, v);
+                assert!(d < prev, "{:?} delay not monotone at {v}", r);
+                prev = d;
+            }
+        }
+    }
+
+    #[test]
+    fn nominal_anchoring_holds() {
+        let db = db();
+        for &r in ALL_RESOURCES.iter() {
+            let vnom = db.rail_nominal(r.rail());
+            let d = db.delay(r, T_WORST, vnom);
+            let rel = (d - db.params(r).d_nom).abs() / db.params(r).d_nom;
+            assert!(rel < 1e-9, "{:?} nominal anchor off by {rel}", r);
+        }
+    }
+
+    #[test]
+    fn dsp_activity_curve_shape() {
+        // +37 % from 0.1→0.3, saturation, then decline (Fig. 3 right).
+        let f01 = CharDb::dsp_activity_factor(0.1);
+        let f03 = CharDb::dsp_activity_factor(0.3);
+        let f05 = CharDb::dsp_activity_factor(0.5);
+        let f10 = CharDb::dsp_activity_factor(1.0);
+        let rise = f03 / f01;
+        assert!((1.30..=1.45).contains(&rise), "rise = {rise}");
+        assert!((f05 - f03).abs() / f03 < 0.02, "no saturation");
+        assert!(f10 < f05, "no decline at high activity");
+    }
+
+    #[test]
+    fn bram_energy_per_access_scale() {
+        let db = db();
+        let e = db.dyn_energy(ResourceType::Bram, 0.95);
+        assert!((15e-12..=30e-12).contains(&e), "BRAM E/access = {e}");
+    }
+}

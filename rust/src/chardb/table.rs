@@ -1,0 +1,308 @@
+//! Dense characterized (T, V) tables + bilinear interpolation + binary I/O.
+//!
+//! This is the "pre-characterized library of delay and power" Algorithm 1
+//! relies on (§III-B). `CharTable::generate` plays the role of the HSPICE
+//! sweep (§III-A: "we sweep the parameters of COFFE-generated netlists");
+//! the flow then only interpolates the tables — never calls the analytic
+//! model — mirroring how the paper's flow is decoupled from SPICE.
+
+use super::model::{CharDb, ResourceType, ALL_RESOURCES};
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// Characterization grid: temperatures 0..=110 °C step 5, voltages
+/// 0.50..=1.00 V step 0.01.
+#[derive(Clone, Debug)]
+pub struct CharTable {
+    pub temps: Vec<f64>,
+    pub volts: Vec<f64>,
+    /// Uniform-axis acceleration: (origin, 1/step) per axis. Falls back to
+    /// binary search when an axis is non-uniform (e.g. hand-edited tables).
+    uniform_t: Option<(f64, f64)>,
+    uniform_v: Option<(f64, f64)>,
+    /// delay[res][ti * nv + vi] seconds.
+    pub delay: Vec<Vec<f64>>,
+    /// leakage[res][ti * nv + vi] watts.
+    pub leakage: Vec<Vec<f64>>,
+    /// dyn energy per toggle [res][vi] joules.
+    pub dyn_energy: Vec<Vec<f64>>,
+    pub v_core_nom: f64,
+    pub v_bram_nom: f64,
+}
+
+const MAGIC: &[u8; 8] = b"TVCDB01\n";
+
+impl CharTable {
+    /// Run the characterization sweep over the analytic model.
+    pub fn generate(db: &CharDb) -> CharTable {
+        let temps: Vec<f64> = (0..=22).map(|i| i as f64 * 5.0).collect(); // 0..110
+        let volts: Vec<f64> = (0..=50).map(|i| 0.50 + i as f64 * 0.01).collect();
+        let nv = volts.len();
+        let mut delay = Vec::with_capacity(8);
+        let mut leakage = Vec::with_capacity(8);
+        let mut dyn_energy = Vec::with_capacity(8);
+        for &r in ALL_RESOURCES.iter() {
+            let mut d = Vec::with_capacity(temps.len() * nv);
+            let mut l = Vec::with_capacity(temps.len() * nv);
+            for &t in &temps {
+                for &v in &volts {
+                    d.push(db.delay(r, t, v));
+                    l.push(db.leakage(r, t, v));
+                }
+            }
+            delay.push(d);
+            leakage.push(l);
+            dyn_energy.push(volts.iter().map(|&v| db.dyn_energy(r, v)).collect());
+        }
+        let mut t = CharTable {
+            temps,
+            volts,
+            delay,
+            leakage,
+            dyn_energy,
+            v_core_nom: db.v_core_nom,
+            v_bram_nom: db.v_bram_nom,
+            uniform_t: None,
+            uniform_v: None,
+        };
+        t.detect_uniform();
+        t
+    }
+
+    /// Detect uniform axes (perf: O(1) fractional indexing in `grid_pos`).
+    fn detect_uniform(&mut self) {
+        self.uniform_t = uniform_params(&self.temps);
+        self.uniform_v = uniform_params(&self.volts);
+    }
+
+    #[inline]
+    fn grid_pos_uniform(axis: &[f64], u: (f64, f64), x: f64) -> (usize, f64) {
+        let (origin, inv_step) = u;
+        let f = (x - origin) * inv_step;
+        if f <= 0.0 {
+            return (0, 0.0);
+        }
+        let last = axis.len() - 1;
+        if f >= last as f64 {
+            return (last - 1, 1.0);
+        }
+        let i = f as usize;
+        (i, f - i as f64)
+    }
+
+    #[inline]
+    fn grid_pos(axis: &[f64], x: f64) -> (usize, f64) {
+        // clamped fractional index on a uniform-ish axis via binary search
+        if x <= axis[0] {
+            return (0, 0.0);
+        }
+        let last = axis.len() - 1;
+        if x >= axis[last] {
+            return (last - 1, 1.0);
+        }
+        let mut lo = 0;
+        let mut hi = last;
+        while hi - lo > 1 {
+            let mid = (lo + hi) / 2;
+            if axis[mid] <= x {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        ((lo), (x - axis[lo]) / (axis[hi] - axis[lo]))
+    }
+
+    #[inline]
+    fn bilinear(&self, grid: &[f64], t_c: f64, v: f64) -> f64 {
+        let nv = self.volts.len();
+        let (ti, tf) = match self.uniform_t {
+            Some(u) => Self::grid_pos_uniform(&self.temps, u, t_c),
+            None => Self::grid_pos(&self.temps, t_c),
+        };
+        let (vi, vf) = match self.uniform_v {
+            Some(u) => Self::grid_pos_uniform(&self.volts, u, v),
+            None => Self::grid_pos(&self.volts, v),
+        };
+        let g = |a: usize, b: usize| grid[a * nv + b];
+        let top = g(ti, vi) * (1.0 - vf) + g(ti, vi + 1) * vf;
+        let bot = g(ti + 1, vi) * (1.0 - vf) + g(ti + 1, vi + 1) * vf;
+        top * (1.0 - tf) + bot * tf
+    }
+
+    /// Interpolated delay (s).
+    pub fn delay(&self, r: ResourceType, t_c: f64, v: f64) -> f64 {
+        self.bilinear(&self.delay[r.index()], t_c, v)
+    }
+
+    /// Interpolated leakage (W).
+    pub fn leakage(&self, r: ResourceType, t_c: f64, v: f64) -> f64 {
+        self.bilinear(&self.leakage[r.index()], t_c, v)
+    }
+
+    /// Interpolated dynamic energy per toggle (J).
+    pub fn dyn_energy(&self, r: ResourceType, v: f64) -> f64 {
+        let (vi, vf) = match self.uniform_v {
+            Some(u) => Self::grid_pos_uniform(&self.volts, u, v),
+            None => Self::grid_pos(&self.volts, v),
+        };
+        let e = &self.dyn_energy[r.index()];
+        e[vi] * (1.0 - vf) + e[vi + 1] * vf
+    }
+
+    // ---- binary serialization (std-only, little-endian f64) ----
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+        w.write_all(MAGIC)?;
+        write_vec(&mut w, &self.temps)?;
+        write_vec(&mut w, &self.volts)?;
+        write_vec(&mut w, &[self.v_core_nom, self.v_bram_nom])?;
+        for i in 0..8 {
+            write_vec(&mut w, &self.delay[i])?;
+            write_vec(&mut w, &self.leakage[i])?;
+            write_vec(&mut w, &self.dyn_energy[i])?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<CharTable> {
+        let mut r = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        anyhow::ensure!(&magic == MAGIC, "bad chardb magic in {}", path.display());
+        let temps = read_vec(&mut r)?;
+        let volts = read_vec(&mut r)?;
+        let noms = read_vec(&mut r)?;
+        anyhow::ensure!(noms.len() == 2, "bad nominal block");
+        let mut delay = Vec::with_capacity(8);
+        let mut leakage = Vec::with_capacity(8);
+        let mut dyn_energy = Vec::with_capacity(8);
+        for _ in 0..8 {
+            delay.push(read_vec(&mut r)?);
+            leakage.push(read_vec(&mut r)?);
+            dyn_energy.push(read_vec(&mut r)?);
+        }
+        let mut t = CharTable {
+            temps,
+            volts,
+            delay,
+            leakage,
+            dyn_energy,
+            v_core_nom: noms[0],
+            v_bram_nom: noms[1],
+            uniform_t: None,
+            uniform_v: None,
+        };
+        t.detect_uniform();
+        let nv = t.volts.len();
+        for i in 0..8 {
+            anyhow::ensure!(t.delay[i].len() == t.temps.len() * nv, "delay table size");
+            anyhow::ensure!(t.leakage[i].len() == t.temps.len() * nv, "lkg table size");
+            anyhow::ensure!(t.dyn_energy[i].len() == nv, "dyn table size");
+        }
+        Ok(t)
+    }
+}
+
+/// (origin, 1/step) if the axis is uniformly spaced within 1e-9 relative.
+fn uniform_params(axis: &[f64]) -> Option<(f64, f64)> {
+    if axis.len() < 2 {
+        return None;
+    }
+    let step = axis[1] - axis[0];
+    if step <= 0.0 {
+        return None;
+    }
+    for w in axis.windows(2) {
+        if ((w[1] - w[0]) - step).abs() > 1e-9 * step.max(1.0) {
+            return None;
+        }
+    }
+    Some((axis[0], 1.0 / step))
+}
+
+fn write_vec<W: Write>(w: &mut W, v: &[f64]) -> std::io::Result<()> {
+    w.write_all(&(v.len() as u64).to_le_bytes())?;
+    for x in v {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_vec<R: Read>(r: &mut R) -> anyhow::Result<Vec<f64>> {
+    let mut len = [0u8; 8];
+    r.read_exact(&mut len)?;
+    let n = u64::from_le_bytes(len) as usize;
+    anyhow::ensure!(n < 100_000_000, "implausible vector length {n}");
+    let mut buf = vec![0u8; n * 8];
+    r.read_exact(&mut buf)?;
+    Ok(buf
+        .chunks_exact(8)
+        .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_matches_analytic_within_interp_error() {
+        let db = CharDb::analytic();
+        let t = CharTable::generate(&db);
+        let mut worst: f64 = 0.0;
+        for &r in ALL_RESOURCES.iter() {
+            for &(tc, v) in &[(23.0, 0.683), (57.5, 0.755), (91.0, 0.912), (40.0, 0.68)] {
+                let rel = crate::util::stats::rel_diff(t.delay(r, tc, v), db.delay(r, tc, v));
+                worst = worst.max(rel);
+                let rel = crate::util::stats::rel_diff(t.leakage(r, tc, v), db.leakage(r, tc, v));
+                worst = worst.max(rel);
+            }
+        }
+        assert!(worst < 0.01, "interp error {worst}");
+    }
+
+    #[test]
+    fn table_clamps_out_of_range() {
+        let db = CharDb::analytic();
+        let t = CharTable::generate(&db);
+        let lo = t.delay(ResourceType::Lut, -20.0, 0.3);
+        let hi = t.delay(ResourceType::Lut, 200.0, 1.5);
+        assert!(lo.is_finite() && hi.is_finite());
+        let rel = |a: f64, b: f64| (a - b).abs() / b.abs();
+        assert!(rel(lo, t.delay(ResourceType::Lut, 0.0, 0.5)) < 1e-12);
+        assert!(rel(hi, t.delay(ResourceType::Lut, 110.0, 1.0)) < 1e-12);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let db = CharDb::analytic();
+        let t = CharTable::generate(&db);
+        let dir = std::env::temp_dir().join("thermovolt_test_chardb");
+        let path = dir.join("chardb.bin");
+        t.save(&path).unwrap();
+        let t2 = CharTable::load(&path).unwrap();
+        assert_eq!(t.temps, t2.temps);
+        assert_eq!(t.volts, t2.volts);
+        for i in 0..8 {
+            assert_eq!(t.delay[i], t2.delay[i]);
+            assert_eq!(t.leakage[i], t2.leakage[i]);
+            assert_eq!(t.dyn_energy[i], t2.dyn_energy[i]);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("thermovolt_test_badmagic");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, b"NOTMAGIC plus junk").unwrap();
+        assert!(CharTable::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,305 @@
+//! Configuration types for the whole flow.
+//!
+//! Defaults reproduce Table I of the paper (Stratix-like architecture,
+//! 22 nm PTM) plus the thermal / search settings from §III-A. Every field can
+//! be overridden from a `tomlite` config file — see `configs/default.toml`.
+
+use crate::util::tomlite::Doc;
+use std::path::{Path, PathBuf};
+
+/// Table I — FPGA architecture parameters used in COFFE / VPR.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArchConfig {
+    /// LUT input count (K).
+    pub k: usize,
+    /// Logic blocks (BLEs) per cluster (N).
+    pub n: usize,
+    /// Routing channel width (tracks per channel).
+    pub channel_tracks: usize,
+    /// Wire segment length in tiles (L).
+    pub segment_length: usize,
+    /// Cluster global inputs (I).
+    pub cluster_inputs: usize,
+    /// Switch-box mux size.
+    pub sb_mux_size: usize,
+    /// Connection-box mux size.
+    pub cb_mux_size: usize,
+    /// Local (intra-cluster) mux size.
+    pub local_mux_size: usize,
+    /// Nominal core rail (V).
+    pub v_core_nom: f64,
+    /// Nominal BRAM rail (V).
+    pub v_bram_nom: f64,
+    /// BRAM geometry: words × bits.
+    pub bram_words: usize,
+    pub bram_bits: usize,
+    /// BRAM / DSP tile heights in CLB-tile units (HotSpot floorplan, §III-A).
+    pub bram_tile_height: usize,
+    pub dsp_tile_height: usize,
+    /// Repeating column pattern: a BRAM column every `bram_column_period`
+    /// columns, a DSP column every `dsp_column_period` (offset so they
+    /// interleave, mirroring Stratix-style column planning).
+    pub bram_column_period: usize,
+    pub dsp_column_period: usize,
+    /// I/O pads per perimeter tile (VPR io capacity).
+    pub io_capacity: usize,
+}
+
+impl Default for ArchConfig {
+    fn default() -> Self {
+        ArchConfig {
+            k: 6,
+            n: 10,
+            channel_tracks: 240,
+            segment_length: 4,
+            cluster_inputs: 40,
+            sb_mux_size: 12,
+            cb_mux_size: 64,
+            local_mux_size: 25,
+            v_core_nom: 0.8,
+            v_bram_nom: 0.95,
+            bram_words: 1024,
+            bram_bits: 32,
+            bram_tile_height: 6,
+            dsp_tile_height: 4,
+            bram_column_period: 8,
+            dsp_column_period: 12,
+            io_capacity: 8,
+        }
+    }
+}
+
+/// §III-A thermal simulation setup (HotSpot substitute).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ThermalConfig {
+    /// Effective junction-to-ambient thermal resistance (°C/W). The paper
+    /// uses 2 °C/W (high-end, Stratix V / Virtex-7) and 12 °C/W (mid-size,
+    /// still airflow).
+    pub theta_ja: f64,
+    /// Lateral tile-to-tile thermal conductance relative to the vertical
+    /// (package) conductance; controls hotspot spreading.
+    pub lateral_ratio: f64,
+    /// Convergence threshold for the temperature fixed point, °C
+    /// (‖ΔT‖∞ < δ_T in Algorithms 1/2).
+    pub delta_t: f64,
+    /// Max solver sweeps per steady-state solve.
+    pub max_sweeps: usize,
+    /// Padded grid edge for the AOT thermal artifact.
+    pub grid: usize,
+    /// Upper junction-temperature bound (°C) used for d_worst (footnote 2).
+    pub t_max: f64,
+}
+
+impl Default for ThermalConfig {
+    fn default() -> Self {
+        ThermalConfig {
+            theta_ja: 2.0,
+            lateral_ratio: 8.0,
+            delta_t: 0.1,
+            max_sweeps: 2000,
+            grid: 128,
+            t_max: 100.0,
+        }
+    }
+}
+
+/// Voltage search space for Algorithms 1 and 2.
+#[derive(Clone, Debug, PartialEq)]
+pub struct VoltageGrid {
+    pub v_core_min: f64,
+    pub v_core_max: f64,
+    pub v_bram_min: f64,
+    pub v_bram_max: f64,
+    /// Regulator step (10 mV in the paper's examples).
+    pub step: f64,
+}
+
+impl Default for VoltageGrid {
+    fn default() -> Self {
+        VoltageGrid {
+            v_core_min: 0.55,
+            v_core_max: 0.80,
+            v_bram_min: 0.55, // "lowest voltage level before device crashes" [19]
+            v_bram_max: 0.95,
+            step: 0.01,
+        }
+    }
+}
+
+impl VoltageGrid {
+    pub fn core_levels(&self) -> Vec<f64> {
+        levels(self.v_core_min, self.v_core_max, self.step)
+    }
+    pub fn bram_levels(&self) -> Vec<f64> {
+        levels(self.v_bram_min, self.v_bram_max, self.step)
+    }
+}
+
+fn levels(lo: f64, hi: f64, step: f64) -> Vec<f64> {
+    let n = ((hi - lo) / step).round() as usize;
+    (0..=n)
+        .map(|i| ((lo + i as f64 * step) * 1e6).round() / 1e6) // snap float drift
+        .collect()
+}
+
+/// Flow-level knobs shared by Algorithms 1/2 and the over-scaling study.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FlowConfig {
+    /// Ambient (near-board) temperature, °C.
+    pub t_amb: f64,
+    /// Primary-input signal activity for the worst-case (static) analysis.
+    pub alpha_in: f64,
+    /// Reliability guardband on top of the worst-case delay (the paper cites
+    /// >36 % transient margin [5] already baked into STA; we model the STA
+    /// output as d_actual × (1 + guardband)).
+    pub guardband: f64,
+    /// Thermal-sensor margin for the dynamic scheme, °C.
+    pub sensor_margin: f64,
+    /// Max Alg-1 outer iterations (paper: converges < 6, worst case < 8).
+    pub max_iters: usize,
+    /// Seed for every stochastic stage.
+    pub seed: u64,
+    /// Enable the Alg-2 pruning rules (§III-C last paragraph).
+    pub prune: bool,
+    /// Timing-violation rate for over-scaling (1.0 = no violation allowed).
+    pub overscale: f64,
+}
+
+impl Default for FlowConfig {
+    fn default() -> Self {
+        FlowConfig {
+            t_amb: 40.0,
+            alpha_in: 1.0,
+            guardband: 0.36,
+            sensor_margin: 5.0,
+            max_iters: 12,
+            seed: 0xF06A_2019,
+            prune: true,
+            overscale: 1.0,
+        }
+    }
+}
+
+/// Top-level config bundle.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Config {
+    pub arch: ArchConfig,
+    pub thermal: ThermalConfig,
+    pub vgrid: VoltageGrid,
+    pub flow: FlowConfig,
+    pub artifacts_dir: PathBuf,
+}
+
+impl Config {
+    pub fn new() -> Config {
+        Config {
+            artifacts_dir: PathBuf::from("artifacts"),
+            ..Default::default()
+        }
+    }
+
+    /// Load from a tomlite file, falling back to defaults per key.
+    pub fn from_file(path: &Path) -> anyhow::Result<Config> {
+        let text = std::fs::read_to_string(path)?;
+        let doc = Doc::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        Ok(Config::from_doc(&doc))
+    }
+
+    pub fn from_doc(doc: &Doc) -> Config {
+        let d = Config::new();
+        Config {
+            arch: ArchConfig {
+                k: doc.usize_or("arch.k", d.arch.k),
+                n: doc.usize_or("arch.n", d.arch.n),
+                channel_tracks: doc.usize_or("arch.channel_tracks", d.arch.channel_tracks),
+                segment_length: doc.usize_or("arch.segment_length", d.arch.segment_length),
+                cluster_inputs: doc.usize_or("arch.cluster_inputs", d.arch.cluster_inputs),
+                sb_mux_size: doc.usize_or("arch.sb_mux_size", d.arch.sb_mux_size),
+                cb_mux_size: doc.usize_or("arch.cb_mux_size", d.arch.cb_mux_size),
+                local_mux_size: doc.usize_or("arch.local_mux_size", d.arch.local_mux_size),
+                v_core_nom: doc.f64_or("arch.v_core_nom", d.arch.v_core_nom),
+                v_bram_nom: doc.f64_or("arch.v_bram_nom", d.arch.v_bram_nom),
+                bram_words: doc.usize_or("arch.bram_words", d.arch.bram_words),
+                bram_bits: doc.usize_or("arch.bram_bits", d.arch.bram_bits),
+                bram_tile_height: doc.usize_or("arch.bram_tile_height", d.arch.bram_tile_height),
+                dsp_tile_height: doc.usize_or("arch.dsp_tile_height", d.arch.dsp_tile_height),
+                bram_column_period: doc
+                    .usize_or("arch.bram_column_period", d.arch.bram_column_period),
+                dsp_column_period: doc.usize_or("arch.dsp_column_period", d.arch.dsp_column_period),
+                io_capacity: doc.usize_or("arch.io_capacity", d.arch.io_capacity),
+            },
+            thermal: ThermalConfig {
+                theta_ja: doc.f64_or("thermal.theta_ja", d.thermal.theta_ja),
+                lateral_ratio: doc.f64_or("thermal.lateral_ratio", d.thermal.lateral_ratio),
+                delta_t: doc.f64_or("thermal.delta_t", d.thermal.delta_t),
+                max_sweeps: doc.usize_or("thermal.max_sweeps", d.thermal.max_sweeps),
+                grid: doc.usize_or("thermal.grid", d.thermal.grid),
+                t_max: doc.f64_or("thermal.t_max", d.thermal.t_max),
+            },
+            vgrid: VoltageGrid {
+                v_core_min: doc.f64_or("voltage.v_core_min", d.vgrid.v_core_min),
+                v_core_max: doc.f64_or("voltage.v_core_max", d.vgrid.v_core_max),
+                v_bram_min: doc.f64_or("voltage.v_bram_min", d.vgrid.v_bram_min),
+                v_bram_max: doc.f64_or("voltage.v_bram_max", d.vgrid.v_bram_max),
+                step: doc.f64_or("voltage.step", d.vgrid.step),
+            },
+            flow: FlowConfig {
+                t_amb: doc.f64_or("flow.t_amb", d.flow.t_amb),
+                alpha_in: doc.f64_or("flow.alpha_in", d.flow.alpha_in),
+                guardband: doc.f64_or("flow.guardband", d.flow.guardband),
+                sensor_margin: doc.f64_or("flow.sensor_margin", d.flow.sensor_margin),
+                max_iters: doc.usize_or("flow.max_iters", d.flow.max_iters),
+                seed: doc.i64_or("flow.seed", d.flow.seed as i64) as u64,
+                prune: doc.bool_or("flow.prune", d.flow.prune),
+                overscale: doc.f64_or("flow.overscale", d.flow.overscale),
+            },
+            artifacts_dir: PathBuf::from(doc.str_or("paths.artifacts", "artifacts")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_table1() {
+        let a = ArchConfig::default();
+        assert_eq!(a.k, 6);
+        assert_eq!(a.n, 10);
+        assert_eq!(a.channel_tracks, 240);
+        assert_eq!(a.segment_length, 4);
+        assert_eq!(a.sb_mux_size, 12);
+        assert_eq!(a.cb_mux_size, 64);
+        assert_eq!(a.local_mux_size, 25);
+        assert_eq!(a.cluster_inputs, 40);
+        assert_eq!(a.v_core_nom, 0.8);
+        assert_eq!(a.v_bram_nom, 0.95);
+        assert_eq!((a.bram_words, a.bram_bits), (1024, 32));
+    }
+
+    #[test]
+    fn voltage_grid_levels() {
+        let g = VoltageGrid::default();
+        let core = g.core_levels();
+        assert!((core[0] - 0.55).abs() < 1e-9);
+        assert!((core[core.len() - 1] - 0.80).abs() < 1e-9);
+        assert_eq!(core.len(), 26);
+        let bram = g.bram_levels();
+        assert_eq!(bram.len(), 41);
+    }
+
+    #[test]
+    fn from_doc_overrides() {
+        let doc = Doc::parse(
+            "[thermal]\ntheta_ja = 12\n[flow]\nt_amb = 65\n[voltage]\nstep = 0.005\n",
+        )
+        .unwrap();
+        let c = Config::from_doc(&doc);
+        assert_eq!(c.thermal.theta_ja, 12.0);
+        assert_eq!(c.flow.t_amb, 65.0);
+        assert_eq!(c.vgrid.step, 0.005);
+        // untouched keys keep defaults
+        assert_eq!(c.arch.k, 6);
+    }
+}

@@ -1,0 +1,267 @@
+//! Online (dynamic) voltage adaptation — the run-time half of §III-B.
+//!
+//! The static scheme must assume the worst ambient temperature; the dynamic
+//! scheme instead reads the on-die temperature-sensing diode (TSD: 10-bit
+//! reading every ~1 ms [38]), indexes the per-design (T → V_core, V_bram)
+//! lookup table built at configuration time (`flow::dynamic::VoltageLut`),
+//! and programs the on-chip regulator (FIVR-class, VID-stepped, finite slew
+//! [39]). A ~5 °C margin absorbs TSD error and spatial gradients [41].
+//!
+//! Implemented as a discrete-event simulation over an ambient-temperature
+//! trace: deterministic, testable, and replayable in real time by the
+//! `thermovolt serve` CLI. The plant model is first-order: junction
+//! temperature relaxes toward `T_amb + θ_JA · P(V, T)` with a thermal time
+//! constant of seconds — sensor sampling at 1 ms is far faster than the
+//! plant, exactly the regime the paper argues makes 1 ms sampling safe
+//! (heat-up takes "orders of seconds" [40]).
+
+use crate::flow::dynamic::VoltageLut;
+
+/// Regulator model: VID-stepped output with finite slew rate.
+#[derive(Clone, Debug)]
+pub struct Regulator {
+    /// Volts per millisecond slew.
+    pub slew_v_per_ms: f64,
+    /// Regulator step granularity (V).
+    pub step: f64,
+    pub v_now: f64,
+    pub v_target: f64,
+}
+
+impl Regulator {
+    pub fn new(v0: f64) -> Regulator {
+        Regulator {
+            slew_v_per_ms: 0.01, // 10 mV/ms (FIVR-class)
+            step: 0.01,
+            v_now: v0,
+            v_target: v0,
+        }
+    }
+
+    pub fn command(&mut self, v: f64) {
+        // snap to VID grid
+        self.v_target = (v / self.step).round() * self.step;
+    }
+
+    /// Advance by `dt_ms`; the output slews toward the target.
+    pub fn tick(&mut self, dt_ms: f64) {
+        let max_dv = self.slew_v_per_ms * dt_ms;
+        let dv = (self.v_target - self.v_now).clamp(-max_dv, max_dv);
+        self.v_now += dv;
+    }
+}
+
+/// 10-bit temperature-sensing diode with bounded error and 1 ms readout.
+#[derive(Clone, Debug)]
+pub struct Tsd {
+    /// Full-scale range (°C) quantized to 10 bits.
+    pub range: (f64, f64),
+    /// Absolute sensor error bound (°C).
+    pub error: f64,
+}
+
+impl Default for Tsd {
+    fn default() -> Self {
+        Tsd {
+            range: (-40.0, 125.0),
+            error: 2.0,
+        }
+    }
+}
+
+impl Tsd {
+    /// Quantized, deterministically-perturbed reading.
+    pub fn read(&self, t_true: f64, tick: u64) -> f64 {
+        // deterministic pseudo-error in [-error, +error]
+        let h = tick.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let u = (h >> 11) as f64 / (1u64 << 53) as f64;
+        let noisy = t_true + (2.0 * u - 1.0) * self.error;
+        let (lo, hi) = self.range;
+        let q = ((noisy - lo) / (hi - lo) * 1023.0).round().clamp(0.0, 1023.0);
+        lo + q / 1023.0 * (hi - lo)
+    }
+}
+
+/// One sample of the simulation log.
+#[derive(Clone, Copy, Debug)]
+pub struct Sample {
+    pub t_ms: f64,
+    pub t_amb: f64,
+    pub t_junct: f64,
+    pub v_core: f64,
+    pub v_bram: f64,
+    pub power: f64,
+    /// True if the commanded voltage was below what the sensed temperature
+    /// requires (a guardband violation — must never happen with margin).
+    pub violation: bool,
+}
+
+/// Controller + plant simulation.
+pub struct DynamicController<'a> {
+    pub lut: &'a VoltageLut,
+    pub theta_ja: f64,
+    /// Thermal time constant (ms).
+    pub tau_ms: f64,
+    /// Sensor margin (°C).
+    pub margin: f64,
+    pub tsd: Tsd,
+    /// Power model hook: (v_core, v_bram, t_junct) → watts.
+    pub power_fn: Box<dyn Fn(f64, f64, f64) -> f64 + 'a>,
+}
+
+impl<'a> DynamicController<'a> {
+    /// Simulate over an ambient trace given as (time_ms, t_amb) breakpoints
+    /// (linearly interpolated). Returns the sampled log at `dt_ms` steps.
+    pub fn run(&self, trace: &[(f64, f64)], dt_ms: f64, sample_every_ms: f64) -> Vec<Sample> {
+        assert!(trace.len() >= 2, "need a trace");
+        let t_end = trace.last().unwrap().0;
+        let times: Vec<f64> = trace.iter().map(|&(t, _)| t).collect();
+        let temps: Vec<f64> = trace.iter().map(|&(_, a)| a).collect();
+        let amb = |t: f64| crate::util::stats::interp1(&times, &temps, t);
+
+        let (v0c, v0b) = (self.lut.v_core_nom, self.lut.v_bram_nom);
+        let mut reg_core = Regulator::new(v0c);
+        let mut reg_bram = Regulator::new(v0b);
+        let mut t_junct = amb(0.0);
+        let mut out = Vec::new();
+        let mut next_sample = 0.0;
+        let mut tick = 0u64;
+        let mut t_ms = 0.0;
+        while t_ms <= t_end {
+            let t_amb = amb(t_ms);
+            // sensor + control every 1 ms
+            let sensed = self.tsd.read(t_junct, tick);
+            let (vc_cmd, vb_cmd) = self.lut.lookup(sensed, self.margin);
+            reg_core.command(vc_cmd);
+            reg_bram.command(vb_cmd);
+            reg_core.tick(dt_ms);
+            reg_bram.tick(dt_ms);
+            // during slew, run at the *higher* of current/target to stay safe
+            let vc = reg_core.v_now.max(vc_cmd);
+            let vb = reg_bram.v_now.max(vb_cmd);
+            // plant: first-order relaxation toward the steady state
+            let p = (self.power_fn)(vc, vb, t_junct);
+            let t_ss = t_amb + self.theta_ja * p;
+            t_junct += (t_ss - t_junct) * (dt_ms / self.tau_ms).min(1.0);
+            // violation check: required rails at the *true* junction temp
+            let (vreq_c, vreq_b) = self.lut.lookup(t_junct, 0.0);
+            let violation = vc < vreq_c - 1e-9 || vb < vreq_b - 1e-9;
+            if t_ms + 1e-9 >= next_sample {
+                out.push(Sample {
+                    t_ms,
+                    t_amb,
+                    t_junct,
+                    v_core: vc,
+                    v_bram: vb,
+                    power: p,
+                    violation,
+                });
+                next_sample += sample_every_ms;
+            }
+            t_ms += dt_ms;
+            tick += 1;
+        }
+        out
+    }
+}
+
+/// Time-weighted mean power of a log.
+pub fn mean_power(log: &[Sample]) -> f64 {
+    if log.is_empty() {
+        return 0.0;
+    }
+    log.iter().map(|s| s.power).sum::<f64>() / log.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flow::dynamic::{LutEntry, VoltageLut};
+
+    fn toy_lut() -> VoltageLut {
+        VoltageLut {
+            entries: vec![
+                LutEntry { t_junct: 45.0, v_core: 0.68, v_bram: 0.80, power: 0.3 },
+                LutEntry { t_junct: 65.0, v_core: 0.72, v_bram: 0.86, power: 0.4 },
+                LutEntry { t_junct: 90.0, v_core: 0.76, v_bram: 0.92, power: 0.5 },
+            ],
+            v_core_nom: 0.80,
+            v_bram_nom: 0.95,
+        }
+    }
+
+    fn controller(lut: &VoltageLut) -> DynamicController<'_> {
+        DynamicController {
+            lut,
+            theta_ja: 12.0,
+            tau_ms: 3000.0,
+            margin: 5.0,
+            tsd: Tsd::default(),
+            power_fn: Box::new(|vc, vb, tj| {
+                // crude: quadratic in V, exponential in T
+                0.5 * (vc * vc / 0.64) * (0.015 * (tj - 25.0)).exp() * 0.7
+                    + 0.1 * (vb * vb / 0.9025)
+            }),
+        }
+    }
+
+    #[test]
+    fn no_guardband_violations_with_margin() {
+        let lut = toy_lut();
+        let c = controller(&lut);
+        // ambient ramps 25 → 70 °C over 60 s and back
+        let trace = vec![(0.0, 25.0), (60_000.0, 70.0), (120_000.0, 25.0)];
+        let log = c.run(&trace, 1.0, 250.0);
+        assert!(log.len() > 100);
+        assert!(log.iter().all(|s| !s.violation), "guardband violated");
+    }
+
+    #[test]
+    fn voltages_track_temperature() {
+        let lut = toy_lut();
+        let c = controller(&lut);
+        let trace = vec![(0.0, 25.0), (90_000.0, 80.0)];
+        let log = c.run(&trace, 1.0, 500.0);
+        let first = &log[2];
+        let last = log.last().unwrap();
+        assert!(last.t_junct > first.t_junct + 20.0);
+        assert!(last.v_core > first.v_core, "{} vs {}", last.v_core, first.v_core);
+    }
+
+    #[test]
+    fn dynamic_beats_static_worst_case_power() {
+        let lut = toy_lut();
+        let c = controller(&lut);
+        // mild ambient: dynamic settles at the coolest LUT row
+        let trace = vec![(0.0, 25.0), (60_000.0, 28.0)];
+        let log = c.run(&trace, 1.0, 250.0);
+        let dyn_p = mean_power(&log);
+        // static worst-case must assume the hottest row's voltages
+        let static_p = (c.power_fn)(0.76, 0.92, log.last().unwrap().t_junct);
+        assert!(
+            dyn_p < static_p * 0.97,
+            "dynamic {dyn_p} vs static-worst {static_p}"
+        );
+    }
+
+    #[test]
+    fn regulator_slew_is_bounded() {
+        let mut r = Regulator::new(0.95);
+        r.command(0.55);
+        r.tick(1.0);
+        assert!((r.v_now - 0.94).abs() < 1e-12);
+        for _ in 0..100 {
+            r.tick(1.0);
+        }
+        assert!((r.v_now - 0.55).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tsd_reading_bounded_and_quantized() {
+        let tsd = Tsd::default();
+        for tick in 0..200 {
+            let r = tsd.read(55.0, tick);
+            assert!((r - 55.0).abs() <= tsd.error + 0.2, "reading {r}");
+        }
+    }
+}

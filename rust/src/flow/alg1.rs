@@ -1,0 +1,451 @@
+//! Algorithm 1 — Thermal-Aware Voltage Selection (§III-B).
+//!
+//! ```text
+//! T ← [T_amb …];  ΔT ← ∞
+//! d_worst ← T(netlist, T_max, V_nom)           // one-size-fits-all STA
+//! while ‖ΔT‖∞ > δ_T:
+//!     (V_core, V_bram) ← argmin P_lkg(T,V) + P_dyn(α, f_worst, V)
+//!                         s.t. T(netlist, T, V) ≤ d_worst·rate
+//!     T' ← HotSpot(P_lkg + P_dyn);  ΔT ← T' − T;  T ← T'
+//! return (V_core, V_bram)
+//! ```
+//!
+//! Search structure: delay is monotone in each rail voltage and power is
+//! strictly increasing in each, so for every V_bram level the optimal
+//! feasible V_core is the *minimum* feasible one (binary search); the outer
+//! argmin scans the 41-point V_bram axis. After the first iteration the
+//! scan narrows to the neighbourhood of the previous solution (the paper's
+//! "subsequent iterations are O(1)", Table II: 10.9 s → 3.1 s), with a
+//! full-rescan fallback if the neighbourhood is infeasible.
+//!
+//! `rate` > 1 is the timing-speculative over-scaling hook (§III-D): the
+//! constraint relaxes to `rate × d_worst` while the clock stays put.
+
+use crate::config::Config;
+use crate::flow::design::Design;
+use crate::power::PowerModel;
+use crate::thermal::ThermalBackend;
+use crate::timing::Sta;
+use std::time::Instant;
+
+/// One outer iteration's record (Table II rows).
+#[derive(Clone, Debug)]
+pub struct IterRecord {
+    pub v_core: f64,
+    pub v_bram: f64,
+    /// Total device power at this iteration's temperatures (W).
+    pub power: f64,
+    /// Max junction temperature (°C).
+    pub t_junct: f64,
+    /// Wall-clock seconds spent in this iteration.
+    pub time_s: f64,
+    /// Candidate pairs evaluated (search-effort metric).
+    pub evals: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Alg1Result {
+    pub v_core: f64,
+    pub v_bram: f64,
+    /// Total power at the converged temperature map (W).
+    pub power: f64,
+    /// Converged temperature map (°C per tile).
+    pub temp: Vec<f64>,
+    /// Worst-case STA delay at (T_max, V_nom) — the timing target (s).
+    pub d_worst: f64,
+    /// Operating clock frequency (Hz): 1 / (d_worst · (1 + guardband)).
+    pub f_clk: f64,
+    /// Per-iteration log (Table II).
+    pub iters: Vec<IterRecord>,
+    /// True when even nominal voltages cannot meet the target (overheated).
+    pub infeasible: bool,
+}
+
+/// Run Algorithm 1. `rate` = allowed CP-delay violation (1.0 = none).
+pub fn thermal_aware_voltage_selection(
+    design: &Design,
+    cfg: &Config,
+    backend: &mut dyn ThermalBackend,
+    rate: f64,
+) -> Alg1Result {
+    let sta = design.sta();
+    let pm = design.power_model();
+    run_with(design, &sta, &pm, cfg, backend, rate)
+}
+
+/// Same, with caller-provided STA/power models (reused across T_amb sweeps).
+pub fn run_with(
+    design: &Design,
+    sta: &Sta<'_>,
+    pm: &PowerModel<'_>,
+    cfg: &Config,
+    backend: &mut dyn ThermalBackend,
+    rate: f64,
+) -> Alg1Result {
+    let vnc = cfg.arch.v_core_nom;
+    let vnb = cfg.arch.v_bram_nom;
+    let d_worst = sta.analyze_flat(cfg.thermal.t_max, vnc, vnb).critical_path;
+    let target = d_worst * rate;
+    let f_clk = 1.0 / (d_worst * (1.0 + cfg.flow.guardband));
+
+    let core_levels = cfg.vgrid.core_levels();
+    let bram_levels = cfg.vgrid.bram_levels();
+
+    let n = design.dev.n_tiles();
+    let mut temp = vec![cfg.flow.t_amb; n];
+    let mut iters: Vec<IterRecord> = Vec::new();
+    let mut best = (vnc, vnb);
+    let mut infeasible = false;
+
+    for iter in 0..cfg.flow.max_iters {
+        let t0 = Instant::now();
+        let mut evals = 0usize;
+
+        // Per-voltage-level delay caches, memoized for this iteration's
+        // temperature map (§Perf: the search probes the same handful of
+        // levels dozens of times; rebuilding the per-tile cache per probe
+        // dominated Algorithm 1's runtime).
+        let mut core_caches: Vec<Option<Vec<f64>>> = vec![None; core_levels.len()];
+        let mut bram_caches: Vec<Option<Vec<f64>>> = vec![None; bram_levels.len()];
+
+        // feasibility test at a candidate level pair under the current map
+        let mut feasible = |ci: usize,
+                            bi: usize,
+                            evals: &mut usize,
+                            core_caches: &mut Vec<Option<Vec<f64>>>,
+                            bram_caches: &mut Vec<Option<Vec<f64>>>|
+         -> bool {
+            *evals += 1;
+            if core_caches[ci].is_none() {
+                core_caches[ci] = Some(sta.build_core_cache(&temp, core_levels[ci]));
+            }
+            if bram_caches[bi].is_none() {
+                bram_caches[bi] = Some(sta.build_bram_cache(&temp, bram_levels[bi]));
+            }
+            let cp = sta
+                .analyze_cached(
+                    core_caches[ci].as_ref().unwrap(),
+                    bram_caches[bi].as_ref().unwrap(),
+                )
+                .critical_path;
+            cp <= target
+        };
+
+        // per-V_bram: minimum feasible V_core via binary search on the level
+        // grid (delay monotone ↓ in V); power is ↑ in V so that point is the
+        // per-V_bram optimum.
+        let mut min_feasible_core = |bi: usize,
+                                     lo0: usize,
+                                     hi0: usize,
+                                     evals: &mut usize,
+                                     core_caches: &mut Vec<Option<Vec<f64>>>,
+                                     bram_caches: &mut Vec<Option<Vec<f64>>>|
+         -> Option<usize> {
+            let mut lo = lo0;
+            let mut hi = hi0;
+            if !feasible(hi, bi, evals, core_caches, bram_caches) {
+                return None;
+            }
+            while lo < hi {
+                let mid = (lo + hi) / 2;
+                if feasible(mid, bi, evals, core_caches, bram_caches) {
+                    hi = mid;
+                } else {
+                    lo = mid + 1;
+                }
+            }
+            Some(hi)
+        };
+
+        // candidate V_bram range: full scan on iter 0, neighbourhood after
+        let (vb_lo, vb_hi, vc_lo, vc_hi) = if iter == 0 {
+            (0, bram_levels.len() - 1, 0, core_levels.len() - 1)
+        } else {
+            let bi = nearest(&bram_levels, best.1);
+            let ci = nearest(&core_levels, best.0);
+            (
+                bi.saturating_sub(3),
+                (bi + 3).min(bram_levels.len() - 1),
+                ci.saturating_sub(5),
+                (ci + 5).min(core_levels.len() - 1),
+            )
+        };
+
+        let mut found: Option<(f64, f64, f64)> = None; // (power, vc, vb)
+        let mut scan = |vb_lo: usize,
+                        vb_hi: usize,
+                        vc_lo: usize,
+                        vc_hi: usize,
+                        evals: &mut usize,
+                        found: &mut Option<(f64, f64, f64)>,
+                        core_caches: &mut Vec<Option<Vec<f64>>>,
+                        bram_caches: &mut Vec<Option<Vec<f64>>>| {
+            for bi in vb_lo..=vb_hi {
+                let vb = bram_levels[bi];
+                if let Some(ci) =
+                    min_feasible_core(bi, vc_lo, vc_hi, evals, core_caches, bram_caches)
+                {
+                    let vc = core_levels[ci];
+                    let p = pm.total_power(&temp, f_clk, vc, vb);
+                    if found.map(|(bp, _, _)| p < bp).unwrap_or(true) {
+                        *found = Some((p, vc, vb));
+                    }
+                }
+            }
+        };
+        scan(
+            vb_lo,
+            vb_hi,
+            vc_lo,
+            vc_hi,
+            &mut evals,
+            &mut found,
+            &mut core_caches,
+            &mut bram_caches,
+        );
+        if found.is_none() && iter > 0 {
+            // neighbourhood infeasible (temperature moved a lot): full rescan
+            scan(
+                0,
+                bram_levels.len() - 1,
+                0,
+                core_levels.len() - 1,
+                &mut evals,
+                &mut found,
+                &mut core_caches,
+                &mut bram_caches,
+            );
+        }
+        let (power_est, vc, vb) = match found {
+            Some(x) => x,
+            None => {
+                // even nominal voltages cannot meet timing under this heat
+                infeasible = true;
+                (pm.total_power(&temp, f_clk, vnc, vnb), vnc, vnb)
+            }
+        };
+        best = (vc, vb);
+
+        // thermal update at the chosen voltages
+        let pmap = pm.power_map(&temp, f_clk, vc, vb);
+        let t_new = backend.steady_state(&pmap, cfg.flow.t_amb);
+        let mut dmax = 0.0f64;
+        for i in 0..n {
+            dmax = dmax.max((t_new[i] - temp[i]).abs());
+        }
+        temp = t_new;
+        let t_junct = crate::util::stats::max(&temp);
+        iters.push(IterRecord {
+            v_core: vc,
+            v_bram: vb,
+            power: power_est,
+            t_junct,
+            time_s: t0.elapsed().as_secs_f64(),
+            evals,
+        });
+        if dmax <= cfg.thermal.delta_t {
+            break;
+        }
+    }
+
+    let (vc, vb) = best;
+    let power = pm.total_power(&temp, f_clk, vc, vb);
+    Alg1Result {
+        v_core: vc,
+        v_bram: vb,
+        power,
+        temp,
+        d_worst,
+        f_clk,
+        iters,
+        infeasible,
+    }
+}
+
+/// Baseline: nominal voltages, same thermal fixed point (Fig. 4(b)'s
+/// baseline curve, the denominator of every "power reduction" number).
+pub fn baseline(
+    design: &Design,
+    cfg: &Config,
+    backend: &mut dyn ThermalBackend,
+) -> Alg1Result {
+    let sta = design.sta();
+    let pm = design.power_model();
+    baseline_with(design, &sta, &pm, cfg, backend)
+}
+
+pub fn baseline_with(
+    design: &Design,
+    sta: &Sta<'_>,
+    pm: &PowerModel<'_>,
+    cfg: &Config,
+    backend: &mut dyn ThermalBackend,
+) -> Alg1Result {
+    fixed_voltage_fixed_point(
+        design,
+        sta,
+        pm,
+        cfg,
+        backend,
+        cfg.arch.v_core_nom,
+        cfg.arch.v_bram_nom,
+    )
+}
+
+/// Thermal fixed point at *fixed* rail voltages (baseline curve, and the
+/// activity-range re-evaluation of a chosen operating point in Figs. 4/6).
+pub fn fixed_voltage_fixed_point(
+    design: &Design,
+    sta: &Sta<'_>,
+    pm: &PowerModel<'_>,
+    cfg: &Config,
+    backend: &mut dyn ThermalBackend,
+    vc: f64,
+    vb: f64,
+) -> Alg1Result {
+    let vnc = cfg.arch.v_core_nom;
+    let vnb = cfg.arch.v_bram_nom;
+    let d_worst = sta.analyze_flat(cfg.thermal.t_max, vnc, vnb).critical_path;
+    let f_clk = 1.0 / (d_worst * (1.0 + cfg.flow.guardband));
+    let n = design.dev.n_tiles();
+    let mut temp = vec![cfg.flow.t_amb; n];
+    let mut iters = Vec::new();
+    for _ in 0..cfg.flow.max_iters {
+        let t0 = Instant::now();
+        let pmap = pm.power_map(&temp, f_clk, vc, vb);
+        let t_new = backend.steady_state(&pmap, cfg.flow.t_amb);
+        let mut dmax = 0.0f64;
+        for i in 0..n {
+            dmax = dmax.max((t_new[i] - temp[i]).abs());
+        }
+        temp = t_new;
+        iters.push(IterRecord {
+            v_core: vc,
+            v_bram: vb,
+            power: pm.total_power(&temp, f_clk, vc, vb),
+            t_junct: crate::util::stats::max(&temp),
+            time_s: t0.elapsed().as_secs_f64(),
+            evals: 0,
+        });
+        if dmax <= cfg.thermal.delta_t {
+            break;
+        }
+    }
+    let power = pm.total_power(&temp, f_clk, vc, vb);
+    Alg1Result {
+        v_core: vc,
+        v_bram: vb,
+        power,
+        temp,
+        d_worst,
+        f_clk,
+        iters,
+        infeasible: false,
+    }
+}
+
+fn nearest(levels: &[f64], v: f64) -> usize {
+    let mut bi = 0;
+    let mut bd = f64::INFINITY;
+    for (i, &l) in levels.iter().enumerate() {
+        let d = (l - v).abs();
+        if d < bd {
+            bd = d;
+            bi = i;
+        }
+    }
+    bi
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flow::design::Effort;
+    use crate::thermal::{NativeSolver, ThermalGrid};
+
+    fn setup(t_amb: f64, theta: f64) -> (Design, Config, NativeSolver) {
+        let mut cfg = Config::new();
+        cfg.flow.t_amb = t_amb;
+        cfg.thermal.theta_ja = theta;
+        let d = Design::build("mkPktMerge", &cfg, Effort::Quick).unwrap();
+        let solver = NativeSolver::new(
+            ThermalGrid::calibrated(d.dev.rows, d.dev.cols, &cfg.thermal),
+            &cfg.thermal,
+        );
+        (d, cfg, solver)
+    }
+
+    #[test]
+    fn alg1_converges_and_saves_power() {
+        let (d, cfg, mut solver) = setup(40.0, 12.0);
+        let res = thermal_aware_voltage_selection(&d, &cfg, &mut solver, 1.0);
+        let base = baseline(&d, &cfg, &mut solver.clone());
+        assert!(!res.infeasible);
+        assert!(res.iters.len() <= 8, "iterations {}", res.iters.len());
+        // the core rail must scale below nominal at 40 °C; mkPktMerge's CP
+        // runs through BRAM (insight (c)), so V_bram may stay at nominal —
+        // scaling V_core consumes the shared-path margin.
+        assert!(res.v_core < cfg.arch.v_core_nom);
+        assert!(res.v_bram <= cfg.arch.v_bram_nom);
+        // and power must drop meaningfully
+        let saving = 1.0 - res.power / base.power;
+        assert!(
+            (0.10..=0.60).contains(&saving),
+            "saving {saving} (res {} base {})",
+            res.power,
+            base.power
+        );
+    }
+
+    #[test]
+    fn timing_is_met_at_converged_solution() {
+        let (d, cfg, mut solver) = setup(40.0, 12.0);
+        let res = thermal_aware_voltage_selection(&d, &cfg, &mut solver, 1.0);
+        let sta = d.sta();
+        let cp = sta.analyze(&res.temp, res.v_core, res.v_bram).critical_path;
+        assert!(
+            cp <= res.d_worst * 1.0 + 1e-15,
+            "timing violated: {cp} > {}",
+            res.d_worst
+        );
+    }
+
+    #[test]
+    fn hotter_ambient_means_higher_voltages_less_saving() {
+        let (d, cfg_cold, mut s1) = setup(10.0, 12.0);
+        let cold = thermal_aware_voltage_selection(&d, &cfg_cold, &mut s1, 1.0);
+        let mut cfg_hot = cfg_cold.clone();
+        cfg_hot.flow.t_amb = 80.0;
+        let mut s2 = s1.clone();
+        let hot = thermal_aware_voltage_selection(&d, &cfg_hot, &mut s2, 1.0);
+        assert!(hot.v_core >= cold.v_core, "{} < {}", hot.v_core, cold.v_core);
+        // BRAM rail may trade non-monotonically (Fig. 4a), but the rail sum
+        // must not decrease with temperature
+        assert!(hot.v_core + hot.v_bram >= cold.v_core + cold.v_bram - 0.011);
+    }
+
+    #[test]
+    fn overscaling_relaxes_voltages_further() {
+        let (d, cfg, mut solver) = setup(40.0, 12.0);
+        let tight = thermal_aware_voltage_selection(&d, &cfg, &mut solver.clone(), 1.0);
+        let relaxed = thermal_aware_voltage_selection(&d, &cfg, &mut solver, 1.3);
+        assert!(relaxed.power <= tight.power + 1e-12);
+        assert!(relaxed.v_core <= tight.v_core);
+    }
+
+    #[test]
+    fn later_iterations_are_cheaper_than_first() {
+        let (d, cfg, mut solver) = setup(60.0, 12.0);
+        let res = thermal_aware_voltage_selection(&d, &cfg, &mut solver, 1.0);
+        if res.iters.len() >= 2 {
+            let first = res.iters[0].evals;
+            for it in &res.iters[1..] {
+                assert!(
+                    it.evals * 2 < first.max(2),
+                    "iter evals {} vs first {first}",
+                    it.evals
+                );
+            }
+        }
+    }
+}

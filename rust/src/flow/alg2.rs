@@ -1,0 +1,249 @@
+//! Algorithm 2 — Thermal-Aware Energy Optimization (§III-C).
+//!
+//! For every (V_core, V_bram) pair: iterate { d_max ← STA(T, V); P ←
+//! P_lkg(T, V) + P_dyn(α, d_max, V); T ← HotSpot(P) } to the temperature
+//! fixed point; energy = d_max × ΣP (power-delay product — Eq. (1) shows
+//! running at max frequency for a given voltage is always energy-optimal
+//! because leakage energy scales with the period). Return the pair with
+//! minimum energy.
+//!
+//! The paper's two search optimizations (two-orders-of-magnitude speedup,
+//! 72 min → 49 s) are reproduced:
+//! 1. *energy pruning* — skip a pair whose initial-loop energy (T = T_amb,
+//!    before the temperature-delay feedback) already exceeds the best found
+//!    (feedback only increases T, hence delay and leakage, hence energy);
+//! 2. *thermal memoization* — if a candidate's power is within
+//!    `0.1 / θ_JA` of a previously simulated case, reuse that case's
+//!    converged temperature map instead of re-running the thermal solver.
+
+use crate::config::Config;
+use crate::flow::design::Design;
+use crate::power::PowerModel;
+use crate::thermal::ThermalBackend;
+use crate::timing::Sta;
+
+#[derive(Clone, Debug)]
+pub struct Alg2Result {
+    pub v_core: f64,
+    pub v_bram: f64,
+    /// Optimal operating clock period (seconds, guardbanded).
+    pub period: f64,
+    /// Energy rate at the optimum: power × period (J per cycle).
+    pub energy: f64,
+    /// Total power at the optimum (W).
+    pub power: f64,
+    /// Converged temperature map at the optimum.
+    pub temp: Vec<f64>,
+    /// Frequency ratio vs the nominal-voltage design (Fig. 7 ▲ points).
+    pub freq_ratio: f64,
+    /// Search-effort counters (runtime-claims bench).
+    pub pairs_total: usize,
+    pub pairs_pruned_energy: usize,
+    pub thermal_solves: usize,
+    pub thermal_reused: usize,
+}
+
+/// Run Algorithm 2.
+pub fn thermal_aware_energy_optimization(
+    design: &Design,
+    cfg: &Config,
+    backend: &mut dyn ThermalBackend,
+) -> Alg2Result {
+    let sta = design.sta();
+    let pm = design.power_model();
+    run_with(design, &sta, &pm, cfg, backend)
+}
+
+pub fn run_with(
+    design: &Design,
+    sta: &Sta<'_>,
+    pm: &PowerModel<'_>,
+    cfg: &Config,
+    backend: &mut dyn ThermalBackend,
+) -> Alg2Result {
+    let vnc = cfg.arch.v_core_nom;
+    let vnb = cfg.arch.v_bram_nom;
+    let gb = 1.0 + cfg.flow.guardband;
+    let d_worst = sta.analyze_flat(cfg.thermal.t_max, vnc, vnb).critical_path;
+    let nominal_period = d_worst * gb;
+
+    let n = design.dev.n_tiles();
+    let core_levels = cfg.vgrid.core_levels();
+    let bram_levels = cfg.vgrid.bram_levels();
+
+    let mut best: Option<Alg2Result> = None;
+    let mut pairs_pruned_energy = 0usize;
+    let mut thermal_solves = 0usize;
+    let mut thermal_reused = 0usize;
+    // thermal memoization: (total power, converged map)
+    let mut memo: Vec<(f64, Vec<f64>)> = Vec::new();
+    let reuse_band = if cfg.flow.prune {
+        0.1 / cfg.thermal.theta_ja
+    } else {
+        0.0
+    };
+
+    // scan low-to-high voltage: low-V candidates (likely optimal) seed the
+    // energy bound early, making pruning effective
+    let pairs_total = core_levels.len() * bram_levels.len();
+    for &vc in &core_levels {
+        for &vb in &bram_levels {
+            // ---- initial loop (T = T_amb): prune hopeless pairs ----
+            let flat = vec![cfg.flow.t_amb; n];
+            let d0 = sta.analyze_flat(cfg.flow.t_amb, vc, vb).critical_path;
+            let period0 = d0 * gb;
+            let p0 = pm.total_power(&flat, 1.0 / period0, vc, vb);
+            let e0 = p0 * period0;
+            if cfg.flow.prune {
+                if let Some(b) = &best {
+                    if e0 > b.energy {
+                        pairs_pruned_energy += 1;
+                        continue;
+                    }
+                }
+            }
+            // ---- temperature-delay feedback to the fixed point ----
+            let mut temp = flat;
+            let mut period = period0;
+            let mut power = p0;
+            for _ in 0..cfg.flow.max_iters {
+                // thermal step: memoized or solved
+                let reused = memo
+                    .iter()
+                    .find(|(p, _)| (p - power).abs() < reuse_band)
+                    .map(|(_, t)| t.clone());
+                let t_new = match reused {
+                    Some(t) => {
+                        thermal_reused += 1;
+                        t
+                    }
+                    None => {
+                        thermal_solves += 1;
+                        let pmap = pm.power_map(&temp, 1.0 / period, vc, vb);
+                        let t = backend.steady_state(&pmap, cfg.flow.t_amb);
+                        memo.push((power, t.clone()));
+                        t
+                    }
+                };
+                let mut dmax = 0.0f64;
+                for i in 0..n {
+                    dmax = dmax.max((t_new[i] - temp[i]).abs());
+                }
+                temp = t_new;
+                let d = sta.analyze(&temp, vc, vb).critical_path;
+                period = d * gb;
+                power = pm.total_power(&temp, 1.0 / period, vc, vb);
+                if dmax <= cfg.thermal.delta_t {
+                    break;
+                }
+            }
+            let energy = power * period;
+            if best.as_ref().map(|b| energy < b.energy).unwrap_or(true) {
+                best = Some(Alg2Result {
+                    v_core: vc,
+                    v_bram: vb,
+                    period,
+                    energy,
+                    power,
+                    temp,
+                    freq_ratio: nominal_period / period,
+                    pairs_total,
+                    pairs_pruned_energy: 0,
+                    thermal_solves: 0,
+                    thermal_reused: 0,
+                });
+            }
+        }
+    }
+    let mut out = best.expect("voltage grid is non-empty");
+    out.pairs_pruned_energy = pairs_pruned_energy;
+    out.thermal_solves = thermal_solves;
+    out.thermal_reused = thermal_reused;
+    out
+}
+
+/// Baseline energy rate: nominal voltages at the worst-case-guaranteed clock
+/// (the same clock Algorithm 1's baseline runs), at the thermal fixed point.
+pub fn baseline_energy(
+    design: &Design,
+    cfg: &Config,
+    backend: &mut dyn ThermalBackend,
+) -> (f64, f64) {
+    let base = super::alg1::baseline(design, cfg, backend);
+    let period = 1.0 / base.f_clk;
+    (base.power * period, base.power)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flow::design::Effort;
+    use crate::thermal::{NativeSolver, ThermalGrid};
+
+    fn setup(t_amb: f64) -> (Design, Config, NativeSolver) {
+        let mut cfg = Config::new();
+        cfg.flow.t_amb = t_amb;
+        cfg.thermal.theta_ja = 2.0;
+        let d = Design::build("mkPktMerge", &cfg, Effort::Quick).unwrap();
+        let solver = NativeSolver::new(
+            ThermalGrid::calibrated(d.dev.rows, d.dev.cols, &cfg.thermal),
+            &cfg.thermal,
+        );
+        (d, cfg, solver)
+    }
+
+    #[test]
+    fn energy_optimum_trades_frequency_for_energy() {
+        let (d, cfg, mut solver) = setup(65.0);
+        let res = thermal_aware_energy_optimization(&d, &cfg, &mut solver);
+        let (base_e, _) = baseline_energy(&d, &cfg, &mut solver.clone());
+        // Fig. 7: substantial energy saving, frequency ratio well below 1
+        let saving = 1.0 - res.energy / base_e;
+        assert!(
+            (0.25..=0.85).contains(&saving),
+            "energy saving {saving} (e={} base={})",
+            res.energy,
+            base_e
+        );
+        assert!(
+            (0.15..=0.95).contains(&res.freq_ratio),
+            "freq ratio {}",
+            res.freq_ratio
+        );
+        // the energy point uses lower voltages than nominal
+        assert!(res.v_core < cfg.arch.v_core_nom);
+    }
+
+    #[test]
+    fn pruning_preserves_the_optimum() {
+        let (d, mut cfg, mut solver) = setup(65.0);
+        cfg.flow.prune = true;
+        let fast = thermal_aware_energy_optimization(&d, &cfg, &mut solver.clone());
+        cfg.flow.prune = false;
+        let slow = thermal_aware_energy_optimization(&d, &cfg, &mut solver);
+        assert_eq!(fast.v_core, slow.v_core, "pruning changed V_core");
+        assert_eq!(fast.v_bram, slow.v_bram, "pruning changed V_bram");
+        let rel = (fast.energy - slow.energy).abs() / slow.energy;
+        assert!(rel < 0.02, "energy mismatch {rel}");
+        // and it must actually prune + reuse
+        assert!(fast.pairs_pruned_energy > fast.pairs_total / 2);
+        assert!(fast.thermal_reused > 0);
+        assert!(fast.thermal_solves < slow.thermal_solves);
+    }
+
+    #[test]
+    fn energy_voltage_differs_from_power_voltage() {
+        // §IV: the energy flow reaches much lower V_core than the power flow
+        // because the clock is allowed to stretch.
+        let (d, cfg, mut solver) = setup(65.0);
+        let power_res =
+            super::super::alg1::thermal_aware_voltage_selection(&d, &cfg, &mut solver.clone(), 1.0);
+        let energy_res = thermal_aware_energy_optimization(&d, &cfg, &mut solver);
+        assert!(
+            energy_res.v_core <= power_res.v_core,
+            "energy V_core {} vs power V_core {}",
+            energy_res.v_core,
+            power_res.v_core
+        );
+    }
+}

@@ -1,0 +1,154 @@
+//! The full CAD pipeline bundled into one `Design`: synthesize (or accept a
+//! netlist) → pack → size device → place → route → estimate activities →
+//! characterize. This is the "placed and routed design" every flow input in
+//! the paper's Algorithms 1/2 refers to.
+
+use crate::activity::{estimate, Activities};
+use crate::arch::Device;
+use crate::chardb::{CharDb, CharTable};
+use crate::config::Config;
+use crate::netlist::{cluster_netlist, Netlist};
+use crate::place::{place, BlockGraph, BlockKind, Placement, PlaceOpts};
+use crate::power::PowerModel;
+use crate::route::{route, Routing};
+use crate::synth::{benchmark, generate, BenchProfile};
+use crate::timing::Sta;
+
+/// How much placer effort to spend (quick for tests, full for benches).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Effort {
+    /// Fast: small move budget (unit tests, smoke runs).
+    Quick,
+    /// Full annealing (reported experiments).
+    Full,
+}
+
+/// A fully implemented design, ready for the voltage-scaling flows.
+pub struct Design {
+    pub name: String,
+    pub nl: Netlist,
+    pub bg: BlockGraph,
+    pub dev: Device,
+    pub pl: Placement,
+    pub routing: Routing,
+    /// Worst-case activities (α_in from config) — used for optimization.
+    pub acts: Activities,
+    pub table: CharTable,
+}
+
+impl Design {
+    /// Implement a named benchmark through the whole pipeline.
+    pub fn build(name: &str, cfg: &Config, effort: Effort) -> anyhow::Result<Design> {
+        let profile = benchmark(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown benchmark {name}"))?;
+        let nl = generate(profile);
+        Design::from_netlist(nl, profile, cfg, effort)
+    }
+
+    pub fn from_netlist(
+        nl: Netlist,
+        profile: &BenchProfile,
+        cfg: &Config,
+        effort: Effort,
+    ) -> anyhow::Result<Design> {
+        let cl = cluster_netlist(&nl, &cfg.arch);
+        let bg = BlockGraph::build(&nl, &cl);
+        let count = |k: BlockKind| bg.kinds.iter().filter(|&&x| x == k).count();
+        let dev = Device::size_for_io(
+            count(BlockKind::Clb),
+            count(BlockKind::Bram),
+            count(BlockKind::Dsp),
+            count(BlockKind::Io),
+            &cfg.arch,
+        );
+        let opts = match effort {
+            Effort::Quick => PlaceOpts {
+                seed: cfg.flow.seed ^ profile.seed,
+                effort: 0.5,
+                max_moves: 120_000,
+            },
+            Effort::Full => PlaceOpts {
+                seed: cfg.flow.seed ^ profile.seed,
+                effort: 4.0,
+                max_moves: 4_000_000,
+            },
+        };
+        let pl = place(&bg, &dev, &opts);
+        let routing = route(&bg, &pl, &dev);
+        let acts = estimate(&nl, cfg.flow.alpha_in);
+        let table = CharTable::generate(&CharDb::analytic());
+        Ok(Design {
+            name: profile.name.to_string(),
+            nl,
+            bg,
+            dev,
+            pl,
+            routing,
+            acts,
+            table,
+        })
+    }
+
+    /// STA engine bound to this design.
+    pub fn sta(&self) -> Sta<'_> {
+        Sta::new(
+            &self.nl,
+            &self.bg,
+            &self.pl,
+            &self.routing,
+            &self.dev,
+            &self.table,
+        )
+    }
+
+    /// Power model at the design's (worst-case) activities.
+    pub fn power_model(&self) -> PowerModel<'_> {
+        self.power_model_at(&self.acts)
+    }
+
+    /// Power model at alternative activities (Fig. 4/6 activity ranges).
+    pub fn power_model_at(&self, acts: &Activities) -> PowerModel<'_> {
+        PowerModel::new(
+            &self.dev,
+            &self.table,
+            &self.nl,
+            &self.bg,
+            &self.pl,
+            &self.routing,
+            acts,
+        )
+    }
+
+    /// Activities at a different primary-input α.
+    pub fn activities_at(&self, alpha_in: f64) -> Activities {
+        estimate(&self.nl, alpha_in)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pipeline_produces_consistent_design() {
+        let cfg = Config::new();
+        let d = Design::build("mkPktMerge", &cfg, Effort::Quick).unwrap();
+        assert_eq!(d.name, "mkPktMerge");
+        d.nl.validate().unwrap();
+        // STA runs and yields a positive CP
+        let sta = d.sta();
+        let r = sta.analyze_flat(100.0, 0.8, 0.95);
+        assert!(r.critical_path > 0.0);
+        // power model yields positive totals
+        let pm = d.power_model();
+        let n = d.dev.n_tiles();
+        let p = pm.total_power(&vec![40.0; n], 1.0 / (r.critical_path * 1.36), 0.8, 0.95);
+        assert!(p > 0.0 && p < 50.0, "power {p} W");
+    }
+
+    #[test]
+    fn unknown_benchmark_errors() {
+        let cfg = Config::new();
+        assert!(Design::build("nope", &cfg, Effort::Quick).is_err());
+    }
+}

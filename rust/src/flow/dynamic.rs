@@ -1,0 +1,125 @@
+//! Dynamic (online) implementation support (§III-B "Static and Dynamic
+//! Implementations"): at configuration time, build a lookup table keyed by
+//! junction temperature whose values are the power-optimal (V_core, V_bram)
+//! for that temperature; at run time the thermal-sensor-driven controller
+//! (`crate::coordinator`) indexes it directly (the sensed temperature acts
+//! as the VID for the on-chip regulator [39]).
+
+use crate::config::Config;
+use crate::flow::alg1;
+use crate::flow::design::Design;
+use crate::thermal::ThermalBackend;
+
+/// One LUT row: junction temperature key → optimal rails.
+#[derive(Clone, Copy, Debug)]
+pub struct LutEntry {
+    /// Junction-temperature key (°C): valid while T_j ≤ this key.
+    pub t_junct: f64,
+    pub v_core: f64,
+    pub v_bram: f64,
+    /// Expected total power at this operating point (W).
+    pub power: f64,
+}
+
+/// The per-design voltage lookup table.
+#[derive(Clone, Debug)]
+pub struct VoltageLut {
+    pub entries: Vec<LutEntry>,
+    /// Fallback = nominal rails (beyond the characterized range).
+    pub v_core_nom: f64,
+    pub v_bram_nom: f64,
+}
+
+impl VoltageLut {
+    /// Build by sweeping ambient temperature and recording the converged
+    /// junction temperature of each Algorithm-1 solution.
+    pub fn build(
+        design: &Design,
+        cfg: &Config,
+        backend: &mut dyn ThermalBackend,
+        t_amb_lo: f64,
+        t_amb_hi: f64,
+        step: f64,
+    ) -> VoltageLut {
+        let sta = design.sta();
+        let pm = design.power_model();
+        let mut entries = Vec::new();
+        let mut t = t_amb_lo;
+        while t <= t_amb_hi + 1e-9 {
+            let mut c = cfg.clone();
+            c.flow.t_amb = t;
+            let r = alg1::run_with(design, &sta, &pm, &c, backend, 1.0);
+            if !r.infeasible {
+                entries.push(LutEntry {
+                    t_junct: crate::util::stats::max(&r.temp),
+                    v_core: r.v_core,
+                    v_bram: r.v_bram,
+                    power: r.power,
+                });
+            }
+            t += step;
+        }
+        entries.sort_by(|a, b| a.t_junct.partial_cmp(&b.t_junct).unwrap());
+        // Safety envelope: Algorithm 1 may trade the rails non-monotonically
+        // across temperature (Fig. 4a). A sensed temperature between two keys
+        // must never command less than any cooler key requires, so both rails
+        // are made non-decreasing in T (conservative: a few mV of the
+        // cross-rail trade is given up for guaranteed timing).
+        let mut vc_run: f64 = 0.0;
+        let mut vb_run: f64 = 0.0;
+        for e in entries.iter_mut() {
+            vc_run = vc_run.max(e.v_core);
+            vb_run = vb_run.max(e.v_bram);
+            e.v_core = vc_run;
+            e.v_bram = vb_run;
+        }
+        VoltageLut {
+            entries,
+            v_core_nom: cfg.arch.v_core_nom,
+            v_bram_nom: cfg.arch.v_bram_nom,
+        }
+    }
+
+    /// Look up the rails for a sensed junction temperature, applying the
+    /// sensor margin (TSD error + spatial gradients, ~5 °C).
+    pub fn lookup(&self, t_sensed: f64, margin: f64) -> (f64, f64) {
+        let key = t_sensed + margin;
+        for e in &self.entries {
+            if key <= e.t_junct {
+                return (e.v_core, e.v_bram);
+            }
+        }
+        (self.v_core_nom, self.v_bram_nom)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flow::design::Effort;
+    use crate::thermal::{NativeSolver, ThermalGrid};
+
+    #[test]
+    fn lut_is_monotone_and_conservative() {
+        let mut cfg = Config::new();
+        cfg.thermal.theta_ja = 12.0;
+        let d = Design::build("mkPktMerge", &cfg, Effort::Quick).unwrap();
+        let mut solver = NativeSolver::new(
+            ThermalGrid::calibrated(d.dev.rows, d.dev.cols, &cfg.thermal),
+            &cfg.thermal,
+        );
+        let lut = VoltageLut::build(&d, &cfg, &mut solver, 10.0, 70.0, 20.0);
+        assert!(lut.entries.len() >= 3);
+        // safety envelope: hotter keys never have lower voltage on EITHER
+        // rail (lookup conservativeness for the online controller)
+        for w in lut.entries.windows(2) {
+            assert!(w[1].v_core + 1e-12 >= w[0].v_core);
+            assert!(w[1].v_bram + 1e-12 >= w[0].v_bram);
+        }
+        // lookup picks the first key ≥ sensed+margin; far beyond ⇒ nominal
+        let (vc, _) = lut.lookup(200.0, 5.0);
+        assert_eq!(vc, lut.v_core_nom);
+        let (vc_cool, _) = lut.lookup(lut.entries[0].t_junct - 10.0, 5.0);
+        assert!(vc_cool <= lut.entries[1].v_core + 1e-12);
+    }
+}

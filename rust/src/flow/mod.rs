@@ -1,0 +1,12 @@
+//! The paper's flows: Algorithm 1 (thermal-aware voltage selection),
+//! Algorithm 2 (thermal-aware energy optimization), the timing-speculative
+//! over-scaling flow (§III-D) and the dynamic (sensor-driven) scheme.
+
+pub mod alg1;
+pub mod alg2;
+pub mod design;
+pub mod dynamic;
+pub mod overscale;
+
+pub use alg1::{baseline, thermal_aware_voltage_selection, Alg1Result};
+pub use design::{Design, Effort};

@@ -1,0 +1,163 @@
+//! Timing-speculative voltage over-scaling (§III-D).
+//!
+//! Algorithm 1 runs with the timing constraint relaxed to `rate × d_worst`
+//! (the obtained voltages are optimal for that violation budget — the paper
+//! modifies line 7 exactly this way). The post-P&R timing simulation then
+//! prices every endpoint at the converged (T, V) and produces per-endpoint
+//! timing-violation probabilities:
+//!
+//! * a path longer than the operating clock period fails whenever it is
+//!   exercised (probability = its endpoint activity);
+//! * a path inside the guardband (d_worst < d ≤ T_clk) fails only when a
+//!   voltage-transient event [5] coincides with its activation — rare
+//!   (`P_TRANSIENT` per cycle) and proportional to how deep into the
+//!   guardband the path reaches.
+//!
+//! This is why Fig. 8's error curves stay near zero until ≈1.2× and spike
+//! around 1.35×: the guardband silently absorbs early violations, then the
+//! true wall arrives. The resulting error rates drive the ML workloads
+//! (`crate::ml`).
+
+use crate::config::Config;
+use crate::flow::alg1::{self, Alg1Result};
+use crate::flow::design::Design;
+use crate::thermal::ThermalBackend;
+
+/// Per-cycle probability of a voltage-transient event deep enough to erase
+/// the guardband (load transients are infrequent [5]).
+pub const P_TRANSIENT: f64 = 2e-3;
+
+/// Timing-error model extracted from the post-P&R simulation.
+#[derive(Clone, Debug)]
+pub struct ErrorModel {
+    /// Violation probability per cycle for every endpoint.
+    pub p_viol: Vec<f64>,
+    /// Mean violation probability across endpoints (the aggregate rate the
+    /// ML error injection consumes).
+    pub mean_rate: f64,
+    /// Fraction of endpoints past the hard wall (d > T_clk).
+    pub hard_fraction: f64,
+    /// Operating clock period (s).
+    pub t_clk: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct OverscaleResult {
+    pub rate: f64,
+    pub alg1: Alg1Result,
+    pub error: ErrorModel,
+}
+
+/// Run the over-scaling flow at CP-violation `rate` ≥ 1.0.
+pub fn overscale(
+    design: &Design,
+    cfg: &Config,
+    backend: &mut dyn ThermalBackend,
+    rate: f64,
+) -> OverscaleResult {
+    let res = alg1::thermal_aware_voltage_selection(design, cfg, backend, rate);
+    let error = error_model(design, cfg, &res);
+    OverscaleResult {
+        rate,
+        alg1: res,
+        error,
+    }
+}
+
+/// Post-P&R timing simulation: endpoint arrivals at the converged (T, V)
+/// versus the operating clock.
+pub fn error_model(design: &Design, cfg: &Config, res: &Alg1Result) -> ErrorModel {
+    let sta = design.sta();
+    let timing = sta.analyze(&res.temp, res.v_core, res.v_bram);
+    let t_clk = res.d_worst * (1.0 + cfg.flow.guardband);
+    let span = (t_clk - res.d_worst).max(1e-15);
+    let mut p_viol = Vec::with_capacity(timing.endpoints.len());
+    let mut hard = 0usize;
+    for e in &timing.endpoints {
+        // activation probability: activity of the endpoint's data input
+        let p_act = design.nl.cells[e.cell as usize]
+            .inputs
+            .first()
+            .map(|&n| design.acts.alpha[n as usize])
+            .unwrap_or(0.0)
+            .clamp(0.0, 1.0);
+        let p = if e.arrival > t_clk {
+            hard += 1;
+            p_act
+        } else if e.arrival > res.d_worst {
+            p_act * P_TRANSIENT * ((e.arrival - res.d_worst) / span)
+        } else {
+            0.0
+        };
+        p_viol.push(p);
+    }
+    let mean_rate = if p_viol.is_empty() {
+        0.0
+    } else {
+        p_viol.iter().sum::<f64>() / p_viol.len() as f64
+    };
+    ErrorModel {
+        mean_rate,
+        hard_fraction: hard as f64 / timing.endpoints.len().max(1) as f64,
+        p_viol,
+        t_clk,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flow::design::Effort;
+    use crate::thermal::{NativeSolver, ThermalGrid};
+
+    fn setup() -> (Design, Config, NativeSolver) {
+        let mut cfg = Config::new();
+        cfg.flow.t_amb = 40.0;
+        cfg.thermal.theta_ja = 12.0;
+        let d = Design::build("mkPktMerge", &cfg, Effort::Quick).unwrap();
+        let solver = NativeSolver::new(
+            ThermalGrid::calibrated(d.dev.rows, d.dev.cols, &cfg.thermal),
+            &cfg.thermal,
+        );
+        (d, cfg, solver)
+    }
+
+    #[test]
+    fn fig8_error_shape_quiet_then_spike() {
+        let (d, cfg, mut solver) = setup();
+        let r10 = overscale(&d, &cfg, &mut solver.clone(), 1.0);
+        let r12 = overscale(&d, &cfg, &mut solver.clone(), 1.2);
+        let r14 = overscale(&d, &cfg, &mut solver, 1.42);
+        // no violation budget ⇒ error-free
+        assert_eq!(r10.error.hard_fraction, 0.0);
+        assert!(r10.error.mean_rate < 1e-12);
+        // inside the guardband: tiny transient-coincident rate only
+        assert!(r12.error.mean_rate < 1e-3, "rate@1.2 = {}", r12.error.mean_rate);
+        assert_eq!(r12.error.hard_fraction, 0.0);
+        // past the 1.36 guardband wall: *hard* violations appear (the spike
+        // that drives the Fig. 8 accuracy cliff — transient-coincident rates
+        // of ~1e-6 never materialize over a test set, hard rates do)
+        assert!(r14.error.hard_fraction > 0.0);
+        assert!(
+            r14.error.mean_rate > r12.error.mean_rate * 2.5,
+            "no spike: {} vs {}",
+            r14.error.mean_rate,
+            r12.error.mean_rate
+        );
+        // expected errors per cycle across all endpoints become macroscopic
+        let expected_per_cycle =
+            r14.error.mean_rate * r14.error.p_viol.len() as f64;
+        assert!(expected_per_cycle > 1e-4, "per-cycle {expected_per_cycle}");
+    }
+
+    #[test]
+    fn more_overscaling_more_power_saving() {
+        let (d, cfg, mut solver) = setup();
+        let mut prev = f64::INFINITY;
+        for rate in [1.0, 1.15, 1.3] {
+            let r = overscale(&d, &cfg, &mut solver.clone(), rate);
+            assert!(r.alg1.power <= prev + 1e-12, "power not monotone at {rate}");
+            prev = r.alg1.power;
+        }
+    }
+}

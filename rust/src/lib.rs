@@ -1,0 +1,45 @@
+//! thermovolt — reproduction of "FPGA Energy Efficiency by Leveraging
+//! Thermal Margin" (Khaleghi, Salamat, Imani, Rosing — CS.AR 2019).
+//!
+//! A three-layer system: this rust crate is the L3 coordinator (the full
+//! FPGA CAD + thermal-aware voltage-scaling flow); the thermal solver and
+//! the error-injected ML forward passes are JAX/Pallas programs AOT-lowered
+//! to HLO at build time (`make artifacts`) and executed from rust through
+//! the PJRT C API (`runtime`). Python never runs on the flow path.
+//!
+//! Module map (see DESIGN.md §4):
+//! * [`chardb`]  — characterized delay/power library (COFFE/HSPICE substitute)
+//! * [`arch`]    — tile-grid FPGA device model (Table I architecture)
+//! * [`netlist`] — cells/nets/LUT truth tables, BLIF-like text format
+//! * [`synth`]   — VTR-profile synthetic benchmark + ML netlist generators
+//! * [`place`]   — simulated-annealing placer
+//! * [`route`]   — segment-based global router
+//! * [`timing`]  — per-tile-(T,V) static timing analysis
+//! * [`activity`]— switching-activity estimation (ACE substitute)
+//! * [`power`]   — per-tile leakage + dynamic power maps
+//! * [`thermal`] — steady-state thermal solver (native + PJRT artifact)
+//! * [`flow`]    — Algorithms 1 & 2 + voltage over-scaling flow
+//! * [`sim`]     — post-P&R timing simulation / error injection
+//! * [`ml`]      — LeNet + HD over-scaling workloads (PJRT-driven)
+//! * [`runtime`] — PJRT client wrapper around the `xla` crate
+//! * [`coordinator`] — online (sensor-driven) dynamic voltage controller
+//! * [`report`]  — regenerates every paper table/figure
+
+pub mod activity;
+pub mod arch;
+pub mod chardb;
+pub mod config;
+pub mod flow;
+pub mod ml;
+pub mod netlist;
+pub mod place;
+pub mod power;
+pub mod coordinator;
+pub mod report;
+pub mod route;
+pub mod runtime;
+pub mod sim;
+pub mod synth;
+pub mod thermal;
+pub mod timing;
+pub mod util;

@@ -1,0 +1,340 @@
+//! thermovolt CLI — the L3 leader entrypoint.
+//!
+//! ```text
+//! thermovolt characterize                         build + save the chardb
+//! thermovolt bench-info                           benchmark suite summary
+//! thermovolt power-opt  --bench <b> [--tamb T] [--theta X]  Algorithm 1
+//! thermovolt energy-opt --bench <b> [--tamb T]              Algorithm 2
+//! thermovolt overscale  --bench <b> --rate R                §III-D flow
+//! thermovolt report --table1|--fig2|--fig3|--fig4|--table2|--fig6|--fig7
+//!                   |--fig8|--runtime|--leakage|--all  [--full]
+//! thermovolt serve  --bench <b>                   dynamic controller demo
+//! thermovolt e2e    [--full]                      full-pipeline headline run
+//! ```
+
+use anyhow::Result;
+use std::path::Path;
+
+use thermovolt::chardb::{CharDb, CharTable};
+use thermovolt::config::Config;
+use thermovolt::coordinator::{mean_power, DynamicController, Tsd};
+use thermovolt::flow::dynamic::VoltageLut;
+use thermovolt::flow::{alg1, alg2, overscale, Design, Effort};
+use thermovolt::report;
+use thermovolt::runtime::select_backend;
+use thermovolt::synth;
+use thermovolt::util::cli::Args;
+use thermovolt::util::table::{f2, f3, mv, mw, pct, Table};
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn config_from(args: &Args) -> Config {
+    let mut cfg = match args.opt("config") {
+        Some(path) => Config::from_file(Path::new(path)).unwrap_or_else(|e| {
+            eprintln!("warning: {e}; using defaults");
+            Config::new()
+        }),
+        None => Config::new(),
+    };
+    if let Some(t) = args.opt("tamb") {
+        cfg.flow.t_amb = t.parse().unwrap_or(cfg.flow.t_amb);
+    }
+    if let Some(t) = args.opt("theta") {
+        cfg.thermal.theta_ja = t.parse().unwrap_or(cfg.thermal.theta_ja);
+    }
+    if let Some(a) = args.opt("alpha") {
+        cfg.flow.alpha_in = a.parse().unwrap_or(cfg.flow.alpha_in);
+    }
+    cfg
+}
+
+fn effort_from(args: &Args) -> Effort {
+    if args.flag("full") {
+        Effort::Full
+    } else {
+        Effort::Quick
+    }
+}
+
+fn run(args: &Args) -> Result<()> {
+    let cfg = config_from(args);
+    let effort = effort_from(args);
+    let results = Path::new("results");
+    match args.subcommand.as_str() {
+        "characterize" => {
+            let t = report::characterize(&cfg)?;
+            println!(
+                "characterized 8 resources × {} temps × {} volts → {}",
+                t.temps.len(),
+                t.volts.len(),
+                cfg.artifacts_dir.join("chardb.bin").display()
+            );
+        }
+        "bench-info" => {
+            let mut t = Table::new(
+                "Benchmark suite (VTR-profile synthetic)",
+                &["name", "domain", "LUTs", "FFs", "BRAMs", "DSPs", "depth"],
+            );
+            for name in synth::benchmark_names() {
+                let p = synth::benchmark(name).unwrap();
+                t.row(vec![
+                    p.name.into(),
+                    p.domain.into(),
+                    p.luts.to_string(),
+                    p.ffs.to_string(),
+                    p.brams.to_string(),
+                    p.dsps.to_string(),
+                    p.depth.to_string(),
+                ]);
+            }
+            println!("{}", t.render());
+        }
+        "power-opt" => {
+            let bench = args.opt_or("bench", "mkDelayWorker");
+            let design = Design::build(bench, &cfg, effort)?;
+            let mut backend = select_backend(
+                &cfg.artifacts_dir,
+                design.dev.rows,
+                design.dev.cols,
+                &cfg.thermal,
+            );
+            println!(
+                "design {bench}: {}x{} device, backend = {}",
+                design.dev.rows,
+                design.dev.cols,
+                backend.name()
+            );
+            let r = alg1::thermal_aware_voltage_selection(&design, &cfg, backend.as_mut(), 1.0);
+            let base = alg1::baseline(&design, &cfg, backend.as_mut());
+            println!(
+                "T_amb={:.0}C  d_worst={:.2}ns  f={:.1}MHz",
+                cfg.flow.t_amb,
+                r.d_worst * 1e9,
+                r.f_clk / 1e6
+            );
+            println!(
+                "V = ({} mV, {} mV)  power {} mW vs baseline {} mW  →  {} % saving",
+                mv(r.v_core),
+                mv(r.v_bram),
+                mw(r.power),
+                mw(base.power),
+                pct(1.0 - r.power / base.power)
+            );
+            for (i, it) in r.iters.iter().enumerate() {
+                println!(
+                    "  iter {}: V=({}, {}) mV  P={} mW  Tj={} C  {} s  ({} evals)",
+                    i + 1,
+                    mv(it.v_core),
+                    mv(it.v_bram),
+                    mw(it.power),
+                    f2(it.t_junct),
+                    f3(it.time_s),
+                    it.evals
+                );
+            }
+        }
+        "energy-opt" => {
+            let bench = args.opt_or("bench", "mkDelayWorker");
+            let mut cfg = cfg.clone();
+            if args.opt("tamb").is_none() {
+                cfg.flow.t_amb = 65.0;
+            }
+            let design = Design::build(bench, &cfg, effort)?;
+            let mut backend = select_backend(
+                &cfg.artifacts_dir,
+                design.dev.rows,
+                design.dev.cols,
+                &cfg.thermal,
+            );
+            let r = alg2::thermal_aware_energy_optimization(&design, &cfg, backend.as_mut());
+            let (base_e, base_p) = alg2::baseline_energy(&design, &cfg, backend.as_mut());
+            println!(
+                "V = ({}, {}) mV  period {:.2} ns (freq ratio {})  P={} mW",
+                mv(r.v_core),
+                mv(r.v_bram),
+                r.period * 1e9,
+                f2(r.freq_ratio),
+                mw(r.power)
+            );
+            println!(
+                "energy {:.3} nJ/cycle vs baseline {:.3} nJ/cycle ({} % saving; baseline {} mW)",
+                r.energy * 1e9,
+                base_e * 1e9,
+                pct(1.0 - r.energy / base_e),
+                mw(base_p)
+            );
+            println!(
+                "search: {} pairs, {} pruned, {} thermal solves, {} reused",
+                r.pairs_total, r.pairs_pruned_energy, r.thermal_solves, r.thermal_reused
+            );
+        }
+        "overscale" => {
+            let bench = args.opt_or("bench", "lenet_systolic");
+            let rate = args.opt_f64("rate", 1.2);
+            let profile = match bench {
+                "lenet_systolic" => synth::lenet_accel(),
+                "hd_engine" => synth::hd_accel(),
+                other => synth::benchmark(other)
+                    .ok_or_else(|| anyhow::anyhow!("unknown bench {other}"))?
+                    .clone(),
+            };
+            let design = Design::from_netlist(synth::generate(&profile), &profile, &cfg, effort)?;
+            let mut backend = select_backend(
+                &cfg.artifacts_dir,
+                design.dev.rows,
+                design.dev.cols,
+                &cfg.thermal,
+            );
+            let base = alg1::baseline(&design, &cfg, backend.as_mut());
+            let o = overscale::overscale(&design, &cfg, backend.as_mut(), rate);
+            println!(
+                "rate {rate}: V=({}, {}) mV  saving {} %  mean violation rate {:.3e}  hard {:.4}",
+                mv(o.alg1.v_core),
+                mv(o.alg1.v_bram),
+                pct(1.0 - o.alg1.power / base.power),
+                o.error.mean_rate,
+                o.error.hard_fraction
+            );
+        }
+        "serve" => {
+            let bench = args.opt_or("bench", "mkPktMerge");
+            let design = Design::build(bench, &cfg, effort)?;
+            let mut backend = select_backend(
+                &cfg.artifacts_dir,
+                design.dev.rows,
+                design.dev.cols,
+                &cfg.thermal,
+            );
+            println!("building (T → V) lookup table for {bench}…");
+            let lut = VoltageLut::build(&design, &cfg, backend.as_mut(), 0.0, 80.0, 10.0);
+            for e in &lut.entries {
+                println!(
+                    "  Tj <= {:>5.1} C → V=({}, {}) mV   P={} mW",
+                    e.t_junct,
+                    mv(e.v_core),
+                    mv(e.v_bram),
+                    mw(e.power)
+                );
+            }
+            // ambient cycle: 20 → 55 → 20 °C over 3 minutes (sim time)
+            let sta = design.sta();
+            let pm = design.power_model();
+            let f_clk = {
+                let d = sta
+                    .analyze_flat(cfg.thermal.t_max, cfg.arch.v_core_nom, cfg.arch.v_bram_nom)
+                    .critical_path;
+                1.0 / (d * (1.0 + cfg.flow.guardband))
+            };
+            let n = design.dev.n_tiles();
+            let theta = cfg.thermal.theta_ja;
+            let controller = DynamicController {
+                lut: &lut,
+                theta_ja: theta,
+                tau_ms: 3000.0,
+                margin: cfg.flow.sensor_margin,
+                tsd: Tsd::default(),
+                power_fn: Box::new(move |vc, vb, tj| pm.total_power(&vec![tj; n], f_clk, vc, vb)),
+            };
+            let trace = vec![(0.0, 20.0), (90_000.0, 55.0), (180_000.0, 20.0)];
+            let log = controller.run(&trace, 1.0, 5_000.0);
+            println!("t(s)  T_amb  T_j    V_core  V_bram  P(mW)");
+            for s in &log {
+                println!(
+                    "{:>5.0}  {:>5.1}  {:>5.1}  {:>6.0}  {:>6.0}  {:>6.0}{}",
+                    s.t_ms / 1000.0,
+                    s.t_amb,
+                    s.t_junct,
+                    s.v_core * 1000.0,
+                    s.v_bram * 1000.0,
+                    s.power * 1000.0,
+                    if s.violation { "  VIOLATION" } else { "" }
+                );
+            }
+            let violations = log.iter().filter(|s| s.violation).count();
+            println!(
+                "mean power {} mW, {} violations across {} samples",
+                mw(mean_power(&log)),
+                violations,
+                log.len()
+            );
+        }
+        "report" => {
+            let all = args.flag("all");
+            std::fs::create_dir_all(results)?;
+            let table = CharTable::generate(&CharDb::analytic());
+            if all || args.flag("table1") {
+                report::table1(&cfg).emit(results, "table1")?;
+            }
+            if all || args.flag("fig2") {
+                let (a, b, c) = report::fig2(&table);
+                a.emit(results, "fig2a")?;
+                b.emit(results, "fig2b")?;
+                c.emit(results, "fig2c")?;
+            }
+            if all || args.flag("fig3") {
+                let (l, r) = report::fig3(&cfg, effort == Effort::Quick);
+                l.emit(results, "fig3_left")?;
+                r.emit(results, "fig3_right")?;
+            }
+            if all || args.flag("fig4") {
+                report::fig4(&cfg, effort)?.emit(results, "fig4")?;
+            }
+            if all || args.flag("table2") {
+                report::table2(&cfg, effort)?.emit(results, "table2")?;
+            }
+            if all || args.flag("fig6") {
+                let names = synth::benchmark_names();
+                report::fig6(&cfg, effort, 40.0, 12.0, &names)?.emit(results, "fig6a")?;
+                report::fig6(&cfg, effort, 65.0, 2.0, &names)?.emit(results, "fig6b")?;
+            }
+            if all || args.flag("fig7") {
+                let names = synth::benchmark_names();
+                report::fig7(&cfg, effort, &names)?.emit(results, "fig7")?;
+            }
+            if all || args.flag("fig8") {
+                report::fig8(&cfg, effort)?.emit(results, "fig8")?;
+            }
+            if all || args.flag("runtime") {
+                report::runtime_claims(&cfg, effort)?.emit(results, "runtime_claims")?;
+            }
+            if all || args.flag("leakage") {
+                report::leakage_fit(&cfg)?.emit(results, "leakage_fit")?;
+            }
+        }
+        "e2e" => {
+            // END-TO-END: benchmarks through the full pipeline on the PJRT
+            // thermal path; prints the headline metric (EXPERIMENTS.md).
+            let names = synth::benchmark_names();
+            let run_names: Vec<&str> = if effort == Effort::Quick {
+                names
+                    .iter()
+                    .copied()
+                    .filter(|n| !matches!(*n, "mcml" | "bgm" | "LU8PEEng"))
+                    .collect()
+            } else {
+                names
+            };
+            std::fs::create_dir_all(results)?;
+            let t = report::fig6(&cfg, effort, 40.0, 12.0, &run_names)?;
+            t.emit(results, "e2e_fig6a")?;
+            let avg = t.rows.last().unwrap();
+            println!(
+                "HEADLINE: avg power saving @40C = {}–{} %  (paper: 28.3–36.0 %)",
+                avg[3], avg[4]
+            );
+        }
+        "" | "help" => {
+            println!(
+                "subcommands: characterize | bench-info | power-opt | energy-opt | overscale | report | serve | e2e"
+            );
+        }
+        other => anyhow::bail!("unknown subcommand `{other}` (try `help`)"),
+    }
+    Ok(())
+}

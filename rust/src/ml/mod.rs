@@ -1,0 +1,198 @@
+//! ML over-scaling workloads (Fig. 8): load the AOT-trained LeNet and HD
+//! artifacts, inject timing errors at the rates derived by `crate::sim`,
+//! and measure accuracy through the PJRT executables. Python never runs.
+
+pub mod tensors;
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+use crate::runtime::{literal_f32_from_f32, Runtime};
+use crate::sim::{amplify, sample_mask, MlRates};
+use crate::util::Xoshiro256;
+use tensors::TensorFile;
+
+/// LeNet geometry (mirrors python/compile/model.py).
+pub const LENET_BATCH: usize = 256;
+pub const LENET_IMG: usize = 144;
+pub const LENET_C1: usize = 8;
+pub const LENET_C2: usize = 16;
+pub const LENET_FC1: usize = 32;
+pub const LENET_CLASSES: usize = 10;
+/// Reduction depths per layer (MAC cycles per output).
+pub const LENET_K: [usize; 4] = [9, 72, 144, 32];
+
+pub const HD_BATCH: usize = 256;
+pub const HD_DIM: usize = 4096;
+/// Cycles each HD dimension spends in the datapath per query.
+pub const HD_K: usize = 4;
+
+/// MSB-weight multiple for the corruption magnitude (FATE-style: a violated
+/// carry chain corrupts a high-order bit ≈ 2× the activation scale).
+pub const MAG_MSB_FACTOR: f64 = 2.0;
+
+/// The LeNet workload: weights + test set from artifacts.
+pub struct LenetWorkload {
+    pub weights: Vec<(Vec<usize>, Vec<f32>)>, // w0..w7 in artifact order
+    pub x_test: Vec<f32>,
+    pub y_test: Vec<i32>,
+    pub act_scales: [f64; 4],
+    pub clean_acc: f64,
+    pub n_test: usize,
+}
+
+impl LenetWorkload {
+    pub fn load(artifacts: &Path) -> Result<LenetWorkload> {
+        let tf = TensorFile::load(&artifacts.join("lenet_data.bin"))?;
+        let mut weights = Vec::new();
+        for i in 0..8 {
+            let t = tf.get(&format!("w{i}")).context("missing weight")?;
+            weights.push((t.dims.clone(), t.f32_data()?.to_vec()));
+        }
+        let x = tf.get("x_test").context("x_test")?;
+        let y = tf.get("y_test").context("y_test")?;
+        let scales = tf.get("act_scales").context("act_scales")?.f32_data()?;
+        let clean = tf.get("clean_acc").context("clean_acc")?.f32_data()?[0] as f64;
+        let n_test = x.dims[0];
+        Ok(LenetWorkload {
+            weights,
+            x_test: x.f32_data()?.to_vec(),
+            y_test: y.i32_data()?.to_vec(),
+            act_scales: [
+                scales[0] as f64,
+                scales[1] as f64,
+                scales[2] as f64,
+                scales[3] as f64,
+            ],
+            clean_acc: clean,
+            n_test,
+        })
+    }
+
+    /// Accuracy under MAC violation rate `mac_rate` (per cycle).
+    pub fn accuracy(&self, rt: &mut Runtime, mac_rate: f64, seed: u64) -> Result<f64> {
+        let b = LENET_BATCH;
+        let mut rng = Xoshiro256::new(seed);
+        // per-layer output-flip probabilities (K-cycle reductions)
+        let p: Vec<f64> = LENET_K.iter().map(|&k| amplify(mac_rate, k)).collect();
+        let mags: Vec<f32> = self
+            .act_scales
+            .iter()
+            .map(|&s| (MAG_MSB_FACTOR * s) as f32)
+            .collect();
+        let mask_shapes = [
+            vec![b * 100, LENET_C1],
+            vec![b * 9, LENET_C2],
+            vec![b, LENET_FC1],
+            vec![b, LENET_CLASSES],
+        ];
+        let nbatches = self.n_test / b;
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for bi in 0..nbatches {
+            let mut inputs: Vec<xla::Literal> = Vec::with_capacity(14);
+            let xs = &self.x_test[bi * b * LENET_IMG..(bi + 1) * b * LENET_IMG];
+            inputs.push(literal_f32_from_f32(xs, &[b, LENET_IMG])?);
+            for (dims, data) in &self.weights {
+                inputs.push(literal_f32_from_f32(data, dims)?);
+            }
+            for (li, shape) in mask_shapes.iter().enumerate() {
+                let len = shape.iter().product();
+                let m = sample_mask(len, p[li], &mut rng);
+                inputs.push(literal_f32_from_f32(&m, shape)?);
+            }
+            inputs.push(xla::Literal::vec1(&mags));
+            let logits = rt.run_f32("lenet.hlo.txt", &inputs)?;
+            anyhow::ensure!(logits.len() == b * LENET_CLASSES);
+            for i in 0..b {
+                let row = &logits[i * LENET_CLASSES..(i + 1) * LENET_CLASSES];
+                let pred = argmax(row);
+                if pred == self.y_test[bi * b + i] {
+                    correct += 1;
+                }
+                total += 1;
+            }
+        }
+        Ok(correct as f64 / total as f64)
+    }
+}
+
+/// The HD workload: prototypes + encoded queries from artifacts.
+pub struct HdWorkload {
+    pub prototypes: Vec<f32>,
+    pub q_test: Vec<f32>,
+    pub y_test: Vec<i32>,
+    pub clean_acc: f64,
+    pub n_test: usize,
+    pub n_classes: usize,
+}
+
+impl HdWorkload {
+    pub fn load(artifacts: &Path) -> Result<HdWorkload> {
+        let tf = TensorFile::load(&artifacts.join("hd_data.bin"))?;
+        let protos = tf.get("prototypes").context("prototypes")?;
+        let q = tf.get("q_test").context("q_test")?;
+        let y = tf.get("y_test").context("y_test")?;
+        let clean = tf.get("clean_acc").context("clean_acc")?.f32_data()?[0] as f64;
+        Ok(HdWorkload {
+            n_classes: protos.dims[0],
+            prototypes: protos.f32_data()?.to_vec(),
+            n_test: q.dims[0],
+            q_test: q.f32_data()?.to_vec(),
+            y_test: y.i32_data()?.to_vec(),
+            clean_acc: clean,
+        })
+    }
+
+    /// Accuracy under fabric violation rate (per cycle): each hypervector
+    /// dimension flips with probability amplify(rate, HD_K).
+    pub fn accuracy(&self, rt: &mut Runtime, fabric_rate: f64, seed: u64) -> Result<f64> {
+        let b = HD_BATCH;
+        let mut rng = Xoshiro256::new(seed);
+        let p = amplify(fabric_rate, HD_K);
+        let nbatches = self.n_test / b;
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for bi in 0..nbatches {
+            let q = &self.q_test[bi * b * HD_DIM..(bi + 1) * b * HD_DIM];
+            let mask = sample_mask(b * HD_DIM, p, &mut rng);
+            let inputs = [
+                literal_f32_from_f32(q, &[b, HD_DIM])?,
+                literal_f32_from_f32(&self.prototypes, &[self.n_classes, HD_DIM])?,
+                literal_f32_from_f32(&mask, &[b, HD_DIM])?,
+            ];
+            let sims = rt.run_f32("hd.hlo.txt", &inputs)?;
+            anyhow::ensure!(sims.len() == b * self.n_classes);
+            for i in 0..b {
+                let row = &sims[i * self.n_classes..(i + 1) * self.n_classes];
+                if argmax(row) == self.y_test[bi * b + i] {
+                    correct += 1;
+                }
+                total += 1;
+            }
+        }
+        Ok(correct as f64 / total as f64)
+    }
+}
+
+fn argmax(row: &[f32]) -> i32 {
+    row.iter()
+        .enumerate()
+        .max_by(|a, c| a.1.partial_cmp(c.1).unwrap())
+        .map(|(i, _)| i as i32)
+        .unwrap_or(0)
+}
+
+/// One Fig. 8 sweep point: (LeNet accuracy, HD accuracy).
+pub fn fig8_point(
+    rt: &mut Runtime,
+    lenet: &LenetWorkload,
+    hd: &HdWorkload,
+    rates_lenet: MlRates,
+    rates_hd: MlRates,
+    seed: u64,
+) -> Result<(f64, f64)> {
+    let a = lenet.accuracy(rt, rates_lenet.mac_rate, seed)?;
+    let h = hd.accuracy(rt, rates_hd.fabric_rate, seed ^ 0xBEEF)?;
+    Ok((a, h))
+}

@@ -1,0 +1,160 @@
+//! Reader for the TVTENS1 tensor container written by python/compile/aot.py.
+
+use anyhow::{Context, Result};
+use std::io::Read;
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"TVTENS1\n";
+
+#[derive(Clone, Debug)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub dtype: Dtype,
+    raw: Vec<u8>,
+}
+
+impl Tensor {
+    pub fn len(&self) -> usize {
+        self.dims.iter().product()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    pub fn f32_data(&self) -> Result<Vec<f32>> {
+        anyhow::ensure!(matches!(self.dtype, Dtype::F32), "{} is not f32", self.name);
+        Ok(self
+            .raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+    pub fn i32_data(&self) -> Result<Vec<i32>> {
+        anyhow::ensure!(matches!(self.dtype, Dtype::I32), "{} is not i32", self.name);
+        Ok(self
+            .raw
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct TensorFile {
+    pub tensors: Vec<Tensor>,
+}
+
+impl TensorFile {
+    pub fn load(path: &Path) -> Result<TensorFile> {
+        let mut r = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
+        );
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        anyhow::ensure!(&magic == MAGIC, "bad tensor magic in {}", path.display());
+        let n = read_u32(&mut r)? as usize;
+        anyhow::ensure!(n < 10_000, "implausible tensor count {n}");
+        let mut tensors = Vec::with_capacity(n);
+        for _ in 0..n {
+            let name_len = read_u32(&mut r)? as usize;
+            anyhow::ensure!(name_len < 4096, "implausible name length");
+            let mut name = vec![0u8; name_len];
+            r.read_exact(&mut name)?;
+            let ndim = read_u32(&mut r)? as usize;
+            anyhow::ensure!(ndim <= 8, "implausible rank {ndim}");
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(read_u32(&mut r)? as usize);
+            }
+            let mut dt = [0u8; 1];
+            r.read_exact(&mut dt)?;
+            let dtype = match dt[0] {
+                0 => Dtype::F32,
+                1 => Dtype::I32,
+                d => anyhow::bail!("unknown dtype {d}"),
+            };
+            let count: usize = dims.iter().product();
+            anyhow::ensure!(count < 500_000_000, "implausible tensor size");
+            let mut raw = vec![0u8; count * 4];
+            r.read_exact(&mut raw)?;
+            tensors.push(Tensor {
+                name: String::from_utf8(name)?,
+                dims,
+                dtype,
+                raw,
+            });
+        }
+        Ok(TensorFile { tensors })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.tensors.iter().find(|t| t.name == name)
+    }
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    #[test]
+    fn reads_handwritten_container() {
+        let dir = std::env::temp_dir().join("thermovolt_tensors_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.bin");
+        let mut f = std::fs::File::create(&path).unwrap();
+        f.write_all(MAGIC).unwrap();
+        f.write_all(&1u32.to_le_bytes()).unwrap();
+        f.write_all(&3u32.to_le_bytes()).unwrap();
+        f.write_all(b"abc").unwrap();
+        f.write_all(&2u32.to_le_bytes()).unwrap();
+        f.write_all(&2u32.to_le_bytes()).unwrap();
+        f.write_all(&3u32.to_le_bytes()).unwrap();
+        f.write_all(&[0u8]).unwrap();
+        for i in 0..6 {
+            f.write_all(&(i as f32).to_le_bytes()).unwrap();
+        }
+        drop(f);
+        let tf = TensorFile::load(&path).unwrap();
+        let t = tf.get("abc").unwrap();
+        assert_eq!(t.dims, vec![2, 3]);
+        assert_eq!(t.f32_data().unwrap(), vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert!(t.i32_data().is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("thermovolt_tensors_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, b"WRONGMAGIC").unwrap();
+        assert!(TensorFile::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn loads_real_artifacts_if_present() {
+        let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/lenet_data.bin");
+        if !p.exists() {
+            return;
+        }
+        let tf = TensorFile::load(&p).unwrap();
+        assert!(tf.get("w0").is_some());
+        assert!(tf.get("x_test").is_some());
+        let acc = tf.get("clean_acc").unwrap().f32_data().unwrap()[0];
+        assert!(acc > 0.9, "trained accuracy {acc}");
+    }
+}

@@ -1,0 +1,259 @@
+//! BLIF-like text format for netlists.
+//!
+//! A close cousin of the BLIF that ABC hands VPR (§III-D): `.model`,
+//! `.inputs`, `.outputs`, `.names` (LUT with truth-table minterm list),
+//! `.latch`, and `.subckt bram/dsp`. Output cells are implicit in
+//! `.outputs`. This lets generated benchmarks be cached on disk and diffed.
+
+use super::{CellKind, Netlist, NetId, TruthTable, NO_NET};
+use std::collections::HashMap;
+use std::fmt::Write as _;
+
+/// Serialize to BLIF-like text.
+pub fn write(nl: &Netlist) -> String {
+    let mut out = String::new();
+    let net_name = |nid: NetId| -> String {
+        if nid == NO_NET {
+            "<none>".into()
+        } else {
+            let d = nl.nets[nid as usize].driver as usize;
+            format!("n_{}", nl.cells[d].name)
+        }
+    };
+    writeln!(out, ".model {}", nl.name).unwrap();
+    let ins: Vec<String> = nl
+        .cells
+        .iter()
+        .filter(|c| c.kind == CellKind::Input)
+        .map(|c| net_name(c.output))
+        .collect();
+    writeln!(out, ".inputs {}", ins.join(" ")).unwrap();
+    let outs: Vec<String> = nl
+        .cells
+        .iter()
+        .filter(|c| c.kind == CellKind::Output)
+        .map(|c| net_name(c.inputs[0]))
+        .collect();
+    writeln!(out, ".outputs {}", outs.join(" ")).unwrap();
+    for c in &nl.cells {
+        match &c.kind {
+            CellKind::Input | CellKind::Output => {}
+            CellKind::Lut(tt) => {
+                let ins: Vec<String> = c.inputs.iter().map(|&n| net_name(n)).collect();
+                writeln!(out, ".names {} {}", ins.join(" "), net_name(c.output)).unwrap();
+                writeln!(out, ".tt {:#018x} {}", tt.0, c.inputs.len()).unwrap();
+            }
+            CellKind::Ff => {
+                writeln!(out, ".latch {} {} re clk 0", net_name(c.inputs[0]), net_name(c.output))
+                    .unwrap();
+            }
+            CellKind::Bram => {
+                let ins: Vec<String> = c.inputs.iter().map(|&n| net_name(n)).collect();
+                writeln!(out, ".subckt bram out={} in={}", net_name(c.output), ins.join(","))
+                    .unwrap();
+            }
+            CellKind::Dsp => {
+                let ins: Vec<String> = c.inputs.iter().map(|&n| net_name(n)).collect();
+                writeln!(out, ".subckt dsp out={} in={}", net_name(c.output), ins.join(","))
+                    .unwrap();
+            }
+        }
+    }
+    writeln!(out, ".end").unwrap();
+    out
+}
+
+/// Parse the format produced by [`write`]. Two-pass: first create all
+/// driver cells and their nets, then connect sinks.
+pub fn read(text: &str) -> Result<Netlist, String> {
+    // Pass 1: collect declarations.
+    enum Decl {
+        Lut {
+            out: String,
+            ins: Vec<String>,
+            tt: u64,
+        },
+        Ff {
+            out: String,
+            d: String,
+        },
+        Block {
+            kind: &'static str,
+            out: String,
+            ins: Vec<String>,
+        },
+    }
+    let mut model = String::new();
+    let mut inputs: Vec<String> = Vec::new();
+    let mut outputs: Vec<String> = Vec::new();
+    let mut decls: Vec<Decl> = Vec::new();
+    let mut pending_lut: Option<(String, Vec<String>)> = None;
+
+    for (lno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut toks = line.split_whitespace();
+        let head = toks.next().unwrap();
+        let rest: Vec<&str> = toks.collect();
+        match head {
+            ".model" => model = rest.first().unwrap_or(&"top").to_string(),
+            ".inputs" => inputs.extend(rest.iter().map(|s| s.to_string())),
+            ".outputs" => outputs.extend(rest.iter().map(|s| s.to_string())),
+            ".names" => {
+                if rest.is_empty() {
+                    return Err(format!("line {}: .names needs nets", lno + 1));
+                }
+                let out = rest[rest.len() - 1].to_string();
+                let ins = rest[..rest.len() - 1].iter().map(|s| s.to_string()).collect();
+                pending_lut = Some((out, ins));
+            }
+            ".tt" => {
+                let (out, ins) = pending_lut
+                    .take()
+                    .ok_or_else(|| format!("line {}: .tt without .names", lno + 1))?;
+                let hex = rest
+                    .first()
+                    .ok_or_else(|| format!("line {}: .tt needs value", lno + 1))?;
+                let tt = u64::from_str_radix(hex.trim_start_matches("0x"), 16)
+                    .map_err(|e| format!("line {}: {e}", lno + 1))?;
+                decls.push(Decl::Lut { out, ins, tt });
+            }
+            ".latch" => {
+                if rest.len() < 2 {
+                    return Err(format!("line {}: .latch arity", lno + 1));
+                }
+                decls.push(Decl::Ff {
+                    d: rest[0].to_string(),
+                    out: rest[1].to_string(),
+                });
+            }
+            ".subckt" => {
+                let kind = match rest.first() {
+                    Some(&"bram") => "bram",
+                    Some(&"dsp") => "dsp",
+                    k => return Err(format!("line {}: unknown subckt {k:?}", lno + 1)),
+                };
+                let mut out = String::new();
+                let mut ins = Vec::new();
+                for kv in &rest[1..] {
+                    if let Some(v) = kv.strip_prefix("out=") {
+                        out = v.to_string();
+                    } else if let Some(v) = kv.strip_prefix("in=") {
+                        ins = v.split(',').map(|s| s.to_string()).collect();
+                    }
+                }
+                decls.push(Decl::Block { kind, out, ins });
+            }
+            ".end" => break,
+            _ => return Err(format!("line {}: unknown directive {head}", lno + 1)),
+        }
+    }
+
+    // Pass 2: create driver cells in dependency-free order (drivers first is
+    // not required because we pre-create nets via placeholder Input cells —
+    // instead we instantiate drivers, recording net name → NetId).
+    let mut nl = Netlist::new(&model);
+    let mut net_of: HashMap<String, NetId> = HashMap::new();
+    for name in &inputs {
+        let cid = nl.add_cell(
+            name.trim_start_matches("n_").to_string(),
+            CellKind::Input,
+            vec![],
+        );
+        net_of.insert(name.clone(), nl.cells[cid as usize].output);
+    }
+    // create all driver cells with empty inputs first
+    let mut cell_of_decl: Vec<u32> = Vec::with_capacity(decls.len());
+    for d in &decls {
+        let (out, kind) = match d {
+            Decl::Lut { out, tt, .. } => (out, CellKind::Lut(TruthTable(*tt))),
+            Decl::Ff { out, .. } => (out, CellKind::Ff),
+            Decl::Block { kind, out, .. } => (
+                out,
+                if *kind == "bram" {
+                    CellKind::Bram
+                } else {
+                    CellKind::Dsp
+                },
+            ),
+        };
+        let cid = nl.add_cell(out.trim_start_matches("n_").to_string(), kind, vec![]);
+        net_of.insert(out.clone(), nl.cells[cid as usize].output);
+        cell_of_decl.push(cid);
+    }
+    // now connect inputs
+    for (i, d) in decls.iter().enumerate() {
+        let ins: &[String] = match d {
+            Decl::Lut { ins, .. } => ins,
+            Decl::Ff { d, .. } => std::slice::from_ref(d),
+            Decl::Block { ins, .. } => ins,
+        };
+        let cid = cell_of_decl[i] as usize;
+        for (pin, name) in ins.iter().enumerate() {
+            let nid = *net_of
+                .get(name)
+                .ok_or_else(|| format!("undriven net {name}"))?;
+            nl.cells[cid].inputs.push(nid);
+            nl.nets[nid as usize].sinks.push((cid as u32, pin as u32));
+        }
+    }
+    for name in &outputs {
+        let nid = *net_of
+            .get(name)
+            .ok_or_else(|| format!("undriven output {name}"))?;
+        nl.add_cell(
+            format!("out_{}", name.trim_start_matches("n_")),
+            CellKind::Output,
+            vec![nid],
+        );
+    }
+    nl.validate()?;
+    Ok(nl)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::tiny;
+    use super::*;
+
+    #[test]
+    fn roundtrip_preserves_structure() {
+        let nl = tiny();
+        let text = write(&nl);
+        let nl2 = read(&text).unwrap();
+        assert_eq!(nl.profile(), nl2.profile());
+        assert_eq!(nl.logic_depth(), nl2.logic_depth());
+        assert_eq!(nl.nets.len(), nl2.nets.len());
+        // truth tables survive
+        let tts: Vec<u64> = nl
+            .cells
+            .iter()
+            .filter_map(|c| match c.kind {
+                CellKind::Lut(t) => Some(t.0),
+                _ => None,
+            })
+            .collect();
+        let tts2: Vec<u64> = nl2
+            .cells
+            .iter()
+            .filter_map(|c| match c.kind {
+                CellKind::Lut(t) => Some(t.0),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(tts, tts2);
+    }
+
+    #[test]
+    fn read_rejects_undriven() {
+        let bad = ".model x\n.inputs a\n.outputs q\n.end\n";
+        assert!(read(bad).is_err());
+    }
+
+    #[test]
+    fn read_rejects_unknown_directive() {
+        assert!(read(".model x\n.wat\n.end").is_err());
+    }
+}

@@ -1,0 +1,303 @@
+//! VPack-substitute: greedy attraction-based packing of BLEs into clusters.
+//!
+//! A BLE is a LUT optionally fused with the FF it feeds (when the FF is the
+//! LUT's only sink — the classic VPack pairing rule). Clusters take up to
+//! `N` BLEs subject to the `cluster_inputs` external-input limit (Table I:
+//! N = 10, I = 40). Unpaired FFs occupy a BLE alone. BRAM and DSP cells are
+//! macro blocks placed directly on their column sites.
+
+use super::{CellKind, Netlist, NO_NET};
+use crate::config::ArchConfig;
+use std::collections::HashSet;
+
+/// Result of packing.
+#[derive(Clone, Debug, Default)]
+pub struct Clustering {
+    /// clusters[i] = cell ids (LUTs and FFs) packed into cluster i.
+    pub clusters: Vec<Vec<u32>>,
+    /// cluster id for each cell (u32::MAX for IO/BRAM/DSP cells).
+    pub cluster_of: Vec<u32>,
+}
+
+pub const UNCLUSTERED: u32 = u32::MAX;
+
+/// One BLE: a LUT, an FF, or a fused LUT+FF pair.
+#[derive(Clone, Copy, Debug)]
+struct Ble {
+    lut: Option<u32>,
+    ff: Option<u32>,
+}
+
+pub fn cluster_netlist(nl: &Netlist, arch: &ArchConfig) -> Clustering {
+    // ---- form BLEs ----
+    let n_cells = nl.cells.len();
+    let mut in_ble = vec![false; n_cells];
+    let mut bles: Vec<Ble> = Vec::new();
+    for (cid, c) in nl.cells.iter().enumerate() {
+        if let CellKind::Lut(_) = c.kind {
+            let out = c.output;
+            let mut ff = None;
+            if out != NO_NET {
+                let sinks = &nl.nets[out as usize].sinks;
+                if sinks.len() == 1 {
+                    let (s, _) = sinks[0];
+                    if nl.cells[s as usize].kind == CellKind::Ff {
+                        ff = Some(s);
+                        in_ble[s as usize] = true;
+                    }
+                }
+            }
+            in_ble[cid] = true;
+            bles.push(Ble {
+                lut: Some(cid as u32),
+                ff,
+            });
+        }
+    }
+    for (cid, c) in nl.cells.iter().enumerate() {
+        if c.kind == CellKind::Ff && !in_ble[cid] {
+            in_ble[cid] = true;
+            bles.push(Ble {
+                lut: None,
+                ff: Some(cid as u32),
+            });
+        }
+    }
+
+    // External input nets of a BLE (nets not produced inside it).
+    let ble_inputs = |b: &Ble| -> Vec<u32> {
+        let mut v = Vec::new();
+        if let Some(l) = b.lut {
+            v.extend(nl.cells[l as usize].inputs.iter().copied());
+        }
+        if let Some(f) = b.ff {
+            let d = nl.cells[f as usize].inputs[0];
+            // skip if driven by the fused LUT
+            if b.lut.map(|l| nl.cells[l as usize].output) != Some(d) {
+                v.push(d);
+            }
+        }
+        v
+    };
+    let ble_outputs = |b: &Ble| -> Vec<u32> {
+        let mut v = Vec::new();
+        if let Some(l) = b.lut {
+            v.push(nl.cells[l as usize].output);
+        }
+        if let Some(f) = b.ff {
+            v.push(nl.cells[f as usize].output);
+        }
+        v
+    };
+
+    // net → BLE index for candidate discovery
+    let mut ble_of_cell = vec![usize::MAX; n_cells];
+    for (bi, b) in bles.iter().enumerate() {
+        if let Some(l) = b.lut {
+            ble_of_cell[l as usize] = bi;
+        }
+        if let Some(f) = b.ff {
+            ble_of_cell[f as usize] = bi;
+        }
+    }
+
+    // ---- greedy packing ----
+    let n = arch.n;
+    let imax = arch.cluster_inputs;
+    let mut packed = vec![false; bles.len()];
+    let mut clusters: Vec<Vec<u32>> = Vec::new();
+    let mut cluster_of = vec![UNCLUSTERED; n_cells];
+
+    // seed order: BLEs by descending connectivity
+    let mut order: Vec<usize> = (0..bles.len()).collect();
+    let conn = |bi: usize| ble_inputs(&bles[bi]).len() + ble_outputs(&bles[bi]).len();
+    order.sort_by_key(|&bi| std::cmp::Reverse(conn(bi)));
+
+    for &seed in &order {
+        if packed[seed] {
+            continue;
+        }
+        let mut members = vec![seed];
+        packed[seed] = true;
+        let mut input_nets: HashSet<u32> = ble_inputs(&bles[seed]).into_iter().collect();
+        let mut output_nets: HashSet<u32> = ble_outputs(&bles[seed]).into_iter().collect();
+        // candidate BLEs: those touching our nets
+        while members.len() < n {
+            let mut best: Option<(usize, i64)> = None;
+            let mut seen: HashSet<usize> = HashSet::new();
+            // scan fanout of our outputs and drivers of our inputs
+            let mut consider = |bi: usize,
+                                bles: &Vec<Ble>,
+                                input_nets: &HashSet<u32>,
+                                output_nets: &HashSet<u32>,
+                                best: &mut Option<(usize, i64)>| {
+                if packed[bi] || !seen.insert(bi) {
+                    return;
+                }
+                // attraction = shared nets; feasibility = input budget
+                let cand_ins = ble_inputs(&bles[bi]);
+                let mut new_inputs = input_nets.clone();
+                for i in &cand_ins {
+                    if !output_nets.contains(i) {
+                        new_inputs.insert(*i);
+                    }
+                }
+                // absorbing a net we currently treat as input removes it
+                for o in ble_outputs(&bles[bi]) {
+                    new_inputs.remove(&o);
+                }
+                if new_inputs.len() > imax {
+                    return;
+                }
+                let shared = cand_ins.iter().filter(|i| output_nets.contains(i)).count()
+                    as i64
+                    + cand_ins.iter().filter(|i| input_nets.contains(i)).count() as i64
+                    + ble_outputs(&bles[bi])
+                        .iter()
+                        .filter(|o| input_nets.contains(o))
+                        .count() as i64
+                        * 2;
+                if shared > 0 && best.map(|(_, s)| shared > s).unwrap_or(true) {
+                    *best = Some((bi, shared));
+                }
+            };
+            for &onet in output_nets.iter() {
+                for &(s, _) in &nl.nets[onet as usize].sinks {
+                    let bi = ble_of_cell[s as usize];
+                    if bi != usize::MAX {
+                        consider(bi, &bles, &input_nets, &output_nets, &mut best);
+                    }
+                }
+            }
+            for &inet in input_nets.iter() {
+                let d = nl.nets[inet as usize].driver as usize;
+                let bi = ble_of_cell[d];
+                if bi != usize::MAX {
+                    consider(bi, &bles, &input_nets, &output_nets, &mut best);
+                }
+            }
+            match best {
+                Some((bi, _)) => {
+                    packed[bi] = true;
+                    members.push(bi);
+                    for i in ble_inputs(&bles[bi]) {
+                        if !output_nets.contains(&i) {
+                            input_nets.insert(i);
+                        }
+                    }
+                    for o in ble_outputs(&bles[bi]) {
+                        output_nets.insert(o);
+                        input_nets.remove(&o);
+                    }
+                }
+                None => break,
+            }
+        }
+        let cidx = clusters.len() as u32;
+        let mut cells = Vec::new();
+        for &bi in &members {
+            if let Some(l) = bles[bi].lut {
+                cells.push(l);
+                cluster_of[l as usize] = cidx;
+            }
+            if let Some(f) = bles[bi].ff {
+                cells.push(f);
+                cluster_of[f as usize] = cidx;
+            }
+        }
+        clusters.push(cells);
+    }
+
+    Clustering {
+        clusters,
+        cluster_of,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::{CellKind, Netlist, TruthTable};
+    use crate::util::Xoshiro256;
+
+    fn random_netlist(nluts: usize, seed: u64) -> Netlist {
+        let mut nl = Netlist::new("rand");
+        let mut rng = Xoshiro256::new(seed);
+        let mut nets = Vec::new();
+        for i in 0..8 {
+            let c = nl.add_cell(format!("i{i}"), CellKind::Input, vec![]);
+            nets.push(nl.cells[c as usize].output);
+        }
+        for i in 0..nluts {
+            let nin = rng.range(2, 4);
+            let ins: Vec<u32> = (0..nin)
+                .map(|_| nets[rng.below(nets.len())])
+                .collect();
+            let c = nl.add_cell(
+                format!("l{i}"),
+                CellKind::Lut(TruthTable(rng.next_u64())),
+                ins,
+            );
+            nets.push(nl.cells[c as usize].output);
+        }
+        nl
+    }
+
+    #[test]
+    fn every_lut_and_ff_is_clustered_once() {
+        let nl = random_netlist(97, 3);
+        let arch = ArchConfig::default();
+        let cl = cluster_netlist(&nl, &arch);
+        let mut count = vec![0usize; nl.cells.len()];
+        for c in &cl.clusters {
+            for &cell in c {
+                count[cell as usize] += 1;
+            }
+        }
+        for (cid, cell) in nl.cells.iter().enumerate() {
+            match cell.kind {
+                CellKind::Lut(_) | CellKind::Ff => assert_eq!(count[cid], 1, "cell {cid}"),
+                _ => assert_eq!(count[cid], 0),
+            }
+        }
+    }
+
+    #[test]
+    fn cluster_size_and_input_limits_hold() {
+        let nl = random_netlist(200, 7);
+        let arch = ArchConfig::default();
+        let cl = cluster_netlist(&nl, &arch);
+        for cluster in &cl.clusters {
+            let luts = cluster
+                .iter()
+                .filter(|&&c| matches!(nl.cells[c as usize].kind, CellKind::Lut(_)))
+                .count();
+            assert!(luts <= arch.n, "cluster has {luts} LUTs");
+            // external inputs
+            let inside: std::collections::HashSet<u32> = cluster
+                .iter()
+                .map(|&c| nl.cells[c as usize].output)
+                .collect();
+            let ext: std::collections::HashSet<u32> = cluster
+                .iter()
+                .flat_map(|&c| nl.cells[c as usize].inputs.iter().copied())
+                .filter(|n| !inside.contains(n))
+                .collect();
+            assert!(ext.len() <= arch.cluster_inputs, "{} inputs", ext.len());
+        }
+    }
+
+    #[test]
+    fn packing_fuses_lut_ff_pairs() {
+        let mut nl = Netlist::new("pair");
+        let a = nl.add_cell("a".into(), CellKind::Input, vec![]);
+        let na = nl.cells[a as usize].output;
+        let l = nl.add_cell("l".into(), CellKind::Lut(TruthTable(0b10)), vec![na]);
+        let nlut = nl.cells[l as usize].output;
+        let f = nl.add_cell("f".into(), CellKind::Ff, vec![nlut]);
+        let _ = f;
+        let cl = cluster_netlist(&nl, &ArchConfig::default());
+        assert_eq!(cl.clusters.len(), 1);
+        assert_eq!(cl.cluster_of[l as usize], cl.cluster_of[f as usize]);
+    }
+}

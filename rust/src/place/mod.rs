@@ -1,0 +1,520 @@
+//! Simulated-annealing placement — the VPR placer substitute.
+//!
+//! After packing (`netlist::cluster`), the design is a graph of *blocks*
+//! (CLB clusters, BRAM blocks, DSP blocks, I/O pads) connected by
+//! inter-block nets. Placement assigns every block to a compatible site on
+//! the [`crate::arch::Device`] minimizing the classic VPR cost
+//! `Σ_nets q(fanout) · (bb_x + bb_y)`, with an adaptive annealing schedule
+//! (target acceptance 0.44, shrinking range window) — the same cost family
+//! VPR uses, so spatial locality / wire usage statistics downstream match
+//! what the paper's flow would see.
+
+use crate::arch::{Device, Site};
+use crate::netlist::{cluster::UNCLUSTERED, CellKind, Clustering, Netlist};
+use crate::util::Xoshiro256;
+
+/// Block kind — determines compatible sites.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BlockKind {
+    Clb,
+    Bram,
+    Dsp,
+    Io,
+}
+
+/// Net among blocks (deduplicated endpoints).
+#[derive(Clone, Debug)]
+pub struct BlockNet {
+    /// Driver block then sink blocks (unique, driver excluded).
+    pub driver: u32,
+    pub sinks: Vec<u32>,
+}
+
+impl BlockNet {
+    pub fn fanout(&self) -> usize {
+        self.sinks.len()
+    }
+}
+
+/// The placement problem: blocks + block-level nets.
+#[derive(Clone, Debug)]
+pub struct BlockGraph {
+    pub kinds: Vec<BlockKind>,
+    pub nets: Vec<BlockNet>,
+    /// nets touching each block (indices into `nets`).
+    pub nets_of_block: Vec<Vec<u32>>,
+    /// netlist cell → block (u32::MAX for cells folded away).
+    pub block_of_cell: Vec<u32>,
+    /// netlist net id behind each block net (for routing later).
+    pub netlist_net: Vec<u32>,
+}
+
+impl BlockGraph {
+    /// Build from a packed netlist.
+    pub fn build(nl: &Netlist, clustering: &Clustering) -> BlockGraph {
+        let mut kinds = Vec::new();
+        let mut block_of_cell = vec![u32::MAX; nl.cells.len()];
+        // cluster blocks first (ids align with clustering indices)
+        for _ in 0..clustering.clusters.len() {
+            kinds.push(BlockKind::Clb);
+        }
+        for (cid, cl) in clustering.cluster_of.iter().enumerate() {
+            if *cl != UNCLUSTERED {
+                block_of_cell[cid] = *cl;
+            }
+        }
+        for (cid, cell) in nl.cells.iter().enumerate() {
+            match cell.kind {
+                CellKind::Bram => {
+                    block_of_cell[cid] = kinds.len() as u32;
+                    kinds.push(BlockKind::Bram);
+                }
+                CellKind::Dsp => {
+                    block_of_cell[cid] = kinds.len() as u32;
+                    kinds.push(BlockKind::Dsp);
+                }
+                CellKind::Input | CellKind::Output => {
+                    block_of_cell[cid] = kinds.len() as u32;
+                    kinds.push(BlockKind::Io);
+                }
+                _ => {}
+            }
+        }
+        // block-level nets
+        let mut nets = Vec::new();
+        let mut netlist_net = Vec::new();
+        let mut nets_of_block: Vec<Vec<u32>> = vec![Vec::new(); kinds.len()];
+        for (nid, net) in nl.nets.iter().enumerate() {
+            let driver = block_of_cell[net.driver as usize];
+            debug_assert_ne!(driver, u32::MAX);
+            let mut sinks: Vec<u32> = net
+                .sinks
+                .iter()
+                .map(|&(c, _)| block_of_cell[c as usize])
+                .filter(|&b| b != driver)
+                .collect();
+            sinks.sort_unstable();
+            sinks.dedup();
+            if sinks.is_empty() {
+                continue; // intra-block net
+            }
+            let bn = nets.len() as u32;
+            nets_of_block[driver as usize].push(bn);
+            for &s in &sinks {
+                nets_of_block[s as usize].push(bn);
+            }
+            nets.push(BlockNet { driver, sinks });
+            netlist_net.push(nid as u32);
+        }
+        for v in nets_of_block.iter_mut() {
+            v.sort_unstable();
+            v.dedup();
+        }
+        BlockGraph {
+            kinds,
+            nets,
+            nets_of_block,
+            block_of_cell,
+            netlist_net,
+        }
+    }
+}
+
+/// A completed placement.
+#[derive(Clone, Debug)]
+pub struct Placement {
+    pub site_of_block: Vec<Site>,
+    pub cost: f64,
+}
+
+impl Placement {
+    /// Tile of a netlist cell.
+    pub fn cell_site(&self, bg: &BlockGraph, cell: u32) -> Site {
+        self.site_of_block[bg.block_of_cell[cell as usize] as usize]
+    }
+}
+
+/// VPR's q(fanout) bounding-box correction.
+fn q_factor(fanout: usize) -> f64 {
+    const Q: [f64; 10] = [1.0, 1.0, 1.0, 1.0828, 1.1536, 1.2206, 1.2823, 1.3385, 1.3991, 1.4493];
+    let pins = fanout + 1;
+    if pins <= 10 {
+        Q[pins - 1]
+    } else {
+        // linear extrapolation used by VPR beyond 50 pins ≈ 2.79
+        (1.4493 + (pins as f64 - 10.0) * 0.02616).min(4.0)
+    }
+}
+
+struct Bbox {
+    xmin: u16,
+    xmax: u16,
+    ymin: u16,
+    ymax: u16,
+}
+
+fn net_bbox(net: &BlockNet, sites: &[Site]) -> Bbox {
+    let d = sites[net.driver as usize];
+    let mut bb = Bbox {
+        xmin: d.x as u16,
+        xmax: d.x as u16,
+        ymin: d.y as u16,
+        ymax: d.y as u16,
+    };
+    for &s in &net.sinks {
+        let p = sites[s as usize];
+        bb.xmin = bb.xmin.min(p.x as u16);
+        bb.xmax = bb.xmax.max(p.x as u16);
+        bb.ymin = bb.ymin.min(p.y as u16);
+        bb.ymax = bb.ymax.max(p.y as u16);
+    }
+    bb
+}
+
+fn net_cost(net: &BlockNet, sites: &[Site]) -> f64 {
+    let bb = net_bbox(net, sites);
+    q_factor(net.fanout()) * ((bb.xmax - bb.xmin) as f64 + (bb.ymax - bb.ymin) as f64)
+}
+
+/// Placer options.
+#[derive(Clone, Debug)]
+pub struct PlaceOpts {
+    pub seed: u64,
+    /// Moves per block per temperature (VPR inner_num ≈ 10; we default lower
+    /// because our cost is cheaper to evaluate than VPR's timing cost).
+    pub effort: f64,
+    /// Hard cap on total moves (keeps mcml-scale runs bounded).
+    pub max_moves: usize,
+}
+
+impl Default for PlaceOpts {
+    fn default() -> Self {
+        PlaceOpts {
+            seed: 0x9A5E,
+            effort: 4.0,
+            max_moves: 6_000_000,
+        }
+    }
+}
+
+/// Place a block graph on a device with simulated annealing.
+pub fn place(bg: &BlockGraph, dev: &Device, opts: &PlaceOpts) -> Placement {
+    let mut rng = Xoshiro256::new(opts.seed);
+
+    // ---- initial placement: round-robin over shuffled compatible sites ----
+    // I/O sites are replicated io_capacity times (multiple pads per tile).
+    let mut io_pool = Vec::with_capacity(dev.io_sites.len() * dev.arch.io_capacity);
+    for _ in 0..dev.arch.io_capacity {
+        io_pool.extend_from_slice(&dev.io_sites);
+    }
+    let mut pools: [Vec<Site>; 4] = [
+        dev.clb_sites.clone(),
+        dev.bram_sites.clone(),
+        dev.dsp_sites.clone(),
+        io_pool,
+    ];
+    for p in pools.iter_mut() {
+        rng.shuffle(p);
+    }
+    let pool_of = |k: BlockKind| match k {
+        BlockKind::Clb => 0usize,
+        BlockKind::Bram => 1,
+        BlockKind::Dsp => 2,
+        BlockKind::Io => 3,
+    };
+    let mut cursor = [0usize; 4];
+    let mut site_of_block: Vec<Site> = Vec::with_capacity(bg.kinds.len());
+    for &k in &bg.kinds {
+        let pi = pool_of(k);
+        let c = cursor[pi];
+        assert!(
+            c < pools[pi].len(),
+            "device out of {:?} sites: need more than {}",
+            k,
+            pools[pi].len()
+        );
+        site_of_block.push(pools[pi][c]);
+        cursor[pi] += 1;
+    }
+    // block occupying each site index (per pool), for swaps
+    use std::collections::HashMap;
+    let mut occ: HashMap<(usize, usize), u32> = HashMap::new(); // (x,y) → block (non-IO)
+    let mut io_count: HashMap<(usize, usize), usize> = HashMap::new();
+    for (b, s) in site_of_block.iter().enumerate() {
+        if bg.kinds[b] == BlockKind::Io {
+            *io_count.entry((s.x, s.y)).or_insert(0) += 1;
+        } else {
+            occ.insert((s.x, s.y), b as u32);
+        }
+    }
+
+    let mut cost: f64 = bg.nets.iter().map(|n| net_cost(n, &site_of_block)).sum();
+
+    // movable blocks grouped by pool
+    let mut movable: [Vec<u32>; 4] = [Vec::new(), Vec::new(), Vec::new(), Vec::new()];
+    for (b, &k) in bg.kinds.iter().enumerate() {
+        movable[pool_of(k)].push(b as u32);
+    }
+
+    // ---- anneal ----
+    let nblocks = bg.kinds.len();
+    let moves_per_temp = ((opts.effort * (nblocks as f64).powf(1.2)) as usize).clamp(200, 300_000);
+    // initial temperature: 20 × stddev of random-move deltas (VPR heuristic)
+    let mut t = {
+        let mut deltas = Vec::new();
+        for _ in 0..100.min(nblocks) {
+            // probe deltas without committing
+            let pi = rng.below(4);
+            if movable[pi].is_empty() {
+                continue;
+            }
+            let b = movable[pi][rng.below(movable[pi].len())] as usize;
+            let old = site_of_block[b];
+            let cand = pools[pi][rng.below(pools[pi].len())];
+            let mut delta = 0.0;
+            for &bn in &bg.nets_of_block[b] {
+                delta -= net_cost(&bg.nets[bn as usize], &site_of_block);
+            }
+            site_of_block[b] = cand;
+            for &bn in &bg.nets_of_block[b] {
+                delta += net_cost(&bg.nets[bn as usize], &site_of_block);
+            }
+            site_of_block[b] = old;
+            deltas.push(delta);
+        }
+        20.0 * crate::util::stats::stddev(&deltas).max(1.0)
+    };
+
+    let mut range = dev.cols.max(dev.rows) as i64; // range window
+    let mut total_moves = 0usize;
+    loop {
+        let mut accepted = 0usize;
+        for _ in 0..moves_per_temp {
+            total_moves += 1;
+            let pi = {
+                // choose a pool weighted by its block count
+                let r = rng.below(nblocks);
+                let mut acc = 0usize;
+                let mut pick = 0usize;
+                for (i, m) in movable.iter().enumerate() {
+                    acc += m.len();
+                    if r < acc {
+                        pick = i;
+                        break;
+                    }
+                }
+                pick
+            };
+            if movable[pi].len() < 2 && pools[pi].len() < 2 {
+                continue;
+            }
+            let b = movable[pi][rng.below(movable[pi].len())] as usize;
+            let from = site_of_block[b];
+            // candidate site within the range window
+            let cand = {
+                let mut tries = 0;
+                loop {
+                    let s = pools[pi][rng.below(pools[pi].len())];
+                    let dx = (s.x as i64 - from.x as i64).abs();
+                    let dy = (s.y as i64 - from.y as i64).abs();
+                    if (dx <= range && dy <= range) || tries > 8 {
+                        break s;
+                    }
+                    tries += 1;
+                }
+            };
+            if cand == from {
+                continue;
+            }
+            let is_io = pi == 3;
+            if is_io && *io_count.get(&(cand.x, cand.y)).unwrap_or(&0) >= dev.arch.io_capacity {
+                continue;
+            }
+            let other = if is_io {
+                None
+            } else {
+                occ.get(&(cand.x, cand.y)).copied()
+            };
+            if other == Some(b as u32) {
+                continue;
+            }
+            // delta cost over affected nets (dedup via sort on small vecs)
+            let mut affected: Vec<u32> = bg.nets_of_block[b].clone();
+            if let Some(o) = other {
+                affected.extend_from_slice(&bg.nets_of_block[o as usize]);
+                affected.sort_unstable();
+                affected.dedup();
+            }
+            let mut delta = 0.0;
+            for &bn in &affected {
+                delta -= net_cost(&bg.nets[bn as usize], &site_of_block);
+            }
+            site_of_block[b] = cand;
+            if let Some(o) = other {
+                site_of_block[o as usize] = from;
+            }
+            for &bn in &affected {
+                delta += net_cost(&bg.nets[bn as usize], &site_of_block);
+            }
+            let accept = delta <= 0.0 || rng.next_f64() < (-delta / t).exp();
+            if accept {
+                cost += delta;
+                if is_io {
+                    *io_count.entry((cand.x, cand.y)).or_insert(0) += 1;
+                    *io_count.get_mut(&(from.x, from.y)).unwrap() -= 1;
+                } else {
+                    occ.insert((cand.x, cand.y), b as u32);
+                    if let Some(o) = other {
+                        occ.insert((from.x, from.y), o);
+                    } else {
+                        occ.remove(&(from.x, from.y));
+                    }
+                }
+                accepted += 1;
+            } else {
+                site_of_block[b] = from;
+                if let Some(o) = other {
+                    site_of_block[o as usize] = cand;
+                }
+            }
+        }
+        // VPR adaptive schedule
+        let alpha_acc = accepted as f64 / moves_per_temp as f64;
+        let gamma = if alpha_acc > 0.96 {
+            0.5
+        } else if alpha_acc > 0.8 {
+            0.9
+        } else if alpha_acc > 0.15 {
+            0.95
+        } else {
+            0.8
+        };
+        t *= gamma;
+        // shrink range toward 1 as acceptance falls
+        range = ((range as f64) * (1.0 - 0.44 + alpha_acc).clamp(0.5, 1.0)) as i64;
+        range = range.max(1);
+        let frozen = t < 0.005 * cost.max(1.0) / bg.nets.len().max(1) as f64;
+        if frozen || total_moves >= opts.max_moves {
+            break;
+        }
+    }
+
+    // exact recompute to wash out float drift
+    let cost: f64 = bg.nets.iter().map(|n| net_cost(n, &site_of_block)).sum();
+    Placement {
+        site_of_block,
+        cost,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArchConfig;
+    use crate::netlist::cluster_netlist;
+    use crate::synth::{benchmark, generate};
+
+    fn placed(name: &str) -> (crate::netlist::Netlist, BlockGraph, Device, Placement) {
+        let arch = ArchConfig::default();
+        let nl = generate(benchmark(name).unwrap());
+        let cl = cluster_netlist(&nl, &arch);
+        let bg = BlockGraph::build(&nl, &cl);
+        let nclb = bg.kinds.iter().filter(|&&k| k == BlockKind::Clb).count();
+        let nbram = bg.kinds.iter().filter(|&&k| k == BlockKind::Bram).count();
+        let ndsp = bg.kinds.iter().filter(|&&k| k == BlockKind::Dsp).count();
+        let nio = bg.kinds.iter().filter(|&&k| k == BlockKind::Io).count();
+        let dev = Device::size_for_io(nclb, nbram, ndsp, nio, &arch);
+        let pl = place(
+            &bg,
+            &dev,
+            &PlaceOpts {
+                seed: 1,
+                effort: 1.0,
+                max_moves: 200_000,
+            },
+        );
+        (nl, bg, dev, pl)
+    }
+
+    #[test]
+    fn placement_is_legal() {
+        let (_, bg, dev, pl) = placed("mkPktMerge");
+        // every block on a compatible site; no overlaps except IO pads up to
+        // the tile capacity
+        let mut seen = std::collections::HashSet::new();
+        let mut io_cnt: std::collections::HashMap<(usize, usize), usize> = Default::default();
+        for (b, s) in pl.site_of_block.iter().enumerate() {
+            let ok = match bg.kinds[b] {
+                BlockKind::Clb => dev.clb_sites.contains(s),
+                BlockKind::Bram => dev.bram_sites.contains(s),
+                BlockKind::Dsp => dev.dsp_sites.contains(s),
+                BlockKind::Io => dev.io_sites.contains(s),
+            };
+            assert!(ok, "block {b} on wrong site kind");
+            if bg.kinds[b] == BlockKind::Io {
+                let c = io_cnt.entry((s.x, s.y)).or_insert(0);
+                *c += 1;
+                assert!(*c <= dev.arch.io_capacity, "io overflow at {:?}", s);
+            } else {
+                assert!(seen.insert((s.x, s.y)), "overlap at {:?}", s);
+            }
+        }
+    }
+
+    #[test]
+    fn annealing_beats_random_start() {
+        let arch = ArchConfig::default();
+        let nl = generate(benchmark("mkPktMerge").unwrap());
+        let cl = cluster_netlist(&nl, &arch);
+        let bg = BlockGraph::build(&nl, &cl);
+        let dev = Device::size_for_io(64, 15, 0, 467, &arch);
+        // random start cost = cost of effort-0 run with max_moves 0
+        let random = place(
+            &bg,
+            &dev,
+            &PlaceOpts {
+                seed: 2,
+                effort: 0.0,
+                max_moves: 1,
+            },
+        );
+        let annealed = place(
+            &bg,
+            &dev,
+            &PlaceOpts {
+                seed: 2,
+                effort: 2.0,
+                max_moves: 300_000,
+            },
+        );
+        assert!(
+            annealed.cost < 0.7 * random.cost,
+            "anneal {} vs random {}",
+            annealed.cost,
+            random.cost
+        );
+    }
+
+    #[test]
+    fn blockgraph_covers_all_cells() {
+        let (nl, bg, _, _) = placed("mkPktMerge");
+        for (cid, c) in nl.cells.iter().enumerate() {
+            match c.kind {
+                CellKind::Lut(_) | CellKind::Ff => {
+                    assert_ne!(bg.block_of_cell[cid], u32::MAX, "cell {cid} unmapped")
+                }
+                _ => assert_ne!(bg.block_of_cell[cid], u32::MAX),
+            }
+        }
+    }
+
+    #[test]
+    fn q_factor_monotone() {
+        let mut prev = 0.0;
+        for f in 1..100 {
+            let q = q_factor(f);
+            assert!(q >= prev);
+            prev = q;
+        }
+    }
+}

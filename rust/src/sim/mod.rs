@@ -1,0 +1,96 @@
+//! Post-P&R timing-simulation → ML error mapping (§III-D, Fig. 5).
+//!
+//! The paper's simulation framework instantiates the placed-and-routed
+//! design with per-resource delays at the scaled voltage and observes
+//! output errors. We take the equivalent shortcut justified by the FATE
+//! bit-weight model [48]: the flow's `ErrorModel` gives each endpoint a
+//! per-cycle violation probability; endpoints are classified by datapath
+//! (MAC/DSP, fabric LUT, BRAM) and aggregated into per-datapath rates; a
+//! multi-cycle operation (e.g. a K-deep MAC reduction) fails if *any* of
+//! its cycles violates: `p_op = 1 − (1 − p_cycle)^K`. The `ml` module
+//! samples corruption masks at those rates and runs the AOT-compiled
+//! workloads through PJRT.
+
+use crate::flow::design::Design;
+use crate::flow::overscale::ErrorModel;
+use crate::util::Xoshiro256;
+
+/// Per-datapath per-cycle violation rates of an accelerator design.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MlRates {
+    /// Endpoints on DSP (MAC) paths.
+    pub mac_rate: f64,
+    /// All endpoints (general fabric, HD XOR/popcount trees).
+    pub fabric_rate: f64,
+    /// Endpoints on BRAM paths (buffer corruption).
+    pub bram_rate: f64,
+}
+
+/// Aggregate the flow's per-endpoint violation probabilities by datapath.
+pub fn ml_error_rates(
+    design: &Design,
+    res: &crate::flow::Alg1Result,
+    error: &ErrorModel,
+) -> MlRates {
+    let sta = design.sta();
+    let timing = sta.analyze(&res.temp, res.v_core, res.v_bram);
+    debug_assert_eq!(timing.endpoints.len(), error.p_viol.len());
+    let mut mac = (0.0, 0usize);
+    let mut bram = (0.0, 0usize);
+    let mut all = (0.0, 0usize);
+    for (e, &p) in timing.endpoints.iter().zip(&error.p_viol) {
+        all = (all.0 + p, all.1 + 1);
+        if e.through_dsp {
+            mac = (mac.0 + p, mac.1 + 1);
+        }
+        if e.through_bram {
+            bram = (bram.0 + p, bram.1 + 1);
+        }
+    }
+    let avg = |(s, n): (f64, usize)| if n == 0 { 0.0 } else { s / n as f64 };
+    MlRates {
+        mac_rate: if mac.1 > 0 { avg(mac) } else { avg(all) },
+        fabric_rate: avg(all),
+        bram_rate: avg(bram),
+    }
+}
+
+/// Multi-cycle failure amplification: p_op = 1 − (1 − p_cycle)^k.
+pub fn amplify(p_cycle: f64, k: usize) -> f64 {
+    1.0 - (1.0 - p_cycle.clamp(0.0, 1.0)).powi(k as i32)
+}
+
+/// Sample a Bernoulli flip mask of `len` entries at probability `p`.
+pub fn sample_mask(len: usize, p: f64, rng: &mut Xoshiro256) -> Vec<f32> {
+    if p <= 0.0 {
+        return vec![0.0f32; len];
+    }
+    (0..len)
+        .map(|_| if rng.chance(p) { 1.0f32 } else { 0.0f32 })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn amplify_bounds_and_monotonicity() {
+        assert_eq!(amplify(0.0, 100), 0.0);
+        assert!((amplify(1.0, 3) - 1.0).abs() < 1e-12);
+        assert!(amplify(1e-4, 100) > amplify(1e-4, 10));
+        // small-p linearization: ≈ k·p
+        let p = amplify(1e-6, 50);
+        assert!((p - 5e-5).abs() / 5e-5 < 0.01);
+    }
+
+    #[test]
+    fn mask_rate_matches_probability() {
+        let mut rng = Xoshiro256::new(7);
+        let m = sample_mask(100_000, 0.23, &mut rng);
+        let rate = m.iter().map(|&x| x as f64).sum::<f64>() / m.len() as f64;
+        assert!((rate - 0.23).abs() < 0.01, "rate {rate}");
+        let none = sample_mask(1000, 0.0, &mut rng);
+        assert!(none.iter().all(|&x| x == 0.0));
+    }
+}

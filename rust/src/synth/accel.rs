@@ -1,0 +1,71 @@
+//! Accelerator netlists for the over-scaling study (§III-D / Fig. 8).
+//!
+//! The paper implements LeNet as a systolic-array architecture [48] and the
+//! HD classifier after [49], maps them with the same FPGA flow, and runs
+//! post-P&R timing simulation under over-scaled voltages. These profiles
+//! describe those two accelerators in the same resource-profile terms as
+//! the VTR benchmarks:
+//!
+//! * `lenet_accel` — an 8×8 MAC systolic array: one DSP per PE plus
+//!   pipeline FFs and control LUTs, BRAM activation/weight buffers, short
+//!   DSP-bounded paths (the MXU-analogue datapath dominates timing);
+//! * `hd_accel` — a bit-parallel Hamming/associative engine: deep
+//!   XOR/popcount LUT trees, BRAM-held class hypervectors, no DSPs.
+
+use super::profiles::BenchProfile;
+
+/// Systolic-array LeNet accelerator (~8×8 PEs).
+pub fn lenet_accel() -> BenchProfile {
+    BenchProfile {
+        name: "lenet_systolic",
+        domain: "ML accelerator (CNN systolic array)",
+        luts: 2_600,
+        ffs: 1_800,
+        brams: 18,
+        dsps: 64,
+        inputs: 128,
+        outputs: 64,
+        depth: 8,
+        bram_path_luts: 2,
+        dsp_path_luts: 2,
+        fanout_mean: 3.0,
+        seed: 0xACC1,
+    }
+}
+
+/// Hyperdimensional classifier engine (D = 4096, bit-parallel slice).
+pub fn hd_accel() -> BenchProfile {
+    BenchProfile {
+        name: "hd_engine",
+        domain: "ML accelerator (hyperdimensional)",
+        luts: 5_800,
+        ffs: 1_100,
+        brams: 8,
+        dsps: 0,
+        inputs: 96,
+        outputs: 16,
+        depth: 13, // popcount reduction tree
+        bram_path_luts: 2,
+        dsp_path_luts: 0,
+        fanout_mean: 3.2,
+        seed: 0xACC2,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::synth::generate;
+
+    #[test]
+    fn accelerators_generate_with_expected_character() {
+        let l = generate(&lenet_accel());
+        l.validate().unwrap();
+        let p = l.profile();
+        assert_eq!(p.dsps, 64, "systolic array is DSP-dominated");
+        let h = generate(&hd_accel());
+        h.validate().unwrap();
+        assert_eq!(h.profile().dsps, 0, "HD engine is LUT-only");
+        assert_eq!(h.logic_depth(), 13);
+    }
+}

@@ -1,0 +1,20 @@
+//! Synthetic benchmark generation — the VTR-benchmark substitute.
+//!
+//! The paper maps 10 VTR circuits (vision, math, communication, …) through
+//! ODIN + ABC + VPR. We do not have the VTR HDL or its synthesis stack, so
+//! we generate netlists *by resource profile*: LUT/FF/BRAM/DSP counts, logic
+//! depth, fanout distribution and BRAM/DSP path depths are matched to the
+//! published characteristics of each circuit (VTR 7.0 release data + the
+//! figures the paper quotes, e.g. LU8PEEng's critical path being 21× its
+//! longest BRAM path, mkDelayWorker's 6,128 LUTs / 164 BRAMs / 71.6 MHz).
+//! The flow downstream of synthesis sees exactly what VPR would hand it — a
+//! placed, routed timing graph with activities — so Algorithms 1/2 exercise
+//! identical code paths (DESIGN.md §3 records this substitution).
+
+pub mod accel;
+pub mod generator;
+pub mod profiles;
+
+pub use accel::{hd_accel, lenet_accel};
+pub use generator::generate;
+pub use profiles::{benchmark, benchmark_names, BenchProfile};

@@ -1,0 +1,280 @@
+//! Steady-state thermal simulation — the HotSpot 6.0 substitute (§III-A).
+//!
+//! The device is a 2-D RC network: every tile couples to the ambient through
+//! a vertical (package) conductance `g_v` and to its 4-neighbours through a
+//! lateral conductance `g_l`. Steady state solves
+//!
+//! ```text
+//! g_v (T_i − T_amb) + Σ_j g_l (T_i − T_j) = P_i .
+//! ```
+//!
+//! Calibration follows the paper exactly: `r_convec` (here `g_v`) is tuned
+//! so that a 1 W total power trace reports a junction temperature rise of
+//! θ_JA — summing the balance over tiles makes the lateral terms cancel, so
+//! `mean(ΔT) = θ_JA · P_total` holds *identically* (the paper's observed
+//! `T_j = T_amb + θ_JA·P` behaviour, Table II), while the lateral network
+//! shapes hotspots around it.
+//!
+//! Two interchangeable backends solve the same system:
+//! * [`NativeSolver`] — red-black SOR in rust (oracle + fallback);
+//! * [`crate::runtime::ThermalArtifact`] — the L1/L2 Pallas/JAX program
+//!   AOT-compiled to HLO and executed via PJRT (the production hot path).
+
+use crate::config::ThermalConfig;
+
+/// Problem geometry + conductances for one device.
+#[derive(Clone, Debug)]
+pub struct ThermalGrid {
+    pub rows: usize,
+    pub cols: usize,
+    /// Vertical conductance per tile (W/°C).
+    pub g_v: f64,
+    /// Lateral conductance between neighbouring tiles (W/°C).
+    pub g_l: f64,
+}
+
+impl ThermalGrid {
+    /// Calibrated grid: `g_v = 1 / (n_tiles · θ_JA)` makes a uniform 1 W
+    /// trace report exactly θ_JA of rise.
+    pub fn calibrated(rows: usize, cols: usize, cfg: &ThermalConfig) -> ThermalGrid {
+        let n = (rows * cols) as f64;
+        let g_v = 1.0 / (n * cfg.theta_ja);
+        ThermalGrid {
+            rows,
+            cols,
+            g_v,
+            g_l: cfg.lateral_ratio * g_v,
+        }
+    }
+}
+
+/// Native red-black SOR solver.
+#[derive(Clone, Debug)]
+pub struct NativeSolver {
+    pub grid: ThermalGrid,
+    /// SOR relaxation factor.
+    pub omega: f64,
+    /// Residual threshold: stop when the max per-sweep update < eps (°C).
+    pub eps: f64,
+    pub max_sweeps: usize,
+}
+
+impl NativeSolver {
+    pub fn new(grid: ThermalGrid, cfg: &ThermalConfig) -> NativeSolver {
+        NativeSolver {
+            grid,
+            omega: 1.8,
+            eps: 1e-4,
+            max_sweeps: cfg.max_sweeps,
+        }
+    }
+
+    /// Solve for the steady-state temperature map (°C). `power` is W per
+    /// tile, indexed `x * rows + y` (matches `Device::idx`).
+    pub fn solve(&self, power: &[f64], t_amb: f64) -> Vec<f64> {
+        let (rows, cols) = (self.grid.rows, self.grid.cols);
+        assert_eq!(power.len(), rows * cols);
+        let g_v = self.grid.g_v;
+        let g_l = self.grid.g_l;
+        let mut t = vec![t_amb; rows * cols];
+        let idx = |x: usize, y: usize| x * rows + y;
+        for sweep in 0..self.max_sweeps {
+            let mut max_delta = 0.0f64;
+            for parity in 0..2 {
+                for x in 0..cols {
+                    for y in 0..rows {
+                        if (x + y) % 2 != parity {
+                            continue;
+                        }
+                        let mut nsum = 0.0;
+                        let mut deg = 0.0;
+                        if x > 0 {
+                            nsum += t[idx(x - 1, y)];
+                            deg += 1.0;
+                        }
+                        if x + 1 < cols {
+                            nsum += t[idx(x + 1, y)];
+                            deg += 1.0;
+                        }
+                        if y > 0 {
+                            nsum += t[idx(x, y - 1)];
+                            deg += 1.0;
+                        }
+                        if y + 1 < rows {
+                            nsum += t[idx(x, y + 1)];
+                            deg += 1.0;
+                        }
+                        let i = idx(x, y);
+                        let gauss =
+                            (power[i] + g_v * t_amb + g_l * nsum) / (g_v + g_l * deg);
+                        let new = t[i] + self.omega * (gauss - t[i]);
+                        max_delta = max_delta.max((new - t[i]).abs());
+                        t[i] = new;
+                    }
+                }
+            }
+            if max_delta < self.eps && sweep > 4 {
+                break;
+            }
+        }
+        t
+    }
+
+    /// Residual ‖g_v(T−T_amb) + g_l Σ(T−T_j) − P‖∞ — a solution certificate.
+    pub fn residual(&self, t: &[f64], power: &[f64], t_amb: f64) -> f64 {
+        let (rows, cols) = (self.grid.rows, self.grid.cols);
+        let idx = |x: usize, y: usize| x * rows + y;
+        let mut worst = 0.0f64;
+        for x in 0..cols {
+            for y in 0..rows {
+                let i = idx(x, y);
+                let mut flux = self.grid.g_v * (t[i] - t_amb);
+                for (nx, ny) in neighbours(x, y, cols, rows) {
+                    flux += self.grid.g_l * (t[i] - t[idx(nx, ny)]);
+                }
+                worst = worst.max((flux - power[i]).abs());
+            }
+        }
+        worst
+    }
+}
+
+fn neighbours(x: usize, y: usize, cols: usize, rows: usize) -> Vec<(usize, usize)> {
+    let mut v = Vec::with_capacity(4);
+    if x > 0 {
+        v.push((x - 1, y));
+    }
+    if x + 1 < cols {
+        v.push((x + 1, y));
+    }
+    if y > 0 {
+        v.push((x, y - 1));
+    }
+    if y + 1 < rows {
+        v.push((x, y + 1));
+    }
+    v
+}
+
+/// Backend-agnostic steady-state interface used by the flow.
+pub trait ThermalBackend {
+    /// Solve for T (°C per tile) given P (W per tile).
+    fn steady_state(&mut self, power: &[f64], t_amb: f64) -> Vec<f64>;
+    fn name(&self) -> &'static str;
+}
+
+impl ThermalBackend for NativeSolver {
+    fn steady_state(&mut self, power: &[f64], t_amb: f64) -> Vec<f64> {
+        self.solve(power, t_amb)
+    }
+    fn name(&self) -> &'static str {
+        "native-sor"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(theta: f64) -> ThermalConfig {
+        ThermalConfig {
+            theta_ja: theta,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn uniform_1w_reports_theta_ja() {
+        for theta in [2.0, 12.0] {
+            let c = cfg(theta);
+            let grid = ThermalGrid::calibrated(48, 48, &c);
+            let s = NativeSolver::new(grid, &c);
+            let n = 48 * 48;
+            let power = vec![1.0 / n as f64; n];
+            let t = s.solve(&power, 40.0);
+            let mean = crate::util::stats::mean(&t);
+            assert!(
+                (mean - (40.0 + theta)).abs() < 0.05,
+                "θ_JA={theta}: mean T = {mean}"
+            );
+            // uniform power on a symmetric grid ⇒ uniform temperature
+            let spread = crate::util::stats::max(&t) - crate::util::stats::min(&t);
+            assert!(spread < 0.01, "spread {spread}");
+        }
+    }
+
+    #[test]
+    fn mean_rise_tracks_total_power_regardless_of_shape() {
+        let c = cfg(12.0);
+        let grid = ThermalGrid::calibrated(32, 32, &c);
+        let s = NativeSolver::new(grid, &c);
+        let n = 32 * 32;
+        // concentrated power: one hot tile with 0.5 W
+        let mut power = vec![0.0; n];
+        power[n / 2 + 7] = 0.5;
+        let t = s.solve(&power, 25.0);
+        let mean = crate::util::stats::mean(&t);
+        assert!(
+            (mean - (25.0 + 12.0 * 0.5)).abs() < 0.05,
+            "mean rise = {}",
+            mean - 25.0
+        );
+        // and it must form a hotspot
+        let max = crate::util::stats::max(&t);
+        assert!(max > mean + 1.0, "no hotspot: max {max} mean {mean}");
+    }
+
+    #[test]
+    fn hotspot_decays_with_distance() {
+        let c = cfg(12.0);
+        let grid = ThermalGrid::calibrated(33, 33, &c);
+        let s = NativeSolver::new(grid, &c);
+        let n = 33 * 33;
+        let mut power = vec![0.0; n];
+        let cx = 16usize;
+        let cy = 16usize;
+        power[cx * 33 + cy] = 0.3;
+        let t = s.solve(&power, 25.0);
+        let at = |x: usize, y: usize| t[x * 33 + y];
+        assert!(at(16, 16) > at(18, 16));
+        assert!(at(18, 16) > at(22, 16));
+        assert!(at(22, 16) > at(30, 16));
+    }
+
+    #[test]
+    fn residual_certifies_solution() {
+        let c = cfg(2.0);
+        let grid = ThermalGrid::calibrated(40, 40, &c);
+        let s = NativeSolver::new(grid, &c);
+        let n = 1600;
+        let power: Vec<f64> = (0..n).map(|i| 1e-4 * ((i % 17) as f64)).collect();
+        let t = s.solve(&power, 30.0);
+        let p_total: f64 = power.iter().sum();
+        let r = s.residual(&t, &power, 30.0);
+        // residual small relative to per-tile power scale
+        assert!(r < 1e-6 * p_total.max(1.0), "residual {r}");
+    }
+
+    #[test]
+    fn superposition_holds() {
+        // the system is linear: solve(P1 + P2) = solve(P1) + solve(P2) − T_amb
+        let c = cfg(12.0);
+        let grid = ThermalGrid::calibrated(24, 24, &c);
+        let s = NativeSolver::new(grid, &c);
+        let n = 576;
+        let mut p1 = vec![0.0; n];
+        let mut p2 = vec![0.0; n];
+        p1[100] = 0.2;
+        p2[400] = 0.1;
+        let t1 = s.solve(&p1, 0.0);
+        let t2 = s.solve(&p2, 0.0);
+        let p12: Vec<f64> = p1.iter().zip(&p2).map(|(a, b)| a + b).collect();
+        let t12 = s.solve(&p12, 0.0);
+        for i in 0..n {
+            assert!(
+                (t12[i] - (t1[i] + t2[i])).abs() < 1e-3,
+                "superposition off at {i}"
+            );
+        }
+    }
+}

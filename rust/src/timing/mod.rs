@@ -1,0 +1,523 @@
+//! Per-tile-temperature static timing analysis (the modified-VPR `T` of
+//! Algorithms 1/2).
+//!
+//! The paper modifies VPR "to enable timing analysis at different scenarios
+//! using the characterized libraries": every resource instance on a path is
+//! priced at its own tile's junction temperature and its rail's voltage, so
+//! a path crossing a hotspot is slower than the same path in a cool region
+//! (insight: CPs change with (T, V); routing- and logic-bound paths scale
+//! differently).
+//!
+//! Two evaluation modes:
+//! * [`Sta::analyze_flat`] — uniform temperature (used for `d_worst` at
+//!   T_max and for fast search inner loops): per-connection resource counts
+//!   make it O(#connections).
+//! * [`Sta::analyze`] — per-tile temperature map: hop chains are priced
+//!   tile-by-tile against a per-(resource, tile) delay cache rebuilt per
+//!   call, O(#hops + #tiles·#resources).
+
+use crate::arch::Device;
+use crate::chardb::{CharTable, Rail, ResourceType};
+use crate::netlist::{CellKind, Netlist, NO_NET};
+use crate::place::{BlockGraph, Placement};
+use crate::route::{Hop, Routing};
+
+/// A timing endpoint (path terminus).
+#[derive(Clone, Copy, Debug)]
+pub struct Endpoint {
+    /// Sink cell (FF, BRAM or Output).
+    pub cell: u32,
+    /// Data arrival time at the endpoint, seconds.
+    pub arrival: f64,
+    /// True when the path's last leg touches a BRAM (rail attribution).
+    pub through_bram: bool,
+    /// True when the worst path passes through a DSP slice (MAC datapath —
+    /// drives the systolic-array error mapping in `crate::sim`).
+    pub through_dsp: bool,
+}
+
+/// STA outcome for one (T, V) condition.
+#[derive(Clone, Debug)]
+pub struct StaResult {
+    /// Critical-path delay (max endpoint arrival), seconds.
+    pub critical_path: f64,
+    /// All endpoint arrivals (slack histograms, over-scaling error model).
+    pub endpoints: Vec<Endpoint>,
+    /// Critical endpoint cell.
+    pub worst_cell: u32,
+}
+
+/// Longest BRAM-touching path (Fig. 6 analysis: LU8PEEng CP = 21× this).
+pub fn longest_bram_path(res: &StaResult) -> f64 {
+    res.endpoints
+        .iter()
+        .filter(|e| e.through_bram)
+        .map(|e| e.arrival)
+        .fold(0.0, f64::max)
+}
+
+/// Pre-digested connection: where a net's sink cell receives its data.
+#[derive(Clone, Copy, Debug)]
+struct Conn {
+    /// range into `hop_offsets` (flattened, cache-friendly hop pricing)
+    hop_start: u32,
+    hop_end: u32,
+    /// resource hop counts for the flat mode
+    n_sb: u16,
+    n_cb: u16,
+    n_local: u16,
+}
+
+/// STA context bound to one placed+routed design.
+pub struct Sta<'a> {
+    pub nl: &'a Netlist,
+    pub bg: &'a BlockGraph,
+    pub pl: &'a Placement,
+    pub routing: &'a Routing,
+    pub dev: &'a Device,
+    pub table: &'a CharTable,
+    /// per (net, sink-pin occurrence) connection info, indexed by a flat
+    /// offset: conn_of[net_start[nid] + sink_index_in_netlist_net]
+    conns: Vec<Conn>,
+    /// flattened hop pricing: `cache[hop_offsets[i]]` is the hop delay
+    hop_offsets: Vec<u32>,
+    /// tile index per cell (site resolved once)
+    tile_of_cell: Vec<u32>,
+    net_start: Vec<u32>,
+    order: Vec<u32>,
+    /// per (cell, pin): occurrence index of that pin in its net's sink list
+    /// (perf: built once; propagate() used to rebuild it per call).
+    occ_of_pin: Vec<Vec<u32>>,
+}
+
+impl<'a> Sta<'a> {
+    pub fn new(
+        nl: &'a Netlist,
+        bg: &'a BlockGraph,
+        pl: &'a Placement,
+        routing: &'a Routing,
+        dev: &'a Device,
+        table: &'a CharTable,
+    ) -> Sta<'a> {
+        // netlist net → block net
+        let mut net_to_bnet = vec![u32::MAX; nl.nets.len()];
+        for (bn, &nid) in bg.netlist_net.iter().enumerate() {
+            net_to_bnet[nid as usize] = bn as u32;
+        }
+        let n_tiles = dev.n_tiles();
+        let mut conns = Vec::new();
+        let mut hop_offsets: Vec<u32> = Vec::new();
+        let mut net_start = Vec::with_capacity(nl.nets.len() + 1);
+        for (nid, net) in nl.nets.iter().enumerate() {
+            net_start.push(conns.len() as u32);
+            let bn = net_to_bnet[nid];
+            for &(sink, _) in &net.sinks {
+                // intra-block fallback: one local mux at the sink's tile
+                let local_conn = |hop_offsets: &mut Vec<u32>| {
+                    let site = pl.cell_site(bg, sink);
+                    let start = hop_offsets.len() as u32;
+                    hop_offsets.push(
+                        (ResourceType::LocalMux.index() * n_tiles + dev.idx(site.x, site.y))
+                            as u32,
+                    );
+                    Conn {
+                        hop_start: start,
+                        hop_end: start + 1,
+                        n_sb: 0,
+                        n_cb: 0,
+                        n_local: 1,
+                    }
+                };
+                let conn = if bn == u32::MAX {
+                    local_conn(&mut hop_offsets)
+                } else {
+                    let sink_block = bg.block_of_cell[sink as usize];
+                    let bnet = &bg.nets[bn as usize];
+                    if sink_block == bnet.driver {
+                        local_conn(&mut hop_offsets)
+                    } else {
+                        let slot = bnet
+                            .sinks
+                            .binary_search(&sink_block)
+                            .expect("sink block must be on its net")
+                            as u32;
+                        let chain = &routing.paths[bn as usize][slot as usize];
+                        let count = |r: ResourceType| {
+                            chain.iter().filter(|h| h.res == r).count() as u16
+                        };
+                        let start = hop_offsets.len() as u32;
+                        for h in chain {
+                            hop_offsets.push(
+                                (h.res.index() * n_tiles
+                                    + dev.idx(h.x as usize, h.y as usize))
+                                    as u32,
+                            );
+                        }
+                        Conn {
+                            hop_start: start,
+                            hop_end: hop_offsets.len() as u32,
+                            n_sb: count(ResourceType::SbMux),
+                            n_cb: count(ResourceType::CbMux),
+                            n_local: count(ResourceType::LocalMux),
+                        }
+                    }
+                };
+                conns.push(conn);
+            }
+        }
+        net_start.push(conns.len() as u32);
+        let order = nl.levelize();
+        let tile_of_cell: Vec<u32> = (0..nl.cells.len())
+            .map(|cid| {
+                let site = pl.cell_site(bg, cid as u32);
+                dev.idx(site.x, site.y) as u32
+            })
+            .collect();
+        let mut occ_of_pin: Vec<Vec<u32>> = nl
+            .cells
+            .iter()
+            .map(|c| vec![0u32; c.inputs.len()])
+            .collect();
+        for net in nl.nets.iter() {
+            for (occ, &(sink, pin)) in net.sinks.iter().enumerate() {
+                occ_of_pin[sink as usize][pin as usize] = occ as u32;
+            }
+        }
+        Sta {
+            nl,
+            bg,
+            pl,
+            routing,
+            dev,
+            table,
+            conns,
+            hop_offsets,
+            tile_of_cell,
+            net_start,
+            order,
+            occ_of_pin,
+        }
+    }
+
+    fn conn(&self, nid: u32, sink_occurrence: usize) -> &Conn {
+        &self.conns[self.net_start[nid as usize] as usize + sink_occurrence]
+    }
+
+    /// Uniform-temperature analysis (fast path).
+    pub fn analyze_flat(&self, t_c: f64, v_core: f64, v_bram: f64) -> StaResult {
+        let d = |r: ResourceType| {
+            let v = match r.rail() {
+                Rail::Core => v_core,
+                Rail::Bram => v_bram,
+            };
+            self.table.delay(r, t_c, v)
+        };
+        let d_sb = d(ResourceType::SbMux);
+        let d_cb = d(ResourceType::CbMux);
+        let d_local = d(ResourceType::LocalMux);
+        let d_lut = d(ResourceType::Lut);
+        let d_ff = d(ResourceType::Ff);
+        let d_bram = d(ResourceType::Bram);
+        let d_dsp = d(ResourceType::Dsp);
+        self.propagate(
+            |conn, _sink_cell| {
+                conn.n_sb as f64 * d_sb + conn.n_cb as f64 * d_cb + conn.n_local as f64 * d_local
+            },
+            |kind, _cell| match kind {
+                CellKind::Lut(_) => d_lut,
+                CellKind::Dsp => d_dsp,
+                _ => 0.0,
+            },
+            |kind, _cell| match kind {
+                CellKind::Ff => d_ff,
+                CellKind::Bram => d_bram,
+                _ => 0.0,
+            },
+        )
+    }
+
+    /// Per-(resource, tile) delay cache for the core rail at one (T map, V).
+    /// Exposed so the Algorithm-1/2 searches can memoize caches per voltage
+    /// level instead of rebuilding them on every feasibility probe (§Perf).
+    pub fn build_core_cache(&self, temp: &[f64], v_core: f64) -> Vec<f64> {
+        let core_res = [
+            ResourceType::Lut,
+            ResourceType::SbMux,
+            ResourceType::CbMux,
+            ResourceType::LocalMux,
+            ResourceType::Ff,
+            ResourceType::Dsp,
+        ];
+        let n = self.dev.n_tiles();
+        let mut cache = vec![0.0f64; 8 * n];
+        for &r in &core_res {
+            let base = r.index() * n;
+            for (t, &tc) in temp.iter().enumerate() {
+                cache[base + t] = self.table.delay(r, tc, v_core);
+            }
+        }
+        cache
+    }
+
+    /// BRAM-rail companion of [`Sta::build_core_cache`].
+    pub fn build_bram_cache(&self, temp: &[f64], v_bram: f64) -> Vec<f64> {
+        let n = self.dev.n_tiles();
+        let mut cache = vec![0.0f64; n];
+        for (t, &tc) in temp.iter().enumerate() {
+            cache[t] = self.table.delay(ResourceType::Bram, tc, v_bram);
+        }
+        cache
+    }
+
+    /// Per-tile-temperature analysis. `temp` is indexed by `dev.idx(x, y)`.
+    pub fn analyze(&self, temp: &[f64], v_core: f64, v_bram: f64) -> StaResult {
+        let core = self.build_core_cache(temp, v_core);
+        let bram = self.build_bram_cache(temp, v_bram);
+        self.analyze_cached(&core, &bram)
+    }
+
+    /// Hop-walk analysis against prebuilt delay caches.
+    pub fn analyze_cached(&self, cache: &[f64], bram_cache: &[f64]) -> StaResult {
+        let n = self.dev.n_tiles();
+        assert_eq!(cache.len(), 8 * n);
+        assert_eq!(bram_cache.len(), n);
+        let tile_of_cell = |cell: u32| -> usize { self.tile_of_cell[cell as usize] as usize };
+        self.propagate(
+            |conn, _sink_cell| {
+                let mut sum = 0.0;
+                for &off in &self.hop_offsets[conn.hop_start as usize..conn.hop_end as usize] {
+                    // BRAM never appears on routing chains, so `cache` (core
+                    // rail) prices every hop
+                    sum += cache[off as usize];
+                }
+                sum
+            },
+            |kind, cell| match kind {
+                CellKind::Lut(_) => cache[ResourceType::Lut.index() * n + tile_of_cell(cell)],
+                CellKind::Dsp => cache[ResourceType::Dsp.index() * n + tile_of_cell(cell)],
+                _ => 0.0,
+            },
+            |kind, cell| match kind {
+                CellKind::Ff => cache[ResourceType::Ff.index() * n + tile_of_cell(cell)],
+                CellKind::Bram => bram_cache[tile_of_cell(cell)],
+                _ => 0.0,
+            },
+        )
+    }
+
+    /// Core propagation. `net_delay(conn, sink_cell)`, `cell_delay(kind, cell)`
+    /// (combinational), `launch_delay(kind, cell)` (sequential clk→Q).
+    fn propagate<FN, FC, FL>(&self, net_delay: FN, cell_delay: FC, launch_delay: FL) -> StaResult
+    where
+        FN: Fn(&Conn, u32) -> f64,
+        FC: Fn(&CellKind, u32) -> f64,
+        FL: Fn(&CellKind, u32) -> f64,
+    {
+        let nl = self.nl;
+        let mut arrival = vec![0.0f64; nl.nets.len()];
+        let mut through_bram = vec![false; nl.nets.len()];
+        let mut through_dsp = vec![false; nl.nets.len()];
+        // launch from sequential sources + PIs
+        for (cid, c) in nl.cells.iter().enumerate() {
+            if c.output == NO_NET {
+                continue;
+            }
+            match c.kind {
+                CellKind::Input => arrival[c.output as usize] = 0.0,
+                CellKind::Ff | CellKind::Bram => {
+                    arrival[c.output as usize] = launch_delay(&c.kind, cid as u32);
+                    through_bram[c.output as usize] = matches!(c.kind, CellKind::Bram);
+                }
+                _ => {}
+            }
+        }
+        // helper: arrival at a sink pin of `net` (the occ-th sink)
+        let pin_arrival = |nid: u32, occ: usize, sink: u32, arrival: &[f64]| -> f64 {
+            arrival[nid as usize] + net_delay(self.conn(nid, occ), sink)
+        };
+        let occ_of_pin = &self.occ_of_pin;
+        // combinational propagation
+        for &cid in &self.order {
+            let c = &nl.cells[cid as usize];
+            if matches!(c.kind, CellKind::Output) {
+                continue;
+            }
+            let mut worst = 0.0f64;
+            let mut wbram = false;
+            let mut wdsp = false;
+            for (pin, &inet) in c.inputs.iter().enumerate() {
+                let occ = occ_of_pin[cid as usize][pin] as usize;
+                let a = pin_arrival(inet, occ, cid, &arrival);
+                if a > worst {
+                    worst = a;
+                    wbram = through_bram[inet as usize];
+                    wdsp = through_dsp[inet as usize];
+                }
+            }
+            if c.output != NO_NET {
+                let out = c.output as usize;
+                arrival[out] = worst + cell_delay(&c.kind, cid);
+                through_bram[out] = wbram;
+                through_dsp[out] = wdsp || matches!(c.kind, CellKind::Dsp);
+            }
+        }
+        // endpoints: FF D pins, BRAM input pins, POs
+        let mut endpoints = Vec::new();
+        let mut critical_path = 0.0f64;
+        let mut worst_cell = 0u32;
+        for (cid, c) in nl.cells.iter().enumerate() {
+            let is_endpoint = matches!(c.kind, CellKind::Ff | CellKind::Bram | CellKind::Output);
+            if !is_endpoint {
+                continue;
+            }
+            let mut worst = 0.0f64;
+            let mut wbram = matches!(c.kind, CellKind::Bram);
+            let mut wdsp = false;
+            for (pin, &inet) in c.inputs.iter().enumerate() {
+                let occ = occ_of_pin[cid][pin] as usize;
+                let a = pin_arrival(inet, occ, cid as u32, &arrival);
+                if a > worst {
+                    worst = a;
+                    wbram |= through_bram[inet as usize];
+                    wdsp = through_dsp[inet as usize];
+                }
+            }
+            endpoints.push(Endpoint {
+                cell: cid as u32,
+                arrival: worst,
+                through_bram: wbram,
+                through_dsp: wdsp,
+            });
+            if worst > critical_path {
+                critical_path = worst;
+                worst_cell = cid as u32;
+            }
+        }
+        StaResult {
+            critical_path,
+            endpoints,
+            worst_cell,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chardb::CharDb;
+    use crate::config::ArchConfig;
+    use crate::netlist::cluster_netlist;
+    use crate::place::{place, BlockKind, PlaceOpts};
+    use crate::route::route;
+    use crate::synth::{benchmark, generate};
+
+    struct Fixture {
+        nl: Netlist,
+        bg: BlockGraph,
+        dev: Device,
+        pl: Placement,
+        routing: Routing,
+        table: CharTable,
+    }
+
+    fn fixture(name: &str) -> Fixture {
+        let arch = ArchConfig::default();
+        let nl = generate(benchmark(name).unwrap());
+        let cl = cluster_netlist(&nl, &arch);
+        let bg = BlockGraph::build(&nl, &cl);
+        let nclb = bg.kinds.iter().filter(|&&k| k == BlockKind::Clb).count();
+        let nbram = bg.kinds.iter().filter(|&&k| k == BlockKind::Bram).count();
+        let ndsp = bg.kinds.iter().filter(|&&k| k == BlockKind::Dsp).count();
+        let nio = bg.kinds.iter().filter(|&&k| k == BlockKind::Io).count();
+        let dev = Device::size_for_io(nclb, nbram, ndsp, nio, &arch);
+        let pl = place(
+            &bg,
+            &dev,
+            &PlaceOpts {
+                seed: 4,
+                effort: 0.5,
+                max_moves: 60_000,
+            },
+        );
+        let routing = route(&bg, &pl, &dev);
+        let table = CharTable::generate(&CharDb::analytic());
+        Fixture {
+            nl,
+            bg,
+            dev,
+            pl,
+            routing,
+            table,
+        }
+    }
+
+    #[test]
+    fn cp_positive_and_flat_matches_uniform_map() {
+        let f = fixture("mkPktMerge");
+        let sta = Sta::new(&f.nl, &f.bg, &f.pl, &f.routing, &f.dev, &f.table);
+        let flat = sta.analyze_flat(100.0, 0.8, 0.95);
+        assert!(flat.critical_path > 1e-9, "cp = {}", flat.critical_path);
+        let uniform = vec![100.0; f.dev.n_tiles()];
+        let mapped = sta.analyze(&uniform, 0.8, 0.95);
+        let rel = (flat.critical_path - mapped.critical_path).abs() / flat.critical_path;
+        assert!(rel < 1e-9, "flat vs uniform-map rel diff {rel}");
+    }
+
+    #[test]
+    fn cp_monotone_in_temperature_and_voltage() {
+        let f = fixture("mkPktMerge");
+        let sta = Sta::new(&f.nl, &f.bg, &f.pl, &f.routing, &f.dev, &f.table);
+        let d40 = sta.analyze_flat(40.0, 0.8, 0.95).critical_path;
+        let d100 = sta.analyze_flat(100.0, 0.8, 0.95).critical_path;
+        assert!(d40 < d100, "thermal margin must exist: {d40} vs {d100}");
+        // Fig. 2(a): at nominal V the margin from 100→40 °C is ~10–17 %
+        let ratio = d40 / d100;
+        assert!((0.80..=0.95).contains(&ratio), "margin ratio {ratio}");
+        let dv = sta.analyze_flat(40.0, 0.70, 0.95).critical_path;
+        assert!(dv > d40, "lower voltage must slow the CP");
+    }
+
+    #[test]
+    fn hotspot_tile_slows_paths_through_it() {
+        let f = fixture("mkPktMerge");
+        let sta = Sta::new(&f.nl, &f.bg, &f.pl, &f.routing, &f.dev, &f.table);
+        let cool = vec![40.0; f.dev.n_tiles()];
+        let base = sta.analyze(&cool, 0.8, 0.95).critical_path;
+        // heat every tile: CP must rise; heat one corner: CP must not drop
+        let hot = vec![100.0; f.dev.n_tiles()];
+        let worst = sta.analyze(&hot, 0.8, 0.95).critical_path;
+        assert!(worst > base);
+        let mut corner = cool.clone();
+        corner[f.dev.idx(1, 1)] = 100.0;
+        let c = sta.analyze(&corner, 0.8, 0.95).critical_path;
+        assert!(c >= base - 1e-15);
+        assert!(c <= worst + 1e-15);
+    }
+
+    #[test]
+    fn bram_paths_tracked_and_short_in_lu8peeng_style() {
+        // use boundtop (small, has 1 bram) for speed; the LU8PEEng-scale
+        // check lives in the integration tests
+        let f = fixture("mkPktMerge");
+        let sta = Sta::new(&f.nl, &f.bg, &f.pl, &f.routing, &f.dev, &f.table);
+        let res = sta.analyze_flat(100.0, 0.8, 0.95);
+        let bram = longest_bram_path(&res);
+        assert!(bram > 0.0, "mkPktMerge has BRAM paths");
+        assert!(bram <= res.critical_path + 1e-15);
+    }
+
+    #[test]
+    fn bram_voltage_only_affects_bram_paths() {
+        let f = fixture("mkPktMerge");
+        let sta = Sta::new(&f.nl, &f.bg, &f.pl, &f.routing, &f.dev, &f.table);
+        let a = sta.analyze_flat(60.0, 0.8, 0.95);
+        let b = sta.analyze_flat(60.0, 0.8, 0.80);
+        // non-BRAM endpoints unchanged
+        for (ea, eb) in a.endpoints.iter().zip(&b.endpoints) {
+            if !ea.through_bram && !eb.through_bram {
+                assert!((ea.arrival - eb.arrival).abs() < 1e-15);
+            }
+        }
+        assert!(longest_bram_path(&b) > longest_bram_path(&a));
+    }
+}

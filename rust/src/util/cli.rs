@@ -1,0 +1,126 @@
+//! Minimal dependency-free CLI argument parsing.
+//!
+//! Grammar: `thermovolt <subcommand> [--flag] [--key value] [positional…]`.
+//! Long options only; `--key=value` and `--key value` both accepted.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                out.subcommand = it.next().unwrap();
+            }
+        }
+        while let Some(arg) = it.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                if let Some(eq) = body.find('=') {
+                    out.options
+                        .insert(body[..eq].to_string(), body[eq + 1..].to_string());
+                } else {
+                    // A following token that does not start with `--` is the value.
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            out.options.insert(body.to_string(), v);
+                        }
+                        _ => out.flags.push(body.to_string()),
+                    }
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> f64 {
+        self.opt(name)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> usize {
+        self.opt(name)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn opt_u64(&self, name: &str, default: u64) -> u64 {
+        self.opt(name)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let a = args("power-opt extra --bench mkDelayWorker --tamb 60 --verbose");
+        assert_eq!(a.subcommand, "power-opt");
+        assert_eq!(a.opt("bench"), Some("mkDelayWorker"));
+        assert_eq!(a.opt_f64("tamb", 0.0), 60.0);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = args("sta --tamb=25.5 --grid=92");
+        assert_eq!(a.opt_f64("tamb", 0.0), 25.5);
+        assert_eq!(a.opt_usize("grid", 0), 92);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = args("report --fig6");
+        assert!(a.flag("fig6"));
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        let a = args("x --tamb -5");
+        assert_eq!(a.opt_f64("tamb", 0.0), -5.0);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = args("x");
+        assert_eq!(a.opt_or("missing", "d"), "d");
+        assert_eq!(a.opt_usize("missing", 7), 7);
+    }
+}

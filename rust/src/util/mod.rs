@@ -1,0 +1,9 @@
+//! Dependency-free utilities: PRNG, statistics, config parsing, CLI, tables.
+
+pub mod cli;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod tomlite;
+
+pub use rng::{SplitMix64, Xoshiro256};

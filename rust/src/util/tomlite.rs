@@ -1,0 +1,289 @@
+//! `tomlite` — a dependency-free parser for the TOML subset our configs use.
+//!
+//! Supported: `[section]` / `[a.b]` headers, `key = value` with string,
+//! integer, float, boolean and homogeneous scalar arrays, `#` comments.
+//! Unsupported TOML (dates, inline tables, multiline strings) is a parse
+//! error — configs in this repo stay inside the subset.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+    /// Floats accept integer literals too (`theta_ja = 2` means 2.0).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(v) => Some(*v),
+            Value::Int(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(v) => Some(*v),
+            _ => None,
+        }
+    }
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Flat document: fully-qualified dotted keys → values.
+#[derive(Clone, Debug, Default)]
+pub struct Doc {
+    pub entries: BTreeMap<String, Value>,
+}
+
+#[derive(Debug)]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "tomlite parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+impl Doc {
+    pub fn parse(text: &str) -> Result<Doc, ParseError> {
+        let mut doc = Doc::default();
+        let mut section = String::new();
+        for (idx, raw) in text.lines().enumerate() {
+            let lineno = idx + 1;
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(inner) = line.strip_prefix('[') {
+                let inner = inner.strip_suffix(']').ok_or_else(|| ParseError {
+                    line: lineno,
+                    msg: "unterminated section header".into(),
+                })?;
+                let name = inner.trim();
+                if name.is_empty() {
+                    return Err(ParseError {
+                        line: lineno,
+                        msg: "empty section name".into(),
+                    });
+                }
+                section = name.to_string();
+                continue;
+            }
+            let eq = line.find('=').ok_or_else(|| ParseError {
+                line: lineno,
+                msg: format!("expected `key = value`, got `{line}`"),
+            })?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return Err(ParseError {
+                    line: lineno,
+                    msg: "empty key".into(),
+                });
+            }
+            let val = parse_value(line[eq + 1..].trim(), lineno)?;
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            doc.entries.insert(full, val);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(Value::as_str).unwrap_or(default)
+    }
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Value::as_f64).unwrap_or(default)
+    }
+    pub fn i64_or(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(Value::as_i64).unwrap_or(default)
+    }
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.i64_or(key, default as i64).max(0) as usize
+    }
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Value::as_bool).unwrap_or(default)
+    }
+    pub fn f64_array(&self, key: &str) -> Option<Vec<f64>> {
+        self.get(key)
+            .and_then(Value::as_array)
+            .map(|a| a.iter().filter_map(Value::as_f64).collect())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` inside a quoted string must not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, lineno: usize) -> Result<Value, ParseError> {
+    let err = |msg: String| ParseError { line: lineno, msg };
+    if s.is_empty() {
+        return Err(err("empty value".into()));
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| err("unterminated string".into()))?;
+        if inner.contains('"') {
+            return Err(err("embedded quote in string (unsupported)".into()));
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| err("unterminated array".into()))?;
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            let part = part.trim();
+            if !part.is_empty() {
+                items.push(parse_value(part, lineno)?);
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    let cleaned = s.replace('_', "");
+    if let Ok(v) = cleaned.parse::<i64>() {
+        return Ok(Value::Int(v));
+    }
+    if let Ok(v) = cleaned.parse::<f64>() {
+        return Ok(Value::Float(v));
+    }
+    Err(err(format!("cannot parse value `{s}`")))
+}
+
+/// Split a (string-free or quoted) array body on top-level commas.
+fn split_top_level(s: &str) -> Vec<String> {
+    let mut parts = Vec::new();
+    let mut cur = String::new();
+    let mut in_str = false;
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            ',' if !in_str => {
+                parts.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        parts.push(cur);
+    }
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let doc = Doc::parse(
+            r#"
+            # top comment
+            name = "mkDelayWorker"   # trailing
+            [thermal]
+            theta_ja = 2.0
+            grid = 128
+            enabled = true
+            [flow.search]
+            v_core = [0.60, 0.70, 0.80]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.str_or("name", ""), "mkDelayWorker");
+        assert_eq!(doc.f64_or("thermal.theta_ja", 0.0), 2.0);
+        assert_eq!(doc.usize_or("thermal.grid", 0), 128);
+        assert!(doc.bool_or("thermal.enabled", false));
+        assert_eq!(
+            doc.f64_array("flow.search.v_core").unwrap(),
+            vec![0.60, 0.70, 0.80]
+        );
+    }
+
+    #[test]
+    fn integer_promotes_to_float() {
+        let doc = Doc::parse("x = 3").unwrap();
+        assert_eq!(doc.f64_or("x", 0.0), 3.0);
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = Doc::parse(r##"k = "a#b""##).unwrap();
+        assert_eq!(doc.str_or("k", ""), "a#b");
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = Doc::parse("ok = 1\nbad line").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = Doc::parse("[unterminated").unwrap_err();
+        assert_eq!(e.line, 1);
+        let e = Doc::parse("x = @wat").unwrap_err();
+        assert_eq!(e.line, 1);
+    }
+
+    #[test]
+    fn defaults_apply_on_missing_keys() {
+        let doc = Doc::parse("").unwrap();
+        assert_eq!(doc.f64_or("nope", 1.5), 1.5);
+        assert_eq!(doc.str_or("nope", "d"), "d");
+    }
+
+    #[test]
+    fn underscores_in_numbers() {
+        let doc = Doc::parse("n = 1_000_000").unwrap();
+        assert_eq!(doc.i64_or("n", 0), 1_000_000);
+    }
+}

@@ -1,0 +1,123 @@
+//! Full-flow integration on the PJRT thermal path: Algorithm 1, the
+//! paper-shape acceptance bands, and the Fig. 8 spine (flow → error model →
+//! PJRT ML inference). Requires `make artifacts`.
+
+use std::path::{Path, PathBuf};
+use thermovolt::config::Config;
+use thermovolt::flow::{alg1, overscale, Design, Effort};
+use thermovolt::ml::LenetWorkload;
+use thermovolt::runtime::{select_backend, Runtime};
+use thermovolt::sim::ml_error_rates;
+use thermovolt::synth;
+use thermovolt::timing::longest_bram_path;
+
+fn artifacts() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn ready() -> bool {
+    artifacts().join("thermal.hlo.txt").exists()
+}
+
+#[test]
+fn alg1_on_pjrt_backend_meets_paper_band() {
+    if !ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut cfg = Config::new();
+    cfg.artifacts_dir = artifacts();
+    cfg.flow.t_amb = 40.0;
+    cfg.thermal.theta_ja = 12.0;
+    let d = Design::build("boundtop", &cfg, Effort::Quick).unwrap();
+    let mut backend = select_backend(&cfg.artifacts_dir, d.dev.rows, d.dev.cols, &cfg.thermal);
+    assert_eq!(backend.name(), "pjrt-artifact", "must use the AOT hot path");
+    let r = alg1::thermal_aware_voltage_selection(&d, &cfg, backend.as_mut(), 1.0);
+    let base = alg1::baseline(&d, &cfg, backend.as_mut());
+    let saving = 1.0 - r.power / base.power;
+    // Fig. 6(a) band, per-benchmark tolerance
+    assert!(
+        (0.20..=0.50).contains(&saving),
+        "saving {saving} out of band"
+    );
+    assert!(r.iters.len() <= 6, "paper: converges in < 6 iterations");
+    // timing must hold at the converged map
+    let sta = d.sta();
+    let cp = sta.analyze(&r.temp, r.v_core, r.v_bram).critical_path;
+    assert!(cp <= r.d_worst + 1e-15);
+}
+
+#[test]
+fn lu8peeng_bram_paths_much_shorter_than_cp() {
+    // §IV: "in LU8PEEng, the critical path is 21× longer than the longest
+    // BRAM path. For these paths, V_bram is reduced down to 0.55 V."
+    let cfg = Config::new();
+    let d = Design::build("LU8PEEng", &cfg, Effort::Quick).unwrap();
+    let sta = d.sta();
+    let r = sta.analyze_flat(100.0, 0.8, 0.95);
+    let ratio = r.critical_path / longest_bram_path(&r).max(1e-15);
+    assert!(
+        ratio > 4.0,
+        "LU8PEEng CP/BRAM-path ratio {ratio} (paper: 21×)"
+    );
+}
+
+#[test]
+fn lu8peeng_vbram_hits_the_floor_in_power_flow() {
+    if !ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut cfg = Config::new();
+    cfg.artifacts_dir = artifacts();
+    cfg.flow.t_amb = 40.0;
+    cfg.thermal.theta_ja = 12.0;
+    let d = Design::build("LU8PEEng", &cfg, Effort::Quick).unwrap();
+    let mut backend = select_backend(&cfg.artifacts_dir, d.dev.rows, d.dev.cols, &cfg.thermal);
+    let r = alg1::thermal_aware_voltage_selection(&d, &cfg, backend.as_mut(), 1.0);
+    // paper: V_bram down to the 0.55 V floor; our BRAM near-threshold wall
+    // stops a step or two higher depending on the converged hotspot map —
+    // the qualitative claim is V_bram deep below nominal (0.95 V), unlike
+    // BRAM-critical designs which hold ≥ 0.9 V
+    assert!(
+        r.v_bram <= 0.65,
+        "short BRAM paths must let V_bram approach the 0.55 V floor (got {})",
+        r.v_bram
+    );
+}
+
+#[test]
+fn fig8_spine_flow_to_pjrt_inference() {
+    if !ready() || !artifacts().join("lenet.hlo.txt").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut cfg = Config::new();
+    cfg.artifacts_dir = artifacts();
+    cfg.flow.t_amb = 40.0;
+    cfg.thermal.theta_ja = 12.0;
+    let profile = synth::lenet_accel();
+    let d = Design::from_netlist(synth::generate(&profile), &profile, &cfg, Effort::Quick).unwrap();
+    let mut backend = select_backend(&cfg.artifacts_dir, d.dev.rows, d.dev.cols, &cfg.thermal);
+    let mut rt = Runtime::new(&cfg.artifacts_dir).unwrap();
+    let lenet = LenetWorkload::load(&cfg.artifacts_dir).unwrap();
+
+    // no violation budget ⇒ accuracy ≈ clean
+    let o1 = overscale::overscale(&d, &cfg, backend.as_mut(), 1.0);
+    let r1 = ml_error_rates(&d, &o1.alg1, &o1.error);
+    let acc1 = lenet.accuracy(&mut rt, r1.mac_rate, 11).unwrap();
+    assert!((acc1 - lenet.clean_acc).abs() < 0.02, "acc@1.0 = {acc1}");
+
+    // far past the guardband wall ⇒ accuracy collapses
+    let o2 = overscale::overscale(&d, &cfg, backend.as_mut(), 1.55);
+    let r2 = ml_error_rates(&d, &o2.alg1, &o2.error);
+    assert!(r2.mac_rate > r1.mac_rate);
+    let acc2 = lenet.accuracy(&mut rt, r2.mac_rate, 11).unwrap();
+    assert!(
+        acc2 < acc1 - 0.05,
+        "deep over-scaling must cost accuracy: {acc1} → {acc2} (rate {})",
+        r2.mac_rate
+    );
+    // and saves strictly more power
+    assert!(o2.alg1.power < o1.alg1.power);
+}

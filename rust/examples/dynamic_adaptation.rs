@@ -3,6 +3,8 @@
 //! controller through a day-cycle ambient trace and compare against the
 //! static worst-case setting. No guardband violations are permitted.
 
+use std::sync::Arc;
+
 use thermovolt::config::Config;
 use thermovolt::coordinator::{mean_power, DynamicController, Tsd};
 use thermovolt::flow::dynamic::VoltageLut;
@@ -21,7 +23,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     println!("building (T → V) LUT (Algorithm 1 per ambient point)…");
-    let lut = VoltageLut::build(&design, &cfg, backend.as_mut(), 0.0, 80.0, 10.0);
+    let lut = Arc::new(VoltageLut::build(&design, &cfg, backend.as_mut(), 0.0, 80.0, 10.0));
     for e in &lut.entries {
         println!(
             "  Tj <= {:5.1} C → ({:.0}, {:.0}) mV, {:.0} mW",
@@ -40,12 +42,15 @@ fn main() -> anyhow::Result<()> {
     let f_clk = 1.0 / (d_worst * (1.0 + cfg.flow.guardband));
     let n = design.dev.n_tiles();
     let controller = DynamicController {
-        lut: &lut,
+        lut: lut.clone(),
         theta_ja: cfg.thermal.theta_ja,
         tau_ms: 3000.0,
         margin: cfg.flow.sensor_margin,
         tsd: Tsd::default(),
-        power_fn: Box::new(move |vc, vb, tj| pm.total_power(&vec![tj; n], f_clk, vc, vb)),
+        power_fn: move |vc: f64, vb: f64, tj: f64| {
+            let tmap = vec![tj; n];
+            pm.total_power(&tmap, f_clk, vc, vb)
+        },
     };
 
     // ambient: night 15 °C → day peak 60 °C → night, 4 minutes sim time

@@ -9,6 +9,10 @@
 use super::model::{CharDb, ResourceType, ALL_RESOURCES};
 use std::io::{Read, Write};
 use std::path::Path;
+use std::sync::{Arc, OnceLock};
+
+/// Process-wide cache for [`CharTable::shared`].
+static SHARED_TABLE: OnceLock<Arc<CharTable>> = OnceLock::new();
 
 /// Characterization grid: temperatures 0..=110 °C step 5, voltages
 /// 0.50..=1.00 V step 0.01.
@@ -33,6 +37,19 @@ pub struct CharTable {
 const MAGIC: &[u8; 8] = b"TVCDB01\n";
 
 impl CharTable {
+    /// The analytic characterization, computed once per process and shared.
+    ///
+    /// Every `Design` (and every fleet worker) consumes the identical
+    /// characterized library, so regenerating the sweep per design is pure
+    /// waste — a fleet run instantiates dozens of designs across threads.
+    /// The `Arc` keeps the table alive for as long as any consumer needs it
+    /// and is free to clone across workers.
+    pub fn shared() -> Arc<CharTable> {
+        SHARED_TABLE
+            .get_or_init(|| Arc::new(CharTable::generate(&CharDb::analytic())))
+            .clone()
+    }
+
     /// Run the characterization sweep over the analytic model.
     pub fn generate(db: &CharDb) -> CharTable {
         let temps: Vec<f64> = (0..=22).map(|i| i as f64 * 5.0).collect(); // 0..110

@@ -14,6 +14,12 @@
 //! constant of seconds — sensor sampling at 1 ms is far faster than the
 //! plant, exactly the regime the paper argues makes 1 ms sampling safe
 //! (heat-up takes "orders of seconds" [40]).
+//!
+//! The controller owns its state (`Arc<VoltageLut>` + a `Send + Sync` power
+//! hook) so one instance can run per fleet worker thread — the `fleet`
+//! subsystem drives hundreds of these concurrently over shared traces.
+
+use std::sync::Arc;
 
 use crate::flow::dynamic::VoltageLut;
 
@@ -96,9 +102,34 @@ pub struct Sample {
     pub violation: bool,
 }
 
+/// Aggregate statistics over every simulation step (not just the sampled
+/// log): exact energy integral, violation count and peaks. The fleet
+/// telemetry layer aggregates these across devices and jobs.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RunStats {
+    /// Simulation steps taken.
+    pub steps: u64,
+    /// Simulated span (ms).
+    pub sim_ms: f64,
+    /// ∫ P dt over the whole run (J).
+    pub energy_j: f64,
+    /// energy / span (W).
+    pub mean_power_w: f64,
+    /// Guardband violations across *all* steps.
+    pub violations: u64,
+    /// Hottest junction temperature seen (°C).
+    pub peak_t_junct: f64,
+    /// Highest instantaneous power seen (W).
+    pub peak_power_w: f64,
+}
+
 /// Controller + plant simulation.
-pub struct DynamicController<'a> {
-    pub lut: &'a VoltageLut,
+///
+/// Generic over the power hook so borrowing closures (over a `PowerModel`)
+/// and owning closures (over an `Arc<fleet::PowerSurface>`) both work; the
+/// `Send + Sync` bound lets one controller run per fleet worker thread.
+pub struct DynamicController<F: Fn(f64, f64, f64) -> f64 + Send + Sync> {
+    pub lut: Arc<VoltageLut>,
     pub theta_ja: f64,
     /// Thermal time constant (ms).
     pub tau_ms: f64,
@@ -106,13 +137,24 @@ pub struct DynamicController<'a> {
     pub margin: f64,
     pub tsd: Tsd,
     /// Power model hook: (v_core, v_bram, t_junct) → watts.
-    pub power_fn: Box<dyn Fn(f64, f64, f64) -> f64 + 'a>,
+    pub power_fn: F,
 }
 
-impl<'a> DynamicController<'a> {
+impl<F: Fn(f64, f64, f64) -> f64 + Send + Sync> DynamicController<F> {
     /// Simulate over an ambient trace given as (time_ms, t_amb) breakpoints
     /// (linearly interpolated). Returns the sampled log at `dt_ms` steps.
     pub fn run(&self, trace: &[(f64, f64)], dt_ms: f64, sample_every_ms: f64) -> Vec<Sample> {
+        self.run_stats(trace, dt_ms, sample_every_ms).0
+    }
+
+    /// Like [`run`](Self::run), but also returns exact per-step aggregates
+    /// (energy integral, violation count, peaks).
+    pub fn run_stats(
+        &self,
+        trace: &[(f64, f64)],
+        dt_ms: f64,
+        sample_every_ms: f64,
+    ) -> (Vec<Sample>, RunStats) {
         assert!(trace.len() >= 2, "need a trace");
         let t_end = trace.last().unwrap().0;
         let times: Vec<f64> = trace.iter().map(|&(t, _)| t).collect();
@@ -124,6 +166,10 @@ impl<'a> DynamicController<'a> {
         let mut reg_bram = Regulator::new(v0b);
         let mut t_junct = amb(0.0);
         let mut out = Vec::new();
+        let mut stats = RunStats {
+            peak_t_junct: t_junct,
+            ..RunStats::default()
+        };
         let mut next_sample = 0.0;
         let mut tick = 0u64;
         let mut t_ms = 0.0;
@@ -146,6 +192,11 @@ impl<'a> DynamicController<'a> {
             // violation check: required rails at the *true* junction temp
             let (vreq_c, vreq_b) = self.lut.lookup(t_junct, 0.0);
             let violation = vc < vreq_c - 1e-9 || vb < vreq_b - 1e-9;
+            stats.steps += 1;
+            stats.energy_j += p * (dt_ms / 1e3);
+            stats.violations += violation as u64;
+            stats.peak_t_junct = stats.peak_t_junct.max(t_junct);
+            stats.peak_power_w = stats.peak_power_w.max(p);
             if t_ms + 1e-9 >= next_sample {
                 out.push(Sample {
                     t_ms,
@@ -161,7 +212,11 @@ impl<'a> DynamicController<'a> {
             t_ms += dt_ms;
             tick += 1;
         }
-        out
+        stats.sim_ms = stats.steps as f64 * dt_ms;
+        if stats.sim_ms > 0.0 {
+            stats.mean_power_w = stats.energy_j / (stats.sim_ms / 1e3);
+        }
+        (out, stats)
     }
 }
 
@@ -190,36 +245,38 @@ mod tests {
         }
     }
 
-    fn controller(lut: &VoltageLut) -> DynamicController<'_> {
+    fn toy_power(vc: f64, vb: f64, tj: f64) -> f64 {
+        // crude: quadratic in V, exponential in T
+        0.5 * (vc * vc / 0.64) * (0.015 * (tj - 25.0)).exp() * 0.7 + 0.1 * (vb * vb / 0.9025)
+    }
+
+    fn controller() -> DynamicController<fn(f64, f64, f64) -> f64> {
         DynamicController {
-            lut,
+            lut: Arc::new(toy_lut()),
             theta_ja: 12.0,
             tau_ms: 3000.0,
             margin: 5.0,
             tsd: Tsd::default(),
-            power_fn: Box::new(|vc, vb, tj| {
-                // crude: quadratic in V, exponential in T
-                0.5 * (vc * vc / 0.64) * (0.015 * (tj - 25.0)).exp() * 0.7
-                    + 0.1 * (vb * vb / 0.9025)
-            }),
+            power_fn: toy_power,
         }
     }
 
     #[test]
     fn no_guardband_violations_with_margin() {
-        let lut = toy_lut();
-        let c = controller(&lut);
+        let c = controller();
         // ambient ramps 25 → 70 °C over 60 s and back
         let trace = vec![(0.0, 25.0), (60_000.0, 70.0), (120_000.0, 25.0)];
-        let log = c.run(&trace, 1.0, 250.0);
+        let (log, stats) = c.run_stats(&trace, 1.0, 250.0);
         assert!(log.len() > 100);
         assert!(log.iter().all(|s| !s.violation), "guardband violated");
+        // the per-step count is the stronger claim: zero across all steps
+        assert_eq!(stats.violations, 0);
+        assert_eq!(stats.steps, 120_001);
     }
 
     #[test]
     fn voltages_track_temperature() {
-        let lut = toy_lut();
-        let c = controller(&lut);
+        let c = controller();
         let trace = vec![(0.0, 25.0), (90_000.0, 80.0)];
         let log = c.run(&trace, 1.0, 500.0);
         let first = &log[2];
@@ -230,8 +287,7 @@ mod tests {
 
     #[test]
     fn dynamic_beats_static_worst_case_power() {
-        let lut = toy_lut();
-        let c = controller(&lut);
+        let c = controller();
         // mild ambient: dynamic settles at the coolest LUT row
         let trace = vec![(0.0, 25.0), (60_000.0, 28.0)];
         let log = c.run(&trace, 1.0, 250.0);
@@ -242,6 +298,36 @@ mod tests {
             dyn_p < static_p * 0.97,
             "dynamic {dyn_p} vs static-worst {static_p}"
         );
+    }
+
+    #[test]
+    fn run_stats_energy_matches_mean_power() {
+        let c = controller();
+        let trace = vec![(0.0, 25.0), (30_000.0, 50.0)];
+        let (log, stats) = c.run_stats(&trace, 1.0, 100.0);
+        // the coarse sampled mean must approximate the exact integral
+        let approx = mean_power(&log);
+        assert!(
+            (stats.mean_power_w - approx).abs() / stats.mean_power_w < 0.05,
+            "exact {} vs sampled {}",
+            stats.mean_power_w,
+            approx
+        );
+        assert!(stats.energy_j > 0.0);
+        assert!(stats.peak_power_w >= stats.mean_power_w);
+        assert!(stats.peak_t_junct >= 25.0);
+    }
+
+    #[test]
+    fn controller_is_send_and_shareable_across_threads() {
+        let c = controller();
+        let trace = vec![(0.0, 25.0), (5_000.0, 45.0)];
+        let (a, b) = std::thread::scope(|s| {
+            let h1 = s.spawn(|| c.run_stats(&trace, 1.0, 1_000.0).1);
+            let h2 = s.spawn(|| c.run_stats(&trace, 1.0, 1_000.0).1);
+            (h1.join().unwrap(), h2.join().unwrap())
+        });
+        assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits(), "nondeterministic run");
     }
 
     #[test]

@@ -1,0 +1,447 @@
+//! Datacenter fleet simulator — the paper's headline numbers (Fig. 6:
+//! 28–36 % power saving at the 40 °C still-air corner, 20–25 % at the
+//! 65 °C forced-air corner) are *datacenter* claims, so this subsystem
+//! scales the single-device flow to N heterogeneous FPGAs serving a stream
+//! of M design jobs.
+//!
+//! Layout:
+//! * [`trace`] — scenario generators (diurnal cycle, heat wave, rack
+//!   thermal gradient, bursty arrivals), all seeded and reproducible;
+//! * [`scheduler`] — deterministic thermal-aware placement (coolest
+//!   eligible device) + a work-stealing thread pool that executes the
+//!   per-job controller simulations;
+//! * [`telemetry`] — fleet-wide power/energy/violation/throughput
+//!   aggregation with percentiles via `util::stats`.
+//!
+//! Heterogeneity model: every device gets its own θ_JA (cooling spread),
+//! thermal time constant, rack-position ambient offset, per-unit guardband
+//! jitter on the sensor margin (characterization spread between physical
+//! units), and a per-unit power scale (process variation). Each device runs
+//! its own `coordinator::DynamicController` over the shared ambient trace;
+//! the static worst-case comparison runs the identical plant at nominal
+//! rails — the paper's "one-size-fits-all" provisioning.
+//!
+//! Determinism contract: placement is a pure function of the (seeded)
+//! traces, and each job execution is a pure function of its assignment, so
+//! serial and multi-threaded runs produce bit-identical telemetry. The CLI
+//! runs both and checks the fingerprints.
+
+pub mod scheduler;
+pub mod telemetry;
+pub mod trace;
+
+use std::sync::Arc;
+
+use crate::config::Config;
+use crate::flow::dynamic::VoltageLut;
+use crate::flow::{Design, Effort};
+use crate::runtime::select_backend;
+use crate::util::rng::Xoshiro256;
+use crate::util::stats;
+use trace::Scenario;
+
+/// One simulated FPGA unit in the fleet.
+#[derive(Clone, Debug)]
+pub struct DeviceSpec {
+    pub id: usize,
+    /// Fabric capacity: a job fits iff its placed design's grid edge is at
+    /// most this (tiles).
+    pub grid_edge: usize,
+    /// Per-device junction-to-ambient resistance (°C/W) — the scenario
+    /// corner value with unit-to-unit cooling spread.
+    pub theta_ja: f64,
+    /// Plant thermal time constant (ms).
+    pub tau_ms: f64,
+    /// Rack-position ambient offset (°C) on top of the shared trace.
+    pub rack_offset_c: f64,
+    /// Sensor margin (°C): base TSD margin plus this unit's characterization
+    /// guardband jitter. Extra margin keeps the zero-violation guarantee.
+    pub margin_c: f64,
+    /// Per-unit process variation on power (≈ ±4 %).
+    pub power_scale: f64,
+}
+
+/// Separable power surface `P(v_core, v_bram, T_j)` precomputed from a
+/// design's `PowerModel` at its operating frequency.
+///
+/// Leakage and dynamic power both decompose per rail (every resource sits
+/// on exactly one rail), so
+/// `P(vc, vb, T) = P(vc, vb_ref, T) + P(vc_ref, vb, T) − P(vc_ref, vb_ref, T)`
+/// holds exactly; the surface stores the three slices on the VID grid and a
+/// 5 °C temperature grid and bilinearly interpolates. This turns the
+/// controller's per-millisecond power hook from an O(tiles) model walk into
+/// an O(1) lookup — the difference between a fleet run taking minutes and
+/// taking seconds. Temperatures are taken uniform across the die (the
+/// fleet plant is the lumped θ_JA model, matching `coordinator`).
+#[derive(Clone, Debug)]
+pub struct PowerSurface {
+    vc_levels: Vec<f64>,
+    vb_levels: Vec<f64>,
+    temps: Vec<f64>,
+    /// `[vc][t]` power at (vc, vb_ref), row-major.
+    p_core: Vec<f64>,
+    /// `[vb][t]` power at (vc_ref, vb).
+    p_bram: Vec<f64>,
+    /// `[t]` power at (vc_ref, vb_ref).
+    p_ref: Vec<f64>,
+}
+
+impl PowerSurface {
+    pub fn build(design: &Design, cfg: &Config, f_clk: f64) -> PowerSurface {
+        let pm = design.power_model();
+        let n = design.dev.n_tiles();
+        let mut vc_levels = cfg.vgrid.core_levels();
+        if cfg.arch.v_core_nom > *vc_levels.last().unwrap() + 1e-9 {
+            vc_levels.push(cfg.arch.v_core_nom);
+        }
+        let mut vb_levels = cfg.vgrid.bram_levels();
+        if cfg.arch.v_bram_nom > *vb_levels.last().unwrap() + 1e-9 {
+            vb_levels.push(cfg.arch.v_bram_nom);
+        }
+        // a config can pin a rail (v_min == v_max == nominal); bilinear
+        // bracketing needs two grid points per axis, so pad with one step
+        // above (never reached — eval clamps to the real operating range)
+        if vc_levels.len() == 1 {
+            vc_levels.push(vc_levels[0] + 0.01);
+        }
+        if vb_levels.len() == 1 {
+            vb_levels.push(vb_levels[0] + 0.01);
+        }
+        let temps: Vec<f64> = (0..=26).map(|i| -5.0 + 5.0 * i as f64).collect();
+        let vc_ref = vc_levels[0];
+        let vb_ref = vb_levels[0];
+        let eval = |vc: f64, vb: f64, t: f64| {
+            let tmap = vec![t; n];
+            pm.total_power(&tmap, f_clk, vc, vb)
+        };
+        let mut p_core = Vec::with_capacity(vc_levels.len() * temps.len());
+        for &vc in &vc_levels {
+            for &t in &temps {
+                p_core.push(eval(vc, vb_ref, t));
+            }
+        }
+        let mut p_bram = Vec::with_capacity(vb_levels.len() * temps.len());
+        for &vb in &vb_levels {
+            for &t in &temps {
+                p_bram.push(eval(vc_ref, vb, t));
+            }
+        }
+        let p_ref: Vec<f64> = temps.iter().map(|&t| eval(vc_ref, vb_ref, t)).collect();
+        PowerSurface {
+            vc_levels,
+            vb_levels,
+            temps,
+            p_core,
+            p_bram,
+            p_ref,
+        }
+    }
+
+    /// Interpolated total power (W) at continuous rails and temperature.
+    pub fn eval(&self, vc: f64, vb: f64, tj: f64) -> f64 {
+        let (ti, tf) = stats::bracket(&self.temps, tj);
+        let core = interp_vt(&self.p_core, &self.vc_levels, self.temps.len(), vc, ti, tf);
+        let bram = interp_vt(&self.p_bram, &self.vb_levels, self.temps.len(), vb, ti, tf);
+        let reference = self.p_ref[ti] * (1.0 - tf) + self.p_ref[ti + 1] * tf;
+        (core + bram - reference).max(0.0)
+    }
+}
+
+/// Bilinear interpolation of a `[v][t]` table at voltage `v` and a
+/// pre-bracketed temperature position (segment search via
+/// `util::stats::bracket`, shared with `interp1`).
+fn interp_vt(table: &[f64], vs: &[f64], nt: usize, v: f64, ti: usize, tf: f64) -> f64 {
+    let (vi, vf) = stats::bracket(vs, v);
+    let at = |i: usize, j: usize| table[i * nt + j];
+    let lo = at(vi, ti) * (1.0 - tf) + at(vi, ti + 1) * tf;
+    let hi = at(vi + 1, ti) * (1.0 - tf) + at(vi + 1, ti + 1) * tf;
+    lo * (1.0 - vf) + hi * vf
+}
+
+/// Everything the workers need to run one class of design job, shared
+/// across all threads by `Arc` (the characterized library underneath is the
+/// process-wide `CharTable::shared()`, computed exactly once).
+#[derive(Clone, Debug)]
+pub struct JobKind {
+    pub bench: String,
+    /// Placed device footprint (tiles).
+    pub rows: usize,
+    pub cols: usize,
+    /// Operating clock from the one-size-fits-all worst-case STA (Hz).
+    pub f_clk: f64,
+    /// Per-design (T → V) lookup table from Algorithm 1.
+    pub lut: Arc<VoltageLut>,
+    pub surface: Arc<PowerSurface>,
+    pub v_core_nom: f64,
+    pub v_bram_nom: f64,
+}
+
+impl JobKind {
+    pub fn grid_edge(&self) -> usize {
+        self.rows.max(self.cols)
+    }
+
+    /// Implement `bench` through the CAD pipeline, build its voltage LUT
+    /// over `[lut_lo, lut_hi]` ambient (step `lut_step`), and precompute the
+    /// power surface.
+    pub fn build(
+        bench: &str,
+        cfg: &Config,
+        effort: Effort,
+        lut_lo: f64,
+        lut_hi: f64,
+        lut_step: f64,
+    ) -> anyhow::Result<JobKind> {
+        let design = Design::build(bench, cfg, effort)?;
+        let mut backend = select_backend(
+            &cfg.artifacts_dir,
+            design.dev.rows,
+            design.dev.cols,
+            &cfg.thermal,
+        );
+        let lut = VoltageLut::build(&design, cfg, backend.as_mut(), lut_lo, lut_hi, lut_step);
+        anyhow::ensure!(
+            !lut.entries.is_empty(),
+            "no feasible LUT point for {bench} in [{lut_lo}, {lut_hi}] °C"
+        );
+        let sta = design.sta();
+        let d_worst = sta
+            .analyze_flat(cfg.thermal.t_max, cfg.arch.v_core_nom, cfg.arch.v_bram_nom)
+            .critical_path;
+        let f_clk = 1.0 / (d_worst * (1.0 + cfg.flow.guardband));
+        let surface = PowerSurface::build(&design, cfg, f_clk);
+        Ok(JobKind {
+            bench: bench.to_string(),
+            rows: design.dev.rows,
+            cols: design.dev.cols,
+            f_clk,
+            lut: Arc::new(lut),
+            surface: Arc::new(surface),
+            v_core_nom: cfg.arch.v_core_nom,
+            v_bram_nom: cfg.arch.v_bram_nom,
+        })
+    }
+}
+
+/// Fleet-level knobs. `FleetConfig::new` fills sensible defaults; the CLI
+/// overrides from flags.
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    pub devices: usize,
+    pub jobs: usize,
+    pub scenario: Scenario,
+    pub seed: u64,
+    /// Worker threads for the parallel executor (0 ⇒ autodetect).
+    pub workers: usize,
+    /// Simulated horizon (ms of virtual time).
+    pub horizon_ms: f64,
+    /// Benchmarks the job stream draws from.
+    pub benches: Vec<String>,
+    /// Ambient step for the per-design LUT sweep (°C).
+    pub lut_step_c: f64,
+    pub effort: Effort,
+}
+
+impl FleetConfig {
+    pub fn new(devices: usize, jobs: usize, scenario: Scenario) -> FleetConfig {
+        FleetConfig {
+            devices,
+            jobs,
+            scenario,
+            seed: 0xF1EE_7001,
+            workers: 0,
+            horizon_ms: 600_000.0,
+            benches: vec!["mkPktMerge".to_string(), "sha".to_string()],
+            lut_step_c: 12.0,
+            effort: Effort::Quick,
+        }
+    }
+}
+
+/// A fully instantiated fleet: device roster, shared job kinds, shared
+/// ambient trace, and the job stream. Build once, then [`plan`][Fleet::plan]
+/// and [`execute`][Fleet::execute].
+pub struct Fleet {
+    pub cfg: FleetConfig,
+    pub specs: Vec<DeviceSpec>,
+    pub kinds: Vec<Arc<JobKind>>,
+    /// Shared ambient trace (time_ms, °C).
+    pub ambient: Vec<(f64, f64)>,
+    /// Job stream sorted by arrival.
+    pub jobs: Vec<scheduler::Job>,
+}
+
+impl Fleet {
+    pub fn build(fcfg: FleetConfig, base_in: &Config) -> anyhow::Result<Fleet> {
+        anyhow::ensure!(fcfg.devices > 0, "need at least one device");
+        anyhow::ensure!(fcfg.jobs > 0, "need at least one job");
+        anyhow::ensure!(!fcfg.benches.is_empty(), "need at least one benchmark");
+
+        let (t_base, theta) = fcfg.scenario.corner();
+        let mut base = base_in.clone();
+        base.thermal.theta_ja = theta;
+        base.flow.t_amb = t_base;
+
+        let ambient = trace::ambient_trace(fcfg.scenario, fcfg.horizon_ms, fcfg.seed);
+        let offsets = trace::rack_offsets(fcfg.scenario, fcfg.devices, fcfg.seed);
+        let amb_temps: Vec<f64> = ambient.iter().map(|&(_, a)| a).collect();
+        let max_off = offsets.iter().copied().fold(0.0f64, f64::max);
+        let lut_lo = (stats::min(&amb_temps) - 5.0).max(0.0);
+        // cover the hottest junction any unit can reach (hottest inlet +
+        // self-heating) so the controller never falls back to nominal rails
+        // mid-scenario
+        let lut_hi = stats::max(&amb_temps) + max_off + 25.0;
+
+        // job kinds: the expensive part (P&R + Algorithm-1 LUT sweep per
+        // benchmark), computed once and shared by every worker thread
+        let mut kinds = Vec::with_capacity(fcfg.benches.len());
+        for bench in &fcfg.benches {
+            kinds.push(Arc::new(JobKind::build(
+                bench,
+                &base,
+                fcfg.effort,
+                lut_lo,
+                lut_hi,
+                fcfg.lut_step_c,
+            )?));
+        }
+
+        // heterogeneous device roster: two capacity bins (every third device
+        // is the small bin, only eligible for the smaller designs) plus
+        // per-unit cooling / margin / process spread
+        let mut rng = Xoshiro256::new(fcfg.seed);
+        let min_edge = kinds.iter().map(|k| k.grid_edge()).min().unwrap();
+        let max_edge = kinds.iter().map(|k| k.grid_edge()).max().unwrap();
+        let specs: Vec<DeviceSpec> = (0..fcfg.devices)
+            .map(|id| DeviceSpec {
+                id,
+                grid_edge: if id % 3 == 2 && min_edge < max_edge {
+                    min_edge
+                } else {
+                    max_edge
+                },
+                theta_ja: theta * rng.uniform(0.88, 1.12),
+                tau_ms: rng.uniform(2_200.0, 3_800.0),
+                rack_offset_c: offsets[id],
+                margin_c: base.flow.sensor_margin + rng.uniform(0.0, 1.5),
+                power_scale: rng.uniform(0.96, 1.04),
+            })
+            .collect();
+
+        // job stream: arrival/duration from the scenario; kinds round-robin
+        // so every (expensively built) benchmark class is exercised even
+        // for small job counts
+        let n_kinds = kinds.len();
+        let jobs: Vec<scheduler::Job> =
+            trace::job_arrivals(fcfg.scenario, fcfg.jobs, fcfg.horizon_ms, fcfg.seed)
+                .into_iter()
+                .enumerate()
+                .map(|(id, (arrival_ms, duration_ms))| scheduler::Job {
+                    id,
+                    kind: id % n_kinds,
+                    arrival_ms,
+                    duration_ms,
+                })
+                .collect();
+
+        Ok(Fleet {
+            cfg: fcfg,
+            specs,
+            kinds,
+            ambient,
+            jobs,
+        })
+    }
+
+    /// Deterministic thermal-aware placement of the whole job stream.
+    pub fn plan(&self) -> Vec<scheduler::Assignment> {
+        scheduler::plan(self)
+    }
+
+    /// Execute a plan on `workers` threads (1 ⇒ plain serial loop). Returns
+    /// per-job results sorted by job id — identical for any worker count.
+    pub fn execute(
+        &self,
+        plan: &[scheduler::Assignment],
+        workers: usize,
+    ) -> Vec<telemetry::JobResult> {
+        scheduler::execute(self, plan, workers)
+    }
+
+    /// Worker count the parallel run should use.
+    pub fn effective_workers(&self) -> usize {
+        let auto = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4);
+        let w = if self.cfg.workers > 0 {
+            self.cfg.workers
+        } else {
+            auto.clamp(2, 8)
+        };
+        w.clamp(1, self.jobs.len().max(1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bracket_clamps_and_interpolates() {
+        let xs = [0.0, 1.0, 2.0, 4.0];
+        assert_eq!(stats::bracket(&xs, -1.0), (0, 0.0));
+        let (i, f) = stats::bracket(&xs, 3.0);
+        assert_eq!(i, 2);
+        assert!((f - 0.5).abs() < 1e-12);
+        let (i, f) = stats::bracket(&xs, 9.0);
+        assert_eq!(i, 2);
+        assert_eq!(f, 1.0);
+        let (i, f) = stats::bracket(&xs, 0.25);
+        assert_eq!(i, 0);
+        assert!((f - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn surface_handles_pinned_rail_config() {
+        // a config that pins the BRAM rail to a single voltage must not
+        // break the bilinear bracketing (regression: usize underflow)
+        let mut cfg = Config::new();
+        cfg.vgrid.v_bram_min = cfg.arch.v_bram_nom;
+        cfg.vgrid.v_bram_max = cfg.arch.v_bram_nom;
+        let d = Design::build("mkPktMerge", &cfg, Effort::Quick).unwrap();
+        let s = PowerSurface::build(&d, &cfg, 1e8);
+        let p = s.eval(0.7, cfg.arch.v_bram_nom, 45.0);
+        assert!(p.is_finite() && p > 0.0, "pinned-rail eval broke: {p}");
+    }
+
+    #[test]
+    fn power_surface_matches_power_model() {
+        let mut cfg = Config::new();
+        cfg.thermal.theta_ja = 12.0;
+        let d = Design::build("mkPktMerge", &cfg, Effort::Quick).unwrap();
+        let pm = d.power_model();
+        let n = d.dev.n_tiles();
+        let sta = d.sta();
+        let d_worst = sta
+            .analyze_flat(cfg.thermal.t_max, cfg.arch.v_core_nom, cfg.arch.v_bram_nom)
+            .critical_path;
+        let f_clk = 1.0 / (d_worst * (1.0 + cfg.flow.guardband));
+        let s = PowerSurface::build(&d, &cfg, f_clk);
+        // on- and off-grid probes: the separable surface must track the full
+        // per-tile model closely (leakage/dynamic decompose per rail)
+        for &(vc, vb, t) in &[
+            (0.80, 0.95, 40.0),
+            (0.68, 0.82, 47.3),
+            (0.733, 0.876, 61.7),
+            (0.56, 0.56, 22.1),
+        ] {
+            let tmap = vec![t; n];
+            let exact = pm.total_power(&tmap, f_clk, vc, vb);
+            let approx = s.eval(vc, vb, t);
+            assert!(
+                crate::util::stats::rel_diff(exact, approx) < 0.02,
+                "surface off at ({vc}, {vb}, {t}): {exact} vs {approx}"
+            );
+        }
+    }
+}

@@ -1,0 +1,209 @@
+//! Job placement and parallel execution for the fleet simulator.
+//!
+//! Two cleanly separated phases keep the simulation deterministic *and*
+//! parallel:
+//!
+//! 1. **Placement** ([`plan`]) is a discrete-event pass over virtual time:
+//!    jobs are considered in arrival order; each goes to the coolest
+//!    eligible idle device (predicted junction temperature = rack-local
+//!    ambient + θ_JA · expected load power), or, when every eligible device
+//!    is busy, to the one that frees up first. Pure function of the seeded
+//!    traces — no wall-clock, no thread timing.
+//! 2. **Execution** ([`execute`]) expands each assignment into the dynamic
+//!    (sensor-driven) and static (nominal-rail) controller simulations.
+//!    Every job is a pure function of its assignment, so the work-stealing
+//!    thread pool (one deque per worker, idle workers steal from the back
+//!    of their neighbours) returns bit-identical results to the serial
+//!    loop, just faster.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+use std::thread;
+
+use super::telemetry::JobResult;
+use super::{trace, Fleet};
+use crate::coordinator::{DynamicController, Tsd};
+use crate::flow::dynamic::VoltageLut;
+use crate::util::stats::interp1;
+
+/// One design job in the stream.
+#[derive(Clone, Copy, Debug)]
+pub struct Job {
+    pub id: usize,
+    /// Index into `Fleet::kinds`.
+    pub kind: usize,
+    pub arrival_ms: f64,
+    pub duration_ms: f64,
+}
+
+/// A placed job.
+#[derive(Clone, Copy, Debug)]
+pub struct Assignment {
+    pub job: Job,
+    pub device: usize,
+    pub start_ms: f64,
+    /// Time spent waiting for a device (ms).
+    pub queue_ms: f64,
+}
+
+/// Thermal-aware placement: coolest eligible device, deterministic.
+pub fn plan(fleet: &Fleet) -> Vec<Assignment> {
+    let times: Vec<f64> = fleet.ambient.iter().map(|&(t, _)| t).collect();
+    let temps: Vec<f64> = fleet.ambient.iter().map(|&(_, a)| a).collect();
+    let mut busy_until = vec![0.0f64; fleet.specs.len()];
+    let mut out = Vec::with_capacity(fleet.jobs.len());
+    for job in &fleet.jobs {
+        let kind = &fleet.kinds[job.kind];
+        let edge = kind.grid_edge();
+        // expected load power for temperature prediction: the LUT's coolest
+        // operating point, scaled by this unit's process spread
+        let p_est = kind.lut.entries[0].power;
+        let mut best: Option<(bool, f64, f64, usize)> = None;
+        for spec in fleet.specs.iter().filter(|s| s.grid_edge >= edge) {
+            let start = busy_until[spec.id].max(job.arrival_ms);
+            let idle = start <= job.arrival_ms + 1e-9;
+            let t_amb = interp1(&times, &temps, start) + spec.rack_offset_c;
+            let t_pred = t_amb + spec.theta_ja * p_est * spec.power_scale;
+            // preference order: idle beats queued; among idle devices the
+            // coolest wins; among queued devices the earliest-free wins with
+            // temperature as tie-break. Device id breaks exact ties.
+            let better = match &best {
+                None => true,
+                Some(&(b_idle, b_start, b_temp, _)) => {
+                    if idle != b_idle {
+                        idle
+                    } else if idle {
+                        t_pred < b_temp - 1e-12
+                    } else if (start - b_start).abs() > 1e-9 {
+                        start < b_start
+                    } else {
+                        t_pred < b_temp - 1e-12
+                    }
+                }
+            };
+            if better {
+                best = Some((idle, start, t_pred, spec.id));
+            }
+        }
+        let (_, start, _, device) = best.expect("no eligible device for job kind");
+        busy_until[device] = start + job.duration_ms;
+        out.push(Assignment {
+            job: *job,
+            device,
+            start_ms: start,
+            queue_ms: start - job.arrival_ms,
+        });
+    }
+    out
+}
+
+/// Execute a plan. `workers == 1` runs the plain serial loop (the baseline
+/// the CLI times against); more workers run the work-stealing pool. Results
+/// come back sorted by job id and are identical for any worker count.
+pub fn execute(fleet: &Fleet, plan: &[Assignment], workers: usize) -> Vec<JobResult> {
+    let workers = workers.clamp(1, plan.len().max(1));
+    if workers == 1 {
+        return plan.iter().map(|a| run_one(fleet, a)).collect();
+    }
+
+    // per-worker deques, seeded round-robin; idle workers steal from the
+    // back of their neighbours' queues
+    let queues: Vec<Mutex<VecDeque<usize>>> = (0..workers)
+        .map(|w| {
+            Mutex::new(
+                (0..plan.len())
+                    .filter(|i| i % workers == w)
+                    .collect::<VecDeque<usize>>(),
+            )
+        })
+        .collect();
+    let slots: Vec<Mutex<Option<JobResult>>> =
+        (0..plan.len()).map(|_| Mutex::new(None)).collect();
+
+    thread::scope(|s| {
+        for w in 0..workers {
+            let queues = &queues;
+            let slots = &slots;
+            s.spawn(move || {
+                // own queue first (front), then steal (back). Each lock is
+                // released before the next is taken — never hold two queue
+                // locks at once.
+                let pop = || {
+                    let own = queues[w].lock().unwrap().pop_front();
+                    if own.is_some() {
+                        return own;
+                    }
+                    (1..workers)
+                        .map(|d| (w + d) % workers)
+                        .find_map(|v| queues[v].lock().unwrap().pop_back())
+                };
+                while let Some(i) = pop() {
+                    let r = run_one(fleet, &plan[i]);
+                    *slots[i].lock().unwrap() = Some(r);
+                }
+            });
+        }
+    });
+
+    let mut out: Vec<JobResult> = slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("job not executed"))
+        .collect();
+    out.sort_by_key(|r| r.job_id);
+    out
+}
+
+/// Run one placed job: the dynamic sensor-driven controller and the static
+/// worst-case (nominal-rail) baseline through the identical plant.
+fn run_one(fleet: &Fleet, a: &Assignment) -> JobResult {
+    let spec = &fleet.specs[a.device];
+    let kind = &fleet.kinds[a.job.kind];
+    let local = trace::window(
+        &fleet.ambient,
+        spec.rack_offset_c,
+        a.start_ms,
+        a.start_ms + a.job.duration_ms,
+        5_000.0,
+    );
+    let dt_ms = 1.0; // 1 ms sensor/control period [38]
+    let sparse = a.job.duration_ms; // stats only; the sampled log is unused
+
+    let scale = spec.power_scale;
+    let dyn_surface = kind.surface.clone();
+    let dynamic = DynamicController {
+        lut: kind.lut.clone(),
+        theta_ja: spec.theta_ja,
+        tau_ms: spec.tau_ms,
+        margin: spec.margin_c,
+        tsd: Tsd::default(),
+        power_fn: move |vc: f64, vb: f64, tj: f64| scale * dyn_surface.eval(vc, vb, tj),
+    };
+    let (_, dyn_stats) = dynamic.run_stats(&local, dt_ms, sparse);
+
+    let static_surface = kind.surface.clone();
+    let static_ctl = DynamicController {
+        lut: std::sync::Arc::new(VoltageLut::fixed(kind.v_core_nom, kind.v_bram_nom)),
+        theta_ja: spec.theta_ja,
+        tau_ms: spec.tau_ms,
+        margin: spec.margin_c,
+        tsd: Tsd::default(),
+        power_fn: move |vc: f64, vb: f64, tj: f64| scale * static_surface.eval(vc, vb, tj),
+    };
+    let (_, static_stats) = static_ctl.run_stats(&local, dt_ms, sparse);
+
+    JobResult {
+        job_id: a.job.id,
+        kind: a.job.kind,
+        device: a.device,
+        arrival_ms: a.job.arrival_ms,
+        start_ms: a.start_ms,
+        duration_ms: a.job.duration_ms,
+        queue_ms: a.queue_ms,
+        energy_dyn_j: dyn_stats.energy_j,
+        energy_static_j: static_stats.energy_j,
+        mean_power_dyn_w: dyn_stats.mean_power_w,
+        mean_power_static_w: static_stats.mean_power_w,
+        violations: dyn_stats.violations,
+        peak_t_junct_c: dyn_stats.peak_t_junct,
+    }
+}

@@ -1,0 +1,271 @@
+//! Fleet-wide telemetry: per-device and aggregate power / energy /
+//! violation / throughput metrics with percentiles via `util::stats`.
+//!
+//! Aggregation is a pure fold over job results sorted by job id, so it is
+//! deterministic regardless of how the jobs were executed; the
+//! [`fingerprint`][FleetTelemetry::fingerprint] folds the bit patterns of
+//! every per-job number and is how the CLI proves the parallel executor
+//! reproduced the serial run exactly.
+
+use crate::util::stats;
+
+/// Outcome of one executed job (dynamic + static runs over the same plant).
+#[derive(Clone, Copy, Debug)]
+pub struct JobResult {
+    pub job_id: usize,
+    pub kind: usize,
+    pub device: usize,
+    pub arrival_ms: f64,
+    pub start_ms: f64,
+    pub duration_ms: f64,
+    pub queue_ms: f64,
+    /// Energy under dynamic per-device voltage scaling (J).
+    pub energy_dyn_j: f64,
+    /// Energy under static worst-case (nominal-rail) provisioning (J).
+    pub energy_static_j: f64,
+    pub mean_power_dyn_w: f64,
+    pub mean_power_static_w: f64,
+    /// Guardband violations across every *dynamic*-controller step (the
+    /// static baseline is structurally violation-free: its fixed LUT makes
+    /// commanded and required rails identical).
+    pub violations: u64,
+    pub peak_t_junct_c: f64,
+}
+
+impl JobResult {
+    pub fn end_ms(&self) -> f64 {
+        self.start_ms + self.duration_ms
+    }
+
+    pub fn saving(&self) -> f64 {
+        if self.energy_static_j > 0.0 {
+            1.0 - self.energy_dyn_j / self.energy_static_j
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Per-device aggregate.
+#[derive(Clone, Debug, Default)]
+pub struct DeviceTelemetry {
+    pub device: usize,
+    pub jobs: usize,
+    pub busy_ms: f64,
+    pub energy_dyn_j: f64,
+    pub energy_static_j: f64,
+    pub violations: u64,
+    pub peak_t_junct_c: f64,
+}
+
+impl DeviceTelemetry {
+    /// Mean power while busy (W).
+    pub fn mean_power_w(&self) -> f64 {
+        if self.busy_ms > 0.0 {
+            self.energy_dyn_j / (self.busy_ms / 1e3)
+        } else {
+            0.0
+        }
+    }
+
+    /// Dynamic-vs-static energy saving on this device.
+    pub fn saving(&self) -> f64 {
+        if self.energy_static_j > 0.0 {
+            1.0 - self.energy_dyn_j / self.energy_static_j
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Fleet-wide aggregate over a full run.
+#[derive(Clone, Debug)]
+pub struct FleetTelemetry {
+    /// Per-job results, sorted by job id.
+    pub jobs: Vec<JobResult>,
+    /// One entry per fleet device (zeroed when idle all run).
+    pub per_device: Vec<DeviceTelemetry>,
+    pub energy_dyn_j: f64,
+    pub energy_static_j: f64,
+    /// Total device-busy time (ms) across the fleet.
+    pub busy_ms: f64,
+    pub violations: u64,
+    /// First arrival → last completion (virtual ms).
+    pub makespan_ms: f64,
+    /// Completed jobs per virtual hour.
+    pub throughput_jobs_per_hour: f64,
+    pub queue_p50_ms: f64,
+    pub queue_p95_ms: f64,
+    pub job_power_p50_w: f64,
+    pub job_power_p95_w: f64,
+}
+
+impl FleetTelemetry {
+    pub fn aggregate(n_devices: usize, mut jobs: Vec<JobResult>) -> FleetTelemetry {
+        jobs.sort_by_key(|r| r.job_id);
+        let mut per_device: Vec<DeviceTelemetry> = (0..n_devices)
+            .map(|device| DeviceTelemetry {
+                device,
+                ..DeviceTelemetry::default()
+            })
+            .collect();
+        let mut energy_dyn_j = 0.0;
+        let mut energy_static_j = 0.0;
+        let mut busy_ms = 0.0;
+        let mut violations = 0u64;
+        for r in &jobs {
+            let d = &mut per_device[r.device];
+            d.jobs += 1;
+            d.busy_ms += r.duration_ms;
+            d.energy_dyn_j += r.energy_dyn_j;
+            d.energy_static_j += r.energy_static_j;
+            d.violations += r.violations;
+            d.peak_t_junct_c = d.peak_t_junct_c.max(r.peak_t_junct_c);
+            energy_dyn_j += r.energy_dyn_j;
+            energy_static_j += r.energy_static_j;
+            busy_ms += r.duration_ms;
+            violations += r.violations;
+        }
+        let first_arrival = jobs
+            .iter()
+            .map(|r| r.arrival_ms)
+            .fold(f64::INFINITY, f64::min);
+        let last_end = jobs.iter().map(|r| r.end_ms()).fold(0.0f64, f64::max);
+        let makespan_ms = if jobs.is_empty() {
+            0.0
+        } else {
+            last_end - first_arrival
+        };
+        let throughput_jobs_per_hour = if makespan_ms > 0.0 {
+            jobs.len() as f64 / (makespan_ms / 3_600_000.0)
+        } else {
+            0.0
+        };
+        let queues: Vec<f64> = jobs.iter().map(|r| r.queue_ms).collect();
+        let powers: Vec<f64> = jobs.iter().map(|r| r.mean_power_dyn_w).collect();
+        let pctl = |xs: &[f64], p: f64| {
+            if xs.is_empty() {
+                0.0
+            } else {
+                stats::percentile(xs, p)
+            }
+        };
+        FleetTelemetry {
+            queue_p50_ms: pctl(&queues, 50.0),
+            queue_p95_ms: pctl(&queues, 95.0),
+            job_power_p50_w: pctl(&powers, 50.0),
+            job_power_p95_w: pctl(&powers, 95.0),
+            jobs,
+            per_device,
+            energy_dyn_j,
+            energy_static_j,
+            busy_ms,
+            violations,
+            makespan_ms,
+            throughput_jobs_per_hour,
+        }
+    }
+
+    /// Fleet-wide dynamic-vs-static energy saving.
+    pub fn saving(&self) -> f64 {
+        if self.energy_static_j > 0.0 {
+            1.0 - self.energy_dyn_j / self.energy_static_j
+        } else {
+            0.0
+        }
+    }
+
+    /// Busy-time-weighted fleet mean power (W).
+    pub fn mean_power_w(&self) -> f64 {
+        if self.busy_ms > 0.0 {
+            self.energy_dyn_j / (self.busy_ms / 1e3)
+        } else {
+            0.0
+        }
+    }
+
+    /// Bit-exact digest of the per-job telemetry. The fold itself is
+    /// order-*sensitive*; it is comparable across runs because
+    /// [`aggregate`](Self::aggregate) normalizes order by sorting jobs by
+    /// id first. Two runs of the same fleet (any worker count) must produce
+    /// equal fingerprints; the CLI and the determinism tests assert it.
+    pub fn fingerprint(&self) -> u64 {
+        let mut acc = 0xF1EE_7F1E_E7F1_EE70u64;
+        let mut mix = |v: u64| {
+            acc = (acc.rotate_left(7) ^ v).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        };
+        for r in &self.jobs {
+            mix(r.job_id as u64);
+            mix(r.device as u64);
+            mix(r.kind as u64);
+            mix(r.start_ms.to_bits());
+            mix(r.energy_dyn_j.to_bits());
+            mix(r.energy_static_j.to_bits());
+            mix(r.violations);
+            mix(r.peak_t_junct_c.to_bits());
+        }
+        mix(self.jobs.len() as u64);
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(id: usize, device: usize, dur: f64, e_dyn: f64, e_static: f64) -> JobResult {
+        JobResult {
+            job_id: id,
+            kind: 0,
+            device,
+            arrival_ms: 10.0 * id as f64,
+            start_ms: 10.0 * id as f64,
+            duration_ms: dur,
+            queue_ms: 0.0,
+            energy_dyn_j: e_dyn,
+            energy_static_j: e_static,
+            mean_power_dyn_w: e_dyn / (dur / 1e3),
+            mean_power_static_w: e_static / (dur / 1e3),
+            violations: 0,
+            peak_t_junct_c: 50.0,
+        }
+    }
+
+    #[test]
+    fn aggregate_sums_and_weighted_mean_power() {
+        let jobs = vec![
+            job(0, 0, 10_000.0, 5.0, 8.0),
+            job(1, 1, 20_000.0, 12.0, 16.0),
+            job(2, 0, 30_000.0, 18.0, 24.0),
+        ];
+        let t = FleetTelemetry::aggregate(3, jobs);
+        assert_eq!(t.per_device[0].jobs, 2);
+        assert_eq!(t.per_device[2].jobs, 0);
+        assert!((t.energy_dyn_j - 35.0).abs() < 1e-12);
+        assert!((t.energy_static_j - 48.0).abs() < 1e-12);
+        // fleet mean power equals the busy-time-weighted per-device mean
+        let weighted: f64 = t
+            .per_device
+            .iter()
+            .map(|d| d.mean_power_w() * d.busy_ms)
+            .sum::<f64>()
+            / t.busy_ms;
+        assert!((t.mean_power_w() - weighted).abs() < 1e-12);
+        assert!((t.saving() - (1.0 - 35.0 / 48.0)).abs() < 1e-12);
+        assert_eq!(t.violations, 0);
+    }
+
+    #[test]
+    fn fingerprint_is_order_insensitive_but_value_sensitive() {
+        let a = vec![job(0, 0, 10_000.0, 5.0, 8.0), job(1, 1, 20_000.0, 12.0, 16.0)];
+        let mut b = a.clone();
+        b.reverse(); // aggregate() re-sorts by id
+        let ta = FleetTelemetry::aggregate(2, a);
+        let tb = FleetTelemetry::aggregate(2, b);
+        assert_eq!(ta.fingerprint(), tb.fingerprint());
+        let mut c = ta.jobs.clone();
+        c[0].energy_dyn_j += 1e-9;
+        let tc = FleetTelemetry::aggregate(2, c);
+        assert_ne!(ta.fingerprint(), tc.fingerprint());
+    }
+}

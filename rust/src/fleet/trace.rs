@@ -1,0 +1,254 @@
+//! Scenario generators for the fleet simulator: shared ambient-temperature
+//! traces (diurnal cycles, heat waves, rack thermal gradients), per-device
+//! rack-position offsets, and job arrival streams (Poisson-like and bursty).
+//!
+//! Everything is generated from an explicit seed through `util::rng`, so a
+//! fleet run is bit-reproducible: same seed → same traces → same schedule →
+//! same telemetry, regardless of worker-thread count.
+
+use crate::util::rng::Xoshiro256;
+use crate::util::stats::interp1;
+
+/// A named fleet scenario. Each maps to one of the paper's deployment
+/// corners (Fig. 6: 40 °C still-air θ_JA = 12 °C/W, 65 °C forced-air
+/// θ_JA = 2 °C/W) plus a time-varying ambient / arrival pattern.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scenario {
+    /// Day/night ambient cycle around the 40 °C still-air corner.
+    Diurnal,
+    /// Cooling degradation: forced-air fleet ramps from 45 °C to a ~65 °C
+    /// plateau and recovers.
+    HeatWave,
+    /// Hot-aisle rack: flat 65 °C forced-air inlet with a strong
+    /// bottom-to-top rack gradient.
+    RackGradient,
+    /// Bursty job arrivals at the 40 °C still-air corner (scheduler stress).
+    Bursty,
+}
+
+impl Scenario {
+    pub fn all() -> [Scenario; 4] {
+        [
+            Scenario::Diurnal,
+            Scenario::HeatWave,
+            Scenario::RackGradient,
+            Scenario::Bursty,
+        ]
+    }
+
+    pub fn from_name(name: &str) -> Option<Scenario> {
+        match name {
+            "diurnal" => Some(Scenario::Diurnal),
+            "heat-wave" | "heatwave" => Some(Scenario::HeatWave),
+            "rack-gradient" | "rack" => Some(Scenario::RackGradient),
+            "bursty" => Some(Scenario::Bursty),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Scenario::Diurnal => "diurnal",
+            Scenario::HeatWave => "heat-wave",
+            Scenario::RackGradient => "rack-gradient",
+            Scenario::Bursty => "bursty",
+        }
+    }
+
+    /// Deployment corner: (base ambient °C, θ_JA °C/W), following Fig. 6.
+    pub fn corner(self) -> (f64, f64) {
+        match self {
+            Scenario::Diurnal => (40.0, 12.0),
+            Scenario::HeatWave => (45.0, 2.0),
+            Scenario::RackGradient => (65.0, 2.0),
+            Scenario::Bursty => (40.0, 12.0),
+        }
+    }
+}
+
+/// Number of breakpoints in a generated ambient trace.
+const TRACE_POINTS: usize = 25;
+
+/// Fleet-wide shared ambient trace: (time_ms, °C) breakpoints over the
+/// horizon. Per-device ambient adds the rack offset on top.
+pub fn ambient_trace(s: Scenario, horizon_ms: f64, seed: u64) -> Vec<(f64, f64)> {
+    let mut rng = Xoshiro256::new(seed ^ 0x00AA_B1E4_7AAC_E5EE);
+    let (base, _) = s.corner();
+    let n = TRACE_POINTS - 1;
+    (0..=n)
+        .map(|i| {
+            let frac = i as f64 / n as f64;
+            let t = frac * horizon_ms;
+            let shape = match s {
+                // trough at t=0, peak mid-horizon, ±10 °C swing
+                Scenario::Diurnal => -10.0 * (2.0 * std::f64::consts::PI * frac).cos(),
+                // flat → ramp (30..50 %) → +20 °C plateau (50..75 %) → recovery
+                Scenario::HeatWave => {
+                    let ramp = ((frac - 0.3) / 0.2).clamp(0.0, 1.0);
+                    let fall = ((frac - 0.75) / 0.15).clamp(0.0, 1.0);
+                    20.0 * ramp * (1.0 - fall)
+                }
+                // the gradient lives in the rack offsets, not the inlet
+                Scenario::RackGradient => 0.0,
+                Scenario::Bursty => -5.0 * (2.0 * std::f64::consts::PI * frac).cos(),
+            };
+            let noise = match s {
+                Scenario::HeatWave => rng.uniform(-0.5, 0.5),
+                Scenario::Bursty => rng.uniform(-1.5, 1.5),
+                _ => rng.uniform(-1.0, 1.0),
+            };
+            (t, base + shape + noise)
+        })
+        .collect()
+}
+
+/// Per-device ambient offsets from rack position (°C): device 0 sits at the
+/// bottom of the rack (coolest inlet), the last device at the top. The
+/// rack-gradient scenario steepens the slope; every scenario gets a small
+/// per-slot jitter.
+pub fn rack_offsets(s: Scenario, n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Xoshiro256::new(seed ^ 0x0000_4AC4_0FF5_E700);
+    let span = match s {
+        Scenario::RackGradient => 8.0,
+        _ => 2.0,
+    };
+    let denom = (n.max(2) - 1) as f64;
+    (0..n)
+        .map(|i| span * i as f64 / denom + rng.uniform(0.0, 0.8))
+        .collect()
+}
+
+/// Job arrival stream: `(arrival_ms, duration_ms)` per job, sorted by
+/// arrival time. Arrivals land in the first ~55 % of the horizon so the
+/// fleet drains within the trace; durations span 15–40 % of the horizon.
+pub fn job_arrivals(s: Scenario, jobs: usize, horizon_ms: f64, seed: u64) -> Vec<(f64, f64)> {
+    let mut rng = Xoshiro256::new(seed ^ 0x0000_0A44_17A1_5EED);
+    let window = 0.55 * horizon_ms;
+    let mut arrivals: Vec<f64> = match s {
+        Scenario::Bursty => {
+            // a few tight bursts separated by idle gaps
+            let n_bursts = (jobs / 6).max(2);
+            let centers: Vec<f64> = (0..n_bursts)
+                .map(|b| window * (b as f64 + rng.uniform(0.2, 0.8)) / n_bursts as f64)
+                .collect();
+            (0..jobs)
+                .map(|i| {
+                    let c = centers[i % n_bursts];
+                    (c + rng.uniform(0.0, 0.02 * horizon_ms)).min(window)
+                })
+                .collect()
+        }
+        _ => {
+            // Poisson-like: exponential inter-arrival gaps
+            let mean_gap = window / jobs.max(1) as f64;
+            let mut t = 0.0;
+            (0..jobs)
+                .map(|_| {
+                    let u = rng.next_f64().max(1e-12);
+                    t += -u.ln() * mean_gap;
+                    t.min(window)
+                })
+                .collect()
+        }
+    };
+    arrivals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    arrivals
+        .into_iter()
+        .map(|a| (a, rng.uniform(0.15, 0.40) * horizon_ms))
+        .collect()
+}
+
+/// Slice a device's view of the shared trace for a job window: sample
+/// `base + offset` every `step_ms` across `[t0, t1]` and rebase times to 0.
+/// `interp1` clamps at the trace ends, so windows that run past the horizon
+/// hold the final ambient value.
+pub fn window(
+    base: &[(f64, f64)],
+    offset_c: f64,
+    t0: f64,
+    t1: f64,
+    step_ms: f64,
+) -> Vec<(f64, f64)> {
+    assert!(t1 > t0, "empty trace window [{t0}, {t1}]");
+    let times: Vec<f64> = base.iter().map(|&(t, _)| t).collect();
+    let temps: Vec<f64> = base.iter().map(|&(_, a)| a).collect();
+    let steps = (((t1 - t0) / step_ms).ceil() as usize).max(1);
+    let mut out: Vec<(f64, f64)> = (0..steps)
+        .map(|i| {
+            let t = t0 + i as f64 * step_ms;
+            (t - t0, interp1(&times, &temps, t) + offset_c)
+        })
+        .collect();
+    out.push((t1 - t0, interp1(&times, &temps, t1) + offset_c));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scenario_names_roundtrip() {
+        for s in Scenario::all() {
+            assert_eq!(Scenario::from_name(s.name()), Some(s));
+        }
+        assert_eq!(Scenario::from_name("nope"), None);
+        assert_eq!(Scenario::from_name("rack"), Some(Scenario::RackGradient));
+    }
+
+    #[test]
+    fn ambient_trace_is_deterministic_and_in_range() {
+        for s in Scenario::all() {
+            let a = ambient_trace(s, 600_000.0, 7);
+            let b = ambient_trace(s, 600_000.0, 7);
+            assert_eq!(a, b, "{} trace not deterministic", s.name());
+            assert_eq!(a.len(), TRACE_POINTS);
+            assert_eq!(a[0].0, 0.0);
+            assert_eq!(a.last().unwrap().0, 600_000.0);
+            let (base, _) = s.corner();
+            for &(_, amb) in &a {
+                assert!(
+                    amb > base - 15.0 && amb < base + 25.0,
+                    "{}: ambient {amb} out of range",
+                    s.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn arrivals_sorted_in_window_with_sane_durations() {
+        for s in Scenario::all() {
+            let jobs = job_arrivals(s, 32, 600_000.0, 99);
+            assert_eq!(jobs.len(), 32);
+            for w in jobs.windows(2) {
+                assert!(w[0].0 <= w[1].0, "{} arrivals unsorted", s.name());
+            }
+            for &(a, d) in &jobs {
+                assert!((0.0..=0.56 * 600_000.0).contains(&a));
+                assert!(d >= 0.15 * 600_000.0 && d <= 0.40 * 600_000.0);
+            }
+        }
+    }
+
+    #[test]
+    fn rack_offsets_grade_up_the_rack() {
+        let offs = rack_offsets(Scenario::RackGradient, 8, 3);
+        assert_eq!(offs.len(), 8);
+        // top of rack clearly hotter than bottom despite jitter
+        assert!(offs[7] > offs[0] + 4.0, "{offs:?}");
+        assert!(offs.iter().all(|&o| (0.0..10.0).contains(&o)));
+    }
+
+    #[test]
+    fn window_rebases_and_clamps() {
+        let base = vec![(0.0, 30.0), (100_000.0, 50.0)];
+        let w = window(&base, 2.0, 40_000.0, 60_000.0, 5_000.0);
+        assert_eq!(w[0].0, 0.0);
+        assert_eq!(w.last().unwrap().0, 20_000.0);
+        assert!((w[0].1 - 40.0).abs() < 1e-9); // 38 + offset 2
+        // past the horizon the trace holds its final value
+        let tail = window(&base, 0.0, 90_000.0, 150_000.0, 10_000.0);
+        assert!((tail.last().unwrap().1 - 50.0).abs() < 1e-9);
+    }
+}

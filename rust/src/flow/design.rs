@@ -3,9 +3,11 @@
 //! characterize. This is the "placed and routed design" every flow input in
 //! the paper's Algorithms 1/2 refers to.
 
+use std::sync::Arc;
+
 use crate::activity::{estimate, Activities};
 use crate::arch::Device;
-use crate::chardb::{CharDb, CharTable};
+use crate::chardb::CharTable;
 use crate::config::Config;
 use crate::netlist::{cluster_netlist, Netlist};
 use crate::place::{place, BlockGraph, BlockKind, Placement, PlaceOpts};
@@ -33,7 +35,9 @@ pub struct Design {
     pub routing: Routing,
     /// Worst-case activities (α_in from config) — used for optimization.
     pub acts: Activities,
-    pub table: CharTable,
+    /// Shared characterized library (computed once per process; see
+    /// [`CharTable::shared`]).
+    pub table: Arc<CharTable>,
 }
 
 impl Design {
@@ -76,7 +80,7 @@ impl Design {
         let pl = place(&bg, &dev, &opts);
         let routing = route(&bg, &pl, &dev);
         let acts = estimate(&nl, cfg.flow.alpha_in);
-        let table = CharTable::generate(&CharDb::analytic());
+        let table = CharTable::shared();
         Ok(Design {
             name: profile.name.to_string(),
             nl,
@@ -142,7 +146,8 @@ mod tests {
         // power model yields positive totals
         let pm = d.power_model();
         let n = d.dev.n_tiles();
-        let p = pm.total_power(&vec![40.0; n], 1.0 / (r.critical_path * 1.36), 0.8, 0.95);
+        let tmap = vec![40.0; n];
+        let p = pm.total_power(&tmap, 1.0 / (r.critical_path * 1.36), 0.8, 0.95);
         assert!(p > 0.0 && p < 50.0, "power {p} W");
     }
 

@@ -80,6 +80,23 @@ impl VoltageLut {
         }
     }
 
+    /// Degenerate single-row LUT that always commands the given rails —
+    /// the static scheme expressed as a controller input, so the fleet
+    /// simulator can run static and dynamic policies through the identical
+    /// plant model.
+    pub fn fixed(v_core: f64, v_bram: f64) -> VoltageLut {
+        VoltageLut {
+            entries: vec![LutEntry {
+                t_junct: f64::MAX,
+                v_core,
+                v_bram,
+                power: 0.0,
+            }],
+            v_core_nom: v_core,
+            v_bram_nom: v_bram,
+        }
+    }
+
     /// Look up the rails for a sensed junction temperature, applying the
     /// sensor margin (TSD error + spatial gradients, ~5 °C).
     pub fn lookup(&self, t_sensed: f64, margin: f64) -> (f64, f64) {

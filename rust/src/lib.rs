@@ -21,14 +21,29 @@
 //! * [`flow`]    — Algorithms 1 & 2 + voltage over-scaling flow
 //! * [`sim`]     — post-P&R timing simulation / error injection
 //! * [`ml`]      — LeNet + HD over-scaling workloads (PJRT-driven)
-//! * [`runtime`] — PJRT client wrapper around the `xla` crate
+//! * [`runtime`] — PJRT client wrapper around the `xla` crate (feature `pjrt`)
 //! * [`coordinator`] — online (sensor-driven) dynamic voltage controller
+//! * [`fleet`]   — multi-device datacenter fleet simulator + parallel
+//!   thermal-aware job scheduler
 //! * [`report`]  — regenerates every paper table/figure
+
+// The crate predates clippy in CI; these style lints fire all over the
+// numeric kernels (index-heavy grid sweeps, many-parameter flow plumbing)
+// where the "fix" would hurt readability.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::many_single_char_names,
+    clippy::manual_range_contains,
+    clippy::new_without_default,
+    clippy::type_complexity
+)]
 
 pub mod activity;
 pub mod arch;
 pub mod chardb;
 pub mod config;
+pub mod fleet;
 pub mod flow;
 pub mod ml;
 pub mod netlist;

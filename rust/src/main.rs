@@ -9,15 +9,23 @@
 //! thermovolt report --table1|--fig2|--fig3|--fig4|--table2|--fig6|--fig7
 //!                   |--fig8|--runtime|--leakage|--all  [--full]
 //! thermovolt serve  --bench <b>                   dynamic controller demo
+//! thermovolt fleet  --devices N --jobs M --scenario <name>
+//!                   [--seed S] [--workers W] [--benches a,b] [--horizon-s T]
+//!                                                 datacenter fleet simulation
 //! thermovolt e2e    [--full]                      full-pipeline headline run
 //! ```
 
 use anyhow::Result;
 use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
 
-use thermovolt::chardb::{CharDb, CharTable};
+use thermovolt::chardb::CharTable;
 use thermovolt::config::Config;
 use thermovolt::coordinator::{mean_power, DynamicController, Tsd};
+use thermovolt::fleet::telemetry::FleetTelemetry;
+use thermovolt::fleet::trace::Scenario;
+use thermovolt::fleet::{Fleet, FleetConfig};
 use thermovolt::flow::dynamic::VoltageLut;
 use thermovolt::flow::{alg1, alg2, overscale, Design, Effort};
 use thermovolt::report;
@@ -234,12 +242,15 @@ fn run(args: &Args) -> Result<()> {
             let n = design.dev.n_tiles();
             let theta = cfg.thermal.theta_ja;
             let controller = DynamicController {
-                lut: &lut,
+                lut: Arc::new(lut),
                 theta_ja: theta,
                 tau_ms: 3000.0,
                 margin: cfg.flow.sensor_margin,
                 tsd: Tsd::default(),
-                power_fn: Box::new(move |vc, vb, tj| pm.total_power(&vec![tj; n], f_clk, vc, vb)),
+                power_fn: move |vc: f64, vb: f64, tj: f64| {
+                    let tmap = vec![tj; n];
+                    pm.total_power(&tmap, f_clk, vc, vb)
+                },
             };
             let trace = vec![(0.0, 20.0), (90_000.0, 55.0), (180_000.0, 20.0)];
             let log = controller.run(&trace, 1.0, 5_000.0);
@@ -267,7 +278,7 @@ fn run(args: &Args) -> Result<()> {
         "report" => {
             let all = args.flag("all");
             std::fs::create_dir_all(results)?;
-            let table = CharTable::generate(&CharDb::analytic());
+            let table = CharTable::shared();
             if all || args.flag("table1") {
                 report::table1(&cfg).emit(results, "table1")?;
             }
@@ -298,7 +309,11 @@ fn run(args: &Args) -> Result<()> {
                 report::fig7(&cfg, effort, &names)?.emit(results, "fig7")?;
             }
             if all || args.flag("fig8") {
-                report::fig8(&cfg, effort)?.emit(results, "fig8")?;
+                match report::fig8(&cfg, effort) {
+                    Ok(t) => t.emit(results, "fig8")?,
+                    Err(e) if all => eprintln!("fig8 skipped: {e:#}"),
+                    Err(e) => return Err(e),
+                }
             }
             if all || args.flag("runtime") {
                 report::runtime_claims(&cfg, effort)?.emit(results, "runtime_claims")?;
@@ -306,6 +321,85 @@ fn run(args: &Args) -> Result<()> {
             if all || args.flag("leakage") {
                 report::leakage_fit(&cfg)?.emit(results, "leakage_fit")?;
             }
+        }
+        "fleet" => {
+            // Datacenter fleet simulation: N heterogeneous devices, M design
+            // jobs, thermal-aware scheduling. The job stream is executed
+            // twice — serial, then on the work-stealing pool — both to time
+            // the parallel speedup and to prove bit-exact determinism.
+            let devices = args.opt_usize("devices", 8);
+            let jobs = args.opt_usize("jobs", 32);
+            let scen_name = args.opt_or("scenario", "diurnal");
+            let scenario = Scenario::from_name(scen_name).ok_or_else(|| {
+                let names: Vec<&str> = Scenario::all().iter().map(|s| s.name()).collect();
+                anyhow::anyhow!("unknown scenario `{scen_name}` (one of: {})", names.join(", "))
+            })?;
+            let mut fcfg = FleetConfig::new(devices, jobs, scenario);
+            fcfg.seed = args.opt_u64("seed", cfg.flow.seed);
+            fcfg.workers = args.opt_usize("workers", 0);
+            fcfg.horizon_ms = args.opt_f64("horizon-s", fcfg.horizon_ms / 1e3) * 1e3;
+            fcfg.effort = effort;
+            if let Some(b) = args.opt("benches") {
+                fcfg.benches = b.split(',').map(str::to_string).collect();
+            }
+            let (t_base, theta) = scenario.corner();
+            println!(
+                "fleet: {devices} devices, {jobs} jobs, scenario {} ({t_base} C corner, theta_JA {theta} C/W), seed {:#x}",
+                scenario.name(),
+                fcfg.seed
+            );
+            println!(
+                "building job kinds (P&R + Algorithm-1 LUT per benchmark: {})…",
+                fcfg.benches.join(", ")
+            );
+            let t0 = Instant::now();
+            let fleet = Fleet::build(fcfg, &cfg)?;
+            println!("fleet ready in {:.1} s:", t0.elapsed().as_secs_f64());
+            for s in &fleet.specs {
+                println!(
+                    "  fpga-{:02}: {}x{} tiles  theta_JA {:.2} C/W  rack +{:.1} C  margin {:.1} C  power x{:.3}",
+                    s.id, s.grid_edge, s.grid_edge, s.theta_ja, s.rack_offset_c, s.margin_c,
+                    s.power_scale
+                );
+            }
+
+            let plan = fleet.plan();
+            let t1 = Instant::now();
+            let serial = fleet.execute(&plan, 1);
+            let serial_s = t1.elapsed().as_secs_f64();
+            let workers = fleet.effective_workers();
+            let t2 = Instant::now();
+            let parallel = fleet.execute(&plan, workers);
+            let parallel_s = t2.elapsed().as_secs_f64();
+
+            let tel_serial = FleetTelemetry::aggregate(devices, serial);
+            let tel = FleetTelemetry::aggregate(devices, parallel);
+            anyhow::ensure!(
+                tel_serial.fingerprint() == tel.fingerprint(),
+                "parallel and serial telemetry diverged — scheduler nondeterminism"
+            );
+
+            std::fs::create_dir_all(results)?;
+            report::fleet_table(&tel, &fleet.specs).emit(results, "fleet")?;
+            println!(
+                "fleet saving (dynamic vs static worst-case): {} %  (paper Fig. 6: 28.3-36.0 % @40C, 20.0-25.0 % @65C)",
+                pct(tel.saving())
+            );
+            println!(
+                "violations: {}  |  throughput {:.1} jobs/h  makespan {:.0} s  queue p50/p95 {:.1}/{:.1} s",
+                tel.violations,
+                tel.throughput_jobs_per_hour,
+                tel.makespan_ms / 1e3,
+                tel.queue_p50_ms / 1e3,
+                tel.queue_p95_ms / 1e3
+            );
+            println!(
+                "execution: serial {:.2} s → {} workers {:.2} s ({:.1}x speedup, telemetry bit-identical)",
+                serial_s,
+                workers,
+                parallel_s,
+                serial_s / parallel_s.max(1e-9)
+            );
         }
         "e2e" => {
             // END-TO-END: benchmarks through the full pipeline on the PJRT
@@ -331,7 +425,7 @@ fn run(args: &Args) -> Result<()> {
         }
         "" | "help" => {
             println!(
-                "subcommands: characterize | bench-info | power-opt | energy-opt | overscale | report | serve | e2e"
+                "subcommands: characterize | bench-info | power-opt | energy-opt | overscale | report | serve | fleet | e2e"
             );
         }
         other => anyhow::bail!("unknown subcommand `{other}` (try `help`)"),

@@ -1,14 +1,20 @@
 //! ML over-scaling workloads (Fig. 8): load the AOT-trained LeNet and HD
 //! artifacts, inject timing errors at the rates derived by `crate::sim`,
 //! and measure accuracy through the PJRT executables. Python never runs.
+//!
+//! Workload *loading* is plain tensor-file I/O and always available; the
+//! `accuracy` forward passes execute AOT HLO and need the `pjrt` feature.
 
 pub mod tensors;
 
 use anyhow::{Context, Result};
 use std::path::Path;
 
+#[cfg(feature = "pjrt")]
 use crate::runtime::{literal_f32_from_f32, Runtime};
+#[cfg(feature = "pjrt")]
 use crate::sim::{amplify, sample_mask, MlRates};
+#[cfg(feature = "pjrt")]
 use crate::util::Xoshiro256;
 use tensors::TensorFile;
 
@@ -68,7 +74,10 @@ impl LenetWorkload {
             n_test,
         })
     }
+}
 
+#[cfg(feature = "pjrt")]
+impl LenetWorkload {
     /// Accuracy under MAC violation rate `mac_rate` (per cycle).
     pub fn accuracy(&self, rt: &mut Runtime, mac_rate: f64, seed: u64) -> Result<f64> {
         let b = LENET_BATCH;
@@ -143,7 +152,10 @@ impl HdWorkload {
             clean_acc: clean,
         })
     }
+}
 
+#[cfg(feature = "pjrt")]
+impl HdWorkload {
     /// Accuracy under fabric violation rate (per cycle): each hypervector
     /// dimension flips with probability amplify(rate, HD_K).
     pub fn accuracy(&self, rt: &mut Runtime, fabric_rate: f64, seed: u64) -> Result<f64> {
@@ -175,6 +187,7 @@ impl HdWorkload {
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn argmax(row: &[f32]) -> i32 {
     row.iter()
         .enumerate()
@@ -184,6 +197,7 @@ fn argmax(row: &[f32]) -> i32 {
 }
 
 /// One Fig. 8 sweep point: (LeNet accuracy, HD accuracy).
+#[cfg(feature = "pjrt")]
 pub fn fig8_point(
     rt: &mut Runtime,
     lenet: &LenetWorkload,

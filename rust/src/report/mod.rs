@@ -6,12 +6,22 @@
 use crate::activity::{dsp_sim, estimate};
 use crate::chardb::{CharDb, CharTable, Rail, ResourceType, ALL_RESOURCES};
 use crate::config::Config;
+use crate::fleet::telemetry::FleetTelemetry;
+use crate::fleet::DeviceSpec;
 use crate::flow::alg1::{self, fixed_voltage_fixed_point};
-use crate::flow::{alg2, overscale, Design, Effort};
+use crate::flow::{alg2, Design, Effort};
+#[cfg(feature = "pjrt")]
+use crate::flow::overscale;
+#[cfg(feature = "pjrt")]
 use crate::ml::{HdWorkload, LenetWorkload};
-use crate::runtime::{select_backend, Runtime};
+use crate::runtime::select_backend;
+#[cfg(feature = "pjrt")]
+use crate::runtime::Runtime;
+#[cfg(feature = "pjrt")]
 use crate::sim::ml_error_rates;
-use crate::synth::{benchmark_names, hd_accel, lenet_accel};
+use crate::synth::benchmark_names;
+#[cfg(feature = "pjrt")]
+use crate::synth::{hd_accel, lenet_accel};
 use crate::util::stats;
 use crate::util::table::{f1, f2, f3, mv, mw, pct, Table};
 
@@ -354,6 +364,10 @@ pub fn fig7(cfg_in: &Config, effort: Effort, names: &[&str]) -> anyhow::Result<T
 /// Fig. 8: voltage over-scaling on the LeNet systolic array and the HD
 /// engine @ 40 °C — power reduction (left axis) and accuracy (right axis)
 /// versus allowed CP-delay violation.
+///
+/// Needs the `pjrt` feature (AOT LeNet/HD inference); the offline stub
+/// signature below reports the missing capability instead.
+#[cfg(feature = "pjrt")]
 pub fn fig8(cfg_in: &Config, effort: Effort) -> anyhow::Result<Table> {
     let mut cfg = cfg_in.clone();
     cfg.flow.t_amb = 40.0;
@@ -406,6 +420,14 @@ pub fn fig8(cfg_in: &Config, effort: Effort) -> anyhow::Result<Table> {
         ]);
     }
     Ok(t)
+}
+
+/// Offline stub: Fig. 8 needs PJRT inference over the AOT ML artifacts.
+#[cfg(not(feature = "pjrt"))]
+pub fn fig8(_cfg: &Config, _effort: Effort) -> anyhow::Result<Table> {
+    anyhow::bail!(
+        "fig8 needs the `pjrt` feature (build with `--features pjrt` after `make artifacts`)"
+    )
 }
 
 // ----------------------------------------------------- runtime claims --
@@ -471,7 +493,10 @@ pub fn leakage_fit(cfg: &Config) -> anyhow::Result<Table> {
     let ts: Vec<f64> = (0..=8).map(|i| 20.0 + 10.0 * i as f64).collect();
     let ys: Vec<f64> = ts
         .iter()
-        .map(|&t| pm.total_leakage(&vec![t; n], 0.8, 0.95))
+        .map(|&t| {
+            let tmap = vec![t; n];
+            pm.total_leakage(&tmap, 0.8, 0.95)
+        })
         .collect();
     let (a, b) = stats::fit_exponential(&ts, &ys);
     let mut t = Table::new("Leakage–temperature fit", &["metric", "value"]);
@@ -480,6 +505,62 @@ pub fn leakage_fit(cfg: &Config) -> anyhow::Result<Table> {
     t.row(vec!["paper (Intel devices)".into(), "0.017".into()]);
     t.row(vec!["prefactor (W @ 0C-extrap)".into(), format!("{a:.4}")]);
     Ok(t)
+}
+
+// ------------------------------------------------------------ fleet --
+
+/// Fleet-scale comparison of static worst-case provisioning (nominal rails
+/// sized for the hottest assumption) against dynamic per-device thermal
+/// scaling: one row per device plus a FLEET aggregate row. This is Fig. 6
+/// re-asked at datacenter granularity — the per-device saving column should
+/// land in the paper's per-corner band.
+pub fn fleet_table(t: &FleetTelemetry, specs: &[DeviceSpec]) -> Table {
+    let mut tb = Table::new(
+        "Fleet — static worst-case vs dynamic per-device voltage scaling",
+        &[
+            "device",
+            "grid",
+            "theta(C/W)",
+            "rack dT(C)",
+            "jobs",
+            "busy(s)",
+            "P_dyn(mW)",
+            "E_dyn(J)",
+            "E_static(J)",
+            "saving(%)",
+            "viol",
+        ],
+    );
+    for (d, spec) in specs.iter().enumerate() {
+        let dt = &t.per_device[d];
+        tb.row(vec![
+            format!("fpga-{d:02}"),
+            format!("{0}x{0}", spec.grid_edge),
+            f2(spec.theta_ja),
+            f1(spec.rack_offset_c),
+            dt.jobs.to_string(),
+            f1(dt.busy_ms / 1e3),
+            mw(dt.mean_power_w()),
+            f2(dt.energy_dyn_j),
+            f2(dt.energy_static_j),
+            pct(dt.saving()),
+            dt.violations.to_string(),
+        ]);
+    }
+    tb.row(vec![
+        "FLEET".into(),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+        t.jobs.len().to_string(),
+        f1(t.busy_ms / 1e3),
+        mw(t.mean_power_w()),
+        f2(t.energy_dyn_j),
+        f2(t.energy_static_j),
+        pct(t.saving()),
+        t.violations.to_string(),
+    ]);
+    tb
 }
 
 /// Generate the characterized library table (also saved as an artifact).
@@ -504,7 +585,7 @@ mod tests {
 
     #[test]
     fn fig2_normalized_at_anchors() {
-        let table = CharTable::generate(&CharDb::analytic());
+        let table = CharTable::shared();
         let (a, b, c) = fig2(&table);
         // 100 °C row of (a) is all 1.000
         let last = a.rows.last().unwrap();

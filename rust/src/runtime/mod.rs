@@ -4,9 +4,14 @@
 //! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
 //! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
 //! Artifacts are compiled once per process and cached.
+//!
+//! The whole PJRT surface is gated behind the `pjrt` cargo feature (default
+//! off): the offline build container has no PJRT plugin, so the default
+//! configuration uses the native SOR solver for every thermal solve and the
+//! crate builds without `make artifacts`. [`select_backend`] is the single
+//! seam — callers never mention PJRT directly.
 
-use anyhow::{Context, Result};
-use std::path::{Path, PathBuf};
+use std::path::Path;
 
 use crate::config::ThermalConfig;
 use crate::thermal::{ThermalBackend, ThermalGrid};
@@ -16,262 +21,286 @@ pub const ARTIFACT_GRID: usize = 128;
 /// SOR relaxation factor baked into both backends.
 pub const OMEGA: f64 = 1.8;
 
-/// Shared PJRT CPU client + compiled-executable cache.
-pub struct Runtime {
-    pub client: xla::PjRtClient,
-    artifacts_dir: PathBuf,
-    cache: std::collections::HashMap<String, xla::PjRtLoadedExecutable>,
-}
+#[cfg(feature = "pjrt")]
+pub use pjrt::{literal_f32, literal_f32_from_f32, OwnedThermalArtifact, Runtime, ThermalArtifact};
 
-impl Runtime {
-    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime {
-            client,
-            artifacts_dir: artifacts_dir.to_path_buf(),
-            cache: Default::default(),
-        })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load + compile an HLO-text artifact (cached).
-    pub fn load(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
-        if !self.cache.contains_key(name) {
-            let path = self.artifacts_dir.join(name);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().context("artifact path not utf-8")?,
-            )
-            .with_context(|| format!("parsing HLO text {}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .with_context(|| format!("compiling {}", name))?;
-            self.cache.insert(name.to_string(), exe);
-        }
-        Ok(&self.cache[name])
-    }
-
-    /// Execute a cached artifact; returns the flattened f32 contents of the
-    /// (single-element) result tuple.
-    pub fn run_f32(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<f32>> {
-        let exe = self.load(name)?;
-        let result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
-        let out = result.to_tuple1().context("unwrapping result tuple")?;
-        Ok(out.to_vec::<f32>()?)
-    }
-}
-
-/// Build an f32 literal of the given shape from f64 data.
-pub fn literal_f32(data: &[f64], dims: &[usize]) -> Result<xla::Literal> {
-    let v: Vec<f32> = data.iter().map(|&x| x as f32).collect();
-    literal_f32_from_f32(&v, dims)
-}
-
-pub fn literal_f32_from_f32(v: &[f32], dims: &[usize]) -> Result<xla::Literal> {
-    let n: usize = dims.iter().product();
-    anyhow::ensure!(v.len() == n, "literal shape mismatch: {} vs {:?}", v.len(), dims);
-    let lit = xla::Literal::vec1(v);
-    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
-    Ok(lit.reshape(&dims_i64)?)
-}
-
-/// PJRT-backed thermal solver: pads the device grid into the fixed 128×128
-/// artifact, runs the AOT SOR solve, extracts the device sub-grid. Solves
-/// warm-start from the previous temperature map (Algorithm 1 iterates to a
-/// thermal fixed point, so consecutive maps are close).
-pub struct ThermalArtifact<'rt> {
-    pub rt: &'rt mut Runtime,
-    pub grid: ThermalGrid,
-    mask: Vec<f32>,
-    last_t: Option<Vec<f32>>,
-}
-
-impl<'rt> ThermalArtifact<'rt> {
-    pub fn new(
-        rt: &'rt mut Runtime,
-        rows: usize,
-        cols: usize,
-        cfg: &ThermalConfig,
-    ) -> Result<Self> {
-        anyhow::ensure!(
-            rows <= ARTIFACT_GRID && cols <= ARTIFACT_GRID,
-            "device {rows}×{cols} exceeds the {ARTIFACT_GRID}² artifact grid"
-        );
-        let grid = ThermalGrid::calibrated(rows, cols, cfg);
-        let mut mask = vec![0f32; ARTIFACT_GRID * ARTIFACT_GRID];
-        for x in 0..cols {
-            for y in 0..rows {
-                mask[x * ARTIFACT_GRID + y] = 1.0;
-            }
-        }
-        rt.load("thermal.hlo.txt")?; // compile eagerly
-        Ok(ThermalArtifact {
-            rt,
-            grid,
-            mask,
-            last_t: None,
-        })
-    }
-
-    fn pad(&self, data: &[f64], rows: usize, cols: usize) -> Vec<f32> {
-        let mut out = vec![0f32; ARTIFACT_GRID * ARTIFACT_GRID];
-        for x in 0..cols {
-            for y in 0..rows {
-                out[x * ARTIFACT_GRID + y] = data[x * rows + y] as f32;
-            }
-        }
-        out
-    }
-
-    pub fn solve(&mut self, power: &[f64], t_amb: f64) -> Result<Vec<f64>> {
-        let (rows, cols) = (self.grid.rows, self.grid.cols);
-        assert_eq!(power.len(), rows * cols);
-        let g = ARTIFACT_GRID;
-        let t0: Vec<f32> = match &self.last_t {
-            Some(prev) => prev.clone(),
-            None => vec![t_amb as f32; g * g],
-        };
-        let p = self.pad(power, rows, cols);
-        let params = [
-            self.grid.g_v as f32,
-            self.grid.g_l as f32,
-            t_amb as f32,
-            OMEGA as f32,
-        ];
-        let inputs = [
-            literal_f32_from_f32(&t0, &[g, g])?,
-            literal_f32_from_f32(&p, &[g, g])?,
-            literal_f32_from_f32(&self.mask, &[g, g])?,
-            xla::Literal::vec1(&params),
-        ];
-        let out = self.rt.run_f32("thermal.hlo.txt", &inputs)?;
-        anyhow::ensure!(out.len() == g * g, "bad thermal output size");
-        self.last_t = Some(out.clone());
-        let mut t = vec![0f64; rows * cols];
-        for x in 0..cols {
-            for y in 0..rows {
-                t[x * rows + y] = out[x * g + y] as f64;
-            }
-        }
-        Ok(t)
-    }
-}
-
-impl ThermalBackend for ThermalArtifact<'_> {
-    fn steady_state(&mut self, power: &[f64], t_amb: f64) -> Vec<f64> {
-        self.solve(power, t_amb).expect("PJRT thermal solve failed")
-    }
-    fn name(&self) -> &'static str {
-        "pjrt-artifact"
-    }
-}
-
-// PJRT-dependent tests live in rust/tests/integration_thermal.rs so the unit
-// suite stays runnable before `make artifacts`.
-
-/// Self-contained PJRT thermal backend (owns its runtime) — what the flows
-/// use by default when `artifacts/` is built; falls back to the native
-/// solver otherwise. One `select_backend` call per design.
-pub struct OwnedThermalArtifact {
-    rt: Runtime,
-    grid: ThermalGrid,
-    mask: Vec<f32>,
-    last_t: Option<Vec<f32>>,
-}
-
-impl OwnedThermalArtifact {
-    pub fn new(artifacts_dir: &Path, rows: usize, cols: usize, cfg: &ThermalConfig) -> Result<Self> {
-        anyhow::ensure!(
-            rows <= ARTIFACT_GRID && cols <= ARTIFACT_GRID,
-            "device {rows}×{cols} exceeds the {ARTIFACT_GRID}² artifact grid"
-        );
-        let mut rt = Runtime::new(artifacts_dir)?;
-        rt.load("thermal.hlo.txt")?;
-        let grid = ThermalGrid::calibrated(rows, cols, cfg);
-        let mut mask = vec![0f32; ARTIFACT_GRID * ARTIFACT_GRID];
-        for x in 0..cols {
-            for y in 0..rows {
-                mask[x * ARTIFACT_GRID + y] = 1.0;
-            }
-        }
-        Ok(OwnedThermalArtifact {
-            rt,
-            grid,
-            mask,
-            last_t: None,
-        })
-    }
-
-    fn solve(&mut self, power: &[f64], t_amb: f64) -> Result<Vec<f64>> {
-        let (rows, cols) = (self.grid.rows, self.grid.cols);
-        assert_eq!(power.len(), rows * cols);
-        let g = ARTIFACT_GRID;
-        let t0: Vec<f32> = match &self.last_t {
-            Some(prev) => prev.clone(),
-            None => vec![t_amb as f32; g * g],
-        };
-        let mut p = vec![0f32; g * g];
-        for x in 0..cols {
-            for y in 0..rows {
-                p[x * g + y] = power[x * rows + y] as f32;
-            }
-        }
-        let params = [
-            self.grid.g_v as f32,
-            self.grid.g_l as f32,
-            t_amb as f32,
-            OMEGA as f32,
-        ];
-        let inputs = [
-            literal_f32_from_f32(&t0, &[g, g])?,
-            literal_f32_from_f32(&p, &[g, g])?,
-            literal_f32_from_f32(&self.mask, &[g, g])?,
-            xla::Literal::vec1(&params),
-        ];
-        let out = self.rt.run_f32("thermal.hlo.txt", &inputs)?;
-        self.last_t = Some(out.clone());
-        let mut t = vec![0f64; rows * cols];
-        for x in 0..cols {
-            for y in 0..rows {
-                t[x * rows + y] = out[x * g + y] as f64;
-            }
-        }
-        Ok(t)
-    }
-}
-
-impl ThermalBackend for OwnedThermalArtifact {
-    fn steady_state(&mut self, power: &[f64], t_amb: f64) -> Vec<f64> {
-        self.solve(power, t_amb).expect("PJRT thermal solve failed")
-    }
-    fn name(&self) -> &'static str {
-        "pjrt-artifact"
-    }
-}
-
-/// Pick the thermal backend for a device: PJRT artifact if available (the
-/// production hot path), native SOR otherwise (pre-`make artifacts` runs).
+/// Pick the thermal backend for a device: PJRT artifact if the feature is
+/// enabled and the artifact is available (the production hot path), native
+/// SOR otherwise (offline / pre-`make artifacts` runs).
 pub fn select_backend(
     artifacts_dir: &Path,
     rows: usize,
     cols: usize,
     cfg: &ThermalConfig,
 ) -> Box<dyn ThermalBackend> {
-    if artifacts_dir.join("thermal.hlo.txt").exists()
-        && rows <= ARTIFACT_GRID
-        && cols <= ARTIFACT_GRID
+    #[cfg(feature = "pjrt")]
     {
-        match OwnedThermalArtifact::new(artifacts_dir, rows, cols, cfg) {
-            Ok(b) => return Box::new(b),
-            Err(e) => eprintln!("warning: PJRT backend unavailable ({e}); using native solver"),
+        if artifacts_dir.join("thermal.hlo.txt").exists()
+            && rows <= ARTIFACT_GRID
+            && cols <= ARTIFACT_GRID
+        {
+            match OwnedThermalArtifact::new(artifacts_dir, rows, cols, cfg) {
+                Ok(b) => return Box::new(b),
+                Err(e) => eprintln!("warning: PJRT backend unavailable ({e}); using native solver"),
+            }
         }
     }
+    #[cfg(not(feature = "pjrt"))]
+    let _ = artifacts_dir;
     Box::new(crate::thermal::NativeSolver::new(
         ThermalGrid::calibrated(rows, cols, cfg),
         cfg,
     ))
+}
+
+#[cfg(feature = "pjrt")]
+mod pjrt {
+    use anyhow::{Context, Result};
+    use std::path::{Path, PathBuf};
+
+    use super::{ARTIFACT_GRID, OMEGA};
+    use crate::config::ThermalConfig;
+    use crate::thermal::{ThermalBackend, ThermalGrid};
+
+    /// Shared PJRT CPU client + compiled-executable cache.
+    pub struct Runtime {
+        pub client: xla::PjRtClient,
+        artifacts_dir: PathBuf,
+        cache: std::collections::HashMap<String, xla::PjRtLoadedExecutable>,
+    }
+
+    impl Runtime {
+        pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(Runtime {
+                client,
+                artifacts_dir: artifacts_dir.to_path_buf(),
+                cache: Default::default(),
+            })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load + compile an HLO-text artifact (cached).
+        pub fn load(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+            if !self.cache.contains_key(name) {
+                let path = self.artifacts_dir.join(name);
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().context("artifact path not utf-8")?,
+                )
+                .with_context(|| format!("parsing HLO text {}", path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = self
+                    .client
+                    .compile(&comp)
+                    .with_context(|| format!("compiling {}", name))?;
+                self.cache.insert(name.to_string(), exe);
+            }
+            Ok(&self.cache[name])
+        }
+
+        /// Execute a cached artifact; returns the flattened f32 contents of the
+        /// (single-element) result tuple.
+        pub fn run_f32(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<f32>> {
+            let exe = self.load(name)?;
+            let result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+            let out = result.to_tuple1().context("unwrapping result tuple")?;
+            Ok(out.to_vec::<f32>()?)
+        }
+    }
+
+    /// Build an f32 literal of the given shape from f64 data.
+    pub fn literal_f32(data: &[f64], dims: &[usize]) -> Result<xla::Literal> {
+        let v: Vec<f32> = data.iter().map(|&x| x as f32).collect();
+        literal_f32_from_f32(&v, dims)
+    }
+
+    pub fn literal_f32_from_f32(v: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+        let n: usize = dims.iter().product();
+        anyhow::ensure!(v.len() == n, "literal shape mismatch: {} vs {:?}", v.len(), dims);
+        let lit = xla::Literal::vec1(v);
+        let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+        Ok(lit.reshape(&dims_i64)?)
+    }
+
+    /// PJRT-backed thermal solver: pads the device grid into the fixed 128×128
+    /// artifact, runs the AOT SOR solve, extracts the device sub-grid. Solves
+    /// warm-start from the previous temperature map (Algorithm 1 iterates to a
+    /// thermal fixed point, so consecutive maps are close).
+    pub struct ThermalArtifact<'rt> {
+        pub rt: &'rt mut Runtime,
+        pub grid: ThermalGrid,
+        mask: Vec<f32>,
+        last_t: Option<Vec<f32>>,
+    }
+
+    impl<'rt> ThermalArtifact<'rt> {
+        pub fn new(
+            rt: &'rt mut Runtime,
+            rows: usize,
+            cols: usize,
+            cfg: &ThermalConfig,
+        ) -> Result<Self> {
+            anyhow::ensure!(
+                rows <= ARTIFACT_GRID && cols <= ARTIFACT_GRID,
+                "device {rows}×{cols} exceeds the {ARTIFACT_GRID}² artifact grid"
+            );
+            let grid = ThermalGrid::calibrated(rows, cols, cfg);
+            let mut mask = vec![0f32; ARTIFACT_GRID * ARTIFACT_GRID];
+            for x in 0..cols {
+                for y in 0..rows {
+                    mask[x * ARTIFACT_GRID + y] = 1.0;
+                }
+            }
+            rt.load("thermal.hlo.txt")?; // compile eagerly
+            Ok(ThermalArtifact {
+                rt,
+                grid,
+                mask,
+                last_t: None,
+            })
+        }
+
+        fn pad(&self, data: &[f64], rows: usize, cols: usize) -> Vec<f32> {
+            let mut out = vec![0f32; ARTIFACT_GRID * ARTIFACT_GRID];
+            for x in 0..cols {
+                for y in 0..rows {
+                    out[x * ARTIFACT_GRID + y] = data[x * rows + y] as f32;
+                }
+            }
+            out
+        }
+
+        pub fn solve(&mut self, power: &[f64], t_amb: f64) -> Result<Vec<f64>> {
+            let (rows, cols) = (self.grid.rows, self.grid.cols);
+            assert_eq!(power.len(), rows * cols);
+            let g = ARTIFACT_GRID;
+            let t0: Vec<f32> = match &self.last_t {
+                Some(prev) => prev.clone(),
+                None => vec![t_amb as f32; g * g],
+            };
+            let p = self.pad(power, rows, cols);
+            let params = [
+                self.grid.g_v as f32,
+                self.grid.g_l as f32,
+                t_amb as f32,
+                OMEGA as f32,
+            ];
+            let inputs = [
+                literal_f32_from_f32(&t0, &[g, g])?,
+                literal_f32_from_f32(&p, &[g, g])?,
+                literal_f32_from_f32(&self.mask, &[g, g])?,
+                xla::Literal::vec1(&params),
+            ];
+            let out = self.rt.run_f32("thermal.hlo.txt", &inputs)?;
+            anyhow::ensure!(out.len() == g * g, "bad thermal output size");
+            self.last_t = Some(out.clone());
+            let mut t = vec![0f64; rows * cols];
+            for x in 0..cols {
+                for y in 0..rows {
+                    t[x * rows + y] = out[x * g + y] as f64;
+                }
+            }
+            Ok(t)
+        }
+    }
+
+    impl ThermalBackend for ThermalArtifact<'_> {
+        fn steady_state(&mut self, power: &[f64], t_amb: f64) -> Vec<f64> {
+            self.solve(power, t_amb).expect("PJRT thermal solve failed")
+        }
+        fn name(&self) -> &'static str {
+            "pjrt-artifact"
+        }
+    }
+
+    // PJRT-dependent tests live in rust/tests/integration_thermal.rs so the
+    // unit suite stays runnable before `make artifacts`.
+
+    /// Self-contained PJRT thermal backend (owns its runtime) — what the flows
+    /// use by default when `artifacts/` is built; falls back to the native
+    /// solver otherwise. One `select_backend` call per design.
+    pub struct OwnedThermalArtifact {
+        rt: Runtime,
+        grid: ThermalGrid,
+        mask: Vec<f32>,
+        last_t: Option<Vec<f32>>,
+    }
+
+    impl OwnedThermalArtifact {
+        pub fn new(
+            artifacts_dir: &Path,
+            rows: usize,
+            cols: usize,
+            cfg: &ThermalConfig,
+        ) -> Result<Self> {
+            anyhow::ensure!(
+                rows <= ARTIFACT_GRID && cols <= ARTIFACT_GRID,
+                "device {rows}×{cols} exceeds the {ARTIFACT_GRID}² artifact grid"
+            );
+            let mut rt = Runtime::new(artifacts_dir)?;
+            rt.load("thermal.hlo.txt")?;
+            let grid = ThermalGrid::calibrated(rows, cols, cfg);
+            let mut mask = vec![0f32; ARTIFACT_GRID * ARTIFACT_GRID];
+            for x in 0..cols {
+                for y in 0..rows {
+                    mask[x * ARTIFACT_GRID + y] = 1.0;
+                }
+            }
+            Ok(OwnedThermalArtifact {
+                rt,
+                grid,
+                mask,
+                last_t: None,
+            })
+        }
+
+        fn solve(&mut self, power: &[f64], t_amb: f64) -> Result<Vec<f64>> {
+            let (rows, cols) = (self.grid.rows, self.grid.cols);
+            assert_eq!(power.len(), rows * cols);
+            let g = ARTIFACT_GRID;
+            let t0: Vec<f32> = match &self.last_t {
+                Some(prev) => prev.clone(),
+                None => vec![t_amb as f32; g * g],
+            };
+            let mut p = vec![0f32; g * g];
+            for x in 0..cols {
+                for y in 0..rows {
+                    p[x * g + y] = power[x * rows + y] as f32;
+                }
+            }
+            let params = [
+                self.grid.g_v as f32,
+                self.grid.g_l as f32,
+                t_amb as f32,
+                OMEGA as f32,
+            ];
+            let inputs = [
+                literal_f32_from_f32(&t0, &[g, g])?,
+                literal_f32_from_f32(&p, &[g, g])?,
+                literal_f32_from_f32(&self.mask, &[g, g])?,
+                xla::Literal::vec1(&params),
+            ];
+            let out = self.rt.run_f32("thermal.hlo.txt", &inputs)?;
+            self.last_t = Some(out.clone());
+            let mut t = vec![0f64; rows * cols];
+            for x in 0..cols {
+                for y in 0..rows {
+                    t[x * rows + y] = out[x * g + y] as f64;
+                }
+            }
+            Ok(t)
+        }
+    }
+
+    impl ThermalBackend for OwnedThermalArtifact {
+        fn steady_state(&mut self, power: &[f64], t_amb: f64) -> Vec<f64> {
+            self.solve(power, t_amb).expect("PJRT thermal solve failed")
+        }
+        fn name(&self) -> &'static str {
+            "pjrt-artifact"
+        }
+    }
 }

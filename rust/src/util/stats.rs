@@ -26,6 +26,32 @@ pub fn max(xs: &[f64]) -> f64 {
     xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
 }
 
+/// Segment bracket for a sorted axis: index `i` (with `xs[i] <= x <= xs[i+1]`
+/// in the interior) and the interpolation fraction; out-of-range `x` clamps
+/// to the end segments. Requires `xs.len() >= 2`.
+pub fn bracket(xs: &[f64], x: f64) -> (usize, f64) {
+    debug_assert!(xs.len() >= 2);
+    if x <= xs[0] {
+        return (0, 0.0);
+    }
+    let last = xs.len() - 1;
+    if x >= xs[last] {
+        return (last - 1, 1.0);
+    }
+    // binary search for the segment
+    let mut lo = 0usize;
+    let mut hi = last;
+    while hi - lo > 1 {
+        let mid = (lo + hi) / 2;
+        if xs[mid] <= x {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    (lo, (x - xs[lo]) / (xs[hi] - xs[lo]))
+}
+
 /// Linear interpolation in a sorted table of (x, y) points. Clamps at ends.
 pub fn interp1(xs: &[f64], ys: &[f64], x: f64) -> f64 {
     debug_assert_eq!(xs.len(), ys.len());
@@ -36,19 +62,8 @@ pub fn interp1(xs: &[f64], ys: &[f64], x: f64) -> f64 {
     if x >= xs[xs.len() - 1] {
         return ys[ys.len() - 1];
     }
-    // binary search for the segment
-    let mut lo = 0usize;
-    let mut hi = xs.len() - 1;
-    while hi - lo > 1 {
-        let mid = (lo + hi) / 2;
-        if xs[mid] <= x {
-            lo = mid;
-        } else {
-            hi = mid;
-        }
-    }
-    let t = (x - xs[lo]) / (xs[hi] - xs[lo]);
-    ys[lo] + t * (ys[hi] - ys[lo])
+    let (i, f) = bracket(xs, x);
+    ys[i] + f * (ys[i + 1] - ys[i])
 }
 
 /// Percentile (0..=100) with linear interpolation; input need not be sorted.

@@ -4,10 +4,17 @@
 
 use std::path::{Path, PathBuf};
 use thermovolt::config::Config;
-use thermovolt::flow::{alg1, overscale, Design, Effort};
+use thermovolt::flow::{alg1, Design, Effort};
+#[cfg(feature = "pjrt")]
+use thermovolt::flow::overscale;
+#[cfg(feature = "pjrt")]
 use thermovolt::ml::LenetWorkload;
-use thermovolt::runtime::{select_backend, Runtime};
+use thermovolt::runtime::select_backend;
+#[cfg(feature = "pjrt")]
+use thermovolt::runtime::Runtime;
+#[cfg(feature = "pjrt")]
 use thermovolt::sim::ml_error_rates;
+#[cfg(feature = "pjrt")]
 use thermovolt::synth;
 use thermovolt::timing::longest_bram_path;
 
@@ -19,6 +26,7 @@ fn ready() -> bool {
     artifacts().join("thermal.hlo.txt").exists()
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn alg1_on_pjrt_backend_meets_paper_band() {
     if !ready() {
@@ -86,6 +94,7 @@ fn lu8peeng_vbram_hits_the_floor_in_power_flow() {
     );
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn fig8_spine_flow_to_pjrt_inference() {
     if !ready() || !artifacts().join("lenet.hlo.txt").exists() {

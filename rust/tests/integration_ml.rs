@@ -1,6 +1,8 @@
 //! End-to-end ML workload integration: the AOT-compiled LeNet and HD
 //! executables run through PJRT from rust with error injection.
-//! Requires `make artifacts`.
+//! Requires the `pjrt` feature and `make artifacts`.
+
+#![cfg(feature = "pjrt")]
 
 use std::path::{Path, PathBuf};
 use thermovolt::ml::{HdWorkload, LenetWorkload};

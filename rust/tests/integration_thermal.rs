@@ -1,6 +1,8 @@
 //! Cross-validation of the two thermal backends: the native rust SOR solver
 //! (oracle) against the AOT Pallas/JAX artifact executed via PJRT.
-//! Requires `make artifacts` to have run.
+//! Requires the `pjrt` feature and `make artifacts` to have run.
+
+#![cfg(feature = "pjrt")]
 
 use std::path::Path;
 use thermovolt::config::ThermalConfig;

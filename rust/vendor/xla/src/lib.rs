@@ -1,0 +1,116 @@
+//! Offline API stub of the `xla` PJRT bindings used by the `pjrt` feature.
+//!
+//! The real crate ships with the rust_pallas toolchain and links the PJRT C
+//! API; it is not available in the offline build container. This stub keeps
+//! the `--features pjrt` configuration *compiling* with the same type-level
+//! surface (`PjRtClient` → compile → execute → `Literal`), while every entry
+//! point that would need a real PJRT runtime returns a descriptive error at
+//! run time. `thermovolt::runtime::select_backend` already treats a failing
+//! PJRT client as "fall back to the native SOR solver", so a stubbed build
+//! degrades gracefully.
+//!
+//! Deployments with the real bindings point the `xla` path dependency in
+//! `rust/Cargo.toml` at them; no source change is needed.
+
+// The opaque handle types carry a never-read unit field by design.
+#![allow(dead_code)]
+
+use std::fmt;
+
+/// Error type matching the real crate's `std::error::Error` behaviour.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what}: PJRT is unavailable — this build uses the offline `xla` stub; \
+         point the `xla` path dependency in rust/Cargo.toml at the real \
+         rust_pallas xla crate to execute AOT artifacts"
+    )))
+}
+
+/// PJRT client handle (stub: construction always fails).
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+/// Parsed HLO module (stub: parsing always fails).
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// A compiled, loaded executable (stub: execution always fails).
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// A device buffer returned by execution.
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Host-side tensor literal. Construction and reshape work (they carry no
+/// data in the stub); anything that would read device results fails.
+#[derive(Clone, Debug, Default)]
+pub struct Literal(());
+
+impl Literal {
+    pub fn vec1<T: Copy>(_data: &[T]) -> Literal {
+        Literal(())
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Ok(Literal(()))
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal> {
+        unavailable("Literal::to_tuple1")
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+}

@@ -1,0 +1,32 @@
+//! `cargo bench --bench search` — thin wrapper over `benchkit` (the same
+//! harness behind `thermovolt bench`): times Algorithm 1, Algorithm 2
+//! (batched engine vs the pre-refactor naive path, results checked
+//! bit-identical in the same run), the VoltageLut ambient sweep, and a small
+//! fleet run. Plain harness=false binary — criterion is not vendored
+//! offline. Writes BENCH_search.json (override with --out).
+//!
+//! Flags: --quick (reduced LUT/fleet sizes), --bench <name>, --out <path>.
+
+use std::path::Path;
+
+use thermovolt::benchkit::{self, BenchOpts};
+use thermovolt::config::Config;
+use thermovolt::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    // A bare trailing `--bench` injected by cargo parses as a no-op flag;
+    // `--bench <name>` from the user still parses as an option.
+    let args = Args::parse(std::env::args().skip(1));
+    let opts = BenchOpts {
+        quick: args.flag("quick"),
+        bench: args.opt_or("bench", "mkPktMerge").to_string(),
+    };
+    let out = Path::new(args.opt_or("out", "BENCH_search.json")).to_path_buf();
+    let s = benchkit::run(&Config::new(), &opts, &out)?;
+    println!(
+        "== search bench: alg2 {:.2}x vs naive (bit-identical), \
+         lut {:.2} s, fleet {:.2}x on {} workers ==",
+        s.alg2_speedup, s.lut_wall_s, s.fleet_speedup, s.fleet_workers
+    );
+    Ok(())
+}

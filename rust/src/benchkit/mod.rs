@@ -1,0 +1,349 @@
+//! In-repo perf harness for the (V, T)-search stack (`thermovolt bench`).
+//!
+//! Times the paper's search flows end-to-end on one benchmark design:
+//!
+//! * Algorithm 1 (thermal-aware voltage selection),
+//! * Algorithm 2 on the batched/memoizing STA engine **and** on the
+//!   pre-refactor naive path — both in the same run, with the results
+//!   checked bit-identical before the speedup is reported,
+//! * the `VoltageLut` ambient sweep (shared-arena Algorithm-1 runs),
+//! * a small fleet run (serial vs work-stealing pool, fingerprint-checked).
+//!
+//! Everything is wall-clock `std::time::Instant` and hand-rolled JSON — no
+//! external deps (criterion is not vendored offline). The summary lands in
+//! `BENCH_search.json` (schema documented in README.md) so successive PRs
+//! carry a perf trajectory.
+
+use std::path::Path;
+use std::time::Instant;
+
+use crate::config::Config;
+use crate::fleet::telemetry::FleetTelemetry;
+use crate::fleet::trace::Scenario;
+use crate::fleet::{Fleet, FleetConfig};
+use crate::flow::dynamic::VoltageLut;
+use crate::flow::{alg1, alg2, Design, Effort};
+use crate::runtime::select_backend;
+use crate::timing::StaCacheArena;
+
+/// One `thermovolt bench` invocation's knobs.
+#[derive(Clone, Debug)]
+pub struct BenchOpts {
+    /// Reduced LUT/fleet sizes (the CI profile).
+    pub quick: bool,
+    /// Benchmark design the searches run on.
+    pub bench: String,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        BenchOpts {
+            quick: false,
+            bench: "mkPktMerge".to_string(),
+        }
+    }
+}
+
+/// Measured numbers, mirrored 1:1 into the JSON artifact.
+#[derive(Clone, Debug, Default)]
+pub struct BenchSummary {
+    pub bench: String,
+    pub quick: bool,
+    pub t_amb_c: f64,
+    pub theta_ja: f64,
+    pub alg1_wall_s: f64,
+    pub alg1_iters: usize,
+    pub alg1_evals: usize,
+    pub alg2_wall_s: f64,
+    pub alg2_naive_wall_s: f64,
+    pub alg2_speedup: f64,
+    pub alg2_bit_identical: bool,
+    pub alg2_pairs_total: usize,
+    pub alg2_pairs_pruned: usize,
+    pub alg2_thermal_solves: usize,
+    pub alg2_thermal_reused: usize,
+    pub arena_core_hits: usize,
+    pub arena_core_misses: usize,
+    pub arena_bram_hits: usize,
+    pub arena_bram_misses: usize,
+    pub arena_flat_hits: usize,
+    pub arena_flat_misses: usize,
+    pub lut_wall_s: f64,
+    pub lut_entries: usize,
+    pub lut_ambient_points: usize,
+    pub fleet_build_s: f64,
+    pub fleet_serial_s: f64,
+    pub fleet_parallel_s: f64,
+    pub fleet_workers: usize,
+    pub fleet_speedup: f64,
+    pub fleet_fingerprint_match: bool,
+    pub fleet_devices: usize,
+    pub fleet_jobs: usize,
+    pub fleet_violations: u64,
+    pub fleet_saving: f64,
+}
+
+/// Run the harness and write `out` (JSON). Fails loudly if the batched
+/// Algorithm-2 path is not bit-identical to the naive fallback, or if the
+/// parallel fleet telemetry diverges from the serial run.
+pub fn run(cfg_in: &Config, opts: &BenchOpts, out: &Path) -> anyhow::Result<BenchSummary> {
+    // the 65 °C forced-air corner (θ_JA = 2): the search-heavy regime the
+    // paper's 72 min → 49 s claim is about (Algorithm 2 over the full grid)
+    let mut cfg = cfg_in.clone();
+    cfg.flow.t_amb = 65.0;
+    cfg.thermal.theta_ja = 2.0;
+    let mut s = BenchSummary {
+        bench: opts.bench.clone(),
+        quick: opts.quick,
+        t_amb_c: cfg.flow.t_amb,
+        theta_ja: cfg.thermal.theta_ja,
+        ..BenchSummary::default()
+    };
+
+    println!("[bench] building {} (quick P&R)…", opts.bench);
+    let design = Design::build(&opts.bench, &cfg, Effort::Quick)?;
+    let mut backend = select_backend(
+        &cfg.artifacts_dir,
+        design.dev.rows,
+        design.dev.cols,
+        &cfg.thermal,
+    );
+    let sta = design.sta();
+    let pm = design.power_model();
+
+    // ---- Algorithm 1 ----
+    let t0 = Instant::now();
+    let a1 = alg1::run_with(&design, &sta, &pm, &cfg, backend.as_mut(), 1.0);
+    s.alg1_wall_s = t0.elapsed().as_secs_f64();
+    s.alg1_iters = a1.iters.len();
+    s.alg1_evals = a1.iters.iter().map(|i| i.evals).sum();
+    println!(
+        "[bench] alg1: {:.3} s  ({} iters, {} STA evals)",
+        s.alg1_wall_s, s.alg1_iters, s.alg1_evals
+    );
+
+    // ---- Algorithm 2: batched engine vs the pre-refactor naive path ----
+    let t0 = Instant::now();
+    let mut arena = StaCacheArena::new();
+    let fast = alg2::run_with_arena(&design, &sta, &pm, &cfg, backend.as_mut(), &mut arena);
+    s.alg2_wall_s = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let naive = alg2::run_naive_with(&design, &sta, &pm, &cfg, backend.as_mut());
+    s.alg2_naive_wall_s = t0.elapsed().as_secs_f64();
+    s.alg2_bit_identical = alg2_identical(&fast, &naive);
+    anyhow::ensure!(
+        s.alg2_bit_identical,
+        "batched Alg2 diverged from the naive path: ({}, {}, {:e}) vs ({}, {}, {:e})",
+        fast.v_core,
+        fast.v_bram,
+        fast.energy,
+        naive.v_core,
+        naive.v_bram,
+        naive.energy
+    );
+    s.alg2_speedup = s.alg2_naive_wall_s / s.alg2_wall_s.max(1e-9);
+    s.alg2_pairs_total = fast.pairs_total;
+    s.alg2_pairs_pruned = fast.pairs_pruned_energy;
+    s.alg2_thermal_solves = fast.thermal_solves;
+    s.alg2_thermal_reused = fast.thermal_reused;
+    s.arena_core_hits = arena.stats.core_hits;
+    s.arena_core_misses = arena.stats.core_misses;
+    s.arena_bram_hits = arena.stats.bram_hits;
+    s.arena_bram_misses = arena.stats.bram_misses;
+    s.arena_flat_hits = arena.stats.flat_hits;
+    s.arena_flat_misses = arena.stats.flat_misses;
+    println!(
+        "[bench] alg2: batched {:.3} s vs naive {:.3} s → {:.1}x, bit-identical; \
+         arena core {}h/{}m bram {}h/{}m",
+        s.alg2_wall_s,
+        s.alg2_naive_wall_s,
+        s.alg2_speedup,
+        s.arena_core_hits,
+        s.arena_core_misses,
+        s.arena_bram_hits,
+        s.arena_bram_misses
+    );
+
+    // ---- VoltageLut ambient sweep (arena shared across Alg-1 runs) ----
+    let (lut_lo, lut_hi, lut_step) = if opts.quick {
+        (25.0, 75.0, 25.0)
+    } else {
+        (15.0, 75.0, 10.0)
+    };
+    let t0 = Instant::now();
+    let lut = VoltageLut::build(&design, &cfg, backend.as_mut(), lut_lo, lut_hi, lut_step);
+    s.lut_wall_s = t0.elapsed().as_secs_f64();
+    s.lut_entries = lut.entries.len();
+    s.lut_ambient_points = (((lut_hi - lut_lo) / lut_step).floor() as usize) + 1;
+    println!(
+        "[bench] lut: {:.3} s  ({} entries from {} ambients)",
+        s.lut_wall_s, s.lut_entries, s.lut_ambient_points
+    );
+
+    // ---- small fleet run: serial vs work-stealing pool ----
+    let (devices, jobs) = if opts.quick { (3, 6) } else { (6, 18) };
+    let mut fcfg = FleetConfig::new(devices, jobs, Scenario::Diurnal);
+    fcfg.benches = vec![opts.bench.clone()];
+    fcfg.horizon_ms = if opts.quick { 240_000.0 } else { 600_000.0 };
+    let t0 = Instant::now();
+    let fleet = Fleet::build(fcfg, &cfg)?;
+    s.fleet_build_s = t0.elapsed().as_secs_f64();
+    let plan = fleet.plan();
+    let t0 = Instant::now();
+    let serial = fleet.execute(&plan, 1);
+    s.fleet_serial_s = t0.elapsed().as_secs_f64();
+    let workers = fleet.effective_workers();
+    let t0 = Instant::now();
+    let parallel = fleet.execute(&plan, workers);
+    s.fleet_parallel_s = t0.elapsed().as_secs_f64();
+    let tel_serial = FleetTelemetry::aggregate(devices, serial);
+    let tel = FleetTelemetry::aggregate(devices, parallel);
+    s.fleet_fingerprint_match = tel_serial.fingerprint() == tel.fingerprint();
+    anyhow::ensure!(
+        s.fleet_fingerprint_match,
+        "parallel fleet telemetry diverged from the serial run"
+    );
+    s.fleet_workers = workers;
+    s.fleet_speedup = s.fleet_serial_s / s.fleet_parallel_s.max(1e-9);
+    s.fleet_devices = devices;
+    s.fleet_jobs = jobs;
+    s.fleet_violations = tel.violations;
+    s.fleet_saving = tel.saving();
+    println!(
+        "[bench] fleet: build {:.2} s, serial {:.2} s → {} workers {:.2} s ({:.1}x), \
+         fingerprints match",
+        s.fleet_build_s, s.fleet_serial_s, workers, s.fleet_parallel_s, s.fleet_speedup
+    );
+
+    let json = to_json(&s);
+    if let Some(dir) = out.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(out, &json)?;
+    println!("[bench] wrote {}", out.display());
+    Ok(s)
+}
+
+fn alg2_identical(a: &alg2::Alg2Result, b: &alg2::Alg2Result) -> bool {
+    a.v_core.to_bits() == b.v_core.to_bits()
+        && a.v_bram.to_bits() == b.v_bram.to_bits()
+        && a.period.to_bits() == b.period.to_bits()
+        && a.energy.to_bits() == b.energy.to_bits()
+        && a.power.to_bits() == b.power.to_bits()
+        && a.freq_ratio.to_bits() == b.freq_ratio.to_bits()
+        && a.temp.len() == b.temp.len()
+        && a.temp.iter().zip(&b.temp).all(|(x, y)| x.to_bits() == y.to_bits())
+        && a.pairs_total == b.pairs_total
+        && a.pairs_pruned_energy == b.pairs_pruned_energy
+        && a.thermal_solves == b.thermal_solves
+        && a.thermal_reused == b.thermal_reused
+}
+
+/// Hand-rolled JSON (all keys are static identifiers, all values numeric or
+/// boolean except the benchmark name, which our suite keeps alphanumeric —
+/// escaped anyway for safety).
+fn to_json(s: &BenchSummary) -> String {
+    let esc = |t: &str| -> String {
+        t.chars()
+            .flat_map(|c| match c {
+                '"' | '\\' => vec!['\\', c],
+                c if (c as u32) < 0x20 => vec![' '],
+                c => vec![c],
+            })
+            .collect()
+    };
+    let b = |v: bool| if v { "true" } else { "false" };
+    format!(
+        concat!(
+            "{{\n",
+            "  \"schema\": \"thermovolt-bench-search/1\",\n",
+            "  \"quick\": {quick},\n",
+            "  \"bench\": \"{bench}\",\n",
+            "  \"t_amb_c\": {t_amb},\n",
+            "  \"theta_ja_c_per_w\": {theta},\n",
+            "  \"alg1\": {{ \"wall_s\": {a1w}, \"iters\": {a1i}, \"sta_evals\": {a1e} }},\n",
+            "  \"alg2\": {{ \"wall_s\": {a2w}, \"naive_wall_s\": {a2n}, \"speedup\": {a2s}, ",
+            "\"bit_identical\": {a2id}, \"pairs_total\": {a2pt}, \"pairs_pruned\": {a2pp}, ",
+            "\"thermal_solves\": {a2ts}, \"thermal_reused\": {a2tr},\n",
+            "    \"arena\": {{ \"core_hits\": {ach}, \"core_misses\": {acm}, ",
+            "\"bram_hits\": {abh}, \"bram_misses\": {abm}, ",
+            "\"flat_hits\": {afh}, \"flat_misses\": {afm} }} }},\n",
+            "  \"lut\": {{ \"wall_s\": {lw}, \"entries\": {le}, \"ambient_points\": {lp} }},\n",
+            "  \"fleet\": {{ \"build_s\": {fb}, \"serial_s\": {fs}, \"parallel_s\": {fp}, ",
+            "\"workers\": {fw}, \"speedup\": {fsp}, \"fingerprint_match\": {ffm}, ",
+            "\"devices\": {fd}, \"jobs\": {fj}, \"violations\": {fv}, \"saving\": {fsv} }}\n",
+            "}}\n"
+        ),
+        quick = b(s.quick),
+        bench = esc(&s.bench),
+        t_amb = s.t_amb_c,
+        theta = s.theta_ja,
+        a1w = s.alg1_wall_s,
+        a1i = s.alg1_iters,
+        a1e = s.alg1_evals,
+        a2w = s.alg2_wall_s,
+        a2n = s.alg2_naive_wall_s,
+        a2s = s.alg2_speedup,
+        a2id = b(s.alg2_bit_identical),
+        a2pt = s.alg2_pairs_total,
+        a2pp = s.alg2_pairs_pruned,
+        a2ts = s.alg2_thermal_solves,
+        a2tr = s.alg2_thermal_reused,
+        ach = s.arena_core_hits,
+        acm = s.arena_core_misses,
+        abh = s.arena_bram_hits,
+        abm = s.arena_bram_misses,
+        afh = s.arena_flat_hits,
+        afm = s.arena_flat_misses,
+        lw = s.lut_wall_s,
+        le = s.lut_entries,
+        lp = s.lut_ambient_points,
+        fb = s.fleet_build_s,
+        fs = s.fleet_serial_s,
+        fp = s.fleet_parallel_s,
+        fw = s.fleet_workers,
+        fsp = s.fleet_speedup,
+        ffm = b(s.fleet_fingerprint_match),
+        fd = s.fleet_devices,
+        fj = s.fleet_jobs,
+        fv = s.fleet_violations,
+        fsv = s.fleet_saving,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_shape_is_valid_enough() {
+        let s = BenchSummary {
+            bench: "mk\"quote".to_string(),
+            quick: true,
+            alg2_speedup: 3.5,
+            alg2_bit_identical: true,
+            ..BenchSummary::default()
+        };
+        let j = to_json(&s);
+        // escaped quote, balanced braces, key presence
+        assert!(j.contains("mk\\\"quote"));
+        assert_eq!(
+            j.matches('{').count(),
+            j.matches('}').count(),
+            "unbalanced braces:\n{j}"
+        );
+        for key in [
+            "\"schema\"",
+            "\"alg1\"",
+            "\"alg2\"",
+            "\"speedup\"",
+            "\"arena\"",
+            "\"lut\"",
+            "\"fleet\"",
+        ] {
+            assert!(j.contains(key), "missing {key} in:\n{j}");
+        }
+    }
+}

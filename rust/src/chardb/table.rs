@@ -7,6 +7,7 @@
 //! model — mirroring how the paper's flow is decoupled from SPICE.
 
 use super::model::{CharDb, ResourceType, ALL_RESOURCES};
+use crate::util::stats;
 use std::io::{Read, Write};
 use std::path::Path;
 use std::sync::{Arc, OnceLock};
@@ -109,25 +110,11 @@ impl CharTable {
 
     #[inline]
     fn grid_pos(axis: &[f64], x: f64) -> (usize, f64) {
-        // clamped fractional index on a uniform-ish axis via binary search
-        if x <= axis[0] {
-            return (0, 0.0);
-        }
-        let last = axis.len() - 1;
-        if x >= axis[last] {
-            return (last - 1, 1.0);
-        }
-        let mut lo = 0;
-        let mut hi = last;
-        while hi - lo > 1 {
-            let mid = (lo + hi) / 2;
-            if axis[mid] <= x {
-                lo = mid;
-            } else {
-                hi = mid;
-            }
-        }
-        ((lo), (x - axis[lo]) / (axis[hi] - axis[lo]))
+        // clamped fractional index on a non-uniform axis — the one shared
+        // segment bracket (end clamps + duplicate-point 0/0 guard live in
+        // `util::stats::bracket`, so the two interpolation paths cannot
+        // silently diverge again)
+        stats::bracket(axis, x)
     }
 
     #[inline]
@@ -150,6 +137,30 @@ impl CharTable {
     /// Interpolated delay (s).
     pub fn delay(&self, r: ResourceType, t_c: f64, v: f64) -> f64 {
         self.bilinear(&self.delay[r.index()], t_c, v)
+    }
+
+    /// Batch delay fill: `out[i] = delay(r, temps[i], v)`, bit-identical to
+    /// per-call [`CharTable::delay`] but with the voltage axis bracketed
+    /// once. This is the hot inner loop of the per-tile STA cache builds
+    /// (`Sta::build_core_cache` interpolates the *same* voltage for every
+    /// tile of the device).
+    pub fn delay_many(&self, r: ResourceType, temps: &[f64], v: f64, out: &mut [f64]) {
+        let grid = &self.delay[r.index()];
+        let nv = self.volts.len();
+        let (vi, vf) = match self.uniform_v {
+            Some(u) => Self::grid_pos_uniform(&self.volts, u, v),
+            None => Self::grid_pos(&self.volts, v),
+        };
+        for (o, &t_c) in out.iter_mut().zip(temps) {
+            let (ti, tf) = match self.uniform_t {
+                Some(u) => Self::grid_pos_uniform(&self.temps, u, t_c),
+                None => Self::grid_pos(&self.temps, t_c),
+            };
+            let g = |a: usize, b: usize| grid[a * nv + b];
+            let top = g(ti, vi) * (1.0 - vf) + g(ti, vi + 1) * vf;
+            let bot = g(ti + 1, vi) * (1.0 - vf) + g(ti + 1, vi + 1) * vf;
+            *o = top * (1.0 - tf) + bot * tf;
+        }
     }
 
     /// Interpolated leakage (W).
@@ -293,6 +304,45 @@ mod tests {
         let rel = |a: f64, b: f64| (a - b).abs() / b.abs();
         assert!(rel(lo, t.delay(ResourceType::Lut, 0.0, 0.5)) < 1e-12);
         assert!(rel(hi, t.delay(ResourceType::Lut, 110.0, 1.0)) < 1e-12);
+    }
+
+    #[test]
+    fn delay_many_bit_identical_to_scalar() {
+        let t = CharTable::shared();
+        let temps: Vec<f64> = (0..64).map(|i| 17.3 + 1.37 * i as f64).collect();
+        let mut out = vec![0.0f64; temps.len()];
+        for &v in &[0.55, 0.613, 0.80, 0.95] {
+            for &r in ALL_RESOURCES.iter() {
+                t.delay_many(r, &temps, v, &mut out);
+                for (i, &tc) in temps.iter().enumerate() {
+                    assert_eq!(
+                        out[i].to_bits(),
+                        t.delay(r, tc, v).to_bits(),
+                        "delay_many diverged at ({r:?}, {tc}, {v})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn duplicate_axis_points_interpolate_finite() {
+        // hand-edited table with a repeated temperature breakpoint: lookups
+        // at/around the duplicate must stay finite (grid_pos clamps the
+        // zero-width segment instead of dividing by zero)
+        let db = CharDb::analytic();
+        let mut t = CharTable::generate(&db);
+        t.temps[3] = t.temps[2]; // duplicate point ⇒ non-uniform axis
+        // drop the uniform-axis acceleration so the binary-search path runs
+        let t = CharTable {
+            uniform_t: None,
+            uniform_v: None,
+            ..t
+        };
+        for &probe in &[t.temps[2] - 1.0, t.temps[2], t.temps[2] + 1.0] {
+            let d = t.delay(ResourceType::Lut, probe, 0.8);
+            assert!(d.is_finite() && d > 0.0, "delay at duplicate axis: {d}");
+        }
     }
 
     #[test]

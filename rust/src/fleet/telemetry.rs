@@ -192,7 +192,7 @@ impl FleetTelemetry {
     pub fn fingerprint(&self) -> u64 {
         let mut acc = 0xF1EE_7F1E_E7F1_EE70u64;
         let mut mix = |v: u64| {
-            acc = (acc.rotate_left(7) ^ v).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            acc = crate::util::mix64(acc, v);
         };
         for r in &self.jobs {
             mix(r.job_id as u64);

@@ -151,7 +151,7 @@ pub fn job_arrivals(s: Scenario, jobs: usize, horizon_ms: f64, seed: u64) -> Vec
                 .collect()
         }
     };
-    arrivals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    arrivals.sort_by(|a, b| a.total_cmp(b));
     arrivals
         .into_iter()
         .map(|a| (a, rng.uniform(0.15, 0.40) * horizon_ms))

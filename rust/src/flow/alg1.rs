@@ -25,7 +25,7 @@ use crate::config::Config;
 use crate::flow::design::Design;
 use crate::power::PowerModel;
 use crate::thermal::ThermalBackend;
-use crate::timing::Sta;
+use crate::timing::{Sta, StaCacheArena};
 use std::time::Instant;
 
 /// One outer iteration's record (Table II rows).
@@ -82,9 +82,30 @@ pub fn run_with(
     backend: &mut dyn ThermalBackend,
     rate: f64,
 ) -> Alg1Result {
+    let mut arena = StaCacheArena::new();
+    run_with_arena(design, sta, pm, cfg, backend, rate, &mut arena)
+}
+
+/// Same, sharing a caller-owned [`StaCacheArena`]. Ambient sweeps
+/// (`VoltageLut::build`, Fig. 4) and the over-scaling flow re-probe
+/// overlapping (V, T-map) conditions; a shared arena turns those repeated
+/// delay-cache builds and `d_worst` STAs into lookups. Results are
+/// bit-identical to [`run_with`] — the arena only memoizes, never
+/// approximates.
+pub fn run_with_arena(
+    design: &Design,
+    sta: &Sta<'_>,
+    pm: &PowerModel<'_>,
+    cfg: &Config,
+    backend: &mut dyn ThermalBackend,
+    rate: f64,
+    arena: &mut StaCacheArena,
+) -> Alg1Result {
     let vnc = cfg.arch.v_core_nom;
     let vnb = cfg.arch.v_bram_nom;
-    let d_worst = sta.analyze_flat(cfg.thermal.t_max, vnc, vnb).critical_path;
+    let d_worst = arena
+        .analyze_flat(sta, cfg.thermal.t_max, vnc, vnb)
+        .critical_path;
     let target = d_worst * rate;
     let f_clk = 1.0 / (d_worst * (1.0 + cfg.flow.guardband));
 
@@ -101,35 +122,21 @@ pub fn run_with(
         let t0 = Instant::now();
         let mut evals = 0usize;
 
-        // Per-voltage-level delay caches, memoized for this iteration's
-        // temperature map (§Perf: the search probes the same handful of
-        // levels dozens of times; rebuilding the per-tile cache per probe
-        // dominated Algorithm 1's runtime).
-        let mut core_caches: Vec<Option<Vec<f64>>> = vec![None; core_levels.len()];
-        let mut bram_caches: Vec<Option<Vec<f64>>> = vec![None; bram_levels.len()];
+        // Per-voltage-level delay caches live in the arena, keyed by
+        // (quantized level, temperature-map fingerprint) — reused across
+        // probes of this iteration, across iterations whose maps coincide,
+        // and (for caller-shared arenas) across whole ambient sweeps.
+        let tkey = StaCacheArena::temp_key(&temp);
 
         // feasibility test at a candidate level pair under the current map
-        let mut feasible = |ci: usize,
-                            bi: usize,
-                            evals: &mut usize,
-                            core_caches: &mut Vec<Option<Vec<f64>>>,
-                            bram_caches: &mut Vec<Option<Vec<f64>>>|
-         -> bool {
-            *evals += 1;
-            if core_caches[ci].is_none() {
-                core_caches[ci] = Some(sta.build_core_cache(&temp, core_levels[ci]));
-            }
-            if bram_caches[bi].is_none() {
-                bram_caches[bi] = Some(sta.build_bram_cache(&temp, bram_levels[bi]));
-            }
-            let cp = sta
-                .analyze_cached(
-                    core_caches[ci].as_ref().unwrap(),
-                    bram_caches[bi].as_ref().unwrap(),
-                )
-                .critical_path;
-            cp <= target
-        };
+        let mut feasible =
+            |ci: usize, bi: usize, evals: &mut usize, arena: &mut StaCacheArena| -> bool {
+                *evals += 1;
+                let core = arena.core_cache(sta, &temp, tkey, core_levels[ci]);
+                let bram = arena.bram_cache(sta, &temp, tkey, bram_levels[bi]);
+                let cp = sta.analyze_cached(&core, &bram).critical_path;
+                cp <= target
+            };
 
         // per-V_bram: minimum feasible V_core via binary search on the level
         // grid (delay monotone ↓ in V); power is ↑ in V so that point is the
@@ -138,17 +145,16 @@ pub fn run_with(
                                      lo0: usize,
                                      hi0: usize,
                                      evals: &mut usize,
-                                     core_caches: &mut Vec<Option<Vec<f64>>>,
-                                     bram_caches: &mut Vec<Option<Vec<f64>>>|
+                                     arena: &mut StaCacheArena|
          -> Option<usize> {
             let mut lo = lo0;
             let mut hi = hi0;
-            if !feasible(hi, bi, evals, core_caches, bram_caches) {
+            if !feasible(hi, bi, evals, arena) {
                 return None;
             }
             while lo < hi {
                 let mid = (lo + hi) / 2;
-                if feasible(mid, bi, evals, core_caches, bram_caches) {
+                if feasible(mid, bi, evals, arena) {
                     hi = mid;
                 } else {
                     lo = mid + 1;
@@ -178,13 +184,10 @@ pub fn run_with(
                         vc_hi: usize,
                         evals: &mut usize,
                         found: &mut Option<(f64, f64, f64)>,
-                        core_caches: &mut Vec<Option<Vec<f64>>>,
-                        bram_caches: &mut Vec<Option<Vec<f64>>>| {
+                        arena: &mut StaCacheArena| {
             for bi in vb_lo..=vb_hi {
                 let vb = bram_levels[bi];
-                if let Some(ci) =
-                    min_feasible_core(bi, vc_lo, vc_hi, evals, core_caches, bram_caches)
-                {
+                if let Some(ci) = min_feasible_core(bi, vc_lo, vc_hi, evals, arena) {
                     let vc = core_levels[ci];
                     let p = pm.total_power(&temp, f_clk, vc, vb);
                     if found.map(|(bp, _, _)| p < bp).unwrap_or(true) {
@@ -193,16 +196,7 @@ pub fn run_with(
                 }
             }
         };
-        scan(
-            vb_lo,
-            vb_hi,
-            vc_lo,
-            vc_hi,
-            &mut evals,
-            &mut found,
-            &mut core_caches,
-            &mut bram_caches,
-        );
+        scan(vb_lo, vb_hi, vc_lo, vc_hi, &mut evals, &mut found, &mut *arena);
         if found.is_none() && iter > 0 {
             // neighbourhood infeasible (temperature moved a lot): full rescan
             scan(
@@ -212,8 +206,7 @@ pub fn run_with(
                 core_levels.len() - 1,
                 &mut evals,
                 &mut found,
-                &mut core_caches,
-                &mut bram_caches,
+                &mut *arena,
             );
         }
         let (power_est, vc, vb) = match found {

@@ -15,12 +15,20 @@
 //! 2. *thermal memoization* — if a candidate's power is within
 //!    `0.1 / θ_JA` of a previously simulated case, reuse that case's
 //!    converged temperature map instead of re-running the thermal solver.
+//!
+//! On top of those, the default path runs on the batched, memoizing STA
+//! engine (`timing::batch`): the whole voltage grid's initial pricing is one
+//! [`Sta::analyze_flat_many`] pass + one prepared-power sweep, and the
+//! feedback loop's per-tile STAs go through a [`StaCacheArena`] so delay
+//! caches are shared wherever the thermal memo collapses temperature maps.
+//! [`run_naive_with`] preserves the pre-refactor per-probe path; results are
+//! bit-identical (asserted by `tests/batch_sta.rs` and `thermovolt bench`).
 
 use crate::config::Config;
 use crate::flow::design::Design;
 use crate::power::PowerModel;
 use crate::thermal::ThermalBackend;
-use crate::timing::Sta;
+use crate::timing::{Sta, StaCacheArena};
 
 #[derive(Clone, Debug)]
 pub struct Alg2Result {
@@ -55,6 +63,148 @@ pub fn thermal_aware_energy_optimization(
 }
 
 pub fn run_with(
+    design: &Design,
+    sta: &Sta<'_>,
+    pm: &PowerModel<'_>,
+    cfg: &Config,
+    backend: &mut dyn ThermalBackend,
+) -> Alg2Result {
+    let mut arena = StaCacheArena::new();
+    run_with_arena(design, sta, pm, cfg, backend, &mut arena)
+}
+
+/// Default (batched + memoizing) implementation. Bit-identical to
+/// [`run_naive_with`]: the batched flat STA prices each candidate with the
+/// scalar path's exact arithmetic, the prepared power sweep reuses the very
+/// same per-tile `exp` factors, and the arena only interns what the naive
+/// path would have rebuilt.
+pub fn run_with_arena(
+    design: &Design,
+    sta: &Sta<'_>,
+    pm: &PowerModel<'_>,
+    cfg: &Config,
+    backend: &mut dyn ThermalBackend,
+    arena: &mut StaCacheArena,
+) -> Alg2Result {
+    let vnc = cfg.arch.v_core_nom;
+    let vnb = cfg.arch.v_bram_nom;
+    let gb = 1.0 + cfg.flow.guardband;
+    let d_worst = arena
+        .analyze_flat(sta, cfg.thermal.t_max, vnc, vnb)
+        .critical_path;
+    let nominal_period = d_worst * gb;
+
+    let n = design.dev.n_tiles();
+    let core_levels = cfg.vgrid.core_levels();
+    let bram_levels = cfg.vgrid.bram_levels();
+
+    let mut best: Option<Alg2Result> = None;
+    let mut pairs_pruned_energy = 0usize;
+    let mut thermal_solves = 0usize;
+    let mut thermal_reused = 0usize;
+    // thermal memoization: (total power, converged map)
+    let mut memo: Vec<(f64, Vec<f64>)> = Vec::new();
+    let reuse_band = if cfg.flow.prune {
+        0.1 / cfg.thermal.theta_ja
+    } else {
+        0.0
+    };
+
+    // ---- batched initial pricing: the whole grid in one pass ----
+    // Scan order (low-to-high voltage, V_core outer) matches the naive path:
+    // low-V candidates seed the energy bound early, making pruning effective.
+    let pairs: Vec<(f64, f64)> = core_levels
+        .iter()
+        .flat_map(|&vc| bram_levels.iter().map(move |&vb| (vc, vb)))
+        .collect();
+    let pairs_total = pairs.len();
+    let d0s: Vec<f64> = sta
+        .analyze_flat_many(cfg.flow.t_amb, &pairs)
+        .iter()
+        .map(|r| r.critical_path)
+        .collect();
+    // all candidates share the T = T_amb map: pay its exps once
+    let flat = vec![cfg.flow.t_amb; n];
+    let prep = pm.prepare_temp(&flat);
+
+    for (pi, &(vc, vb)) in pairs.iter().enumerate() {
+        // ---- initial loop (T = T_amb): prune hopeless pairs ----
+        let d0 = d0s[pi];
+        let period0 = d0 * gb;
+        let p0 = pm.total_power_prepared(&prep, 1.0 / period0, vc, vb);
+        let e0 = p0 * period0;
+        if cfg.flow.prune {
+            if let Some(b) = &best {
+                if e0 > b.energy {
+                    pairs_pruned_energy += 1;
+                    continue;
+                }
+            }
+        }
+        // ---- temperature-delay feedback to the fixed point ----
+        let mut temp = flat.clone();
+        let mut period = period0;
+        let mut power = p0;
+        for _ in 0..cfg.flow.max_iters {
+            // thermal step: memoized or solved
+            let reused = memo
+                .iter()
+                .find(|(p, _)| (p - power).abs() < reuse_band)
+                .map(|(_, t)| t.clone());
+            let t_new = match reused {
+                Some(t) => {
+                    thermal_reused += 1;
+                    t
+                }
+                None => {
+                    thermal_solves += 1;
+                    let pmap = pm.power_map(&temp, 1.0 / period, vc, vb);
+                    let t = backend.steady_state(&pmap, cfg.flow.t_amb);
+                    memo.push((power, t.clone()));
+                    t
+                }
+            };
+            let mut dmax = 0.0f64;
+            for i in 0..n {
+                dmax = dmax.max((t_new[i] - temp[i]).abs());
+            }
+            temp = t_new;
+            let d = arena.analyze(sta, &temp, vc, vb).critical_path;
+            period = d * gb;
+            power = pm.total_power(&temp, 1.0 / period, vc, vb);
+            if dmax <= cfg.thermal.delta_t {
+                break;
+            }
+        }
+        let energy = power * period;
+        if best.as_ref().map(|b| energy < b.energy).unwrap_or(true) {
+            best = Some(Alg2Result {
+                v_core: vc,
+                v_bram: vb,
+                period,
+                energy,
+                power,
+                temp,
+                freq_ratio: nominal_period / period,
+                pairs_total,
+                pairs_pruned_energy: 0,
+                thermal_solves: 0,
+                thermal_reused: 0,
+            });
+        }
+    }
+    let mut out = best.expect("voltage grid is non-empty");
+    out.pairs_pruned_energy = pairs_pruned_energy;
+    out.thermal_solves = thermal_solves;
+    out.thermal_reused = thermal_reused;
+    out
+}
+
+/// Pre-refactor evaluation path: per-probe flat STA, per-iteration cache
+/// rebuilds, per-tile `exp` on every candidate. Kept (a) as the `--naive`
+/// fallback the bench times the batched engine against in the same run, and
+/// (b) as the differential baseline the equivalence tests compare to.
+pub fn run_naive_with(
     design: &Design,
     sta: &Sta<'_>,
     pm: &PowerModel<'_>,
@@ -160,6 +310,18 @@ pub fn run_with(
     out.thermal_solves = thermal_solves;
     out.thermal_reused = thermal_reused;
     out
+}
+
+/// Naive-path convenience mirror of [`thermal_aware_energy_optimization`]
+/// (the CLI's `energy-opt --naive`).
+pub fn thermal_aware_energy_optimization_naive(
+    design: &Design,
+    cfg: &Config,
+    backend: &mut dyn ThermalBackend,
+) -> Alg2Result {
+    let sta = design.sta();
+    let pm = design.power_model();
+    run_naive_with(design, &sta, &pm, cfg, backend)
 }
 
 /// Baseline energy rate: nominal voltages at the worst-case-guaranteed clock

@@ -9,6 +9,7 @@ use crate::config::Config;
 use crate::flow::alg1;
 use crate::flow::design::Design;
 use crate::thermal::ThermalBackend;
+use crate::timing::StaCacheArena;
 
 /// One LUT row: junction temperature key → optimal rails.
 #[derive(Clone, Copy, Debug)]
@@ -32,7 +33,10 @@ pub struct VoltageLut {
 
 impl VoltageLut {
     /// Build by sweeping ambient temperature and recording the converged
-    /// junction temperature of each Algorithm-1 solution.
+    /// junction temperature of each Algorithm-1 solution. One
+    /// [`StaCacheArena`] spans the whole sweep: the `d_worst` STA at
+    /// (T_max, V_nom) and every delay cache whose (V, T-map) condition
+    /// recurs across ambients are computed once.
     pub fn build(
         design: &Design,
         cfg: &Config,
@@ -43,12 +47,13 @@ impl VoltageLut {
     ) -> VoltageLut {
         let sta = design.sta();
         let pm = design.power_model();
+        let mut arena = StaCacheArena::new();
         let mut entries = Vec::new();
         let mut t = t_amb_lo;
         while t <= t_amb_hi + 1e-9 {
             let mut c = cfg.clone();
             c.flow.t_amb = t;
-            let r = alg1::run_with(design, &sta, &pm, &c, backend, 1.0);
+            let r = alg1::run_with_arena(design, &sta, &pm, &c, backend, 1.0, &mut arena);
             if !r.infeasible {
                 entries.push(LutEntry {
                     t_junct: crate::util::stats::max(&r.temp),
@@ -59,7 +64,7 @@ impl VoltageLut {
             }
             t += step;
         }
-        entries.sort_by(|a, b| a.t_junct.partial_cmp(&b.t_junct).unwrap());
+        entries.sort_by(|a, b| a.t_junct.total_cmp(&b.t_junct));
         // Safety envelope: Algorithm 1 may trade the rails non-monotonically
         // across temperature (Fig. 4a). A sensed temperature between two keys
         // must never command less than any cooler key requires, so both rails

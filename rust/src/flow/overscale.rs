@@ -22,6 +22,7 @@ use crate::config::Config;
 use crate::flow::alg1::{self, Alg1Result};
 use crate::flow::design::Design;
 use crate::thermal::ThermalBackend;
+use crate::timing::{Sta, StaCacheArena};
 
 /// Per-cycle probability of a voltage-transient event deep enough to erase
 /// the guardband (load transients are infrequent [5]).
@@ -48,15 +49,21 @@ pub struct OverscaleResult {
     pub error: ErrorModel,
 }
 
-/// Run the over-scaling flow at CP-violation `rate` ≥ 1.0.
+/// Run the over-scaling flow at CP-violation `rate` ≥ 1.0. The Algorithm-1
+/// search and the post-P&R timing simulation share one [`StaCacheArena`],
+/// so the error model prices the converged (T, V) off caches the search
+/// already built.
 pub fn overscale(
     design: &Design,
     cfg: &Config,
     backend: &mut dyn ThermalBackend,
     rate: f64,
 ) -> OverscaleResult {
-    let res = alg1::thermal_aware_voltage_selection(design, cfg, backend, rate);
-    let error = error_model(design, cfg, &res);
+    let sta = design.sta();
+    let pm = design.power_model();
+    let mut arena = StaCacheArena::new();
+    let res = alg1::run_with_arena(design, &sta, &pm, cfg, backend, rate, &mut arena);
+    let error = error_model_with(design, &sta, cfg, &res, &mut arena);
     OverscaleResult {
         rate,
         alg1: res,
@@ -68,7 +75,19 @@ pub fn overscale(
 /// versus the operating clock.
 pub fn error_model(design: &Design, cfg: &Config, res: &Alg1Result) -> ErrorModel {
     let sta = design.sta();
-    let timing = sta.analyze(&res.temp, res.v_core, res.v_bram);
+    let mut arena = StaCacheArena::new();
+    error_model_with(design, &sta, cfg, res, &mut arena)
+}
+
+/// Arena-sharing form of [`error_model`].
+pub fn error_model_with(
+    design: &Design,
+    sta: &Sta<'_>,
+    cfg: &Config,
+    res: &Alg1Result,
+    arena: &mut StaCacheArena,
+) -> ErrorModel {
+    let timing = arena.analyze(sta, &res.temp, res.v_core, res.v_bram);
     let t_clk = res.d_worst * (1.0 + cfg.flow.guardband);
     let span = (t_clk - res.d_worst).max(1e-15);
     let mut p_viol = Vec::with_capacity(timing.endpoints.len());

@@ -25,6 +25,8 @@
 //! * [`coordinator`] — online (sensor-driven) dynamic voltage controller
 //! * [`fleet`]   — multi-device datacenter fleet simulator + parallel
 //!   thermal-aware job scheduler
+//! * [`timing::batch`] — batched, memoizing STA engine shared by every search
+//! * [`benchkit`] — in-repo perf harness (`thermovolt bench` → BENCH_search.json)
 //! * [`report`]  — regenerates every paper table/figure
 
 // The crate predates clippy in CI; these style lints fire all over the
@@ -41,6 +43,7 @@
 
 pub mod activity;
 pub mod arch;
+pub mod benchkit;
 pub mod chardb;
 pub mod config;
 pub mod fleet;

@@ -12,6 +12,9 @@
 //! thermovolt fleet  --devices N --jobs M --scenario <name>
 //!                   [--seed S] [--workers W] [--benches a,b] [--horizon-s T]
 //!                                                 datacenter fleet simulation
+//! thermovolt bench  [--quick] [--bench <b>] [--out F]   perf harness:
+//!                   Alg1 / Alg2 (batched vs --naive path, bit-checked) /
+//!                   LUT build / fleet; emits BENCH_search.json
 //! thermovolt e2e    [--full]                      full-pipeline headline run
 //! ```
 
@@ -160,7 +163,13 @@ fn run(args: &Args) -> Result<()> {
                 design.dev.cols,
                 &cfg.thermal,
             );
-            let r = alg2::thermal_aware_energy_optimization(&design, &cfg, backend.as_mut());
+            // --naive: pre-refactor per-probe evaluation path (bit-identical
+            // results; kept for the bench comparison and as a fallback)
+            let r = if args.flag("naive") {
+                alg2::thermal_aware_energy_optimization_naive(&design, &cfg, backend.as_mut())
+            } else {
+                alg2::thermal_aware_energy_optimization(&design, &cfg, backend.as_mut())
+            };
             let (base_e, base_p) = alg2::baseline_energy(&design, &cfg, backend.as_mut());
             println!(
                 "V = ({}, {}) mV  period {:.2} ns (freq ratio {})  P={} mW",
@@ -401,6 +410,22 @@ fn run(args: &Args) -> Result<()> {
                 serial_s / parallel_s.max(1e-9)
             );
         }
+        "bench" => {
+            // Perf harness over the search stack; see benchkit. The Alg2
+            // stage runs the batched engine AND the pre-refactor --naive
+            // path in the same run, checks the results bit-identical, and
+            // reports the speedup. Summary lands in BENCH_search.json.
+            let opts = thermovolt::benchkit::BenchOpts {
+                quick: args.flag("quick"),
+                bench: args.opt_or("bench", "mkPktMerge").to_string(),
+            };
+            let out = Path::new(args.opt_or("out", "BENCH_search.json")).to_path_buf();
+            let s = thermovolt::benchkit::run(&cfg, &opts, &out)?;
+            println!(
+                "bench summary: alg2 {:.1}x vs naive (bit-identical), fleet {:.1}x on {} workers",
+                s.alg2_speedup, s.fleet_speedup, s.fleet_workers
+            );
+        }
         "e2e" => {
             // END-TO-END: benchmarks through the full pipeline on the PJRT
             // thermal path; prints the headline metric (EXPERIMENTS.md).
@@ -425,7 +450,7 @@ fn run(args: &Args) -> Result<()> {
         }
         "" | "help" => {
             println!(
-                "subcommands: characterize | bench-info | power-opt | energy-opt | overscale | report | serve | fleet | e2e"
+                "subcommands: characterize | bench-info | power-opt | energy-opt | overscale | report | serve | fleet | bench | e2e"
             );
         }
         other => anyhow::bail!("unknown subcommand `{other}` (try `help`)"),

@@ -191,7 +191,7 @@ impl HdWorkload {
 fn argmax(row: &[f32]) -> i32 {
     row.iter()
         .enumerate()
-        .max_by(|a, c| a.1.partial_cmp(c.1).unwrap())
+        .max_by(|a, c| a.1.total_cmp(c.1))
         .map(|(i, _)| i as i32)
         .unwrap_or(0)
 }

@@ -40,6 +40,13 @@ fn kind_index(k: TileKind) -> usize {
 }
 const N_KINDS: usize = 6;
 
+/// Per-tile leakage-temperature factors of one temperature map (see
+/// [`PowerModel::prepare_temp`]).
+#[derive(Clone, Debug)]
+pub struct PreparedTemp {
+    exps: Vec<f64>,
+}
+
 /// Power model bound to one placed + routed + activity-annotated design.
 pub struct PowerModel<'a> {
     pub dev: &'a Device,
@@ -254,6 +261,42 @@ impl<'a> PowerModel<'a> {
         sum
     }
 
+    /// Precompute the per-tile leakage-temperature factors
+    /// `e^{0.015 (T_i − 25)}` of one map, so a candidate sweep at a shared
+    /// temperature (Algorithm 2 prices the whole voltage grid at T_amb
+    /// before the thermal feedback) pays for the transcendentals once
+    /// instead of once per candidate.
+    pub fn prepare_temp(&self, temp: &[f64]) -> PreparedTemp {
+        PreparedTemp {
+            exps: temp
+                .iter()
+                .map(|&t| (KAPPA_LKG_T * (t - 25.0)).exp())
+                .collect(),
+        }
+    }
+
+    /// [`total_power`](Self::total_power) against a prepared map —
+    /// bit-identical (the factor is the very same `exp` value; every add and
+    /// multiply happens in the same order), minus the per-tile `exp` calls.
+    pub fn total_power_prepared(
+        &self,
+        prep: &PreparedTemp,
+        f_clk: f64,
+        v_core: f64,
+        v_bram: f64,
+    ) -> f64 {
+        let bases = self.kind_bases(v_core, v_bram);
+        let kc = v_core * v_core * f_clk;
+        let kb = v_bram * v_bram * f_clk;
+        let mut sum = 0.0;
+        for i in 0..prep.exps.len() {
+            sum += bases[self.kind_of_tile[i] as usize] * prep.exps[i]
+                + self.acc_core[i] * kc
+                + self.acc_bram[i] * kb;
+        }
+        sum
+    }
+
     /// Leakage-only total (reports, Table II decomposition).
     pub fn total_leakage(&self, temp: &[f64], v_core: f64, v_bram: f64) -> f64 {
         self.leakage_map(temp, v_core, v_bram).iter().sum()
@@ -369,6 +412,25 @@ mod tests {
         let p3 = pm.total_dynamic(100e6, 0.4, 0.95);
         // core scales 4× down; bram part unchanged ⇒ ratio in (0.25, 1)
         assert!(p3 < p1 && p3 > 0.25 * p1 - 1e-12);
+    }
+
+    #[test]
+    fn prepared_total_power_bit_identical() {
+        let f = fixture("mkPktMerge", 0.5);
+        let pm = model(&f);
+        let temp: Vec<f64> = (0..f.dev.n_tiles())
+            .map(|i| 28.0 + (i % 37) as f64 * 1.7)
+            .collect();
+        let prep = pm.prepare_temp(&temp);
+        for &(fclk, vc, vb) in &[
+            (1.0e8, 0.80, 0.95),
+            (2.3e8, 0.68, 0.82),
+            (0.7e8, 0.55, 0.55),
+        ] {
+            let a = pm.total_power(&temp, fclk, vc, vb);
+            let b = pm.total_power_prepared(&prep, fclk, vc, vb);
+            assert_eq!(a.to_bits(), b.to_bits(), "prepared power diverged at ({vc},{vb})");
+        }
     }
 
     #[test]

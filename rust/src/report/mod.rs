@@ -449,6 +449,11 @@ pub fn runtime_claims(cfg_in: &Config, effort: Effort) -> anyhow::Result<Table> 
     let t1 = std::time::Instant::now();
     let _full = alg2::thermal_aware_energy_optimization(&design, &cfg_np, backend.as_mut());
     let t_full = t1.elapsed().as_secs_f64();
+    // pre-refactor evaluation path (per-probe STA, no batching/arena) on the
+    // same pruned config — the bit-identity is asserted in tests/batch_sta.rs
+    let t2 = std::time::Instant::now();
+    let _naive = alg2::thermal_aware_energy_optimization_naive(&design, &cfg, backend.as_mut());
+    let t_naive = t2.elapsed().as_secs_f64();
     let mut t = Table::new(
         "Runtime claims (§III-B / §III-C)",
         &["metric", "value", "paper"],
@@ -479,6 +484,16 @@ pub fn runtime_claims(cfg_in: &Config, effort: Effort) -> anyhow::Result<Table> 
         "Alg2 thermal solves reused".into(),
         format!("{} reused vs {} solved", pruned.thermal_reused, pruned.thermal_solves),
         "0.1/theta_JA memo band".into(),
+    ]);
+    t.row(vec![
+        "Alg2 batched vs naive engine (s)".into(),
+        format!(
+            "{:.2} / {:.2} ({:.1}x)",
+            t_pruned,
+            t_naive,
+            t_naive / t_pruned.max(1e-9)
+        ),
+        "bit-identical (timing::batch)".into(),
     ]);
     Ok(t)
 }

@@ -1,0 +1,517 @@
+//! Batched, memoizing STA evaluation engine.
+//!
+//! The paper's Algorithm 1/2 searches are dominated by repeated STA over the
+//! (V_core, V_bram, T) grid — the search-optimization story (72 min → 49 s)
+//! is a first-class result of the paper, and every probe used to rebuild the
+//! per-(resource, tile) delay caches from scratch. Two mechanisms fix that:
+//!
+//! * [`StaCacheArena`] — interns the [`Sta::build_core_cache`] /
+//!   [`Sta::build_bram_cache`] results keyed by *(quantized rail voltage,
+//!   temperature-map fingerprint)*, so Algorithm 1's binary search,
+//!   Algorithm 2's voltage-grid sweep, `VoltageLut::build`'s ambient sweep
+//!   and the over-scaling flow share delay caches instead of rebuilding
+//!   them per probe. Uniform-temperature (`analyze_flat`) results are
+//!   memoized whole — `d_worst` at (T_max, V_nom) is re-derived dozens of
+//!   times across an ambient sweep and never changes.
+//! * [`Sta::analyze_many`] / [`Sta::analyze_flat_many`] — batched entry
+//!   points that price a whole slate of (V_core, V_bram) candidates in one
+//!   pass over the connection/hop arrays: the per-net traversal state is
+//!   loaded once and amortized across candidates instead of re-walked per
+//!   probe. `analyze_flat_many` is the one Algorithm 2's full-grid initial
+//!   pricing runs on; `analyze_many` is its per-tile-map twin (the searches'
+//!   feedback loops are one-pair-at-a-time, so today it is exercised by the
+//!   differential tests and stands ready for slate-shaped map-mode searches).
+//!
+//! **Differential-equivalence guarantee.** Every cached or batched result is
+//! bit-identical to the naive [`Sta::analyze`] / [`Sta::analyze_flat`]: the
+//! arena stores values produced by the exact same cache-build functions, and
+//! the batched propagation performs the per-candidate arithmetic in the same
+//! order as the scalar propagation (see `tests/batch_sta.rs`).
+//!
+//! **Cache-key quantization.** Voltages are keyed at a 1 µV quantum
+//! ([`V_QUANTUM`]): lossless for the 10 mV VID grid the searches actually
+//! probe (`VoltageGrid::levels` snaps to 1 µV for exactly this reason),
+//! while collapsing sub-µV float drift from repeated `lo + i*step` axis
+//! construction. Temperature maps are keyed by a 64-bit fold of their bit
+//! patterns — two *different* maps colliding requires a 2⁻⁶⁴ hash accident,
+//! which the differential tests make observable if it ever mattered.
+//! An arena is bound to one design's `Sta` (cache geometry is per-device);
+//! never share one across designs.
+
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use super::{Sta, StaResult};
+use crate::chardb::{Rail, ResourceType};
+use crate::netlist::{CellKind, NO_NET};
+
+/// Voltage cache-key quantum (V): 1 µV. See the module docs for why this is
+/// lossless for the searches' 10 mV VID grid.
+pub const V_QUANTUM: f64 = 1e-6;
+
+#[inline]
+fn qv(v: f64) -> i64 {
+    (v / V_QUANTUM).round() as i64
+}
+
+/// 64-bit fold of a temperature map's bit patterns, built on the same
+/// [`crate::util::mix64`] step as the fleet telemetry fingerprint.
+pub fn temp_fingerprint(temp: &[f64]) -> u64 {
+    let mut acc = 0x51A7_EA9C_0FFE_E000u64 ^ (temp.len() as u64);
+    for &t in temp {
+        acc = crate::util::mix64(acc, t.to_bits());
+    }
+    acc
+}
+
+/// Hit/miss counters — surfaced by `thermovolt bench` to show where the
+/// searches stopped rebuilding state.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ArenaStats {
+    pub core_hits: usize,
+    pub core_misses: usize,
+    pub bram_hits: usize,
+    pub bram_misses: usize,
+    pub flat_hits: usize,
+    pub flat_misses: usize,
+}
+
+/// Delay caches are retained for at most this many distinct temperature
+/// maps (LRU on the map fingerprint). Searches probe many voltages under
+/// few maps — Algorithm 1 has one map per outer iteration, Algorithm 2's
+/// thermal memo collapses the feedback maps — so a small bound keeps every
+/// useful hit while capping memory on pathological runs (`prune = false`
+/// gives every feedback iteration of every pair its own map; unbounded
+/// retention there would grow to gigabytes on large devices).
+const MAX_TEMP_MAPS: usize = 32;
+
+/// Memoized flat (uniform-T) results are capped at this many entries; the
+/// searches only ever insert a handful (`d_worst` conditions), so hitting
+/// the cap means a caller is sweeping flat conditions — dump and restart
+/// rather than grow without bound (a flat result carries a full endpoints
+/// vector).
+const MAX_FLAT_RESULTS: usize = 256;
+
+/// Interning arena for STA delay caches and flat results. One arena per
+/// design; cheap to create, grows with the number of *distinct*
+/// (voltage, temperature-map) conditions actually probed, bounded to the
+/// [`MAX_TEMP_MAPS`] most recently used maps and [`MAX_FLAT_RESULTS`] flat
+/// memo entries (eviction only rebuilds — it can never change a result).
+#[derive(Default)]
+pub struct StaCacheArena {
+    core: HashMap<(i64, u64), Arc<Vec<f64>>>,
+    bram: HashMap<(i64, u64), Arc<Vec<f64>>>,
+    flat: HashMap<(u64, i64, i64), Arc<StaResult>>,
+    /// Map fingerprints, least-recently-used first.
+    fp_lru: Vec<u64>,
+    pub stats: ArenaStats,
+}
+
+impl StaCacheArena {
+    pub fn new() -> StaCacheArena {
+        StaCacheArena::default()
+    }
+
+    /// Mark `key` as the most recently used map; evict the oldest map's
+    /// delay caches once more than [`MAX_TEMP_MAPS`] are held.
+    fn touch_fp(&mut self, key: u64) {
+        if let Some(pos) = self.fp_lru.iter().position(|&k| k == key) {
+            self.fp_lru.remove(pos);
+            self.fp_lru.push(key);
+            return;
+        }
+        self.fp_lru.push(key);
+        if self.fp_lru.len() > MAX_TEMP_MAPS {
+            let evict = self.fp_lru.remove(0);
+            self.core.retain(|&(_, fp), _| fp != evict);
+            self.bram.retain(|&(_, fp), _| fp != evict);
+        }
+    }
+
+    /// Fingerprint a temperature map once per search iteration; pass the key
+    /// to [`core_cache`](Self::core_cache) / [`bram_cache`](Self::bram_cache)
+    /// so repeated probes under the same map skip the rehash.
+    pub fn temp_key(temp: &[f64]) -> u64 {
+        temp_fingerprint(temp)
+    }
+
+    /// Core-rail delay cache for (`temp`, `v_core`), interned. `key` must be
+    /// `Self::temp_key(temp)` for the same `temp` slice.
+    pub fn core_cache(
+        &mut self,
+        sta: &Sta<'_>,
+        temp: &[f64],
+        key: u64,
+        v_core: f64,
+    ) -> Arc<Vec<f64>> {
+        self.touch_fp(key);
+        match self.core.entry((qv(v_core), key)) {
+            Entry::Occupied(e) => {
+                self.stats.core_hits += 1;
+                e.get().clone()
+            }
+            Entry::Vacant(e) => {
+                self.stats.core_misses += 1;
+                e.insert(Arc::new(sta.build_core_cache(temp, v_core))).clone()
+            }
+        }
+    }
+
+    /// BRAM-rail companion of [`core_cache`](Self::core_cache).
+    pub fn bram_cache(
+        &mut self,
+        sta: &Sta<'_>,
+        temp: &[f64],
+        key: u64,
+        v_bram: f64,
+    ) -> Arc<Vec<f64>> {
+        self.touch_fp(key);
+        match self.bram.entry((qv(v_bram), key)) {
+            Entry::Occupied(e) => {
+                self.stats.bram_hits += 1;
+                e.get().clone()
+            }
+            Entry::Vacant(e) => {
+                self.stats.bram_misses += 1;
+                e.insert(Arc::new(sta.build_bram_cache(temp, v_bram))).clone()
+            }
+        }
+    }
+
+    /// Per-tile-temperature analysis through the arena — bit-identical to
+    /// [`Sta::analyze`], but delay caches are reused across calls that share
+    /// a (voltage, temperature-map) condition.
+    pub fn analyze(
+        &mut self,
+        sta: &Sta<'_>,
+        temp: &[f64],
+        v_core: f64,
+        v_bram: f64,
+    ) -> StaResult {
+        let key = temp_fingerprint(temp);
+        let core = self.core_cache(sta, temp, key, v_core);
+        let bram = self.bram_cache(sta, temp, key, v_bram);
+        sta.analyze_cached(&core, &bram)
+    }
+
+    /// Memoized uniform-temperature analysis — bit-identical to
+    /// [`Sta::analyze_flat`] (it *is* that result, computed once).
+    pub fn analyze_flat(
+        &mut self,
+        sta: &Sta<'_>,
+        t_c: f64,
+        v_core: f64,
+        v_bram: f64,
+    ) -> Arc<StaResult> {
+        let k = (t_c.to_bits(), qv(v_core), qv(v_bram));
+        if let Some(r) = self.flat.get(&k) {
+            self.stats.flat_hits += 1;
+            return r.clone();
+        }
+        self.stats.flat_misses += 1;
+        if self.flat.len() >= MAX_FLAT_RESULTS {
+            self.flat.clear();
+        }
+        let r = Arc::new(sta.analyze_flat(t_c, v_core, v_bram));
+        self.flat.insert(k, r.clone());
+        r
+    }
+
+    /// Interned entries across all maps (memory introspection for the bench).
+    pub fn len(&self) -> usize {
+        self.core.len() + self.bram.len() + self.flat.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Candidates per batched-propagation block: bounds the working set
+/// (arrival arrays are `#nets × CHUNK`) while keeping the inner
+/// per-candidate loops long enough to amortize the traversal.
+const CHUNK: usize = 16;
+
+impl<'a> Sta<'a> {
+    /// Batched uniform-temperature analysis: price every `(v_core, v_bram)`
+    /// candidate in one pass over the connection arrays. Element `i` is
+    /// bit-identical to `self.analyze_flat(t_c, pairs[i].0, pairs[i].1)`.
+    pub fn analyze_flat_many(&self, t_c: f64, pairs: &[(f64, f64)]) -> Vec<StaResult> {
+        let mut out = Vec::with_capacity(pairs.len());
+        for chunk in pairs.chunks(CHUNK) {
+            let nc = chunk.len();
+            let d = |r: ResourceType, vc: f64, vb: f64| {
+                let v = match r.rail() {
+                    Rail::Core => vc,
+                    Rail::Bram => vb,
+                };
+                self.table.delay(r, t_c, v)
+            };
+            let mut d_sb = [0.0f64; CHUNK];
+            let mut d_cb = [0.0f64; CHUNK];
+            let mut d_local = [0.0f64; CHUNK];
+            let mut d_lut = [0.0f64; CHUNK];
+            let mut d_ff = [0.0f64; CHUNK];
+            let mut d_bram = [0.0f64; CHUNK];
+            let mut d_dsp = [0.0f64; CHUNK];
+            for (j, &(vc, vb)) in chunk.iter().enumerate() {
+                d_sb[j] = d(ResourceType::SbMux, vc, vb);
+                d_cb[j] = d(ResourceType::CbMux, vc, vb);
+                d_local[j] = d(ResourceType::LocalMux, vc, vb);
+                d_lut[j] = d(ResourceType::Lut, vc, vb);
+                d_ff[j] = d(ResourceType::Ff, vc, vb);
+                d_bram[j] = d(ResourceType::Bram, vc, vb);
+                d_dsp[j] = d(ResourceType::Dsp, vc, vb);
+            }
+            let res = self.propagate_many(
+                nc,
+                |conn, _sink, nd: &mut [f64]| {
+                    for j in 0..nc {
+                        nd[j] = conn.n_sb as f64 * d_sb[j]
+                            + conn.n_cb as f64 * d_cb[j]
+                            + conn.n_local as f64 * d_local[j];
+                    }
+                },
+                |kind, _cell, j| match kind {
+                    CellKind::Lut(_) => d_lut[j],
+                    CellKind::Dsp => d_dsp[j],
+                    _ => 0.0,
+                },
+                |kind, _cell, j| match kind {
+                    CellKind::Ff => d_ff[j],
+                    CellKind::Bram => d_bram[j],
+                    _ => 0.0,
+                },
+            );
+            out.extend(res);
+        }
+        out
+    }
+
+    /// Batched per-tile-temperature analysis at one shared map: per-candidate
+    /// delay caches come from (or are interned into) `arena`, then all
+    /// candidates are priced in one walk of the hop arrays, candidates
+    /// innermost over a column-interleaved delay matrix. Element `i` is
+    /// bit-identical to `self.analyze(temp, pairs[i].0, pairs[i].1)`.
+    pub fn analyze_many(
+        &self,
+        temp: &[f64],
+        pairs: &[(f64, f64)],
+        arena: &mut StaCacheArena,
+    ) -> Vec<StaResult> {
+        let n = self.dev.n_tiles();
+        let key = temp_fingerprint(temp);
+        let mut out = Vec::with_capacity(pairs.len());
+        for chunk in pairs.chunks(CHUNK) {
+            let nc = chunk.len();
+            let cores: Vec<Arc<Vec<f64>>> = chunk
+                .iter()
+                .map(|&(vc, _)| arena.core_cache(self, temp, key, vc))
+                .collect();
+            let brams: Vec<Arc<Vec<f64>>> = chunk
+                .iter()
+                .map(|&(_, vb)| arena.bram_cache(self, temp, key, vb))
+                .collect();
+            // column-interleaved hop-delay matrix: mat[(off − mux_lo) * nc + j]
+            // is candidate j's delay for hop offset `off` — one contiguous
+            // row per hop keeps the candidate loop on adjacent memory. Only
+            // the three mux planes are transposed: routing chains carry
+            // nothing else (checked at `Sta::new`), so hop offsets always
+            // land in [mux_lo, mux_hi).
+            let mux_lo = ResourceType::SbMux.index() * n;
+            let mux_hi = (ResourceType::LocalMux.index() + 1) * n;
+            let mut mat = vec![0.0f64; (mux_hi - mux_lo) * nc];
+            for (j, c) in cores.iter().enumerate() {
+                for off in mux_lo..mux_hi {
+                    mat[(off - mux_lo) * nc + j] = c[off];
+                }
+            }
+            let tile_of = |cell: u32| -> usize { self.tile_of_cell[cell as usize] as usize };
+            let res = self.propagate_many(
+                nc,
+                |conn, _sink, nd: &mut [f64]| {
+                    for v in nd.iter_mut() {
+                        *v = 0.0;
+                    }
+                    for &off in
+                        &self.hop_offsets[conn.hop_start as usize..conn.hop_end as usize]
+                    {
+                        let o = off as usize - mux_lo;
+                        let row = &mat[o * nc..(o + 1) * nc];
+                        for j in 0..nc {
+                            nd[j] += row[j];
+                        }
+                    }
+                },
+                |kind, cell, j| match kind {
+                    CellKind::Lut(_) => cores[j][ResourceType::Lut.index() * n + tile_of(cell)],
+                    CellKind::Dsp => cores[j][ResourceType::Dsp.index() * n + tile_of(cell)],
+                    _ => 0.0,
+                },
+                |kind, cell, j| match kind {
+                    CellKind::Ff => cores[j][ResourceType::Ff.index() * n + tile_of(cell)],
+                    CellKind::Bram => brams[j][tile_of(cell)],
+                    _ => 0.0,
+                },
+            );
+            out.extend(res);
+        }
+        out
+    }
+
+    /// Batched companion of `propagate`: identical traversal and identical
+    /// per-candidate arithmetic (same additions, same comparisons, in the
+    /// same order), with the candidate loop innermost so the net/cell
+    /// bookkeeping is loaded once per node instead of once per probe.
+    fn propagate_many<FN, FC, FL>(
+        &self,
+        nc: usize,
+        net_delay: FN,
+        cell_delay: FC,
+        launch_delay: FL,
+    ) -> Vec<StaResult>
+    where
+        FN: Fn(&super::Conn, u32, &mut [f64]),
+        FC: Fn(&CellKind, u32, usize) -> f64,
+        FL: Fn(&CellKind, u32, usize) -> f64,
+    {
+        let nl = self.nl;
+        let nn = nl.nets.len();
+        let mut arrival = vec![0.0f64; nn * nc];
+        let mut through_bram = vec![false; nn * nc];
+        let mut through_dsp = vec![false; nn * nc];
+        // launch from sequential sources + PIs
+        for (cid, c) in nl.cells.iter().enumerate() {
+            if c.output == NO_NET {
+                continue;
+            }
+            match c.kind {
+                CellKind::Input => {} // arrival already 0.0
+                CellKind::Ff | CellKind::Bram => {
+                    let base = c.output as usize * nc;
+                    let is_bram = matches!(c.kind, CellKind::Bram);
+                    for j in 0..nc {
+                        arrival[base + j] = launch_delay(&c.kind, cid as u32, j);
+                        through_bram[base + j] = is_bram;
+                    }
+                }
+                _ => {}
+            }
+        }
+        let occ_of_pin = &self.occ_of_pin;
+        let mut nd = vec![0.0f64; nc];
+        let mut worst = vec![0.0f64; nc];
+        let mut wbram = vec![false; nc];
+        let mut wdsp = vec![false; nc];
+        // combinational propagation
+        for &cid in &self.order {
+            let c = &nl.cells[cid as usize];
+            if matches!(c.kind, CellKind::Output) {
+                continue;
+            }
+            for j in 0..nc {
+                worst[j] = 0.0;
+                wbram[j] = false;
+                wdsp[j] = false;
+            }
+            for (pin, &inet) in c.inputs.iter().enumerate() {
+                let occ = occ_of_pin[cid as usize][pin] as usize;
+                net_delay(self.conn(inet, occ), cid, &mut nd);
+                let base = inet as usize * nc;
+                for j in 0..nc {
+                    let a = arrival[base + j] + nd[j];
+                    if a > worst[j] {
+                        worst[j] = a;
+                        wbram[j] = through_bram[base + j];
+                        wdsp[j] = through_dsp[base + j];
+                    }
+                }
+            }
+            if c.output != NO_NET {
+                let base = c.output as usize * nc;
+                let is_dsp = matches!(c.kind, CellKind::Dsp);
+                for j in 0..nc {
+                    arrival[base + j] = worst[j] + cell_delay(&c.kind, cid, j);
+                    through_bram[base + j] = wbram[j];
+                    through_dsp[base + j] = wdsp[j] || is_dsp;
+                }
+            }
+        }
+        // endpoints: FF D pins, BRAM input pins, POs
+        let mut results: Vec<StaResult> = (0..nc)
+            .map(|_| StaResult {
+                critical_path: 0.0,
+                endpoints: Vec::new(),
+                worst_cell: 0,
+            })
+            .collect();
+        for (cid, c) in nl.cells.iter().enumerate() {
+            let is_endpoint = matches!(c.kind, CellKind::Ff | CellKind::Bram | CellKind::Output);
+            if !is_endpoint {
+                continue;
+            }
+            let is_bram = matches!(c.kind, CellKind::Bram);
+            for j in 0..nc {
+                worst[j] = 0.0;
+                wbram[j] = is_bram;
+                wdsp[j] = false;
+            }
+            for (pin, &inet) in c.inputs.iter().enumerate() {
+                let occ = occ_of_pin[cid][pin] as usize;
+                net_delay(self.conn(inet, occ), cid as u32, &mut nd);
+                let base = inet as usize * nc;
+                for j in 0..nc {
+                    let a = arrival[base + j] + nd[j];
+                    if a > worst[j] {
+                        worst[j] = a;
+                        wbram[j] |= through_bram[base + j];
+                        wdsp[j] = through_dsp[base + j];
+                    }
+                }
+            }
+            for (j, r) in results.iter_mut().enumerate() {
+                r.endpoints.push(super::Endpoint {
+                    cell: cid as u32,
+                    arrival: worst[j],
+                    through_bram: wbram[j],
+                    through_dsp: wdsp[j],
+                });
+                if worst[j] > r.critical_path {
+                    r.critical_path = worst[j];
+                    r.worst_cell = cid as u32;
+                }
+            }
+        }
+        results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn voltage_quantization_separates_vid_levels() {
+        // adjacent 10 mV VID levels map to distinct keys; sub-µV drift from
+        // `lo + i*step` axis construction collapses to the same key
+        assert_ne!(qv(0.55), qv(0.56));
+        assert_ne!(qv(0.799), qv(0.800));
+        assert_eq!(qv(0.55), qv(0.55 + 1e-8));
+        assert_eq!(qv(0.70), qv(0.55 + 15.0 * 0.01));
+    }
+
+    #[test]
+    fn temp_fingerprint_discriminates_and_repeats() {
+        let a = vec![40.0; 64];
+        let mut b = a.clone();
+        assert_eq!(temp_fingerprint(&a), temp_fingerprint(&b));
+        b[17] += 1e-12;
+        assert_ne!(temp_fingerprint(&a), temp_fingerprint(&b));
+        // length-sensitive even over equal prefixes
+        assert_ne!(temp_fingerprint(&a), temp_fingerprint(&a[..63]));
+        // -0.0 and 0.0 differ bitwise and must key differently (the maps
+        // are °C values, but the key is the bit pattern)
+        assert_ne!(temp_fingerprint(&[0.0]), temp_fingerprint(&[-0.0]));
+    }
+}

@@ -15,12 +15,21 @@
 //! * [`Sta::analyze`] — per-tile temperature map: hop chains are priced
 //!   tile-by-tile against a per-(resource, tile) delay cache rebuilt per
 //!   call, O(#hops + #tiles·#resources).
+//!
+//! The searches avoid per-probe cache rebuilds through [`batch`]: a
+//! [`StaCacheArena`] interns the caches by (quantized V, T-map fingerprint),
+//! and `analyze_many`/`analyze_flat_many` price whole candidate slates in
+//! one traversal — all bit-identical to the naive entry points above.
+
+pub mod batch;
 
 use crate::arch::Device;
 use crate::chardb::{CharTable, Rail, ResourceType};
 use crate::netlist::{CellKind, Netlist, NO_NET};
 use crate::place::{BlockGraph, Placement};
 use crate::route::{Hop, Routing};
+
+pub use batch::StaCacheArena;
 
 /// A timing endpoint (path terminus).
 #[derive(Clone, Copy, Debug)]
@@ -147,6 +156,24 @@ impl<'a> Sta<'a> {
                         };
                         let start = hop_offsets.len() as u32;
                         for h in chain {
+                            // Checked invariant: routing chains carry only
+                            // core-rail mux resources. `analyze_cached` prices
+                            // every hop out of the core-rail cache, so a
+                            // BRAM (or any cell resource) on a chain would be
+                            // silently priced at the wrong rail — corrupt the
+                            // timing loudly here instead.
+                            debug_assert!(
+                                matches!(
+                                    h.res,
+                                    ResourceType::SbMux
+                                        | ResourceType::CbMux
+                                        | ResourceType::LocalMux
+                                ),
+                                "routing chain hop must be a core-rail mux, got {:?} at ({}, {})",
+                                h.res,
+                                h.x,
+                                h.y
+                            );
                             hop_offsets.push(
                                 (h.res.index() * n_tiles
                                     + dev.idx(h.x as usize, h.y as usize))
@@ -238,7 +265,10 @@ impl<'a> Sta<'a> {
 
     /// Per-(resource, tile) delay cache for the core rail at one (T map, V).
     /// Exposed so the Algorithm-1/2 searches can memoize caches per voltage
-    /// level instead of rebuilding them on every feasibility probe (§Perf).
+    /// level instead of rebuilding them on every feasibility probe (§Perf);
+    /// [`StaCacheArena`] interns these across probes, iterations and whole
+    /// ambient sweeps. The fill goes through `CharTable::delay_many`, which
+    /// brackets the (shared) voltage once per resource.
     pub fn build_core_cache(&self, temp: &[f64], v_core: f64) -> Vec<f64> {
         let core_res = [
             ResourceType::Lut,
@@ -252,9 +282,8 @@ impl<'a> Sta<'a> {
         let mut cache = vec![0.0f64; 8 * n];
         for &r in &core_res {
             let base = r.index() * n;
-            for (t, &tc) in temp.iter().enumerate() {
-                cache[base + t] = self.table.delay(r, tc, v_core);
-            }
+            self.table
+                .delay_many(r, temp, v_core, &mut cache[base..base + n]);
         }
         cache
     }
@@ -263,9 +292,8 @@ impl<'a> Sta<'a> {
     pub fn build_bram_cache(&self, temp: &[f64], v_bram: f64) -> Vec<f64> {
         let n = self.dev.n_tiles();
         let mut cache = vec![0.0f64; n];
-        for (t, &tc) in temp.iter().enumerate() {
-            cache[t] = self.table.delay(ResourceType::Bram, tc, v_bram);
-        }
+        self.table
+            .delay_many(ResourceType::Bram, temp, v_bram, &mut cache);
         cache
     }
 
@@ -286,8 +314,8 @@ impl<'a> Sta<'a> {
             |conn, _sink_cell| {
                 let mut sum = 0.0;
                 for &off in &self.hop_offsets[conn.hop_start as usize..conn.hop_end as usize] {
-                    // BRAM never appears on routing chains, so `cache` (core
-                    // rail) prices every hop
+                    // chains carry only core-rail muxes (checked at Sta::new),
+                    // so `cache` (core rail) prices every hop
                     sum += cache[off as usize];
                 }
                 sum
@@ -504,6 +532,27 @@ mod tests {
         let bram = longest_bram_path(&res);
         assert!(bram > 0.0, "mkPktMerge has BRAM paths");
         assert!(bram <= res.critical_path + 1e-15);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "routing chain hop must be a core-rail mux")]
+    fn malformed_netlist_with_bram_hop_panics_loudly() {
+        let mut f = fixture("mkPktMerge");
+        // corrupt the routing: inject a BRAM "hop" into the first routed
+        // chain — pre-invariant this was silently priced off the core rail
+        let bn = f
+            .routing
+            .paths
+            .iter()
+            .position(|p| !p.is_empty())
+            .expect("mkPktMerge has routed nets");
+        f.routing.paths[bn][0].push(Hop {
+            res: ResourceType::Bram,
+            x: 1,
+            y: 1,
+        });
+        let _ = Sta::new(&f.nl, &f.bg, &f.pl, &f.routing, &f.dev, &f.table);
     }
 
     #[test]

@@ -6,4 +6,4 @@ pub mod stats;
 pub mod table;
 pub mod tomlite;
 
-pub use rng::{SplitMix64, Xoshiro256};
+pub use rng::{mix64, SplitMix64, Xoshiro256};

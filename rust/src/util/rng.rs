@@ -5,6 +5,14 @@
 //! these generators so that every experiment in EXPERIMENTS.md is exactly
 //! reproducible from the config seed.
 
+/// One step of the rotate-xor-multiply fold shared by the fleet telemetry
+/// fingerprint and the STA cache arena's temperature-map fingerprint —
+/// one place for the constants, so the two sites cannot silently drift.
+#[inline]
+pub fn mix64(acc: u64, v: u64) -> u64 {
+    (acc.rotate_left(7) ^ v).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
 /// SplitMix64 — used for seeding and cheap hashing.
 #[derive(Clone, Debug)]
 pub struct SplitMix64 {

@@ -28,7 +28,10 @@ pub fn max(xs: &[f64]) -> f64 {
 
 /// Segment bracket for a sorted axis: index `i` (with `xs[i] <= x <= xs[i+1]`
 /// in the interior) and the interpolation fraction; out-of-range `x` clamps
-/// to the end segments. Requires `xs.len() >= 2`.
+/// to the end segments. Requires `xs.len() >= 2`. Duplicate axis points
+/// (a zero-width segment) yield fraction 0.0 instead of a 0/0 NaN — this
+/// function feeds `interp1`, `PowerSurface` and every chardb lookup, so a
+/// NaN here would silently poison all downstream delay/power numbers.
 pub fn bracket(xs: &[f64], x: f64) -> (usize, f64) {
     debug_assert!(xs.len() >= 2);
     if x <= xs[0] {
@@ -49,7 +52,12 @@ pub fn bracket(xs: &[f64], x: f64) -> (usize, f64) {
             hi = mid;
         }
     }
-    (lo, (x - xs[lo]) / (xs[hi] - xs[lo]))
+    let span = xs[hi] - xs[lo];
+    if span > 0.0 {
+        (lo, (x - xs[lo]) / span)
+    } else {
+        (lo, 0.0)
+    }
 }
 
 /// Linear interpolation in a sorted table of (x, y) points. Clamps at ends.
@@ -67,10 +75,14 @@ pub fn interp1(xs: &[f64], ys: &[f64], x: f64) -> f64 {
 }
 
 /// Percentile (0..=100) with linear interpolation; input need not be sorted.
+/// Returns 0.0 for empty input (all-pass runs produce empty violation lists;
+/// report paths must not panic on them). NaN-safe: `total_cmp` ordering.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
-    assert!(!xs.is_empty());
+    if xs.is_empty() {
+        return 0.0;
+    }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b));
     let rank = (p / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -131,6 +143,30 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 100.0), 5.0);
         assert_eq!(percentile(&xs, 50.0), 3.0);
+    }
+
+    #[test]
+    fn percentile_empty_is_zero_not_panic() {
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(percentile(&[], 95.0), 0.0);
+    }
+
+    #[test]
+    fn bracket_duplicate_axis_points_yield_finite_fraction() {
+        // zero-width interior segment: x lands exactly on the duplicate
+        let xs = [0.0, 1.0, 1.0, 2.0];
+        let (i, f) = bracket(&xs, 1.0);
+        assert!(f.is_finite(), "bracket returned NaN fraction: {f}");
+        assert_eq!(f, 0.0);
+        assert!(i == 1 || i == 2, "segment index {i}");
+        // and interp1 built on it stays finite too
+        let ys = [0.0, 10.0, 20.0, 30.0];
+        let y = interp1(&xs, &ys, 1.0);
+        assert!(y.is_finite(), "interp1 poisoned by duplicate axis: {y}");
+        assert!((10.0..=20.0).contains(&y));
+        // fully degenerate axis
+        let (i2, f2) = bracket(&[5.0, 5.0], 5.0);
+        assert_eq!((i2, f2), (0, 0.0));
     }
 
     #[test]

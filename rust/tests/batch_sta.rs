@@ -1,0 +1,308 @@
+//! Differential-equivalence tests for the batched, memoizing STA engine
+//! (`timing::batch`): every cached/batched evaluation path must be
+//! bit-identical to the naive `Sta::analyze` / `Sta::analyze_flat`, over a
+//! randomized (V, T-map) grid — and the searches rebuilt on top of it must
+//! reproduce the pre-refactor results exactly.
+
+use thermovolt::config::Config;
+use thermovolt::flow::dynamic::VoltageLut;
+use thermovolt::flow::{alg1, alg2, Design, Effort};
+use thermovolt::thermal::{NativeSolver, ThermalGrid};
+use thermovolt::timing::{StaCacheArena, StaResult};
+use thermovolt::util::Xoshiro256;
+
+fn design() -> (Design, Config) {
+    let mut cfg = Config::new();
+    cfg.flow.t_amb = 65.0;
+    cfg.thermal.theta_ja = 2.0;
+    let d = Design::build("mkPktMerge", &cfg, Effort::Quick).unwrap();
+    (d, cfg)
+}
+
+fn solver(d: &Design, cfg: &Config) -> NativeSolver {
+    NativeSolver::new(
+        ThermalGrid::calibrated(d.dev.rows, d.dev.cols, &cfg.thermal),
+        &cfg.thermal,
+    )
+}
+
+fn assert_results_bit_identical(a: &StaResult, b: &StaResult, what: &str) {
+    assert_eq!(
+        a.critical_path.to_bits(),
+        b.critical_path.to_bits(),
+        "{what}: critical path diverged ({} vs {})",
+        a.critical_path,
+        b.critical_path
+    );
+    assert_eq!(a.worst_cell, b.worst_cell, "{what}: worst cell diverged");
+    assert_eq!(a.endpoints.len(), b.endpoints.len(), "{what}: endpoint count");
+    for (ea, eb) in a.endpoints.iter().zip(&b.endpoints) {
+        assert_eq!(ea.cell, eb.cell, "{what}: endpoint cell");
+        assert_eq!(
+            ea.arrival.to_bits(),
+            eb.arrival.to_bits(),
+            "{what}: arrival diverged at cell {}",
+            ea.cell
+        );
+        assert_eq!(ea.through_bram, eb.through_bram, "{what}: bram flag");
+        assert_eq!(ea.through_dsp, eb.through_dsp, "{what}: dsp flag");
+    }
+}
+
+fn random_temp_map(rng: &mut Xoshiro256, n: usize) -> Vec<f64> {
+    // mixture of shapes the flows actually produce: uniform maps, smooth
+    // gradients and per-tile noise around a hot mean
+    match rng.range(0, 3) {
+        0 => vec![rng.uniform(10.0, 95.0); n],
+        1 => {
+            let base = rng.uniform(20.0, 70.0);
+            let slope = rng.uniform(0.0, 20.0);
+            (0..n)
+                .map(|i| base + slope * i as f64 / n.max(1) as f64)
+                .collect()
+        }
+        _ => {
+            let base = rng.uniform(25.0, 80.0);
+            (0..n).map(|_| base + rng.uniform(-8.0, 8.0)).collect()
+        }
+    }
+}
+
+fn random_pairs(rng: &mut Xoshiro256, cfg: &Config, count: usize) -> Vec<(f64, f64)> {
+    let core = cfg.vgrid.core_levels();
+    let bram = cfg.vgrid.bram_levels();
+    (0..count)
+        .map(|_| {
+            if rng.chance(0.8) {
+                // on-grid pairs (what the searches probe) — including repeats
+                (core[rng.below(core.len())], bram[rng.below(bram.len())])
+            } else {
+                // off-grid continuous pairs (robustness)
+                (rng.uniform(0.55, 0.80), rng.uniform(0.55, 0.95))
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn batched_and_cached_sta_bit_identical_over_random_grid() {
+    let (d, cfg) = design();
+    let sta = d.sta();
+    let n = d.dev.n_tiles();
+    let mut rng = Xoshiro256::new(0xBA7C_57A0);
+    let mut arena = StaCacheArena::new();
+    for round in 0..6 {
+        let temp = random_temp_map(&mut rng, n);
+        let count = rng.range(1, 21);
+        let pairs = random_pairs(&mut rng, &cfg, count);
+        // batched-many against scalar naive
+        let many = sta.analyze_many(&temp, &pairs, &mut arena);
+        assert_eq!(many.len(), pairs.len());
+        for (i, &(vc, vb)) in pairs.iter().enumerate() {
+            let naive = sta.analyze(&temp, vc, vb);
+            assert_results_bit_identical(
+                &many[i],
+                &naive,
+                &format!("analyze_many round {round} pair {i} ({vc}, {vb})"),
+            );
+            // arena single-shot path too (exercises cache hits from the
+            // batched fill above)
+            let cached = arena.analyze(&sta, &temp, vc, vb);
+            assert_results_bit_identical(
+                &cached,
+                &naive,
+                &format!("arena.analyze round {round} pair {i}"),
+            );
+        }
+    }
+    // the arena must actually have been hitting: every pair re-probed once
+    assert!(
+        arena.stats.core_hits > 0 && arena.stats.bram_hits > 0,
+        "arena never hit: {:?}",
+        arena.stats
+    );
+}
+
+#[test]
+fn batched_flat_sta_bit_identical_over_random_grid() {
+    let (d, cfg) = design();
+    let sta = d.sta();
+    let mut rng = Xoshiro256::new(0xF1A7_57A0);
+    for _ in 0..4 {
+        let t_c = rng.uniform(0.0, 100.0);
+        let count = rng.range(1, 40);
+        let pairs = random_pairs(&mut rng, &cfg, count);
+        let many = sta.analyze_flat_many(t_c, &pairs);
+        for (i, &(vc, vb)) in pairs.iter().enumerate() {
+            let naive = sta.analyze_flat(t_c, vc, vb);
+            assert_results_bit_identical(
+                &many[i],
+                &naive,
+                &format!("analyze_flat_many at T={t_c} pair {i} ({vc}, {vb})"),
+            );
+        }
+    }
+}
+
+#[test]
+fn arena_flat_memo_returns_the_naive_result() {
+    let (d, cfg) = design();
+    let sta = d.sta();
+    let mut arena = StaCacheArena::new();
+    let a = arena
+        .analyze_flat(&sta, cfg.thermal.t_max, 0.8, 0.95)
+        .critical_path;
+    let b = arena
+        .analyze_flat(&sta, cfg.thermal.t_max, 0.8, 0.95)
+        .critical_path;
+    let naive = sta.analyze_flat(cfg.thermal.t_max, 0.8, 0.95).critical_path;
+    assert_eq!(a.to_bits(), naive.to_bits());
+    assert_eq!(b.to_bits(), naive.to_bits());
+    assert_eq!(arena.stats.flat_hits, 1);
+    assert_eq!(arena.stats.flat_misses, 1);
+}
+
+#[test]
+fn alg2_batched_engine_reproduces_naive_path_exactly() {
+    let (d, cfg) = design();
+    let sta = d.sta();
+    let pm = d.power_model();
+    let mut s1 = solver(&d, &cfg);
+    let mut s2 = s1.clone();
+    let fast = alg2::run_with(&d, &sta, &pm, &cfg, &mut s1);
+    let naive = alg2::run_naive_with(&d, &sta, &pm, &cfg, &mut s2);
+    assert_eq!(fast.v_core.to_bits(), naive.v_core.to_bits(), "v_core");
+    assert_eq!(fast.v_bram.to_bits(), naive.v_bram.to_bits(), "v_bram");
+    assert_eq!(fast.period.to_bits(), naive.period.to_bits(), "period");
+    assert_eq!(fast.energy.to_bits(), naive.energy.to_bits(), "energy");
+    assert_eq!(fast.power.to_bits(), naive.power.to_bits(), "power");
+    assert_eq!(
+        fast.freq_ratio.to_bits(),
+        naive.freq_ratio.to_bits(),
+        "freq_ratio"
+    );
+    assert_eq!(fast.temp.len(), naive.temp.len());
+    for (a, b) in fast.temp.iter().zip(&naive.temp) {
+        assert_eq!(a.to_bits(), b.to_bits(), "temperature map diverged");
+    }
+    // identical search trajectory, not just the same winner
+    assert_eq!(fast.pairs_total, naive.pairs_total);
+    assert_eq!(fast.pairs_pruned_energy, naive.pairs_pruned_energy);
+    assert_eq!(fast.thermal_solves, naive.thermal_solves);
+    assert_eq!(fast.thermal_reused, naive.thermal_reused);
+}
+
+#[test]
+fn alg1_shared_arena_reproduces_fresh_arena_results() {
+    let (d, cfg) = design();
+    let sta = d.sta();
+    let pm = d.power_model();
+    let mut s1 = solver(&d, &cfg);
+    let mut s2 = s1.clone();
+    let fresh = alg1::run_with(&d, &sta, &pm, &cfg, &mut s1, 1.0);
+    // a pre-warmed shared arena (as VoltageLut::build uses) must not change
+    // anything: keys either hit (same bits) or miss (same build)
+    let mut arena = StaCacheArena::new();
+    let warm1 = alg1::run_with_arena(&d, &sta, &pm, &cfg, &mut s2, 1.0, &mut arena);
+    let warm2 = alg1::run_with_arena(&d, &sta, &pm, &cfg, &mut s2.clone(), 1.0, &mut arena);
+    for r in [&warm1, &warm2] {
+        assert_eq!(fresh.v_core.to_bits(), r.v_core.to_bits(), "v_core");
+        assert_eq!(fresh.v_bram.to_bits(), r.v_bram.to_bits(), "v_bram");
+        assert_eq!(fresh.power.to_bits(), r.power.to_bits(), "power");
+        assert_eq!(fresh.d_worst.to_bits(), r.d_worst.to_bits(), "d_worst");
+        assert_eq!(fresh.temp.len(), r.temp.len());
+        for (a, b) in fresh.temp.iter().zip(&r.temp) {
+            assert_eq!(a.to_bits(), b.to_bits(), "temperature map diverged");
+        }
+    }
+    // the second warm run must have reused the first run's work
+    assert!(
+        arena.stats.flat_hits > 0,
+        "shared arena never memoized d_worst: {:?}",
+        arena.stats
+    );
+}
+
+#[test]
+fn lut_build_on_shared_arena_matches_per_ambient_fresh_runs() {
+    let (d, cfg) = design();
+    let sta = d.sta();
+    let pm = d.power_model();
+    let s1 = solver(&d, &cfg);
+    let lut = VoltageLut::build(&d, &cfg, &mut s1.clone(), 25.0, 65.0, 20.0);
+    // reference: the same sweep with a fresh engine per ambient, applying
+    // the same monotone safety envelope
+    let mut entries = Vec::new();
+    let mut t = 25.0;
+    while t <= 65.0 + 1e-9 {
+        let mut c = cfg.clone();
+        c.flow.t_amb = t;
+        let r = alg1::run_with(&d, &sta, &pm, &c, &mut s1.clone(), 1.0);
+        if !r.infeasible {
+            entries.push((
+                thermovolt::util::stats::max(&r.temp),
+                r.v_core,
+                r.v_bram,
+            ));
+        }
+        t += 20.0;
+    }
+    entries.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let mut vc_run: f64 = 0.0;
+    let mut vb_run: f64 = 0.0;
+    for e in entries.iter_mut() {
+        vc_run = vc_run.max(e.1);
+        vb_run = vb_run.max(e.2);
+        e.1 = vc_run;
+        e.2 = vb_run;
+    }
+    assert_eq!(lut.entries.len(), entries.len(), "entry count diverged");
+    for (le, re) in lut.entries.iter().zip(&entries) {
+        assert_eq!(le.t_junct.to_bits(), re.0.to_bits(), "t_junct key");
+        assert_eq!(le.v_core.to_bits(), re.1.to_bits(), "lut v_core");
+        assert_eq!(le.v_bram.to_bits(), re.2.to_bits(), "lut v_bram");
+    }
+}
+
+#[test]
+fn overscale_error_model_unchanged_by_shared_arena() {
+    let (d, cfg) = design();
+    let s1 = solver(&d, &cfg);
+    let o = thermovolt::flow::overscale::overscale(&d, &cfg, &mut s1.clone(), 1.2);
+    // public fresh-engine error model must agree bit-for-bit
+    let e2 = thermovolt::flow::overscale::error_model(&d, &cfg, &o.alg1);
+    assert_eq!(o.error.mean_rate.to_bits(), e2.mean_rate.to_bits());
+    assert_eq!(o.error.hard_fraction.to_bits(), e2.hard_fraction.to_bits());
+    assert_eq!(o.error.p_viol.len(), e2.p_viol.len());
+    for (a, b) in o.error.p_viol.iter().zip(&e2.p_viol) {
+        assert_eq!(a.to_bits(), b.to_bits(), "p_viol diverged");
+    }
+}
+
+fn fleet_fingerprint(seed: u64) -> (u64, u64) {
+    use thermovolt::fleet::telemetry::FleetTelemetry;
+    use thermovolt::fleet::trace::Scenario;
+    use thermovolt::fleet::{Fleet, FleetConfig};
+    let cfg = Config::new();
+    let mut fcfg = FleetConfig::new(3, 5, Scenario::Diurnal);
+    fcfg.seed = seed;
+    fcfg.horizon_ms = 180_000.0;
+    fcfg.benches = vec!["mkPktMerge".to_string()];
+    let fleet = Fleet::build(fcfg, &cfg).unwrap();
+    let plan = fleet.plan();
+    let serial = FleetTelemetry::aggregate(3, fleet.execute(&plan, 1));
+    let parallel = FleetTelemetry::aggregate(3, fleet.execute(&plan, 3));
+    (serial.fingerprint(), parallel.fingerprint())
+}
+
+#[test]
+fn fleet_telemetry_fingerprints_survive_the_new_caching() {
+    // the fleet's job kinds are built through the arena-backed LUT sweep
+    // now; serial and parallel runs must still agree bit-for-bit, and the
+    // whole pipeline must stay deterministic across repeat builds
+    let (s1, p1) = fleet_fingerprint(0xF1EE_7002);
+    assert_eq!(s1, p1, "serial vs parallel telemetry diverged");
+    let (s2, p2) = fleet_fingerprint(0xF1EE_7002);
+    assert_eq!(s1, s2, "fleet run not reproducible across builds");
+    assert_eq!(p1, p2);
+}

@@ -131,7 +131,7 @@ fn scheduler_respects_arrivals_eligibility_and_capacity() {
             .filter(|a| a.device == d)
             .map(|a| (a.start_ms, a.start_ms + a.job.duration_ms))
             .collect();
-        windows.sort_by(|x, y| x.0.partial_cmp(&y.0).unwrap());
+        windows.sort_by(|x, y| x.0.total_cmp(&y.0));
         for w in windows.windows(2) {
             assert!(
                 w[1].0 >= w[0].1 - 1e-9,

@@ -28,5 +28,18 @@ fn main() -> anyhow::Result<()> {
          lut {:.2} s, fleet {:.2}x on {} workers ==",
         s.alg2_speedup, s.lut_wall_s, s.fleet_speedup, s.fleet_workers
     );
+    // datacenter-scale fleet bench (≥2048 devices, three-way policy engine)
+    let fleet_out = Path::new(args.opt_or("fleet-out", "BENCH_fleet.json")).to_path_buf();
+    let fs = benchkit::run_fleet(&Config::new(), &opts, &fleet_out)?;
+    println!(
+        "== fleet bench: {} devices / {} jobs, {:.2}x on {} workers, \
+         saving dyn {:.1} % / over {:.1} % ==",
+        fs.devices,
+        fs.jobs,
+        fs.speedup,
+        fs.workers,
+        fs.saving_dyn * 100.0,
+        fs.saving_over * 100.0
+    );
     Ok(())
 }

@@ -26,21 +26,26 @@ fn run_scenario(
 ) -> anyhow::Result<f64> {
     let mut fcfg = FleetConfig::new(devices, jobs, scenario);
     fcfg.effort = effort;
+    // three-way comparison: also build the §III-D over-scaled rails at the
+    // paper's near-zero-error 1.2× budget
+    fcfg.overscale_rate = 1.2;
     let fleet = Fleet::build(fcfg, cfg)?;
     let plan = fleet.plan();
     let workers = fleet.effective_workers();
     let results = fleet.execute(&plan, workers);
-    let tel = FleetTelemetry::aggregate(devices, results);
+    let tel = FleetTelemetry::aggregate(devices, results).with_unplaceable(plan.unplaceable.len());
     let table = report::fleet_table(&tel, &fleet.specs);
     table.emit(
         std::path::Path::new("results"),
         &format!("example_fleet_{}", scenario.name().replace('-', "_")),
     )?;
     println!(
-        "{}: saving {:.1} %  violations {}  throughput {:.1} jobs/h  ({} workers)\n",
+        "{}: saving dyn {:.1} % / over {:.1} %  violations {}  migrations {}  throughput {:.1} jobs/h  ({} workers)\n",
         scenario.name(),
         tel.saving() * 100.0,
+        tel.saving_over() * 100.0,
         tel.violations,
+        tel.migrations,
         tel.throughput_jobs_per_hour,
         workers
     );

@@ -13,11 +13,16 @@
 //! external deps (criterion is not vendored offline). The summary lands in
 //! `BENCH_search.json` (schema documented in README.md) so successive PRs
 //! carry a perf trajectory.
+//!
+//! [`run_fleet`] is the datacenter-scale companion: a ≥2048-device fleet
+//! through the event-driven planner and the three-way policy engine
+//! (static / dynamic / overscaled-dynamic), emitting `BENCH_fleet.json`.
 
 use std::path::Path;
 use std::time::Instant;
 
 use crate::config::Config;
+use crate::fleet::policy::PolicyKind;
 use crate::fleet::telemetry::FleetTelemetry;
 use crate::fleet::trace::Scenario;
 use crate::fleet::{Fleet, FleetConfig};
@@ -226,6 +231,119 @@ pub fn run(cfg_in: &Config, opts: &BenchOpts, out: &Path) -> anyhow::Result<Benc
     Ok(s)
 }
 
+/// Measured numbers of the datacenter-scale fleet bench (`BENCH_fleet.json`).
+#[derive(Clone, Debug, Default)]
+pub struct FleetBenchSummary {
+    pub quick: bool,
+    pub bench: String,
+    pub scenario: String,
+    pub devices: usize,
+    pub jobs: usize,
+    pub horizon_ms: f64,
+    pub overscale_rate: f64,
+    pub policy: String,
+    pub build_s: f64,
+    pub plan_s: f64,
+    pub serial_s: f64,
+    pub parallel_s: f64,
+    pub workers: usize,
+    pub speedup: f64,
+    pub fingerprint_match: bool,
+    pub migrations: usize,
+    pub unplaceable: usize,
+    pub violations: u64,
+    pub violations_over: u64,
+    pub energy_static_j: f64,
+    pub energy_dyn_j: f64,
+    pub energy_over_j: f64,
+    pub saving_dyn: f64,
+    pub saving_over: f64,
+    pub expected_errors: f64,
+    pub quality_mean: f64,
+}
+
+/// Datacenter-scale fleet bench: a ≥2048-device fleet through the
+/// event-driven planner and the three-way policy engine, serial vs
+/// work-stealing pool (fingerprint-checked), summary in `out`
+/// (`BENCH_fleet.json`).
+pub fn run_fleet(cfg_in: &Config, opts: &BenchOpts, out: &Path) -> anyhow::Result<FleetBenchSummary> {
+    // jobs ≈ 2.25× devices: arrivals land in the first ~55 % of the horizon
+    // with durations of 15–40 % of it, so offered load exceeds fleet
+    // capacity around the peak — the event queue actually queues and the
+    // migration path actually fires (with jobs ≤ devices every arrival
+    // would find an idle device and the tentpole machinery would idle too)
+    let (devices, jobs, horizon_ms) = if opts.quick {
+        (2048, 4608, 45_000.0)
+    } else {
+        (4096, 9216, 90_000.0)
+    };
+    let mut fcfg = FleetConfig::new(devices, jobs, Scenario::Diurnal);
+    fcfg.benches = vec![opts.bench.clone()];
+    fcfg.horizon_ms = horizon_ms;
+    fcfg.overscale_rate = 1.2;
+    fcfg.policy = PolicyKind::OverscaledDynamic;
+    let mut s = FleetBenchSummary {
+        quick: opts.quick,
+        bench: opts.bench.clone(),
+        scenario: fcfg.scenario.name().to_string(),
+        devices,
+        jobs,
+        horizon_ms,
+        overscale_rate: fcfg.overscale_rate,
+        policy: fcfg.policy.name().to_string(),
+        ..FleetBenchSummary::default()
+    };
+
+    println!("[bench] fleet: building {} devices / {} jobs…", devices, jobs);
+    let t0 = Instant::now();
+    let fleet = Fleet::build(fcfg, cfg_in)?;
+    s.build_s = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let plan = fleet.plan();
+    s.plan_s = t0.elapsed().as_secs_f64();
+    s.migrations = plan.migrations;
+    s.unplaceable = plan.unplaceable.len();
+    let t0 = Instant::now();
+    let serial = fleet.execute(&plan, 1);
+    s.serial_s = t0.elapsed().as_secs_f64();
+    let workers = fleet.effective_workers();
+    let t0 = Instant::now();
+    let parallel = fleet.execute(&plan, workers);
+    s.parallel_s = t0.elapsed().as_secs_f64();
+    let tel_serial = FleetTelemetry::aggregate(devices, serial);
+    let tel = FleetTelemetry::aggregate(devices, parallel).with_unplaceable(s.unplaceable);
+    s.fingerprint_match = tel_serial.fingerprint() == tel.fingerprint();
+    anyhow::ensure!(
+        s.fingerprint_match,
+        "parallel fleet telemetry diverged from the serial run"
+    );
+    s.workers = workers;
+    s.speedup = s.serial_s / s.parallel_s.max(1e-9);
+    s.violations = tel.violations;
+    s.violations_over = tel.violations_over;
+    s.energy_static_j = tel.energy_static_j;
+    s.energy_dyn_j = tel.energy_dyn_j;
+    s.energy_over_j = tel.energy_over_j;
+    s.saving_dyn = tel.saving();
+    s.saving_over = tel.saving_over();
+    s.expected_errors = tel.expected_errors;
+    s.quality_mean = tel.quality_mean;
+    println!(
+        "[bench] fleet: build {:.1} s, plan {:.2} s ({} migrations), serial {:.1} s → {} workers {:.1} s ({:.1}x)",
+        s.build_s, s.plan_s, s.migrations, s.serial_s, workers, s.parallel_s, s.speedup
+    );
+
+    let json = fleet_to_json(&s);
+    if let Some(dir) = out.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(out, &json)?;
+    println!("[bench] wrote {}", out.display());
+    Ok(s)
+}
+
 fn alg2_identical(a: &alg2::Alg2Result, b: &alg2::Alg2Result) -> bool {
     a.v_core.to_bits() == b.v_core.to_bits()
         && a.v_bram.to_bits() == b.v_bram.to_bits()
@@ -245,16 +363,8 @@ fn alg2_identical(a: &alg2::Alg2Result, b: &alg2::Alg2Result) -> bool {
 /// boolean except the benchmark name, which our suite keeps alphanumeric —
 /// escaped anyway for safety).
 fn to_json(s: &BenchSummary) -> String {
-    let esc = |t: &str| -> String {
-        t.chars()
-            .flat_map(|c| match c {
-                '"' | '\\' => vec!['\\', c],
-                c if (c as u32) < 0x20 => vec![' '],
-                c => vec![c],
-            })
-            .collect()
-    };
-    let b = |v: bool| if v { "true" } else { "false" };
+    let esc = json_escape;
+    let b = json_bool;
     format!(
         concat!(
             "{{\n",
@@ -313,9 +423,115 @@ fn to_json(s: &BenchSummary) -> String {
     )
 }
 
+/// JSON string escaping shared by both emitters: backslash-escape quotes
+/// and backslashes, blank out control characters.
+fn json_escape(t: &str) -> String {
+    t.chars()
+        .flat_map(|c| match c {
+            '"' | '\\' => vec!['\\', c],
+            c if (c as u32) < 0x20 => vec![' '],
+            c => vec![c],
+        })
+        .collect()
+}
+
+fn json_bool(v: bool) -> &'static str {
+    if v {
+        "true"
+    } else {
+        "false"
+    }
+}
+
+/// Hand-rolled JSON for the fleet bench (same conventions as [`to_json`]).
+fn fleet_to_json(s: &FleetBenchSummary) -> String {
+    let esc = json_escape;
+    let b = json_bool;
+    format!(
+        concat!(
+            "{{\n",
+            "  \"schema\": \"thermovolt-bench-fleet/1\",\n",
+            "  \"quick\": {quick},\n",
+            "  \"bench\": \"{bench}\",\n",
+            "  \"scenario\": \"{scenario}\",\n",
+            "  \"devices\": {devices},\n",
+            "  \"jobs\": {jobs},\n",
+            "  \"horizon_ms\": {horizon},\n",
+            "  \"overscale_rate\": {rate},\n",
+            "  \"policy\": \"{policy}\",\n",
+            "  \"timing\": {{ \"build_s\": {build}, \"plan_s\": {plan}, ",
+            "\"serial_s\": {serial}, \"parallel_s\": {parallel}, ",
+            "\"workers\": {workers}, \"speedup\": {speedup} }},\n",
+            "  \"schedule\": {{ \"migrations\": {migr}, \"unplaceable\": {unpl}, ",
+            "\"fingerprint_match\": {fpm} }},\n",
+            "  \"energy\": {{ \"static_j\": {e_st}, \"dynamic_j\": {e_dy}, ",
+            "\"overscaled_j\": {e_ov}, \"saving_dyn\": {s_dy}, ",
+            "\"saving_over\": {s_ov} }},\n",
+            "  \"errors\": {{ \"violations\": {viol}, \"violations_over\": {violo}, ",
+            "\"expected_timing_errors\": {exp}, \"quality_mean\": {qual} }}\n",
+            "}}\n"
+        ),
+        quick = b(s.quick),
+        bench = esc(&s.bench),
+        scenario = esc(&s.scenario),
+        devices = s.devices,
+        jobs = s.jobs,
+        horizon = s.horizon_ms,
+        rate = s.overscale_rate,
+        policy = esc(&s.policy),
+        build = s.build_s,
+        plan = s.plan_s,
+        serial = s.serial_s,
+        parallel = s.parallel_s,
+        workers = s.workers,
+        speedup = s.speedup,
+        migr = s.migrations,
+        unpl = s.unplaceable,
+        fpm = b(s.fingerprint_match),
+        e_st = s.energy_static_j,
+        e_dy = s.energy_dyn_j,
+        e_ov = s.energy_over_j,
+        s_dy = s.saving_dyn,
+        s_ov = s.saving_over,
+        viol = s.violations,
+        violo = s.violations_over,
+        exp = s.expected_errors,
+        qual = s.quality_mean,
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn fleet_json_shape_is_valid_enough() {
+        let s = FleetBenchSummary {
+            bench: "mkPktMerge".to_string(),
+            scenario: "diurnal".to_string(),
+            devices: 2048,
+            jobs: 1024,
+            fingerprint_match: true,
+            ..FleetBenchSummary::default()
+        };
+        let j = fleet_to_json(&s);
+        assert_eq!(
+            j.matches('{').count(),
+            j.matches('}').count(),
+            "unbalanced braces:\n{j}"
+        );
+        for key in [
+            "\"schema\"",
+            "\"thermovolt-bench-fleet/1\"",
+            "\"devices\": 2048",
+            "\"timing\"",
+            "\"schedule\"",
+            "\"energy\"",
+            "\"errors\"",
+        ] {
+            assert!(j.contains(key), "missing {key} in:\n{j}");
+        }
+    }
 
     #[test]
     fn json_shape_is_valid_enough() {

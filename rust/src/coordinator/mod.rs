@@ -45,8 +45,12 @@ impl Regulator {
     }
 
     pub fn command(&mut self, v: f64) {
-        // snap to VID grid
-        self.v_target = (v / self.step).round() * self.step;
+        // Snap *upward* to the VID grid: nearest-step rounding could settle
+        // up to step/2 below a LUT-required rail — a silent guardband
+        // violation. The 1e-9-step tolerance keeps commands that are exact
+        // grid multiples (modulo float division noise) on their own step
+        // instead of bumping them a full step up.
+        self.v_target = (v / self.step - 1e-9).ceil() * self.step;
     }
 
     /// Advance by `dt_ms`; the output slews toward the target.
@@ -340,6 +344,36 @@ mod tests {
             r.tick(1.0);
         }
         assert!((r.v_now - 0.55).abs() < 1e-9);
+    }
+
+    #[test]
+    fn regulator_never_settles_below_commanded_voltage() {
+        // regression: nearest-step snapping undercut off-grid commands by
+        // up to step/2; the ceil snap must always settle at-or-above
+        let mut r = Regulator::new(0.50);
+        for &v in &[0.555, 0.6789, 0.7213, 0.68, 0.701, 0.7000000001, 0.55] {
+            r.command(v);
+            for _ in 0..300 {
+                r.tick(1.0);
+            }
+            assert!(
+                r.v_now >= v - 1e-12,
+                "settled {} below commanded {v}",
+                r.v_now
+            );
+            // and never over-provisions by more than one VID step
+            assert!(
+                r.v_now <= v + r.step + 1e-9,
+                "settled {} more than a step above {v}",
+                r.v_now
+            );
+        }
+        // an on-grid command stays on its own step
+        r.command(0.68);
+        for _ in 0..300 {
+            r.tick(1.0);
+        }
+        assert!((r.v_now - 0.68).abs() < 1e-9, "on-grid drifted: {}", r.v_now);
     }
 
     #[test]

@@ -7,11 +7,19 @@
 //! Layout:
 //! * [`trace`] — scenario generators (diurnal cycle, heat wave, rack
 //!   thermal gradient, bursty arrivals), all seeded and reproducible;
-//! * [`scheduler`] — deterministic thermal-aware placement (coolest
-//!   eligible device) + a work-stealing thread pool that executes the
-//!   per-job controller simulations;
+//! * [`scheduler`] — deterministic event-driven thermal-aware placement
+//!   (arrival/finish/migration events, coolest eligible device, queued
+//!   jobs migrate off hot busy racks, unplaceable jobs reported) + a
+//!   work-stealing thread pool that executes the per-job controller
+//!   simulations;
+//! * [`policy`] — the rail-provisioning policy engine: static (nominal
+//!   rails), dynamic (Algorithm-1 LUT), and overscaled-dynamic (§III-D
+//!   rails at a configurable CP-violation rate with an error/quality
+//!   model); every job is simulated under all three;
 //! * [`telemetry`] — fleet-wide power/energy/violation/throughput
-//!   aggregation with percentiles via `util::stats`.
+//!   aggregation with percentiles via `util::stats`, carrying the
+//!   three-way policy comparison, expected timing errors, quality,
+//!   migration and unplaceable counts.
 //!
 //! Heterogeneity model: every device gets its own θ_JA (cooling spread),
 //! thermal time constant, rack-position ambient offset, per-unit guardband
@@ -26,6 +34,7 @@
 //! serial and multi-threaded runs produce bit-identical telemetry. The CLI
 //! runs both and checks the fingerprints.
 
+pub mod policy;
 pub mod scheduler;
 pub mod telemetry;
 pub mod trace;
@@ -34,10 +43,12 @@ use std::sync::Arc;
 
 use crate::config::Config;
 use crate::flow::dynamic::VoltageLut;
+use crate::flow::overscale;
 use crate::flow::{Design, Effort};
 use crate::runtime::select_backend;
 use crate::util::rng::Xoshiro256;
 use crate::util::stats;
+use policy::{OverscaleSpec, PolicyKind};
 use trace::Scenario;
 
 /// One simulated FPGA unit in the fleet.
@@ -171,6 +182,10 @@ pub struct JobKind {
     pub f_clk: f64,
     /// Per-design (T → V) lookup table from Algorithm 1.
     pub lut: Arc<VoltageLut>,
+    /// §III-D over-scaled rails + error model (when the fleet enables a
+    /// CP-violation rate > 1); `None` means the overscaled policy degrades
+    /// to the dynamic one.
+    pub overscale: Option<Arc<OverscaleSpec>>,
     pub surface: Arc<PowerSurface>,
     pub v_core_nom: f64,
     pub v_bram_nom: f64,
@@ -181,9 +196,23 @@ impl JobKind {
         self.rows.max(self.cols)
     }
 
+    /// Expected load power (W) for the planner's junction-temperature
+    /// prediction: the LUT's coolest operating point when it carries one.
+    /// An empty LUT, or a degenerate `VoltageLut::fixed` row (which stores
+    /// `power: 0.0` — it has no characterization data), would leave the
+    /// thermal-aware placement blind, so fall back to the power surface at
+    /// nominal rails and a representative junction temperature.
+    pub fn power_estimate(&self) -> f64 {
+        match self.lut.entries.first() {
+            Some(e) if e.power > 0.0 => e.power,
+            _ => self.surface.eval(self.v_core_nom, self.v_bram_nom, 60.0),
+        }
+    }
+
     /// Implement `bench` through the CAD pipeline, build its voltage LUT
     /// over `[lut_lo, lut_hi]` ambient (step `lut_step`), and precompute the
-    /// power surface.
+    /// power surface. `overscale_rate` > 1 additionally builds the §III-D
+    /// over-scaled LUT and error model for the overscaled-dynamic policy.
     pub fn build(
         bench: &str,
         cfg: &Config,
@@ -191,6 +220,7 @@ impl JobKind {
         lut_lo: f64,
         lut_hi: f64,
         lut_step: f64,
+        overscale_rate: Option<f64>,
     ) -> anyhow::Result<JobKind> {
         let design = Design::build(bench, cfg, effort)?;
         let mut backend = select_backend(
@@ -210,12 +240,41 @@ impl JobKind {
             .critical_path;
         let f_clk = 1.0 / (d_worst * (1.0 + cfg.flow.guardband));
         let surface = PowerSurface::build(&design, cfg, f_clk);
+        // §III-D: over-scaled rails for the error-tolerant policy. The
+        // error model is priced once at the scenario's deployment corner
+        // (cfg.flow.t_amb was set to it by Fleet::build); an infeasible or
+        // empty over-scaled sweep silently degrades the policy to dynamic.
+        let over = match overscale_rate {
+            Some(rate) if rate > 1.0 + 1e-12 => {
+                let o = overscale::overscale(&design, cfg, backend.as_mut(), rate);
+                let lut_os = VoltageLut::build_rate(
+                    &design,
+                    cfg,
+                    backend.as_mut(),
+                    lut_lo,
+                    lut_hi,
+                    lut_step,
+                    rate,
+                );
+                if o.alg1.infeasible || lut_os.entries.is_empty() {
+                    None
+                } else {
+                    Some(Arc::new(OverscaleSpec {
+                        rate,
+                        lut: Arc::new(lut_os),
+                        error: o.error,
+                    }))
+                }
+            }
+            _ => None,
+        };
         Ok(JobKind {
             bench: bench.to_string(),
             rows: design.dev.rows,
             cols: design.dev.cols,
             f_clk,
             lut: Arc::new(lut),
+            overscale: over,
             surface: Arc::new(surface),
             v_core_nom: cfg.arch.v_core_nom,
             v_bram_nom: cfg.arch.v_bram_nom,
@@ -240,6 +299,17 @@ pub struct FleetConfig {
     /// Ambient step for the per-design LUT sweep (°C).
     pub lut_step_c: f64,
     pub effort: Effort,
+    /// §III-D CP-violation rate for the overscaled-dynamic policy; values
+    /// ≤ 1 disable the over-scaled build (the policy then degrades to
+    /// dynamic, exactly — rate 1.0 produces the same rails).
+    pub overscale_rate: f64,
+    /// Governing policy for every job kind (the per-kind override below
+    /// wins when non-empty). All three policies are always simulated for
+    /// the comparison; this selects which one's energy a kind *runs at*.
+    pub policy: PolicyKind,
+    /// Per-kind governing policies, aligned with `benches`. Empty ⇒ every
+    /// kind uses `policy`.
+    pub kind_policies: Vec<PolicyKind>,
 }
 
 impl FleetConfig {
@@ -254,6 +324,9 @@ impl FleetConfig {
             benches: vec!["mkPktMerge".to_string(), "sha".to_string()],
             lut_step_c: 12.0,
             effort: Effort::Quick,
+            overscale_rate: 0.0,
+            policy: PolicyKind::Dynamic,
+            kind_policies: Vec::new(),
         }
     }
 }
@@ -265,6 +338,8 @@ pub struct Fleet {
     pub cfg: FleetConfig,
     pub specs: Vec<DeviceSpec>,
     pub kinds: Vec<Arc<JobKind>>,
+    /// Governing policy per job kind (aligned with `kinds`).
+    pub policies: Vec<PolicyKind>,
     /// Shared ambient trace (time_ms, °C).
     pub ambient: Vec<(f64, f64)>,
     /// Job stream sorted by arrival.
@@ -293,7 +368,9 @@ impl Fleet {
         let lut_hi = stats::max(&amb_temps) + max_off + 25.0;
 
         // job kinds: the expensive part (P&R + Algorithm-1 LUT sweep per
-        // benchmark), computed once and shared by every worker thread
+        // benchmark, plus the §III-D over-scaled sweep when enabled),
+        // computed once and shared by every worker thread
+        let overscale_rate = (fcfg.overscale_rate > 1.0 + 1e-12).then_some(fcfg.overscale_rate);
         let mut kinds = Vec::with_capacity(fcfg.benches.len());
         for bench in &fcfg.benches {
             kinds.push(Arc::new(JobKind::build(
@@ -303,8 +380,26 @@ impl Fleet {
                 lut_lo,
                 lut_hi,
                 fcfg.lut_step_c,
+                overscale_rate,
             )?));
         }
+
+        // governing policy per kind
+        anyhow::ensure!(
+            fcfg.kind_policies.is_empty() || fcfg.kind_policies.len() == kinds.len(),
+            "kind_policies must be empty or name one policy per benchmark ({} kinds)",
+            kinds.len()
+        );
+        let policies: Vec<PolicyKind> = if fcfg.kind_policies.is_empty() {
+            vec![fcfg.policy; kinds.len()]
+        } else {
+            fcfg.kind_policies.clone()
+        };
+        anyhow::ensure!(
+            overscale_rate.is_some()
+                || policies.iter().all(|p| *p != PolicyKind::OverscaledDynamic),
+            "overscaled-dynamic governing policy requires an overscale rate > 1.0"
+        );
 
         // heterogeneous device roster: two capacity bins (every third device
         // is the small bin, only eligible for the smaller designs) plus
@@ -348,13 +443,16 @@ impl Fleet {
             cfg: fcfg,
             specs,
             kinds,
+            policies,
             ambient,
             jobs,
         })
     }
 
-    /// Deterministic thermal-aware placement of the whole job stream.
-    pub fn plan(&self) -> Vec<scheduler::Assignment> {
+    /// Deterministic event-driven placement of the whole job stream:
+    /// arrival/finish/migration events, unplaceable jobs reported (never a
+    /// panic).
+    pub fn plan(&self) -> scheduler::Plan {
         scheduler::plan(self)
     }
 
@@ -362,10 +460,10 @@ impl Fleet {
     /// per-job results sorted by job id — identical for any worker count.
     pub fn execute(
         &self,
-        plan: &[scheduler::Assignment],
+        plan: &scheduler::Plan,
         workers: usize,
     ) -> Vec<telemetry::JobResult> {
-        scheduler::execute(self, plan, workers)
+        scheduler::execute(self, &plan.assignments, workers)
     }
 
     /// Worker count the parallel run should use.

@@ -1,0 +1,182 @@
+//! Rail-provisioning policy engine for the fleet executor.
+//!
+//! A [`Policy`] decides which (T → V) lookup table drives a job's online
+//! controller and what timing-error rate those rails admit:
+//!
+//! * [`Static`] — nominal rails, the paper's one-size-fits-all worst-case
+//!   provisioning (a degenerate single-row LUT, so all three policies run
+//!   through the identical plant/controller code);
+//! * [`Dynamic`] — the per-design Algorithm-1 [`VoltageLut`] (§III-B), the
+//!   safe sensor-driven scheme (zero modeled timing errors);
+//! * [`OverscaledDynamic`] — §III-D over-scaled rails built at a
+//!   configurable CP-violation rate: Algorithm 1 re-runs the ambient sweep
+//!   with the timing constraint relaxed to `rate × d_worst`, and the
+//!   post-P&R [`ErrorModel`] prices the bounded timing errors those rails
+//!   admit. The error rate feeds per-job expected-error counts and, via
+//!   `ml::expected_accuracy`, quality telemetry.
+//!
+//! Policies are stateless unit structs: the data lives on [`JobKind`]
+//! (`lut`, `overscale`), the policy just selects it. The executor runs
+//! every job under all three for the three-way telemetry comparison;
+//! `Fleet::policies` records which one *governs* each job kind (selectable
+//! per kind, CLI `--policy`).
+
+use std::sync::Arc;
+
+use super::JobKind;
+use crate::flow::dynamic::VoltageLut;
+use crate::flow::overscale::ErrorModel;
+
+/// Quality-proxy constants for the overscaled policy's telemetry: a clean
+/// LeNet-class accuracy degrading toward 10-class chance, amplified over
+/// the Fig.-8 conv-layer reduction depth (`ml::LENET_K[1]` = 72 cycles per
+/// output).
+pub const QUALITY_CLEAN_ACC: f64 = 0.98;
+pub const QUALITY_CHANCE_ACC: f64 = 1.0 / crate::ml::LENET_CLASSES as f64;
+pub const QUALITY_DEPTH: usize = crate::ml::LENET_K[1];
+
+/// §III-D data for one job kind: the over-scaled (T → V) table and the
+/// timing-error model its rails admit. Built by `JobKind::build` when the
+/// fleet enables a CP-violation rate > 1.
+#[derive(Clone, Debug)]
+pub struct OverscaleSpec {
+    /// CP-delay violation rate the rails were optimized for (> 1).
+    pub rate: f64,
+    /// Over-scaled lookup table (`VoltageLut::build_rate`).
+    pub lut: Arc<VoltageLut>,
+    /// Post-P&R timing-error model at the deployment corner.
+    pub error: ErrorModel,
+}
+
+/// Discriminant for a [`Policy`] — what the config, CLI, and telemetry
+/// carry around.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PolicyKind {
+    Static,
+    Dynamic,
+    OverscaledDynamic,
+}
+
+impl PolicyKind {
+    pub fn all() -> [PolicyKind; 3] {
+        [
+            PolicyKind::Static,
+            PolicyKind::Dynamic,
+            PolicyKind::OverscaledDynamic,
+        ]
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PolicyKind::Static => "static",
+            PolicyKind::Dynamic => "dynamic",
+            PolicyKind::OverscaledDynamic => "overscaled",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<PolicyKind> {
+        match name {
+            "static" => Some(PolicyKind::Static),
+            "dynamic" => Some(PolicyKind::Dynamic),
+            "overscaled" | "overscaled-dynamic" => Some(PolicyKind::OverscaledDynamic),
+            _ => None,
+        }
+    }
+
+    /// The (stateless) policy implementation behind this discriminant.
+    pub fn as_policy(self) -> &'static dyn Policy {
+        match self {
+            PolicyKind::Static => &Static,
+            PolicyKind::Dynamic => &Dynamic,
+            PolicyKind::OverscaledDynamic => &OverscaledDynamic,
+        }
+    }
+}
+
+/// A rail-provisioning policy: which LUT drives the controller for a job
+/// kind, and what per-cycle timing-violation rate those rails admit.
+pub trait Policy: Send + Sync {
+    fn kind(&self) -> PolicyKind;
+
+    /// The lookup table the online controller indexes under this policy.
+    fn lut(&self, jk: &JobKind) -> Arc<VoltageLut>;
+
+    /// Modeled per-cycle timing-violation rate under this policy's rails
+    /// (zero for the safe policies).
+    fn error_rate(&self, jk: &JobKind) -> f64;
+}
+
+/// Nominal rails — the worst-case baseline.
+pub struct Static;
+
+impl Policy for Static {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::Static
+    }
+
+    fn lut(&self, jk: &JobKind) -> Arc<VoltageLut> {
+        Arc::new(VoltageLut::fixed(jk.v_core_nom, jk.v_bram_nom))
+    }
+
+    fn error_rate(&self, _jk: &JobKind) -> f64 {
+        0.0
+    }
+}
+
+/// The safe sensor-driven LUT controller (today's dynamic scheme).
+pub struct Dynamic;
+
+impl Policy for Dynamic {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::Dynamic
+    }
+
+    fn lut(&self, jk: &JobKind) -> Arc<VoltageLut> {
+        jk.lut.clone()
+    }
+
+    fn error_rate(&self, _jk: &JobKind) -> f64 {
+        0.0
+    }
+}
+
+/// §III-D over-scaled rails at the configured CP-violation rate. A kind
+/// without an [`OverscaleSpec`] degrades to the dynamic policy — at
+/// rate 1.0 the over-scaled table *is* the safe table, so the fallback is
+/// semantically exact, not an approximation.
+pub struct OverscaledDynamic;
+
+impl Policy for OverscaledDynamic {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::OverscaledDynamic
+    }
+
+    fn lut(&self, jk: &JobKind) -> Arc<VoltageLut> {
+        match &jk.overscale {
+            Some(o) => o.lut.clone(),
+            None => jk.lut.clone(),
+        }
+    }
+
+    fn error_rate(&self, jk: &JobKind) -> f64 {
+        jk.overscale.as_ref().map_or(0.0, |o| o.error.mean_rate)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_kind_names_roundtrip() {
+        for k in PolicyKind::all() {
+            assert_eq!(PolicyKind::from_name(k.name()), Some(k));
+            assert_eq!(k.as_policy().kind(), k);
+        }
+        assert_eq!(PolicyKind::from_name("nope"), None);
+        assert_eq!(
+            PolicyKind::from_name("overscaled-dynamic"),
+            Some(PolicyKind::OverscaledDynamic)
+        );
+    }
+}

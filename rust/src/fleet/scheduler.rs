@@ -3,28 +3,51 @@
 //! Two cleanly separated phases keep the simulation deterministic *and*
 //! parallel:
 //!
-//! 1. **Placement** ([`plan`]) is a discrete-event pass over virtual time:
-//!    jobs are considered in arrival order; each goes to the coolest
-//!    eligible idle device (predicted junction temperature = rack-local
-//!    ambient + θ_JA · expected load power), or, when every eligible device
-//!    is busy, to the one that frees up first. Pure function of the seeded
-//!    traces — no wall-clock, no thread timing.
-//! 2. **Execution** ([`execute`]) expands each assignment into the dynamic
-//!    (sensor-driven) and static (nominal-rail) controller simulations.
-//!    Every job is a pure function of its assignment, so the work-stealing
-//!    thread pool (one deque per worker, idle workers steal from the back
-//!    of their neighbours) returns bit-identical results to the serial
-//!    loop, just faster.
+//! 1. **Placement** ([`plan`]) is an event-driven pass over virtual time:
+//!    an event queue of job *arrivals*, device *finishes*, and *migration*
+//!    probes replaces the pre-refactor fixed-`busy_until` loop. An arriving
+//!    job goes to the coolest eligible idle device (predicted junction
+//!    temperature = rack-local ambient + θ_JA · expected load power); when
+//!    every eligible device is busy it queues on the one that frees up
+//!    first. When a device frees with nothing queued, it probes the other
+//!    queues: a waiting job may migrate — preemption-free, before it ever
+//!    starts — off a hot, busy device onto the freed one, provided the move
+//!    strictly improves its start time and the destination is not
+//!    meaningfully hotter ([`MIGRATE_MAX_HOTTER_C`]). Jobs that fit no
+//!    device are reported as unplaceable instead of panicking. Pure
+//!    function of the seeded traces — no wall-clock, no thread timing.
+//! 2. **Execution** ([`execute`]) expands each assignment through the
+//!    policy engine ([`super::policy`]): every job's plant runs under the
+//!    static (nominal rails), dynamic (Algorithm-1 LUT), and — when an
+//!    over-scale rate is configured — overscaled-dynamic rails, so the
+//!    telemetry carries a three-way comparison plus the overscaled
+//!    policy's expected-error and quality figures. Every job is a pure
+//!    function of its assignment, so the work-stealing thread pool (one
+//!    deque per worker, idle workers steal from the back of their
+//!    neighbours) returns bit-identical results to the serial loop.
+//!
+//! The pre-refactor planner and executor are kept verbatim
+//! ([`plan_legacy`], [`execute_legacy`]) so the differential tests can
+//! prove the policy engine reproduces the old static/dynamic numbers bit
+//! for bit (PR-2 style).
 
-use std::collections::VecDeque;
-use std::sync::Mutex;
+use std::cmp::{Ordering, Reverse};
+use std::collections::{BinaryHeap, VecDeque};
+use std::sync::{Arc, Mutex};
 use std::thread;
 
+use super::policy::{self, Policy};
 use super::telemetry::JobResult;
-use super::{trace, Fleet};
-use crate::coordinator::{DynamicController, Tsd};
+use super::{trace, DeviceSpec, Fleet, JobKind};
+use crate::coordinator::{DynamicController, RunStats, Tsd};
 use crate::flow::dynamic::VoltageLut;
+use crate::ml;
 use crate::util::stats::interp1;
+
+/// A migration's destination may be at most this much hotter (predicted
+/// junction °C) than the source it rescues the job from — queued work flees
+/// hot racks, it never piles onto them.
+pub const MIGRATE_MAX_HOTTER_C: f64 = 2.0;
 
 /// One design job in the stream.
 #[derive(Clone, Copy, Debug)]
@@ -44,57 +67,269 @@ pub struct Assignment {
     pub start_ms: f64,
     /// Time spent waiting for a device (ms).
     pub queue_ms: f64,
+    /// True when the event pass moved this queued job off its original
+    /// device onto one that freed up earlier.
+    pub migrated: bool,
 }
 
-/// Thermal-aware placement: coolest eligible device, deterministic.
-pub fn plan(fleet: &Fleet) -> Vec<Assignment> {
-    let times: Vec<f64> = fleet.ambient.iter().map(|&(t, _)| t).collect();
-    let temps: Vec<f64> = fleet.ambient.iter().map(|&(_, a)| a).collect();
-    let mut busy_until = vec![0.0f64; fleet.specs.len()];
-    let mut out = Vec::with_capacity(fleet.jobs.len());
-    for job in &fleet.jobs {
+/// Output of the event-driven planner.
+#[derive(Clone, Debug, Default)]
+pub struct Plan {
+    /// Placed jobs, sorted by job id.
+    pub assignments: Vec<Assignment>,
+    /// Jobs no device in the fleet can fit — reported in telemetry, never a
+    /// panic (pre-refactor `plan` aborted the whole run here).
+    pub unplaceable: Vec<Job>,
+    /// Queued-job migrations the event pass performed.
+    pub migrations: usize,
+}
+
+// Same-timestamp event ordering: finishes free devices first, then the
+// freed devices probe for migrations, then new arrivals see the final
+// idle set. `seq` (monotone insertion counter) makes the order total.
+const RANK_FINISH: u8 = 0;
+const RANK_MIGRATE: u8 = 1;
+const RANK_ARRIVAL: u8 = 2;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum EventKind {
+    Finish { device: usize },
+    Migrate { device: usize },
+    Arrival { job: usize },
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+struct Event {
+    t_ms: f64,
+    rank: u8,
+    seq: u64,
+    kind: EventKind,
+}
+
+impl Eq for Event {}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.t_ms
+            .total_cmp(&other.t_ms)
+            .then(self.rank.cmp(&other.rank))
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// Mutable state of the event-driven placement pass.
+struct PlanState<'a> {
+    fleet: &'a Fleet,
+    times: Vec<f64>,
+    temps: Vec<f64>,
+    /// When each device's *running* job ends (≤ now ⇒ idle).
+    busy_until: Vec<f64>,
+    /// When each device would drain everything currently running + queued
+    /// (the pre-refactor `busy_until`; drives queueing predictions).
+    committed_until: Vec<f64>,
+    /// Per-device FIFO of queued (not yet started) jobs.
+    queues: Vec<VecDeque<Job>>,
+    heap: BinaryHeap<Reverse<Event>>,
+    seq: u64,
+    assignments: Vec<Assignment>,
+    migrations: usize,
+}
+
+impl<'a> PlanState<'a> {
+    fn new(fleet: &'a Fleet) -> PlanState<'a> {
+        let n = fleet.specs.len();
+        PlanState {
+            fleet,
+            times: fleet.ambient.iter().map(|&(t, _)| t).collect(),
+            temps: fleet.ambient.iter().map(|&(_, a)| a).collect(),
+            busy_until: vec![0.0; n],
+            committed_until: vec![0.0; n],
+            queues: vec![VecDeque::new(); n],
+            heap: BinaryHeap::new(),
+            seq: 0,
+            assignments: Vec::with_capacity(fleet.jobs.len()),
+            migrations: 0,
+        }
+    }
+
+    fn push(&mut self, t_ms: f64, rank: u8, kind: EventKind) {
+        self.heap.push(Reverse(Event {
+            t_ms,
+            rank,
+            seq: self.seq,
+            kind,
+        }));
+        self.seq += 1;
+    }
+
+    fn idle(&self, device: usize, t_ms: f64) -> bool {
+        self.busy_until[device] <= t_ms + 1e-9
+    }
+
+    /// Predicted junction temperature of `device` running `kind` at
+    /// `at_ms`: rack-local ambient + θ_JA · expected load power, scaled by
+    /// this unit's process spread.
+    fn t_pred(&self, device: usize, kind: &JobKind, at_ms: f64) -> f64 {
+        let spec = &self.fleet.specs[device];
+        let t_amb = interp1(&self.times, &self.temps, at_ms) + spec.rack_offset_c;
+        t_amb + spec.theta_ja * kind.power_estimate() * spec.power_scale
+    }
+
+    fn start(&mut self, device: usize, job: Job, t_ms: f64, migrated: bool) {
+        let end = t_ms + job.duration_ms;
+        self.busy_until[device] = end;
+        if self.committed_until[device] < end {
+            self.committed_until[device] = end;
+        }
+        self.push(end, RANK_FINISH, EventKind::Finish { device });
+        self.assignments.push(Assignment {
+            job,
+            device,
+            start_ms: t_ms,
+            queue_ms: t_ms - job.arrival_ms,
+            migrated,
+        });
+    }
+
+    fn on_arrival(&mut self, job: Job, t_ms: f64, unplaceable: &mut Vec<Job>) {
+        let fleet = self.fleet;
         let kind = &fleet.kinds[job.kind];
         let edge = kind.grid_edge();
-        // expected load power for temperature prediction: the LUT's coolest
-        // operating point, scaled by this unit's process spread
-        let p_est = kind.lut.entries[0].power;
-        let mut best: Option<(bool, f64, f64, usize)> = None;
+        // preference order (mirrors the legacy planner exactly): an idle
+        // device beats a queue; among idle devices the coolest wins; among
+        // busy devices the earliest-to-drain wins with temperature as
+        // tie-break; device id (iteration order) breaks exact ties
+        let mut best_idle: Option<(f64, usize)> = None;
+        let mut best_queued: Option<(f64, f64, usize)> = None;
         for spec in fleet.specs.iter().filter(|s| s.grid_edge >= edge) {
-            let start = busy_until[spec.id].max(job.arrival_ms);
-            let idle = start <= job.arrival_ms + 1e-9;
-            let t_amb = interp1(&times, &temps, start) + spec.rack_offset_c;
-            let t_pred = t_amb + spec.theta_ja * p_est * spec.power_scale;
-            // preference order: idle beats queued; among idle devices the
-            // coolest wins; among queued devices the earliest-free wins with
-            // temperature as tie-break. Device id breaks exact ties.
-            let better = match &best {
-                None => true,
-                Some(&(b_idle, b_start, b_temp, _)) => {
-                    if idle != b_idle {
-                        idle
-                    } else if idle {
-                        t_pred < b_temp - 1e-12
-                    } else if (start - b_start).abs() > 1e-9 {
-                        start < b_start
-                    } else {
-                        t_pred < b_temp - 1e-12
+            if self.idle(spec.id, t_ms) {
+                let tp = self.t_pred(spec.id, kind, t_ms);
+                let better = match best_idle {
+                    None => true,
+                    Some((b_tp, _)) => tp < b_tp - 1e-12,
+                };
+                if better {
+                    best_idle = Some((tp, spec.id));
+                }
+            } else {
+                let start = self.committed_until[spec.id].max(t_ms);
+                let tp = self.t_pred(spec.id, kind, start);
+                let better = match best_queued {
+                    None => true,
+                    Some((b_start, b_tp, _)) => {
+                        if (start - b_start).abs() > 1e-9 {
+                            start < b_start
+                        } else {
+                            tp < b_tp - 1e-12
+                        }
                     }
+                };
+                if better {
+                    best_queued = Some((start, tp, spec.id));
+                }
+            }
+        }
+        if let Some((_, device)) = best_idle {
+            self.start(device, job, t_ms, false);
+        } else if let Some((start, _, device)) = best_queued {
+            self.queues[device].push_back(job);
+            self.committed_until[device] = start + job.duration_ms;
+        } else {
+            unplaceable.push(job);
+        }
+    }
+
+    fn on_finish(&mut self, device: usize, t_ms: f64) {
+        if let Some(job) = self.queues[device].pop_front() {
+            self.start(device, job, t_ms, false);
+        } else {
+            // nothing of its own to run — probe the other queues
+            self.push(t_ms, RANK_MIGRATE, EventKind::Migrate { device });
+        }
+    }
+
+    fn on_migrate(&mut self, device: usize, t_ms: f64) {
+        if !self.idle(device, t_ms) {
+            return; // picked up other work between the probe and now
+        }
+        let fleet = self.fleet;
+        let dest_edge = fleet.specs[device].grid_edge;
+        // earliest-arrived migratable queue head wins; job id breaks ties
+        let mut best: Option<(f64, usize, usize)> = None; // (arrival, job id, src)
+        for src in 0..fleet.specs.len() {
+            if src == device {
+                continue;
+            }
+            let Some(&job) = self.queues[src].front() else {
+                continue;
+            };
+            let kind = &fleet.kinds[job.kind];
+            if dest_edge < kind.grid_edge() {
+                continue;
+            }
+            // only a strict start-time improvement justifies moving
+            let src_start = self.busy_until[src].max(job.arrival_ms);
+            if src_start <= t_ms + 1e-9 {
+                continue;
+            }
+            // thermal guard: never migrate onto a meaningfully hotter unit
+            let tp_dest = self.t_pred(device, kind, t_ms);
+            let tp_src = self.t_pred(src, kind, src_start);
+            if tp_dest > tp_src + MIGRATE_MAX_HOTTER_C {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some((b_arr, b_id, _)) => {
+                    job.arrival_ms < b_arr - 1e-9
+                        || ((job.arrival_ms - b_arr).abs() <= 1e-9 && job.id < b_id)
                 }
             };
             if better {
-                best = Some((idle, start, t_pred, spec.id));
+                best = Some((job.arrival_ms, job.id, src));
             }
         }
-        let (_, start, _, device) = best.expect("no eligible device for job kind");
-        busy_until[device] = start + job.duration_ms;
-        out.push(Assignment {
-            job: *job,
-            device,
-            start_ms: start,
-            queue_ms: start - job.arrival_ms,
-        });
+        if let Some((_, _, src)) = best {
+            let job = self.queues[src].pop_front().expect("migration source queue");
+            self.committed_until[src] = self.queues[src]
+                .iter()
+                .fold(self.busy_until[src], |t, j| t.max(j.arrival_ms) + j.duration_ms);
+            self.migrations += 1;
+            self.start(device, job, t_ms, true);
+        }
     }
-    out
+}
+
+/// Thermal-aware event-driven placement: coolest eligible device, queued
+/// jobs migrate off hot busy devices, unplaceable jobs reported.
+/// Deterministic — a pure function of the fleet's seeded traces.
+pub fn plan(fleet: &Fleet) -> Plan {
+    let mut st = PlanState::new(fleet);
+    for (i, job) in fleet.jobs.iter().enumerate() {
+        st.push(job.arrival_ms, RANK_ARRIVAL, EventKind::Arrival { job: i });
+    }
+    let mut unplaceable = Vec::new();
+    while let Some(Reverse(ev)) = st.heap.pop() {
+        match ev.kind {
+            EventKind::Arrival { job } => st.on_arrival(fleet.jobs[job], ev.t_ms, &mut unplaceable),
+            EventKind::Finish { device } => st.on_finish(device, ev.t_ms),
+            EventKind::Migrate { device } => st.on_migrate(device, ev.t_ms),
+        }
+    }
+    let mut assignments = st.assignments;
+    assignments.sort_by_key(|a| a.job.id);
+    unplaceable.sort_by_key(|j| j.id);
+    Plan {
+        assignments,
+        unplaceable,
+        migrations: st.migrations,
+    }
 }
 
 /// Execute a plan. `workers == 1` runs the plain serial loop (the baseline
@@ -153,8 +388,31 @@ pub fn execute(fleet: &Fleet, plan: &[Assignment], workers: usize) -> Vec<JobRes
     out
 }
 
-/// Run one placed job: the dynamic sensor-driven controller and the static
-/// worst-case (nominal-rail) baseline through the identical plant.
+/// One controller/plant simulation of a placed job under a given LUT
+/// (the policy engine's common leg — all three policies run through here).
+fn simulate(
+    lut: Arc<VoltageLut>,
+    spec: &DeviceSpec,
+    kind: &JobKind,
+    local: &[(f64, f64)],
+    dt_ms: f64,
+    sample_every_ms: f64,
+) -> RunStats {
+    let scale = spec.power_scale;
+    let surface = kind.surface.clone();
+    let ctl = DynamicController {
+        lut,
+        theta_ja: spec.theta_ja,
+        tau_ms: spec.tau_ms,
+        margin: spec.margin_c,
+        tsd: Tsd::default(),
+        power_fn: move |vc: f64, vb: f64, tj: f64| scale * surface.eval(vc, vb, tj),
+    };
+    ctl.run_stats(local, dt_ms, sample_every_ms).1
+}
+
+/// Run one placed job through the policy engine: static, dynamic, and
+/// overscaled-dynamic rails over the identical plant.
 fn run_one(fleet: &Fleet, a: &Assignment) -> JobResult {
     let spec = &fleet.specs[a.device];
     let kind = &fleet.kinds[a.job.kind];
@@ -167,6 +425,141 @@ fn run_one(fleet: &Fleet, a: &Assignment) -> JobResult {
     );
     let dt_ms = 1.0; // 1 ms sensor/control period [38]
     let sparse = a.job.duration_ms; // stats only; the sampled log is unused
+
+    // every policy runs through the same leg — only the LUT differs
+    let sim = |p: &dyn Policy| simulate(p.lut(kind), spec, kind, &local, dt_ms, sparse);
+    let dyn_stats = sim(&policy::Dynamic);
+    let static_stats = sim(&policy::Static);
+    // without an over-scale spec the overscaled policy's LUT *is* the
+    // dynamic LUT (rate 1.0 ⇒ identical rails), so the third simulation
+    // would reproduce dyn_stats bit for bit — skip it and reuse
+    let over_stats = if kind.overscale.is_some() {
+        sim(&policy::OverscaledDynamic)
+    } else {
+        dyn_stats
+    };
+    // error/quality telemetry from the overscaled policy's modeled rate
+    // (zero rate ⇒ exactly zero errors and exactly the clean accuracy)
+    let err_rate = policy::OverscaledDynamic.error_rate(kind);
+    let expected_errors = match &kind.overscale {
+        Some(o) => o.error.expected_errors(kind.f_clk, a.job.duration_ms / 1e3),
+        None => 0.0,
+    };
+    let quality = ml::expected_accuracy(
+        policy::QUALITY_CLEAN_ACC,
+        policy::QUALITY_CHANCE_ACC,
+        err_rate,
+        policy::QUALITY_DEPTH,
+    );
+
+    JobResult {
+        job_id: a.job.id,
+        kind: a.job.kind,
+        device: a.device,
+        policy: fleet.policies[a.job.kind],
+        migrated: a.migrated,
+        arrival_ms: a.job.arrival_ms,
+        start_ms: a.start_ms,
+        duration_ms: a.job.duration_ms,
+        queue_ms: a.queue_ms,
+        energy_dyn_j: dyn_stats.energy_j,
+        energy_static_j: static_stats.energy_j,
+        energy_over_j: over_stats.energy_j,
+        mean_power_dyn_w: dyn_stats.mean_power_w,
+        mean_power_static_w: static_stats.mean_power_w,
+        mean_power_over_w: over_stats.mean_power_w,
+        violations: dyn_stats.violations,
+        violations_over: over_stats.violations,
+        expected_errors,
+        quality,
+        peak_t_junct_c: dyn_stats.peak_t_junct,
+    }
+}
+
+// ---------------------------------------------------------------------
+// pre-refactor paths, kept verbatim for the differential tests
+// ---------------------------------------------------------------------
+
+/// The pre-refactor fixed-`busy_until` planner (kept for the differential
+/// tests). Note its known holes, fixed in [`plan`]: it aborts via `expect`
+/// when a job fits no device, and its `entries[0]` power estimate panics on
+/// an empty LUT / goes blind on a `fixed` one.
+pub fn plan_legacy(fleet: &Fleet) -> Vec<Assignment> {
+    let times: Vec<f64> = fleet.ambient.iter().map(|&(t, _)| t).collect();
+    let temps: Vec<f64> = fleet.ambient.iter().map(|&(_, a)| a).collect();
+    let mut busy_until = vec![0.0f64; fleet.specs.len()];
+    let mut out = Vec::with_capacity(fleet.jobs.len());
+    for job in &fleet.jobs {
+        let kind = &fleet.kinds[job.kind];
+        let edge = kind.grid_edge();
+        let p_est = kind.lut.entries[0].power;
+        let mut best: Option<(bool, f64, f64, usize)> = None;
+        for spec in fleet.specs.iter().filter(|s| s.grid_edge >= edge) {
+            let start = busy_until[spec.id].max(job.arrival_ms);
+            let idle = start <= job.arrival_ms + 1e-9;
+            let t_amb = interp1(&times, &temps, start) + spec.rack_offset_c;
+            let t_pred = t_amb + spec.theta_ja * p_est * spec.power_scale;
+            let better = match &best {
+                None => true,
+                Some(&(b_idle, b_start, b_temp, _)) => {
+                    if idle != b_idle {
+                        idle
+                    } else if idle {
+                        t_pred < b_temp - 1e-12
+                    } else if (start - b_start).abs() > 1e-9 {
+                        start < b_start
+                    } else {
+                        t_pred < b_temp - 1e-12
+                    }
+                }
+            };
+            if better {
+                best = Some((idle, start, t_pred, spec.id));
+            }
+        }
+        let (_, start, _, device) = best.expect("no eligible device for job kind");
+        busy_until[device] = start + job.duration_ms;
+        out.push(Assignment {
+            job: *job,
+            device,
+            start_ms: start,
+            queue_ms: start - job.arrival_ms,
+            migrated: false,
+        });
+    }
+    out
+}
+
+/// Pre-refactor per-job result: the dynamic + static controller pair.
+#[derive(Clone, Copy, Debug)]
+pub struct LegacyResult {
+    pub job_id: usize,
+    pub energy_dyn_j: f64,
+    pub energy_static_j: f64,
+    pub mean_power_dyn_w: f64,
+    pub mean_power_static_w: f64,
+    pub violations: u64,
+    pub peak_t_junct_c: f64,
+}
+
+/// The pre-refactor executor (serial), kept verbatim so the differential
+/// tests can assert the policy engine reproduces it bit for bit.
+pub fn execute_legacy(fleet: &Fleet, plan: &[Assignment]) -> Vec<LegacyResult> {
+    plan.iter().map(|a| run_one_legacy(fleet, a)).collect()
+}
+
+fn run_one_legacy(fleet: &Fleet, a: &Assignment) -> LegacyResult {
+    let spec = &fleet.specs[a.device];
+    let kind = &fleet.kinds[a.job.kind];
+    let local = trace::window(
+        &fleet.ambient,
+        spec.rack_offset_c,
+        a.start_ms,
+        a.start_ms + a.job.duration_ms,
+        5_000.0,
+    );
+    let dt_ms = 1.0;
+    let sparse = a.job.duration_ms;
 
     let scale = spec.power_scale;
     let dyn_surface = kind.surface.clone();
@@ -182,7 +575,7 @@ fn run_one(fleet: &Fleet, a: &Assignment) -> JobResult {
 
     let static_surface = kind.surface.clone();
     let static_ctl = DynamicController {
-        lut: std::sync::Arc::new(VoltageLut::fixed(kind.v_core_nom, kind.v_bram_nom)),
+        lut: Arc::new(VoltageLut::fixed(kind.v_core_nom, kind.v_bram_nom)),
         theta_ja: spec.theta_ja,
         tau_ms: spec.tau_ms,
         margin: spec.margin_c,
@@ -191,14 +584,8 @@ fn run_one(fleet: &Fleet, a: &Assignment) -> JobResult {
     };
     let (_, static_stats) = static_ctl.run_stats(&local, dt_ms, sparse);
 
-    JobResult {
+    LegacyResult {
         job_id: a.job.id,
-        kind: a.job.kind,
-        device: a.device,
-        arrival_ms: a.job.arrival_ms,
-        start_ms: a.start_ms,
-        duration_ms: a.job.duration_ms,
-        queue_ms: a.queue_ms,
         energy_dyn_j: dyn_stats.energy_j,
         energy_static_j: static_stats.energy_j,
         mean_power_dyn_w: dyn_stats.mean_power_w,

@@ -1,5 +1,8 @@
 //! Fleet-wide telemetry: per-device and aggregate power / energy /
-//! violation / throughput metrics with percentiles via `util::stats`.
+//! violation / throughput metrics with percentiles via `util::stats`, now
+//! carrying the **three-way policy comparison** (static vs dynamic vs
+//! overscaled-dynamic) plus the overscaled policy's expected-error and
+//! quality figures, migration counts, and unplaceable jobs.
 //!
 //! Aggregation is a pure fold over job results sorted by job id, so it is
 //! deterministic regardless of how the jobs were executed; the
@@ -7,14 +10,22 @@
 //! every per-job number and is how the CLI proves the parallel executor
 //! reproduced the serial run exactly.
 
+use super::policy::PolicyKind;
 use crate::util::stats;
 
-/// Outcome of one executed job (dynamic + static runs over the same plant).
+/// Outcome of one executed job: the three policy simulations over the same
+/// plant, plus the overscaled policy's error/quality model outputs.
 #[derive(Clone, Copy, Debug)]
 pub struct JobResult {
     pub job_id: usize,
     pub kind: usize,
     pub device: usize,
+    /// Governing policy of this job's kind (all three are simulated; this
+    /// is the one the kind *runs at* — see [`energy_policy_j`][Self::energy_policy_j]).
+    pub policy: PolicyKind,
+    /// True when the planner migrated this queued job to a device that
+    /// freed up earlier than its original pick.
+    pub migrated: bool,
     pub arrival_ms: f64,
     pub start_ms: f64,
     pub duration_ms: f64,
@@ -23,12 +34,25 @@ pub struct JobResult {
     pub energy_dyn_j: f64,
     /// Energy under static worst-case (nominal-rail) provisioning (J).
     pub energy_static_j: f64,
+    /// Energy under §III-D overscaled-dynamic rails (J); equals the
+    /// dynamic energy when no over-scale rate is configured.
+    pub energy_over_j: f64,
     pub mean_power_dyn_w: f64,
     pub mean_power_static_w: f64,
+    pub mean_power_over_w: f64,
     /// Guardband violations across every *dynamic*-controller step (the
     /// static baseline is structurally violation-free: its fixed LUT makes
     /// commanded and required rails identical).
     pub violations: u64,
+    /// Guardband violations of the overscaled controller against its own
+    /// (relaxed) rail requirements.
+    pub violations_over: u64,
+    /// Modeled timing errors across the job under the overscaled rails
+    /// (`ErrorModel::expected_errors`); zero for safe policies.
+    pub expected_errors: f64,
+    /// `ml::expected_accuracy` quality proxy under the overscaled error
+    /// rate (clean accuracy when nothing is overscaled).
+    pub quality: f64,
     pub peak_t_junct_c: f64,
 }
 
@@ -44,6 +68,15 @@ impl JobResult {
             0.0
         }
     }
+
+    /// Energy under this job's *governing* policy (J).
+    pub fn energy_policy_j(&self) -> f64 {
+        match self.policy {
+            PolicyKind::Static => self.energy_static_j,
+            PolicyKind::Dynamic => self.energy_dyn_j,
+            PolicyKind::OverscaledDynamic => self.energy_over_j,
+        }
+    }
 }
 
 /// Per-device aggregate.
@@ -51,10 +84,14 @@ impl JobResult {
 pub struct DeviceTelemetry {
     pub device: usize,
     pub jobs: usize,
+    /// Jobs that migrated *onto* this device.
+    pub migrations: usize,
     pub busy_ms: f64,
     pub energy_dyn_j: f64,
     pub energy_static_j: f64,
+    pub energy_over_j: f64,
     pub violations: u64,
+    pub violations_over: u64,
     pub peak_t_junct_c: f64,
 }
 
@@ -76,6 +113,15 @@ impl DeviceTelemetry {
             0.0
         }
     }
+
+    /// Overscaled-vs-static energy saving on this device.
+    pub fn saving_over(&self) -> f64 {
+        if self.energy_static_j > 0.0 {
+            1.0 - self.energy_over_j / self.energy_static_j
+        } else {
+            0.0
+        }
+    }
 }
 
 /// Fleet-wide aggregate over a full run.
@@ -87,9 +133,22 @@ pub struct FleetTelemetry {
     pub per_device: Vec<DeviceTelemetry>,
     pub energy_dyn_j: f64,
     pub energy_static_j: f64,
+    pub energy_over_j: f64,
+    /// Energy with every kind running its governing policy (J).
+    pub energy_policy_j: f64,
     /// Total device-busy time (ms) across the fleet.
     pub busy_ms: f64,
     pub violations: u64,
+    pub violations_over: u64,
+    /// Total modeled timing errors under the overscaled rails.
+    pub expected_errors: f64,
+    /// Mean / worst per-job quality proxy (1 ⇒ clean).
+    pub quality_mean: f64,
+    pub quality_min: f64,
+    /// Queued-job migrations the planner performed.
+    pub migrations: usize,
+    /// Jobs no device could fit (reported, not executed).
+    pub unplaceable: usize,
     /// First arrival → last completion (virtual ms).
     pub makespan_ms: f64,
     /// Completed jobs per virtual hour.
@@ -111,21 +170,40 @@ impl FleetTelemetry {
             .collect();
         let mut energy_dyn_j = 0.0;
         let mut energy_static_j = 0.0;
+        let mut energy_over_j = 0.0;
+        let mut energy_policy_j = 0.0;
         let mut busy_ms = 0.0;
         let mut violations = 0u64;
+        let mut violations_over = 0u64;
+        let mut expected_errors = 0.0;
+        let mut migrations = 0usize;
         for r in &jobs {
             let d = &mut per_device[r.device];
             d.jobs += 1;
+            d.migrations += r.migrated as usize;
             d.busy_ms += r.duration_ms;
             d.energy_dyn_j += r.energy_dyn_j;
             d.energy_static_j += r.energy_static_j;
+            d.energy_over_j += r.energy_over_j;
             d.violations += r.violations;
+            d.violations_over += r.violations_over;
             d.peak_t_junct_c = d.peak_t_junct_c.max(r.peak_t_junct_c);
             energy_dyn_j += r.energy_dyn_j;
             energy_static_j += r.energy_static_j;
+            energy_over_j += r.energy_over_j;
+            energy_policy_j += r.energy_policy_j();
             busy_ms += r.duration_ms;
             violations += r.violations;
+            violations_over += r.violations_over;
+            expected_errors += r.expected_errors;
+            migrations += r.migrated as usize;
         }
+        let quality_mean = if jobs.is_empty() {
+            1.0
+        } else {
+            jobs.iter().map(|r| r.quality).sum::<f64>() / jobs.len() as f64
+        };
+        let quality_min = jobs.iter().map(|r| r.quality).fold(1.0f64, f64::min);
         let first_arrival = jobs
             .iter()
             .map(|r| r.arrival_ms)
@@ -159,17 +237,50 @@ impl FleetTelemetry {
             per_device,
             energy_dyn_j,
             energy_static_j,
+            energy_over_j,
+            energy_policy_j,
             busy_ms,
             violations,
+            violations_over,
+            expected_errors,
+            quality_mean,
+            quality_min,
+            migrations,
+            unplaceable: 0,
             makespan_ms,
             throughput_jobs_per_hour,
         }
+    }
+
+    /// Attach the planner's unplaceable-job count (jobs that never ran and
+    /// therefore do not appear in the per-job results).
+    pub fn with_unplaceable(mut self, n: usize) -> FleetTelemetry {
+        self.unplaceable = n;
+        self
     }
 
     /// Fleet-wide dynamic-vs-static energy saving.
     pub fn saving(&self) -> f64 {
         if self.energy_static_j > 0.0 {
             1.0 - self.energy_dyn_j / self.energy_static_j
+        } else {
+            0.0
+        }
+    }
+
+    /// Fleet-wide overscaled-vs-static energy saving.
+    pub fn saving_over(&self) -> f64 {
+        if self.energy_static_j > 0.0 {
+            1.0 - self.energy_over_j / self.energy_static_j
+        } else {
+            0.0
+        }
+    }
+
+    /// Fleet-wide saving with every kind on its governing policy.
+    pub fn saving_policy(&self) -> f64 {
+        if self.energy_static_j > 0.0 {
+            1.0 - self.energy_policy_j / self.energy_static_j
         } else {
             0.0
         }
@@ -198,10 +309,16 @@ impl FleetTelemetry {
             mix(r.job_id as u64);
             mix(r.device as u64);
             mix(r.kind as u64);
+            mix(r.policy as u64);
+            mix(r.migrated as u64);
             mix(r.start_ms.to_bits());
             mix(r.energy_dyn_j.to_bits());
             mix(r.energy_static_j.to_bits());
+            mix(r.energy_over_j.to_bits());
             mix(r.violations);
+            mix(r.violations_over);
+            mix(r.expected_errors.to_bits());
+            mix(r.quality.to_bits());
             mix(r.peak_t_junct_c.to_bits());
         }
         mix(self.jobs.len() as u64);
@@ -218,15 +335,22 @@ mod tests {
             job_id: id,
             kind: 0,
             device,
+            policy: PolicyKind::Dynamic,
+            migrated: false,
             arrival_ms: 10.0 * id as f64,
             start_ms: 10.0 * id as f64,
             duration_ms: dur,
             queue_ms: 0.0,
             energy_dyn_j: e_dyn,
             energy_static_j: e_static,
+            energy_over_j: e_dyn,
             mean_power_dyn_w: e_dyn / (dur / 1e3),
             mean_power_static_w: e_static / (dur / 1e3),
+            mean_power_over_w: e_dyn / (dur / 1e3),
             violations: 0,
+            violations_over: 0,
+            expected_errors: 0.0,
+            quality: 1.0,
             peak_t_junct_c: 50.0,
         }
     }
@@ -243,6 +367,8 @@ mod tests {
         assert_eq!(t.per_device[2].jobs, 0);
         assert!((t.energy_dyn_j - 35.0).abs() < 1e-12);
         assert!((t.energy_static_j - 48.0).abs() < 1e-12);
+        // governing policy is dynamic everywhere in this fixture
+        assert!((t.energy_policy_j - t.energy_dyn_j).abs() < 1e-12);
         // fleet mean power equals the busy-time-weighted per-device mean
         let weighted: f64 = t
             .per_device
@@ -253,6 +379,34 @@ mod tests {
         assert!((t.mean_power_w() - weighted).abs() < 1e-12);
         assert!((t.saving() - (1.0 - 35.0 / 48.0)).abs() < 1e-12);
         assert_eq!(t.violations, 0);
+        assert_eq!(t.migrations, 0);
+        assert_eq!(t.unplaceable, 0);
+        assert!((t.quality_mean - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn governing_policy_selects_the_energy_column() {
+        let mut a = job(0, 0, 10_000.0, 5.0, 8.0);
+        a.energy_over_j = 4.0;
+        a.policy = PolicyKind::OverscaledDynamic;
+        let mut b = job(1, 0, 10_000.0, 6.0, 9.0);
+        b.policy = PolicyKind::Static;
+        let t = FleetTelemetry::aggregate(1, vec![a, b]);
+        // job 0 runs overscaled (4 J), job 1 runs static (9 J)
+        assert!((t.energy_policy_j - 13.0).abs() < 1e-12);
+        assert!((t.energy_over_j - (4.0 + 6.0)).abs() < 1e-12);
+        assert!(t.saving_over() > t.saving() - 1e-12);
+    }
+
+    #[test]
+    fn unplaceable_and_migrations_are_reported() {
+        let mut a = job(0, 0, 10_000.0, 5.0, 8.0);
+        a.migrated = true;
+        let t = FleetTelemetry::aggregate(2, vec![a]).with_unplaceable(3);
+        assert_eq!(t.unplaceable, 3);
+        assert_eq!(t.migrations, 1);
+        assert_eq!(t.per_device[0].migrations, 1);
+        assert_eq!(t.per_device[1].migrations, 0);
     }
 
     #[test]
@@ -267,5 +421,14 @@ mod tests {
         c[0].energy_dyn_j += 1e-9;
         let tc = FleetTelemetry::aggregate(2, c);
         assert_ne!(ta.fingerprint(), tc.fingerprint());
+        // the new three-way fields are fingerprinted too
+        let mut d = ta.jobs.clone();
+        d[0].energy_over_j += 1e-9;
+        let td = FleetTelemetry::aggregate(2, d);
+        assert_ne!(ta.fingerprint(), td.fingerprint());
+        let mut e = ta.jobs.clone();
+        e[0].migrated = true;
+        let te = FleetTelemetry::aggregate(2, e);
+        assert_ne!(ta.fingerprint(), te.fingerprint());
     }
 }

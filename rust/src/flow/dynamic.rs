@@ -45,6 +45,23 @@ impl VoltageLut {
         t_amb_hi: f64,
         step: f64,
     ) -> VoltageLut {
+        Self::build_rate(design, cfg, backend, t_amb_lo, t_amb_hi, step, 1.0)
+    }
+
+    /// [`build`](Self::build) with the timing constraint relaxed to
+    /// `rate × d_worst` (§III-D over-scaling): each ambient's Algorithm-1
+    /// run accepts the given CP-violation budget, so the recorded rails sit
+    /// below the safe table's — the fleet's overscaled-dynamic policy
+    /// drives its controller off this table.
+    pub fn build_rate(
+        design: &Design,
+        cfg: &Config,
+        backend: &mut dyn ThermalBackend,
+        t_amb_lo: f64,
+        t_amb_hi: f64,
+        step: f64,
+        rate: f64,
+    ) -> VoltageLut {
         let sta = design.sta();
         let pm = design.power_model();
         let mut arena = StaCacheArena::new();
@@ -53,7 +70,7 @@ impl VoltageLut {
         while t <= t_amb_hi + 1e-9 {
             let mut c = cfg.clone();
             c.flow.t_amb = t;
-            let r = alg1::run_with_arena(design, &sta, &pm, &c, backend, 1.0, &mut arena);
+            let r = alg1::run_with_arena(design, &sta, &pm, &c, backend, rate, &mut arena);
             if !r.infeasible {
                 entries.push(LutEntry {
                     t_junct: crate::util::stats::max(&r.temp),
@@ -78,6 +95,12 @@ impl VoltageLut {
             e.v_core = vc_run;
             e.v_bram = vb_run;
         }
+        // `lookup` binary-searches on t_junct; the sort above established
+        // the invariant, checked once here rather than on every 1 ms tick
+        debug_assert!(
+            entries.windows(2).all(|w| w[0].t_junct <= w[1].t_junct),
+            "VoltageLut entries not sorted by t_junct"
+        );
         VoltageLut {
             entries,
             v_core_nom: cfg.arch.v_core_nom,
@@ -104,14 +127,23 @@ impl VoltageLut {
 
     /// Look up the rails for a sensed junction temperature, applying the
     /// sensor margin (TSD error + spatial gradients, ~5 °C).
+    ///
+    /// Binary search for the first entry with `t_junct >= key` — the same
+    /// row the old linear scan returned, bit-identically, but O(log n):
+    /// this runs on every 1 ms controller tick of every device in the
+    /// fleet. `partition_point` needs the entries sorted by `t_junct`;
+    /// `build_rate` establishes that invariant (and debug-asserts it once
+    /// at construction — not here, where it would be an O(n) scan per
+    /// tick), and hand-built tables must uphold it themselves.
     pub fn lookup(&self, t_sensed: f64, margin: f64) -> (f64, f64) {
         let key = t_sensed + margin;
-        for e in &self.entries {
-            if key <= e.t_junct {
-                return (e.v_core, e.v_bram);
-            }
+        let i = self.entries.partition_point(|e| e.t_junct < key);
+        match self.entries.get(i) {
+            Some(e) => (e.v_core, e.v_bram),
+            // beyond the characterized range (or an empty/degenerate LUT):
+            // fall back to the safe nominal rails
+            None => (self.v_core_nom, self.v_bram_nom),
         }
-        (self.v_core_nom, self.v_bram_nom)
     }
 }
 
@@ -120,6 +152,72 @@ mod tests {
     use super::*;
     use crate::flow::design::Effort;
     use crate::thermal::{NativeSolver, ThermalGrid};
+
+    /// The pre-refactor linear scan, kept as the reference for bit-identity.
+    fn lookup_linear(lut: &VoltageLut, t_sensed: f64, margin: f64) -> (f64, f64) {
+        let key = t_sensed + margin;
+        for e in &lut.entries {
+            if key <= e.t_junct {
+                return (e.v_core, e.v_bram);
+            }
+        }
+        (lut.v_core_nom, lut.v_bram_nom)
+    }
+
+    #[test]
+    fn binary_search_lookup_matches_linear_scan_bit_for_bit() {
+        let mut rng = crate::util::Xoshiro256::new(0x100C_0B5E);
+        for n in [0usize, 1, 2, 3, 7, 19] {
+            // random sorted keys, including duplicates
+            let mut keys: Vec<f64> = (0..n).map(|_| rng.uniform(20.0, 100.0)).collect();
+            if n > 2 {
+                keys[1] = keys[0]; // duplicate key
+            }
+            keys.sort_by(|a, b| a.total_cmp(b));
+            let lut = VoltageLut {
+                entries: keys
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &t)| LutEntry {
+                        t_junct: t,
+                        v_core: 0.60 + 0.01 * i as f64,
+                        v_bram: 0.75 + 0.01 * i as f64,
+                        power: 0.3,
+                    })
+                    .collect(),
+                v_core_nom: 0.80,
+                v_bram_nom: 0.95,
+            };
+            for _ in 0..400 {
+                let t = rng.uniform(-10.0, 130.0);
+                let m = rng.uniform(0.0, 8.0);
+                let a = lut.lookup(t, m);
+                let b = lookup_linear(&lut, t, m);
+                assert_eq!(a.0.to_bits(), b.0.to_bits(), "n={n} t={t} m={m}");
+                assert_eq!(a.1.to_bits(), b.1.to_bits(), "n={n} t={t} m={m}");
+            }
+            // exact-key probes (the partition boundary itself)
+            for &k in &keys {
+                let a = lut.lookup(k, 0.0);
+                let b = lookup_linear(&lut, k, 0.0);
+                assert_eq!(a, b, "boundary at {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_and_degenerate_luts_fall_back_to_nominal() {
+        let empty = VoltageLut {
+            entries: vec![],
+            v_core_nom: 0.80,
+            v_bram_nom: 0.95,
+        };
+        assert_eq!(empty.lookup(45.0, 5.0), (0.80, 0.95));
+        // the fixed (static-policy) LUT answers its rails at any temperature
+        let fixed = VoltageLut::fixed(0.72, 0.88);
+        assert_eq!(fixed.lookup(-40.0, 0.0), (0.72, 0.88));
+        assert_eq!(fixed.lookup(300.0, 10.0), (0.72, 0.88));
+    }
 
     #[test]
     fn lut_is_monotone_and_conservative() {

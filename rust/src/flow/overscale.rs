@@ -42,6 +42,17 @@ pub struct ErrorModel {
     pub t_clk: f64,
 }
 
+impl ErrorModel {
+    /// Expected number of timing errors over a job that clocks at `f_clk`
+    /// for `duration_s`: the mean per-cycle violation probability times the
+    /// cycle count. This is the quantity the fleet's overscaled-dynamic
+    /// policy reports per job (and what `ml::expected_accuracy` maps to a
+    /// quality figure).
+    pub fn expected_errors(&self, f_clk: f64, duration_s: f64) -> f64 {
+        self.mean_rate * f_clk * duration_s
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct OverscaleResult {
     pub rate: f64,
@@ -167,6 +178,19 @@ mod tests {
         let expected_per_cycle =
             r14.error.mean_rate * r14.error.p_viol.len() as f64;
         assert!(expected_per_cycle > 1e-4, "per-cycle {expected_per_cycle}");
+    }
+
+    #[test]
+    fn expected_errors_scale_with_cycles() {
+        let m = ErrorModel {
+            p_viol: vec![1e-6, 3e-6],
+            mean_rate: 2e-6,
+            hard_fraction: 0.0,
+            t_clk: 1e-8,
+        };
+        let e = m.expected_errors(1e8, 10.0); // 1e9 cycles at 2e-6/cycle
+        assert!((e - 2e3).abs() < 1e-9);
+        assert_eq!(m.expected_errors(1e8, 0.0), 0.0);
     }
 
     #[test]

@@ -23,8 +23,10 @@
 //! * [`ml`]      — LeNet + HD over-scaling workloads (PJRT-driven)
 //! * [`runtime`] — PJRT client wrapper around the `xla` crate (feature `pjrt`)
 //! * [`coordinator`] — online (sensor-driven) dynamic voltage controller
-//! * [`fleet`]   — multi-device datacenter fleet simulator + parallel
-//!   thermal-aware job scheduler
+//! * [`fleet`]   — multi-device datacenter fleet simulator: event-driven
+//!   thermal-aware scheduler (arrival/finish/migration events) + the
+//!   three-way rail-provisioning policy engine (static / dynamic /
+//!   overscaled-dynamic)
 //! * [`timing::batch`] — batched, memoizing STA engine shared by every search
 //! * [`benchkit`] — in-repo perf harness (`thermovolt bench` → BENCH_search.json)
 //! * [`report`]  — regenerates every paper table/figure

@@ -11,10 +11,12 @@
 //! thermovolt serve  --bench <b>                   dynamic controller demo
 //! thermovolt fleet  --devices N --jobs M --scenario <name>
 //!                   [--seed S] [--workers W] [--benches a,b] [--horizon-s T]
+//!                   [--policy static|dynamic|overscaled] [--overscale-rate R]
 //!                                                 datacenter fleet simulation
-//! thermovolt bench  [--quick] [--bench <b>] [--out F]   perf harness:
-//!                   Alg1 / Alg2 (batched vs --naive path, bit-checked) /
-//!                   LUT build / fleet; emits BENCH_search.json
+//! thermovolt bench  [--quick] [--bench <b>] [--out F] [--fleet-out F]
+//!                   perf harness: Alg1 / Alg2 (batched vs --naive path,
+//!                   bit-checked) / LUT build / fleet; emits
+//!                   BENCH_search.json + a ≥2048-device BENCH_fleet.json
 //! thermovolt e2e    [--full]                      full-pipeline headline run
 //! ```
 
@@ -26,6 +28,7 @@ use std::time::Instant;
 use thermovolt::chardb::CharTable;
 use thermovolt::config::Config;
 use thermovolt::coordinator::{mean_power, DynamicController, Tsd};
+use thermovolt::fleet::policy::PolicyKind;
 use thermovolt::fleet::telemetry::FleetTelemetry;
 use thermovolt::fleet::trace::Scenario;
 use thermovolt::fleet::{Fleet, FleetConfig};
@@ -333,9 +336,10 @@ fn run(args: &Args) -> Result<()> {
         }
         "fleet" => {
             // Datacenter fleet simulation: N heterogeneous devices, M design
-            // jobs, thermal-aware scheduling. The job stream is executed
-            // twice — serial, then on the work-stealing pool — both to time
-            // the parallel speedup and to prove bit-exact determinism.
+            // jobs, event-driven thermal-aware scheduling, three-way policy
+            // comparison. The job stream is executed twice — serial, then on
+            // the work-stealing pool — both to time the parallel speedup and
+            // to prove bit-exact determinism.
             let devices = args.opt_usize("devices", 8);
             let jobs = args.opt_usize("jobs", 32);
             let scen_name = args.opt_or("scenario", "diurnal");
@@ -351,11 +355,32 @@ fn run(args: &Args) -> Result<()> {
             if let Some(b) = args.opt("benches") {
                 fcfg.benches = b.split(',').map(str::to_string).collect();
             }
+            fcfg.overscale_rate = args.opt_f64("overscale-rate", 0.0);
+            if let Some(p) = args.opt("policy") {
+                fcfg.policy = PolicyKind::from_name(p).ok_or_else(|| {
+                    anyhow::anyhow!("unknown policy `{p}` (one of: static, dynamic, overscaled)")
+                })?;
+                // `--policy overscaled` WITHOUT a rate flag gets the paper's
+                // mid-curve 1.2× budget (Fig. 8: near-zero error). An
+                // explicitly passed rate is never overridden — a bad one is
+                // rejected by Fleet::build instead of silently replaced.
+                if fcfg.policy == PolicyKind::OverscaledDynamic
+                    && args.opt("overscale-rate").is_none()
+                {
+                    fcfg.overscale_rate = 1.2;
+                }
+            }
             let (t_base, theta) = scenario.corner();
             println!(
-                "fleet: {devices} devices, {jobs} jobs, scenario {} ({t_base} C corner, theta_JA {theta} C/W), seed {:#x}",
+                "fleet: {devices} devices, {jobs} jobs, scenario {} ({t_base} C corner, theta_JA {theta} C/W), seed {:#x}, policy {}{}",
                 scenario.name(),
-                fcfg.seed
+                fcfg.seed,
+                fcfg.policy.name(),
+                if fcfg.overscale_rate > 1.0 {
+                    format!(" (overscale rate {})", fcfg.overscale_rate)
+                } else {
+                    String::new()
+                }
             );
             println!(
                 "building job kinds (P&R + Algorithm-1 LUT per benchmark: {})…",
@@ -364,15 +389,25 @@ fn run(args: &Args) -> Result<()> {
             let t0 = Instant::now();
             let fleet = Fleet::build(fcfg, &cfg)?;
             println!("fleet ready in {:.1} s:", t0.elapsed().as_secs_f64());
-            for s in &fleet.specs {
-                println!(
-                    "  fpga-{:02}: {}x{} tiles  theta_JA {:.2} C/W  rack +{:.1} C  margin {:.1} C  power x{:.3}",
-                    s.id, s.grid_edge, s.grid_edge, s.theta_ja, s.rack_offset_c, s.margin_c,
-                    s.power_scale
-                );
+            if fleet.specs.len() <= 32 {
+                for s in &fleet.specs {
+                    println!(
+                        "  fpga-{:02}: {}x{} tiles  theta_JA {:.2} C/W  rack +{:.1} C  margin {:.1} C  power x{:.3}",
+                        s.id, s.grid_edge, s.grid_edge, s.theta_ja, s.rack_offset_c, s.margin_c,
+                        s.power_scale
+                    );
+                }
+            } else {
+                println!("  ({} devices — roster omitted)", fleet.specs.len());
             }
 
             let plan = fleet.plan();
+            if !plan.unplaceable.is_empty() {
+                println!(
+                    "warning: {} job(s) fit no device and will not run",
+                    plan.unplaceable.len()
+                );
+            }
             let t1 = Instant::now();
             let serial = fleet.execute(&plan, 1);
             let serial_s = t1.elapsed().as_secs_f64();
@@ -382,7 +417,8 @@ fn run(args: &Args) -> Result<()> {
             let parallel_s = t2.elapsed().as_secs_f64();
 
             let tel_serial = FleetTelemetry::aggregate(devices, serial);
-            let tel = FleetTelemetry::aggregate(devices, parallel);
+            let tel = FleetTelemetry::aggregate(devices, parallel)
+                .with_unplaceable(plan.unplaceable.len());
             anyhow::ensure!(
                 tel_serial.fingerprint() == tel.fingerprint(),
                 "parallel and serial telemetry diverged — scheduler nondeterminism"
@@ -391,12 +427,22 @@ fn run(args: &Args) -> Result<()> {
             std::fs::create_dir_all(results)?;
             report::fleet_table(&tel, &fleet.specs).emit(results, "fleet")?;
             println!(
-                "fleet saving (dynamic vs static worst-case): {} %  (paper Fig. 6: 28.3-36.0 % @40C, 20.0-25.0 % @65C)",
-                pct(tel.saving())
+                "fleet saving vs static worst-case: dynamic {} %, overscaled {} %  (paper Fig. 6: 28.3-36.0 % @40C, 20.0-25.0 % @65C)",
+                pct(tel.saving()),
+                pct(tel.saving_over())
             );
+            if tel.expected_errors > 0.0 {
+                println!(
+                    "overscaled policy: {:.3e} expected timing errors  quality mean {:.4} / min {:.4}",
+                    tel.expected_errors, tel.quality_mean, tel.quality_min
+                );
+            }
             println!(
-                "violations: {}  |  throughput {:.1} jobs/h  makespan {:.0} s  queue p50/p95 {:.1}/{:.1} s",
+                "violations: {} dyn / {} over  |  migrations {}  unplaceable {}  |  throughput {:.1} jobs/h  makespan {:.0} s  queue p50/p95 {:.1}/{:.1} s",
                 tel.violations,
+                tel.violations_over,
+                tel.migrations,
+                tel.unplaceable,
                 tel.throughput_jobs_per_hour,
                 tel.makespan_ms / 1e3,
                 tel.queue_p50_ms / 1e3,
@@ -424,6 +470,19 @@ fn run(args: &Args) -> Result<()> {
             println!(
                 "bench summary: alg2 {:.1}x vs naive (bit-identical), fleet {:.1}x on {} workers",
                 s.alg2_speedup, s.fleet_speedup, s.fleet_workers
+            );
+            // datacenter-scale fleet bench (≥2048 devices, three-way policy
+            // comparison) → BENCH_fleet.json
+            let fleet_out = Path::new(args.opt_or("fleet-out", "BENCH_fleet.json")).to_path_buf();
+            let fs = thermovolt::benchkit::run_fleet(&cfg, &opts, &fleet_out)?;
+            println!(
+                "fleet bench: {} devices / {} jobs, {:.1}x on {} workers, saving dyn {:.1} % / over {:.1} %",
+                fs.devices,
+                fs.jobs,
+                fs.speedup,
+                fs.workers,
+                fs.saving_dyn * 100.0,
+                fs.saving_over * 100.0
             );
         }
         "e2e" => {

@@ -37,6 +37,22 @@ pub const HD_K: usize = 4;
 /// carry chain corrupts a high-order bit ≈ 2× the activation scale).
 pub const MAG_MSB_FACTOR: f64 = 2.0;
 
+/// Closed-form Fig.-8-shaped accuracy mapping, available without PJRT.
+///
+/// A `depth`-cycle reduction produces a corrupted output with probability
+/// `p_op = 1 − (1 − p_cycle)^depth` (`sim::amplify`); a corrupted output is
+/// still correct at the chance rate. Interpolating between the clean and
+/// chance accuracies gives the expected accuracy under a per-cycle timing
+/// violation rate — exact for independent single-output corruption, and a
+/// faithful proxy for the measured Fig. 8 curves (flat near zero rate,
+/// collapsing to chance once hard violations dominate). The fleet's
+/// overscaled-dynamic policy uses this to turn each job kind's
+/// `ErrorModel::mean_rate` into quality telemetry.
+pub fn expected_accuracy(clean_acc: f64, chance_acc: f64, p_cycle: f64, depth: usize) -> f64 {
+    let p_op = crate::sim::amplify(p_cycle, depth);
+    (clean_acc * (1.0 - p_op) + chance_acc * p_op).clamp(0.0, 1.0)
+}
+
 /// The LeNet workload: weights + test set from artifacts.
 pub struct LenetWorkload {
     pub weights: Vec<(Vec<usize>, Vec<f32>)>, // w0..w7 in artifact order
@@ -194,6 +210,28 @@ fn argmax(row: &[f32]) -> i32 {
         .max_by(|a, c| a.1.total_cmp(c.1))
         .map(|(i, _)| i as i32)
         .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::expected_accuracy;
+
+    #[test]
+    fn expected_accuracy_is_monotone_and_bounded() {
+        // zero rate ⇒ clean accuracy, certain corruption ⇒ chance
+        assert!((expected_accuracy(0.98, 0.1, 0.0, 72) - 0.98).abs() < 1e-12);
+        assert!((expected_accuracy(0.98, 0.1, 1.0, 72) - 0.1).abs() < 1e-12);
+        // monotone decreasing in the violation rate, never below chance
+        let mut prev = 1.0;
+        for &p in &[1e-9, 1e-7, 1e-5, 1e-3, 1e-1] {
+            let a = expected_accuracy(0.98, 0.1, p, 72);
+            assert!(a < prev, "not decreasing at {p}: {a} vs {prev}");
+            assert!(a >= 0.1 - 1e-12, "below chance at {p}");
+            prev = a;
+        }
+        // deeper pipelines amplify the same per-cycle rate
+        assert!(expected_accuracy(0.98, 0.1, 1e-4, 144) < expected_accuracy(0.98, 0.1, 1e-4, 9));
+    }
 }
 
 /// One Fig. 8 sweep point: (LeNet accuracy, HD accuracy).

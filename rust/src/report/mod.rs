@@ -531,18 +531,20 @@ pub fn leakage_fit(cfg: &Config) -> anyhow::Result<Table> {
 /// land in the paper's per-corner band.
 pub fn fleet_table(t: &FleetTelemetry, specs: &[DeviceSpec]) -> Table {
     let mut tb = Table::new(
-        "Fleet — static worst-case vs dynamic per-device voltage scaling",
+        "Fleet — static worst-case vs dynamic vs overscaled-dynamic rails",
         &[
             "device",
             "grid",
             "theta(C/W)",
             "rack dT(C)",
             "jobs",
+            "migr",
             "busy(s)",
-            "P_dyn(mW)",
-            "E_dyn(J)",
             "E_static(J)",
-            "saving(%)",
+            "E_dyn(J)",
+            "E_over(J)",
+            "sav_dyn(%)",
+            "sav_over(%)",
             "viol",
         ],
     );
@@ -554,11 +556,13 @@ pub fn fleet_table(t: &FleetTelemetry, specs: &[DeviceSpec]) -> Table {
             f2(spec.theta_ja),
             f1(spec.rack_offset_c),
             dt.jobs.to_string(),
+            dt.migrations.to_string(),
             f1(dt.busy_ms / 1e3),
-            mw(dt.mean_power_w()),
-            f2(dt.energy_dyn_j),
             f2(dt.energy_static_j),
+            f2(dt.energy_dyn_j),
+            f2(dt.energy_over_j),
             pct(dt.saving()),
+            pct(dt.saving_over()),
             dt.violations.to_string(),
         ]);
     }
@@ -568,13 +572,32 @@ pub fn fleet_table(t: &FleetTelemetry, specs: &[DeviceSpec]) -> Table {
         "-".into(),
         "-".into(),
         t.jobs.len().to_string(),
+        t.migrations.to_string(),
         f1(t.busy_ms / 1e3),
-        mw(t.mean_power_w()),
-        f2(t.energy_dyn_j),
         f2(t.energy_static_j),
+        f2(t.energy_dyn_j),
+        f2(t.energy_over_j),
         pct(t.saving()),
+        pct(t.saving_over()),
         t.violations.to_string(),
     ]);
+    if t.unplaceable > 0 {
+        tb.row(vec![
+            "UNPLACED".into(),
+            "-".into(),
+            "-".into(),
+            "-".into(),
+            t.unplaceable.to_string(),
+            "-".into(),
+            "-".into(),
+            "-".into(),
+            "-".into(),
+            "-".into(),
+            "-".into(),
+            "-".into(),
+            "-".into(),
+        ]);
+    }
     tb
 }
 

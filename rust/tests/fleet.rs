@@ -2,14 +2,23 @@
 //! fixed `util::rng` seed (bit-identical telemetry for any worker count),
 //! telemetry aggregation invariants (busy-time-weighted mean power, zero
 //! guardband violations with the 5 °C margin), scheduler sanity (arrival
-//! order, eligibility, no double-booking), and hand-rolled property tests
-//! (proptest is not vendored offline; cases are seeded + enumerated) for
-//! trace interpolation: monotone-bounded between breakpoints.
+//! order, eligibility, no double-booking, unplaceable reporting), the
+//! differential tests pinning the event-driven planner and policy-engine
+//! executor to the pre-refactor paths, three-way policy invariants
+//! (overscaled ≤ dynamic ≤ static energy; modeled errors only where the
+//! error model allows them), and hand-rolled property tests (proptest is
+//! not vendored offline; cases are seeded + enumerated) for trace
+//! interpolation: monotone-bounded between breakpoints.
+
+use std::sync::Arc;
 
 use thermovolt::config::Config;
+use thermovolt::fleet::policy::{PolicyKind, QUALITY_CHANCE_ACC, QUALITY_CLEAN_ACC};
+use thermovolt::fleet::scheduler;
 use thermovolt::fleet::telemetry::FleetTelemetry;
 use thermovolt::fleet::trace::{self, Scenario};
-use thermovolt::fleet::{Fleet, FleetConfig};
+use thermovolt::fleet::{Fleet, FleetConfig, JobKind};
+use thermovolt::flow::dynamic::VoltageLut;
 use thermovolt::util::stats::interp1;
 use thermovolt::util::Xoshiro256;
 
@@ -29,12 +38,12 @@ fn fleet_is_deterministic_across_worker_counts_and_rebuilds() {
     let fleet = small_fleet(Scenario::Diurnal, 4, 10, 0xD57E_AD);
     let plan = fleet.plan();
     let serial = fleet.execute(&plan, 1);
-    let par3 = fleet.execute(&plan, 3);
+    let par4 = fleet.execute(&plan, 4);
     let par8 = fleet.execute(&plan, 8);
     let t1 = FleetTelemetry::aggregate(4, serial);
-    let t3 = FleetTelemetry::aggregate(4, par3);
+    let t4 = FleetTelemetry::aggregate(4, par4);
     let t8 = FleetTelemetry::aggregate(4, par8);
-    assert_eq!(t1.fingerprint(), t3.fingerprint(), "1 vs 3 workers diverged");
+    assert_eq!(t1.fingerprint(), t4.fingerprint(), "1 vs 4 workers diverged");
     assert_eq!(t1.fingerprint(), t8.fingerprint(), "1 vs 8 workers diverged");
 
     // a fresh fleet from the same seed reproduces everything end to end
@@ -56,6 +65,7 @@ fn fleet_saves_power_with_zero_violations() {
     let plan = fleet.plan();
     let tel = FleetTelemetry::aggregate(4, fleet.execute(&plan, fleet.effective_workers()));
     assert_eq!(tel.jobs.len(), 10, "every job must execute");
+    assert!(plan.unplaceable.is_empty());
     // the 5 °C sensor margin (+ per-unit jitter) absorbs TSD error and
     // regulator slew: no guardband violation on any step of any job
     assert_eq!(tel.violations, 0, "guardband violated at fleet scale");
@@ -67,6 +77,11 @@ fn fleet_saves_power_with_zero_violations() {
         (0.12..=0.60).contains(&saving),
         "fleet saving {saving} outside the plausible Fig. 6 band"
     );
+    // no over-scale rate configured: the overscaled column degrades to the
+    // dynamic one exactly, with clean quality and zero modeled errors
+    assert_eq!(tel.energy_over_j.to_bits(), tel.energy_dyn_j.to_bits());
+    assert_eq!(tel.expected_errors, 0.0);
+    assert!((tel.quality_mean - QUALITY_CLEAN_ACC).abs() < 1e-12);
     // every device that ran jobs must individually save energy
     for d in &tel.per_device {
         if d.jobs > 0 {
@@ -114,8 +129,11 @@ fn fleet_mean_power_is_busy_weighted_device_mean() {
 fn scheduler_respects_arrivals_eligibility_and_capacity() {
     let fleet = small_fleet(Scenario::Bursty, 3, 12, 33);
     let plan = fleet.plan();
-    assert_eq!(plan.len(), 12);
-    for a in &plan {
+    assert_eq!(plan.assignments.len() + plan.unplaceable.len(), 12);
+    assert!(plan.unplaceable.is_empty());
+    let migrated = plan.assignments.iter().filter(|a| a.migrated).count();
+    assert_eq!(migrated, plan.migrations, "migration count out of sync");
+    for a in &plan.assignments {
         assert!(a.start_ms >= a.job.arrival_ms - 1e-9, "started before arrival");
         assert!((a.queue_ms - (a.start_ms - a.job.arrival_ms)).abs() < 1e-9);
         let kind = &fleet.kinds[a.job.kind];
@@ -127,6 +145,7 @@ fn scheduler_respects_arrivals_eligibility_and_capacity() {
     // no device runs two jobs at once
     for d in 0..fleet.specs.len() {
         let mut windows: Vec<(f64, f64)> = plan
+            .assignments
             .iter()
             .filter(|a| a.device == d)
             .map(|a| (a.start_ms, a.start_ms + a.job.duration_ms))
@@ -140,6 +159,224 @@ fn scheduler_respects_arrivals_eligibility_and_capacity() {
             );
         }
     }
+}
+
+// ---------------------------------------------------------------------
+// differential tests: the event planner and policy-engine executor must
+// reproduce the pre-refactor paths (PR-2 style)
+// ---------------------------------------------------------------------
+
+#[test]
+fn policy_engine_reproduces_legacy_executor_bit_for_bit() {
+    // same plan through both executors: the refactor must not change a
+    // single bit of the static/dynamic telemetry
+    let fleet = small_fleet(Scenario::Diurnal, 4, 10, 0xD1FF);
+    let legacy_plan = scheduler::plan_legacy(&fleet);
+    let legacy = scheduler::execute_legacy(&fleet, &legacy_plan);
+    let modern = scheduler::execute(&fleet, &legacy_plan, 1);
+    assert_eq!(legacy.len(), modern.len());
+    for (l, m) in legacy.iter().zip(&modern) {
+        assert_eq!(l.job_id, m.job_id);
+        assert_eq!(
+            l.energy_dyn_j.to_bits(),
+            m.energy_dyn_j.to_bits(),
+            "job {}: dynamic energy diverged",
+            l.job_id
+        );
+        assert_eq!(
+            l.energy_static_j.to_bits(),
+            m.energy_static_j.to_bits(),
+            "job {}: static energy diverged",
+            l.job_id
+        );
+        assert_eq!(l.mean_power_dyn_w.to_bits(), m.mean_power_dyn_w.to_bits());
+        assert_eq!(
+            l.mean_power_static_w.to_bits(),
+            m.mean_power_static_w.to_bits()
+        );
+        assert_eq!(l.violations, m.violations);
+        assert_eq!(l.peak_t_junct_c.to_bits(), m.peak_t_junct_c.to_bits());
+        // no over-scale configured: the third column equals the dynamic one
+        assert_eq!(m.energy_over_j.to_bits(), m.energy_dyn_j.to_bits());
+        assert_eq!(m.expected_errors, 0.0);
+    }
+}
+
+#[test]
+fn event_planner_matches_legacy_planner_when_uncontended() {
+    // more devices than jobs ⇒ no queueing, no migrations — the event pass
+    // must reduce to the legacy placement exactly
+    let fleet = small_fleet(Scenario::Diurnal, 6, 4, 0xCAFE);
+    let legacy = scheduler::plan_legacy(&fleet);
+    let plan = fleet.plan();
+    assert_eq!(plan.migrations, 0);
+    assert!(plan.unplaceable.is_empty());
+    assert_eq!(plan.assignments.len(), legacy.len());
+    for (n, l) in plan.assignments.iter().zip(&legacy) {
+        assert_eq!(n.job.id, l.job.id);
+        assert_eq!(n.device, l.device, "job {} placed differently", n.job.id);
+        assert_eq!(n.start_ms.to_bits(), l.start_ms.to_bits());
+        assert!(!n.migrated);
+    }
+}
+
+// ---------------------------------------------------------------------
+// three-way policy invariants (§III-D overscaled-dynamic)
+// ---------------------------------------------------------------------
+
+#[test]
+fn overscaled_policy_trades_bounded_errors_for_strictly_lower_energy() {
+    let mut fcfg = FleetConfig::new(3, 6, Scenario::Diurnal);
+    fcfg.seed = 0x05CA_1E;
+    fcfg.horizon_ms = 240_000.0;
+    fcfg.benches = vec!["mkPktMerge".to_string()];
+    fcfg.lut_step_c = 25.0;
+    fcfg.overscale_rate = 1.35;
+    fcfg.policy = PolicyKind::OverscaledDynamic;
+    let fleet = Fleet::build(fcfg, &Config::new()).expect("fleet build");
+    assert!(
+        fleet.kinds.iter().all(|k| k.overscale.is_some()),
+        "over-scale spec missing"
+    );
+    let plan = fleet.plan();
+    let tel = FleetTelemetry::aggregate(3, fleet.execute(&plan, 2))
+        .with_unplaceable(plan.unplaceable.len());
+
+    // energy ordering: overscaled < dynamic < static (fleet-wide strict)
+    assert!(
+        tel.energy_over_j < tel.energy_dyn_j,
+        "overscaled {} !< dynamic {}",
+        tel.energy_over_j,
+        tel.energy_dyn_j
+    );
+    assert!(
+        tel.energy_dyn_j < tel.energy_static_j,
+        "dynamic {} !< static {}",
+        tel.energy_dyn_j,
+        tel.energy_static_j
+    );
+    assert!(tel.saving_over() > tel.saving());
+    // the governing policy is overscaled everywhere
+    assert_eq!(tel.energy_policy_j.to_bits(), tel.energy_over_j.to_bits());
+    // per-job the relaxed rails never cost energy (tiny tolerance for
+    // table-bracket boundary effects)
+    for r in &tel.jobs {
+        assert!(
+            r.energy_over_j <= r.energy_dyn_j * (1.0 + 1e-3),
+            "job {}: overscaled {} above dynamic {}",
+            r.job_id,
+            r.energy_over_j,
+            r.energy_dyn_j
+        );
+        assert_eq!(r.policy, PolicyKind::OverscaledDynamic);
+    }
+
+    // violations: every policy tracks its own rail requirements, and the
+    // sensor margin covers both tables — no guardband violations anywhere;
+    // the *modeled* timing errors are the price of over-scaling, and they
+    // appear only where the error model allows them (overscaled kinds)
+    assert_eq!(tel.violations, 0);
+    assert_eq!(tel.violations_over, 0);
+    assert!(
+        tel.expected_errors > 0.0,
+        "over-scaling at 1.35x must admit a nonzero modeled error rate"
+    );
+    for r in &tel.jobs {
+        assert!(r.expected_errors > 0.0);
+        assert!(r.quality <= QUALITY_CLEAN_ACC + 1e-12);
+        assert!(r.quality >= QUALITY_CHANCE_ACC - 1e-12);
+    }
+    assert!(tel.quality_mean <= QUALITY_CLEAN_ACC + 1e-12);
+    assert!(tel.quality_min <= tel.quality_mean + 1e-12);
+}
+
+#[test]
+fn safe_policies_report_no_modeled_errors() {
+    // without an over-scale rate the error machinery must stay silent
+    let fleet = small_fleet(Scenario::HeatWave, 3, 6, 0x5AFE);
+    assert!(fleet.kinds.iter().all(|k| k.overscale.is_none()));
+    let plan = fleet.plan();
+    let tel = FleetTelemetry::aggregate(3, fleet.execute(&plan, 2));
+    assert_eq!(tel.expected_errors, 0.0);
+    assert_eq!(tel.violations_over, tel.violations);
+    assert!((tel.quality_min - QUALITY_CLEAN_ACC).abs() < 1e-12);
+}
+
+// ---------------------------------------------------------------------
+// edge cases: oversized kinds, degenerate LUTs, single-device fleets
+// ---------------------------------------------------------------------
+
+#[test]
+fn oversized_jobs_are_reported_unplaceable_not_a_panic() {
+    let mut fleet = small_fleet(Scenario::Diurnal, 3, 8, 0xB16);
+    // shrink every device below the kind's footprint: nothing can place
+    for s in &mut fleet.specs {
+        s.grid_edge = 0;
+    }
+    let plan = fleet.plan(); // pre-refactor plan() panicked here
+    assert!(plan.assignments.is_empty());
+    assert_eq!(plan.unplaceable.len(), 8);
+    assert_eq!(plan.migrations, 0);
+    // unplaceable jobs surface in telemetry; nothing executes
+    let tel = FleetTelemetry::aggregate(3, fleet.execute(&plan, 2))
+        .with_unplaceable(plan.unplaceable.len());
+    assert_eq!(tel.jobs.len(), 0);
+    assert_eq!(tel.unplaceable, 8);
+    assert_eq!(tel.energy_dyn_j, 0.0);
+
+    // with only *some* devices oversized the stream still drains fully
+    let mut fleet2 = small_fleet(Scenario::Diurnal, 3, 8, 0xB17);
+    fleet2.specs[0].grid_edge = 0;
+    let plan2 = fleet2.plan();
+    assert!(plan2.unplaceable.is_empty());
+    assert_eq!(plan2.assignments.len(), 8);
+    assert!(plan2.assignments.iter().all(|a| a.device != 0));
+}
+
+#[test]
+fn degenerate_luts_do_not_blind_or_crash_the_planner() {
+    let mut fleet = small_fleet(Scenario::Diurnal, 3, 6, 0xDE6E);
+    // swap kind 0's LUT for an empty one (an all-infeasible build): the
+    // pre-refactor planner indexed entries[0] and panicked
+    let mut jk: JobKind = (*fleet.kinds[0]).clone();
+    jk.lut = Arc::new(VoltageLut {
+        entries: vec![],
+        v_core_nom: jk.v_core_nom,
+        v_bram_nom: jk.v_bram_nom,
+    });
+    // the nominal-rail fallback keeps thermal-aware placement seeing power
+    assert!(jk.power_estimate() > 0.0, "placement went blind");
+    fleet.kinds[0] = Arc::new(jk);
+    let plan = fleet.plan();
+    assert_eq!(plan.assignments.len(), 6);
+    assert!(plan.unplaceable.is_empty());
+    // execution under an empty LUT falls back to nominal rails — safe
+    // (no violations), just no savings for that kind
+    let tel = FleetTelemetry::aggregate(3, fleet.execute(&plan, 2));
+    assert_eq!(tel.violations, 0);
+    for r in &tel.jobs {
+        assert!(r.energy_dyn_j > 0.0);
+    }
+}
+
+#[test]
+fn single_device_fleet_serializes_the_whole_stream() {
+    let fleet = small_fleet(Scenario::Bursty, 1, 5, 0x51D);
+    let plan = fleet.plan();
+    assert_eq!(plan.assignments.len(), 5);
+    assert!(plan.unplaceable.is_empty());
+    assert_eq!(plan.migrations, 0, "nowhere to migrate to");
+    assert!(plan.assignments.iter().all(|a| a.device == 0));
+    // strictly serialized, FIFO by arrival
+    let mut sorted = plan.assignments.clone();
+    sorted.sort_by(|x, y| x.start_ms.total_cmp(&y.start_ms));
+    for w in sorted.windows(2) {
+        assert!(w[1].start_ms >= w[0].start_ms + w[0].job.duration_ms - 1e-9);
+        assert!(w[1].job.arrival_ms >= w[0].job.arrival_ms - 1e-9, "not FIFO");
+    }
+    let tel = FleetTelemetry::aggregate(1, fleet.execute(&plan, 2));
+    assert_eq!(tel.jobs.len(), 5);
+    assert_eq!(tel.per_device[0].jobs, 5);
 }
 
 // ---------------------------------------------------------------------

@@ -23,7 +23,7 @@ use std::time::Instant;
 
 use thermovolt::chardb::{CharDb, CharTable};
 use thermovolt::config::Config;
-use thermovolt::flow::Effort;
+use thermovolt::flow::{Effort, FlowSession};
 use thermovolt::report;
 use thermovolt::synth::benchmark_names;
 
@@ -49,6 +49,9 @@ fn main() -> anyhow::Result<()> {
             .collect()
     };
     let cfg = Config::new();
+    // one session spans every experiment: designs, STA arenas and thermal
+    // backends are shared across figures
+    let mut session = FlowSession::with_effort(cfg.clone(), effort)?;
     let out = Path::new("results");
     std::fs::create_dir_all(out)?;
     println!(
@@ -84,22 +87,22 @@ fn main() -> anyhow::Result<()> {
         Ok(())
     })?;
 
-    timed("F4 fig4", || report::fig4(&cfg, effort))?.emit(out, "fig4")?;
-    timed("T2 table2", || report::table2(&cfg, effort))?.emit(out, "table2")?;
+    timed("F4 fig4", || report::fig4(&mut session))?.emit(out, "fig4")?;
+    timed("T2 table2", || report::table2(&mut session))?.emit(out, "table2")?;
 
-    timed("F6a fig6 @40C", || report::fig6(&cfg, effort, 40.0, 12.0, &names))?
+    timed("F6a fig6 @40C", || report::fig6(&mut session, 40.0, 12.0, &names))?
         .emit(out, "fig6a")?;
-    timed("F6b fig6 @65C", || report::fig6(&cfg, effort, 65.0, 2.0, &names))?
+    timed("F6b fig6 @65C", || report::fig6(&mut session, 65.0, 2.0, &names))?
         .emit(out, "fig6b")?;
-    timed("F7 fig7", || report::fig7(&cfg, effort, &names))?.emit(out, "fig7")?;
+    timed("F7 fig7", || report::fig7(&mut session, &names))?.emit(out, "fig7")?;
 
     if cfg.artifacts_dir.join("lenet.hlo.txt").exists() {
-        timed("F8 fig8", || report::fig8(&cfg, effort))?.emit(out, "fig8")?;
+        timed("F8 fig8", || report::fig8(&mut session))?.emit(out, "fig8")?;
     } else {
         println!("[bench] F8 fig8: SKIPPED (run `make artifacts` first)");
     }
 
-    timed("RT runtime-claims", || report::runtime_claims(&cfg, effort))?
+    timed("RT runtime-claims", || report::runtime_claims(&mut session))?
         .emit(out, "runtime_claims")?;
     timed("LK leakage-fit", || report::leakage_fit(&cfg))?.emit(out, "leakage_fit")?;
 

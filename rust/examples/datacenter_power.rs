@@ -8,7 +8,7 @@
 //! (several minutes); the default quick mode runs the small/medium set.
 
 use thermovolt::config::Config;
-use thermovolt::flow::Effort;
+use thermovolt::flow::{Effort, FlowSession};
 use thermovolt::report;
 use thermovolt::synth::benchmark_names;
 
@@ -23,12 +23,14 @@ fn main() -> anyhow::Result<()> {
             .filter(|n| !matches!(*n, "mcml" | "bgm" | "LU8PEEng"))
             .collect()
     };
-    let cfg = Config::new();
+    // one session for both corners: each benchmark is placed once and both
+    // sweeps reuse its STA arena
+    let mut session = FlowSession::with_effort(Config::new(), effort)?;
     let out = std::path::Path::new("results");
 
-    let a = report::fig6(&cfg, effort, 40.0, 12.0, &names)?;
+    let a = report::fig6(&mut session, 40.0, 12.0, &names)?;
     a.emit(out, "example_fig6a")?;
-    let b = report::fig6(&cfg, effort, 65.0, 2.0, &names)?;
+    let b = report::fig6(&mut session, 65.0, 2.0, &names)?;
     b.emit(out, "example_fig6b")?;
 
     let avg_a = a.rows.last().unwrap();

@@ -1,29 +1,33 @@
 //! Dynamic (online) voltage adaptation demo: build the per-design
-//! (T → V) lookup table with Algorithm 1, then drive the sensor-based
-//! controller through a day-cycle ambient trace and compare against the
-//! static worst-case setting. No guardband violations are permitted.
+//! (T → V) lookup table through `FlowSession::voltage_lut`, then drive the
+//! sensor-based controller through a day-cycle ambient trace and compare
+//! against the static worst-case setting. No guardband violations are
+//! permitted.
 
 use std::sync::Arc;
 
 use thermovolt::config::Config;
 use thermovolt::coordinator::{mean_power, DynamicController, Tsd};
-use thermovolt::flow::dynamic::VoltageLut;
-use thermovolt::flow::{Design, Effort};
-use thermovolt::runtime::select_backend;
+use thermovolt::flow::{FlowSession, LutRequest, LutSpec};
 
 fn main() -> anyhow::Result<()> {
     let mut cfg = Config::new();
     cfg.thermal.theta_ja = 12.0;
-    let design = Design::build("mkPktMerge", &cfg, Effort::Quick)?;
-    let mut backend = select_backend(
-        &cfg.artifacts_dir,
-        design.dev.rows,
-        design.dev.cols,
-        &cfg.thermal,
-    );
+    let mut session = FlowSession::new(cfg.clone())?;
 
     println!("building (T → V) LUT (Algorithm 1 per ambient point)…");
-    let lut = Arc::new(VoltageLut::build(&design, &cfg, backend.as_mut(), 0.0, 80.0, 10.0));
+    let lut = Arc::new(
+        session
+            .voltage_lut(LutRequest::new(
+                "mkPktMerge",
+                LutSpec::Sweep {
+                    t_amb_lo: 0.0,
+                    t_amb_hi: 80.0,
+                    step_c: 10.0,
+                },
+            ))?
+            .lut,
+    );
     for e in &lut.entries {
         println!(
             "  Tj <= {:5.1} C → ({:.0}, {:.0}) mV, {:.0} mW",
@@ -34,6 +38,7 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
+    let design = session.design("mkPktMerge")?;
     let sta = design.sta();
     let pm = design.power_model();
     let d_worst = sta
@@ -61,7 +66,7 @@ fn main() -> anyhow::Result<()> {
         (180_000.0, 40.0),
         (240_000.0, 15.0),
     ];
-    let log = controller.run(&trace, 1.0, 10_000.0);
+    let log = controller.run(&trace, 1.0, 10_000.0)?;
     println!("\n  t(s)  T_amb  T_j   V_core  V_bram   P(mW)");
     for s in &log {
         println!(

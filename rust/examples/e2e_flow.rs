@@ -13,12 +13,12 @@
 
 use std::time::Instant;
 use thermovolt::config::Config;
-use thermovolt::flow::{alg1, overscale, Design, Effort};
+use thermovolt::flow::{BaselineRequest, Effort, FlowSession, OverscaleRequest};
 use thermovolt::ml::{HdWorkload, LenetWorkload};
 use thermovolt::report;
-use thermovolt::runtime::{select_backend, Runtime};
+use thermovolt::runtime::Runtime;
 use thermovolt::sim::ml_error_rates;
-use thermovolt::synth::{self, benchmark_names};
+use thermovolt::synth::benchmark_names;
 
 fn main() -> anyhow::Result<()> {
     let full = std::env::args().any(|a| a == "--full");
@@ -38,28 +38,26 @@ fn main() -> anyhow::Result<()> {
             .collect()
     };
     println!("== phase 1: thermal-aware voltage scaling over {} benchmarks ==", names.len());
-    let t = report::fig6(&cfg, effort, 40.0, 12.0, &names)?;
+    let mut session = FlowSession::with_effort(cfg.clone(), effort)?;
+    let t = report::fig6(&mut session, 40.0, 12.0, &names)?;
     println!("{}", t.render());
     let avg = t.rows.last().unwrap().clone();
 
     // ---- phase 2: ML over-scaling through the AOT executables ----
+    // the same session serves the accelerator profiles: lenet_systolic and
+    // hd_engine resolve through the session's benchmark namespace
     println!("== phase 2: over-scaling the ML accelerators ==");
-    let lenet_profile = synth::lenet_accel();
-    let hd_profile = synth::hd_accel();
-    let lenet_design =
-        Design::from_netlist(synth::generate(&lenet_profile), &lenet_profile, &cfg, effort)?;
-    let hd_design = Design::from_netlist(synth::generate(&hd_profile), &hd_profile, &cfg, effort)?;
     let mut rt = Runtime::new(&cfg.artifacts_dir)?;
     let lenet = LenetWorkload::load(&cfg.artifacts_dir)?;
     let hd = HdWorkload::load(&cfg.artifacts_dir)?;
-    let mut bl = select_backend(&cfg.artifacts_dir, lenet_design.dev.rows, lenet_design.dev.cols, &cfg.thermal);
-    let mut bh = select_backend(&cfg.artifacts_dir, hd_design.dev.rows, hd_design.dev.cols, &cfg.thermal);
-    let base_l = alg1::baseline(&lenet_design, &cfg, bl.as_mut());
-    let base_h = alg1::baseline(&hd_design, &cfg, bh.as_mut());
+    let base_l = session.baseline(BaselineRequest::new("lenet_systolic"))?.result;
+    let base_h = session.baseline(BaselineRequest::new("hd_engine"))?.result;
+    let lenet_design = session.design("lenet_systolic")?;
+    let hd_design = session.design("hd_engine")?;
     let mut rows = Vec::new();
     for rate in [1.0, 1.35] {
-        let ol = overscale::overscale(&lenet_design, &cfg, bl.as_mut(), rate);
-        let oh = overscale::overscale(&hd_design, &cfg, bh.as_mut(), rate);
+        let ol = session.overscale(OverscaleRequest::new("lenet_systolic", rate))?;
+        let oh = session.overscale(OverscaleRequest::new("hd_engine", rate))?;
         let rl = ml_error_rates(&lenet_design, &ol.alg1, &ol.error);
         let rh = ml_error_rates(&hd_design, &oh.alg1, &oh.error);
         let acc_l = lenet.accuracy(&mut rt, rl.mac_rate, 0xE2E)?;

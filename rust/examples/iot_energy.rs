@@ -4,7 +4,7 @@
 //! delay stretched to ~2.7× (frequency ratio ≈ 0.37).
 
 use thermovolt::config::Config;
-use thermovolt::flow::Effort;
+use thermovolt::flow::{Effort, FlowSession};
 use thermovolt::report;
 use thermovolt::synth::benchmark_names;
 
@@ -19,8 +19,8 @@ fn main() -> anyhow::Result<()> {
             .filter(|n| !matches!(*n, "mcml" | "bgm" | "LU8PEEng"))
             .collect()
     };
-    let cfg = Config::new();
-    let t = report::fig7(&cfg, effort, &names)?;
+    let mut session = FlowSession::with_effort(Config::new(), effort)?;
+    let t = report::fig7(&mut session, &names)?;
     t.emit(std::path::Path::new("results"), "example_fig7")?;
     let avg = t.rows.last().unwrap();
     println!("paper Fig. 7: 44–66 % energy saving, freq ratio ≈ 0.37");

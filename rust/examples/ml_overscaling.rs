@@ -4,14 +4,14 @@
 //! accuracy holds until the guardband wall (~1.36×), then craters.
 
 use thermovolt::config::Config;
-use thermovolt::flow::Effort;
+use thermovolt::flow::{Effort, FlowSession};
 use thermovolt::report;
 
 fn main() -> anyhow::Result<()> {
     let full = std::env::args().any(|a| a == "--full");
     let effort = if full { Effort::Full } else { Effort::Quick };
-    let cfg = Config::new();
-    let t = report::fig8(&cfg, effort)?;
+    let mut session = FlowSession::with_effort(Config::new(), effort)?;
+    let t = report::fig8(&mut session)?;
     t.emit(std::path::Path::new("results"), "example_fig8")?;
     println!("paper Fig. 8 anchors: ~34 % saving at 1.0×; ~48 %/50 % at 1.35×;");
     println!("errors negligible below 1.2×, spiking past ~1.35×.");

@@ -1,16 +1,16 @@
-//! Quickstart: one benchmark through the thermal-aware voltage-scaling flow.
+//! Quickstart: one benchmark through the thermal-aware voltage-scaling flow
+//! via the typed `FlowSession` facade.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example quickstart
 //! ```
 //!
-//! Builds the mkPktMerge design (synthesize → pack → place → route →
-//! activities), runs Algorithm 1 at 40 °C against the AOT-compiled PJRT
-//! thermal solver, and prints the chosen rail voltages and power saving.
+//! Opens a session at 40 °C / θ_JA = 12 °C/W, builds the mkPktMerge design
+//! (synthesize → pack → place → route → activities) into the session cache,
+//! runs Algorithm 1, and prints the chosen rail voltages and power saving.
 
 use thermovolt::config::Config;
-use thermovolt::flow::{alg1, Design, Effort};
-use thermovolt::runtime::select_backend;
+use thermovolt::flow::{Alg1Request, BaselineRequest, FlowSession};
 
 fn main() -> anyhow::Result<()> {
     let mut cfg = Config::new();
@@ -18,7 +18,8 @@ fn main() -> anyhow::Result<()> {
     cfg.thermal.theta_ja = 12.0;
 
     println!("== thermovolt quickstart ==");
-    let design = Design::build("mkPktMerge", &cfg, Effort::Quick)?;
+    let mut session = FlowSession::new(cfg)?;
+    let design = session.design("mkPktMerge")?;
     println!(
         "implemented {}: {} cells, {} nets on a {}×{} device",
         design.name,
@@ -28,16 +29,8 @@ fn main() -> anyhow::Result<()> {
         design.dev.cols
     );
 
-    let mut backend = select_backend(
-        &cfg.artifacts_dir,
-        design.dev.rows,
-        design.dev.cols,
-        &cfg.thermal,
-    );
-    println!("thermal backend: {}", backend.name());
-
-    let r = alg1::thermal_aware_voltage_selection(&design, &cfg, backend.as_mut(), 1.0);
-    let base = alg1::baseline(&design, &cfg, backend.as_mut());
+    let r = session.alg1(Alg1Request::new("mkPktMerge"))?.result;
+    let base = session.baseline(BaselineRequest::new("mkPktMerge"))?.result;
     println!(
         "worst-case CP {:.2} ns → operating clock {:.1} MHz (36 % guardband held)",
         r.d_worst * 1e9,

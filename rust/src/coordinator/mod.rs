@@ -22,6 +22,7 @@
 use std::sync::Arc;
 
 use crate::flow::dynamic::VoltageLut;
+use crate::flow::error::FlowError;
 
 /// Regulator model: VID-stepped output with finite slew rate.
 #[derive(Clone, Debug)]
@@ -147,8 +148,17 @@ pub struct DynamicController<F: Fn(f64, f64, f64) -> f64 + Send + Sync> {
 impl<F: Fn(f64, f64, f64) -> f64 + Send + Sync> DynamicController<F> {
     /// Simulate over an ambient trace given as (time_ms, t_amb) breakpoints
     /// (linearly interpolated). Returns the sampled log at `dt_ms` steps.
-    pub fn run(&self, trace: &[(f64, f64)], dt_ms: f64, sample_every_ms: f64) -> Vec<Sample> {
-        self.run_stats(trace, dt_ms, sample_every_ms).0
+    ///
+    /// A trace with fewer than two breakpoints is a typed
+    /// [`FlowError::EmptyTrace`] — the pre-session controller `assert!`ed
+    /// here, turning a bad CLI/trace input into a crash.
+    pub fn run(
+        &self,
+        trace: &[(f64, f64)],
+        dt_ms: f64,
+        sample_every_ms: f64,
+    ) -> Result<Vec<Sample>, FlowError> {
+        Ok(self.run_stats(trace, dt_ms, sample_every_ms)?.0)
     }
 
     /// Like [`run`](Self::run), but also returns exact per-step aggregates
@@ -158,9 +168,11 @@ impl<F: Fn(f64, f64, f64) -> f64 + Send + Sync> DynamicController<F> {
         trace: &[(f64, f64)],
         dt_ms: f64,
         sample_every_ms: f64,
-    ) -> (Vec<Sample>, RunStats) {
-        assert!(trace.len() >= 2, "need a trace");
-        let t_end = trace.last().unwrap().0;
+    ) -> Result<(Vec<Sample>, RunStats), FlowError> {
+        if trace.len() < 2 {
+            return Err(FlowError::EmptyTrace { len: trace.len() });
+        }
+        let t_end = trace[trace.len() - 1].0;
         let times: Vec<f64> = trace.iter().map(|&(t, _)| t).collect();
         let temps: Vec<f64> = trace.iter().map(|&(_, a)| a).collect();
         let amb = |t: f64| crate::util::stats::interp1(&times, &temps, t);
@@ -220,7 +232,7 @@ impl<F: Fn(f64, f64, f64) -> f64 + Send + Sync> DynamicController<F> {
         if stats.sim_ms > 0.0 {
             stats.mean_power_w = stats.energy_j / (stats.sim_ms / 1e3);
         }
-        (out, stats)
+        Ok((out, stats))
     }
 }
 
@@ -270,7 +282,7 @@ mod tests {
         let c = controller();
         // ambient ramps 25 → 70 °C over 60 s and back
         let trace = vec![(0.0, 25.0), (60_000.0, 70.0), (120_000.0, 25.0)];
-        let (log, stats) = c.run_stats(&trace, 1.0, 250.0);
+        let (log, stats) = c.run_stats(&trace, 1.0, 250.0).unwrap();
         assert!(log.len() > 100);
         assert!(log.iter().all(|s| !s.violation), "guardband violated");
         // the per-step count is the stronger claim: zero across all steps
@@ -282,7 +294,7 @@ mod tests {
     fn voltages_track_temperature() {
         let c = controller();
         let trace = vec![(0.0, 25.0), (90_000.0, 80.0)];
-        let log = c.run(&trace, 1.0, 500.0);
+        let log = c.run(&trace, 1.0, 500.0).unwrap();
         let first = &log[2];
         let last = log.last().unwrap();
         assert!(last.t_junct > first.t_junct + 20.0);
@@ -294,7 +306,7 @@ mod tests {
         let c = controller();
         // mild ambient: dynamic settles at the coolest LUT row
         let trace = vec![(0.0, 25.0), (60_000.0, 28.0)];
-        let log = c.run(&trace, 1.0, 250.0);
+        let log = c.run(&trace, 1.0, 250.0).unwrap();
         let dyn_p = mean_power(&log);
         // static worst-case must assume the hottest row's voltages
         let static_p = (c.power_fn)(0.76, 0.92, log.last().unwrap().t_junct);
@@ -308,7 +320,7 @@ mod tests {
     fn run_stats_energy_matches_mean_power() {
         let c = controller();
         let trace = vec![(0.0, 25.0), (30_000.0, 50.0)];
-        let (log, stats) = c.run_stats(&trace, 1.0, 100.0);
+        let (log, stats) = c.run_stats(&trace, 1.0, 100.0).unwrap();
         // the coarse sampled mean must approximate the exact integral
         let approx = mean_power(&log);
         assert!(
@@ -327,11 +339,26 @@ mod tests {
         let c = controller();
         let trace = vec![(0.0, 25.0), (5_000.0, 45.0)];
         let (a, b) = std::thread::scope(|s| {
-            let h1 = s.spawn(|| c.run_stats(&trace, 1.0, 1_000.0).1);
-            let h2 = s.spawn(|| c.run_stats(&trace, 1.0, 1_000.0).1);
+            let h1 = s.spawn(|| c.run_stats(&trace, 1.0, 1_000.0).unwrap().1);
+            let h2 = s.spawn(|| c.run_stats(&trace, 1.0, 1_000.0).unwrap().1);
             (h1.join().unwrap(), h2.join().unwrap())
         });
         assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits(), "nondeterministic run");
+    }
+
+    #[test]
+    fn degenerate_traces_are_typed_errors_not_crashes() {
+        // regression: these were an `assert!` + `unwrap` (a panic reachable
+        // straight from user-supplied trace input)
+        let c = controller();
+        for trace in [vec![], vec![(0.0, 25.0)]] {
+            match c.run_stats(&trace, 1.0, 100.0) {
+                Err(crate::flow::FlowError::EmptyTrace { len }) => {
+                    assert_eq!(len, trace.len())
+                }
+                other => panic!("expected EmptyTrace, got {:?}", other.map(|_| ())),
+            }
+        }
     }
 
     #[test]

@@ -43,9 +43,9 @@ use std::sync::Arc;
 
 use crate::config::Config;
 use crate::flow::dynamic::VoltageLut;
-use crate::flow::overscale;
-use crate::flow::{Design, Effort};
-use crate::runtime::select_backend;
+use crate::flow::{
+    Design, Effort, FlowSession, LutRequest, LutSpec, OverscaleRequest,
+};
 use crate::util::rng::Xoshiro256;
 use crate::util::stats;
 use policy::{OverscaleSpec, PolicyKind};
@@ -213,57 +213,67 @@ impl JobKind {
     /// over `[lut_lo, lut_hi]` ambient (step `lut_step`), and precompute the
     /// power surface. `overscale_rate` > 1 additionally builds the §III-D
     /// over-scaled LUT and error model for the overscaled-dynamic policy.
+    ///
+    /// All flow work runs through the shared [`FlowSession`]: the design is
+    /// built once into the session cache, and the safe sweep, over-scaled
+    /// sweep and error model reuse one STA arena and one thermal backend.
     pub fn build(
+        session: &mut FlowSession,
         bench: &str,
-        cfg: &Config,
-        effort: Effort,
         lut_lo: f64,
         lut_hi: f64,
         lut_step: f64,
         overscale_rate: Option<f64>,
     ) -> anyhow::Result<JobKind> {
-        let design = Design::build(bench, cfg, effort)?;
-        let mut backend = select_backend(
-            &cfg.artifacts_dir,
-            design.dev.rows,
-            design.dev.cols,
-            &cfg.thermal,
-        );
-        let lut = VoltageLut::build(&design, cfg, backend.as_mut(), lut_lo, lut_hi, lut_step);
-        anyhow::ensure!(
-            !lut.entries.is_empty(),
-            "no feasible LUT point for {bench} in [{lut_lo}, {lut_hi}] °C"
-        );
+        let cfg = session.config().clone();
+        // an all-infeasible safe sweep is fatal for the kind (the session
+        // reports it as the typed FlowError::InfeasibleSweep)
+        let lut = session
+            .voltage_lut(LutRequest::new(
+                bench,
+                LutSpec::Sweep {
+                    t_amb_lo: lut_lo,
+                    t_amb_hi: lut_hi,
+                    step_c: lut_step,
+                },
+            ))?
+            .lut;
+        let design = session.design(bench)?;
         let sta = design.sta();
         let d_worst = sta
             .analyze_flat(cfg.thermal.t_max, cfg.arch.v_core_nom, cfg.arch.v_bram_nom)
             .critical_path;
         let f_clk = 1.0 / (d_worst * (1.0 + cfg.flow.guardband));
-        let surface = PowerSurface::build(&design, cfg, f_clk);
+        let surface = PowerSurface::build(&design, &cfg, f_clk);
         // §III-D: over-scaled rails for the error-tolerant policy. The
         // error model is priced once at the scenario's deployment corner
         // (cfg.flow.t_amb was set to it by Fleet::build); an infeasible or
         // empty over-scaled sweep silently degrades the policy to dynamic.
         let over = match overscale_rate {
             Some(rate) if rate > 1.0 + 1e-12 => {
-                let o = overscale::overscale(&design, cfg, backend.as_mut(), rate);
-                let lut_os = VoltageLut::build_rate(
-                    &design,
-                    cfg,
-                    backend.as_mut(),
-                    lut_lo,
-                    lut_hi,
-                    lut_step,
-                    rate,
-                );
-                if o.alg1.infeasible || lut_os.entries.is_empty() {
-                    None
-                } else {
-                    Some(Arc::new(OverscaleSpec {
+                let o = session.overscale(OverscaleRequest::new(bench, rate))?;
+                // an all-infeasible *over-scaled* sweep is not fatal: the
+                // policy degrades to dynamic, exactly as before
+                let lut_os = match session.voltage_lut(LutRequest::new(
+                    bench,
+                    LutSpec::SweepRate {
+                        t_amb_lo: lut_lo,
+                        t_amb_hi: lut_hi,
+                        step_c: lut_step,
+                        rate,
+                    },
+                )) {
+                    Ok(out) => Some(out.lut),
+                    Err(crate::flow::FlowError::InfeasibleSweep { .. }) => None,
+                    Err(e) => return Err(e.into()),
+                };
+                match (o.alg1.infeasible, lut_os) {
+                    (false, Some(lut_os)) => Some(Arc::new(OverscaleSpec {
                         rate,
                         lut: Arc::new(lut_os),
                         error: o.error,
-                    }))
+                    })),
+                    _ => None,
                 }
             }
             _ => None,
@@ -369,14 +379,16 @@ impl Fleet {
 
         // job kinds: the expensive part (P&R + Algorithm-1 LUT sweep per
         // benchmark, plus the §III-D over-scaled sweep when enabled),
-        // computed once and shared by every worker thread
+        // computed once through one shared FlowSession — every benchmark's
+        // design/arena/backend is built exactly once — and shared by every
+        // worker thread afterwards
         let overscale_rate = (fcfg.overscale_rate > 1.0 + 1e-12).then_some(fcfg.overscale_rate);
+        let mut session = FlowSession::with_effort(base.clone(), fcfg.effort)?;
         let mut kinds = Vec::with_capacity(fcfg.benches.len());
         for bench in &fcfg.benches {
             kinds.push(Arc::new(JobKind::build(
+                &mut session,
                 bench,
-                &base,
-                fcfg.effort,
                 lut_lo,
                 lut_hi,
                 fcfg.lut_step_c,

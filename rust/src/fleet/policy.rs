@@ -115,7 +115,7 @@ impl Policy for Static {
     }
 
     fn lut(&self, jk: &JobKind) -> Arc<VoltageLut> {
-        Arc::new(VoltageLut::fixed(jk.v_core_nom, jk.v_bram_nom))
+        Arc::new(VoltageLut::fixed_rails(jk.v_core_nom, jk.v_bram_nom))
     }
 
     fn error_rate(&self, _jk: &JobKind) -> f64 {

@@ -408,7 +408,11 @@ fn simulate(
         tsd: Tsd::default(),
         power_fn: move |vc: f64, vb: f64, tj: f64| scale * surface.eval(vc, vb, tj),
     };
-    ctl.run_stats(local, dt_ms, sample_every_ms).1
+    // fleet trace windows always carry ≥ 2 breakpoints (`trace::window`
+    // pads both ends), so the EmptyTrace error is unreachable here
+    ctl.run_stats(local, dt_ms, sample_every_ms)
+        .expect("fleet trace window has >= 2 breakpoints")
+        .1
 }
 
 /// Run one placed job through the policy engine: static, dynamic, and
@@ -571,18 +575,22 @@ fn run_one_legacy(fleet: &Fleet, a: &Assignment) -> LegacyResult {
         tsd: Tsd::default(),
         power_fn: move |vc: f64, vb: f64, tj: f64| scale * dyn_surface.eval(vc, vb, tj),
     };
-    let (_, dyn_stats) = dynamic.run_stats(&local, dt_ms, sparse);
+    let (_, dyn_stats) = dynamic
+        .run_stats(&local, dt_ms, sparse)
+        .expect("fleet trace window has >= 2 breakpoints");
 
     let static_surface = kind.surface.clone();
     let static_ctl = DynamicController {
-        lut: Arc::new(VoltageLut::fixed(kind.v_core_nom, kind.v_bram_nom)),
+        lut: Arc::new(VoltageLut::fixed_rails(kind.v_core_nom, kind.v_bram_nom)),
         theta_ja: spec.theta_ja,
         tau_ms: spec.tau_ms,
         margin: spec.margin_c,
         tsd: Tsd::default(),
         power_fn: move |vc: f64, vb: f64, tj: f64| scale * static_surface.eval(vc, vb, tj),
     };
-    let (_, static_stats) = static_ctl.run_stats(&local, dt_ms, sparse);
+    let (_, static_stats) = static_ctl
+        .run_stats(&local, dt_ms, sparse)
+        .expect("fleet trace window has >= 2 breakpoints");
 
     LegacyResult {
         job_id: a.job.id,

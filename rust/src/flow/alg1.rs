@@ -62,6 +62,7 @@ pub struct Alg1Result {
 }
 
 /// Run Algorithm 1. `rate` = allowed CP-delay violation (1.0 = none).
+#[deprecated(note = "construct flows through `flow::FlowSession::alg1`")]
 pub fn thermal_aware_voltage_selection(
     design: &Design,
     cfg: &Config,
@@ -70,10 +71,12 @@ pub fn thermal_aware_voltage_selection(
 ) -> Alg1Result {
     let sta = design.sta();
     let pm = design.power_model();
-    run_with(design, &sta, &pm, cfg, backend, rate)
+    let mut arena = StaCacheArena::new();
+    run_impl(design, &sta, &pm, cfg, backend, rate, &mut arena)
 }
 
 /// Same, with caller-provided STA/power models (reused across T_amb sweeps).
+#[deprecated(note = "construct flows through `flow::FlowSession::alg1`")]
 pub fn run_with(
     design: &Design,
     sta: &Sta<'_>,
@@ -83,16 +86,30 @@ pub fn run_with(
     rate: f64,
 ) -> Alg1Result {
     let mut arena = StaCacheArena::new();
-    run_with_arena(design, sta, pm, cfg, backend, rate, &mut arena)
+    run_impl(design, sta, pm, cfg, backend, rate, &mut arena)
 }
 
-/// Same, sharing a caller-owned [`StaCacheArena`]. Ambient sweeps
-/// (`VoltageLut::build`, Fig. 4) and the over-scaling flow re-probe
-/// overlapping (V, T-map) conditions; a shared arena turns those repeated
-/// delay-cache builds and `d_worst` STAs into lookups. Results are
-/// bit-identical to [`run_with`] — the arena only memoizes, never
-/// approximates.
+/// Same, sharing a caller-owned [`StaCacheArena`].
+#[deprecated(note = "construct flows through `flow::FlowSession::alg1`")]
 pub fn run_with_arena(
+    design: &Design,
+    sta: &Sta<'_>,
+    pm: &PowerModel<'_>,
+    cfg: &Config,
+    backend: &mut dyn ThermalBackend,
+    rate: f64,
+    arena: &mut StaCacheArena,
+) -> Alg1Result {
+    run_impl(design, sta, pm, cfg, backend, rate, arena)
+}
+
+/// The Algorithm-1 search, sharing a caller-owned [`StaCacheArena`].
+/// Ambient sweeps (the `FlowSession::voltage_lut` sweep, Fig. 4) and the
+/// over-scaling flow re-probe overlapping (V, T-map) conditions; a shared
+/// arena turns those repeated delay-cache builds and `d_worst` STAs into
+/// lookups. The arena only memoizes, never approximates — results are
+/// bit-identical to a fresh-arena run (pinned by `tests/session.rs`).
+pub(crate) fn run_impl(
     design: &Design,
     sta: &Sta<'_>,
     pm: &PowerModel<'_>,
@@ -257,6 +274,7 @@ pub fn run_with_arena(
 
 /// Baseline: nominal voltages, same thermal fixed point (Fig. 4(b)'s
 /// baseline curve, the denominator of every "power reduction" number).
+#[deprecated(note = "construct flows through `flow::FlowSession::baseline`")]
 pub fn baseline(
     design: &Design,
     cfg: &Config,
@@ -264,9 +282,18 @@ pub fn baseline(
 ) -> Alg1Result {
     let sta = design.sta();
     let pm = design.power_model();
-    baseline_with(design, &sta, &pm, cfg, backend)
+    fixed_point_impl(
+        design,
+        &sta,
+        &pm,
+        cfg,
+        backend,
+        cfg.arch.v_core_nom,
+        cfg.arch.v_bram_nom,
+    )
 }
 
+#[deprecated(note = "construct flows through `flow::FlowSession::baseline`")]
 pub fn baseline_with(
     design: &Design,
     sta: &Sta<'_>,
@@ -274,7 +301,7 @@ pub fn baseline_with(
     cfg: &Config,
     backend: &mut dyn ThermalBackend,
 ) -> Alg1Result {
-    fixed_voltage_fixed_point(
+    fixed_point_impl(
         design,
         sta,
         pm,
@@ -287,7 +314,22 @@ pub fn baseline_with(
 
 /// Thermal fixed point at *fixed* rail voltages (baseline curve, and the
 /// activity-range re-evaluation of a chosen operating point in Figs. 4/6).
+#[deprecated(note = "construct flows through `flow::FlowSession::baseline`")]
 pub fn fixed_voltage_fixed_point(
+    design: &Design,
+    sta: &Sta<'_>,
+    pm: &PowerModel<'_>,
+    cfg: &Config,
+    backend: &mut dyn ThermalBackend,
+    vc: f64,
+    vb: f64,
+) -> Alg1Result {
+    fixed_point_impl(design, sta, pm, cfg, backend, vc, vb)
+}
+
+/// Thermal fixed point at fixed rails — the baseline/re-evaluation leg
+/// behind `FlowSession::baseline`.
+pub(crate) fn fixed_point_impl(
     design: &Design,
     sta: &Sta<'_>,
     pm: &PowerModel<'_>,
@@ -368,11 +410,34 @@ mod tests {
         (d, cfg, solver)
     }
 
+    /// Direct-impl harness (the session facade is exercised by
+    /// `tests/session.rs`; the unit tests pin the algorithm itself).
+    fn run(d: &Design, cfg: &Config, backend: &mut dyn ThermalBackend, rate: f64) -> Alg1Result {
+        let sta = d.sta();
+        let pm = d.power_model();
+        let mut arena = StaCacheArena::new();
+        run_impl(d, &sta, &pm, cfg, backend, rate, &mut arena)
+    }
+
+    fn base(d: &Design, cfg: &Config, backend: &mut dyn ThermalBackend) -> Alg1Result {
+        let sta = d.sta();
+        let pm = d.power_model();
+        fixed_point_impl(
+            d,
+            &sta,
+            &pm,
+            cfg,
+            backend,
+            cfg.arch.v_core_nom,
+            cfg.arch.v_bram_nom,
+        )
+    }
+
     #[test]
     fn alg1_converges_and_saves_power() {
         let (d, cfg, mut solver) = setup(40.0, 12.0);
-        let res = thermal_aware_voltage_selection(&d, &cfg, &mut solver, 1.0);
-        let base = baseline(&d, &cfg, &mut solver.clone());
+        let res = run(&d, &cfg, &mut solver, 1.0);
+        let base = base(&d, &cfg, &mut solver.clone());
         assert!(!res.infeasible);
         assert!(res.iters.len() <= 8, "iterations {}", res.iters.len());
         // the core rail must scale below nominal at 40 °C; mkPktMerge's CP
@@ -393,7 +458,7 @@ mod tests {
     #[test]
     fn timing_is_met_at_converged_solution() {
         let (d, cfg, mut solver) = setup(40.0, 12.0);
-        let res = thermal_aware_voltage_selection(&d, &cfg, &mut solver, 1.0);
+        let res = run(&d, &cfg, &mut solver, 1.0);
         let sta = d.sta();
         let cp = sta.analyze(&res.temp, res.v_core, res.v_bram).critical_path;
         assert!(
@@ -406,11 +471,11 @@ mod tests {
     #[test]
     fn hotter_ambient_means_higher_voltages_less_saving() {
         let (d, cfg_cold, mut s1) = setup(10.0, 12.0);
-        let cold = thermal_aware_voltage_selection(&d, &cfg_cold, &mut s1, 1.0);
+        let cold = run(&d, &cfg_cold, &mut s1, 1.0);
         let mut cfg_hot = cfg_cold.clone();
         cfg_hot.flow.t_amb = 80.0;
         let mut s2 = s1.clone();
-        let hot = thermal_aware_voltage_selection(&d, &cfg_hot, &mut s2, 1.0);
+        let hot = run(&d, &cfg_hot, &mut s2, 1.0);
         assert!(hot.v_core >= cold.v_core, "{} < {}", hot.v_core, cold.v_core);
         // BRAM rail may trade non-monotonically (Fig. 4a), but the rail sum
         // must not decrease with temperature
@@ -420,8 +485,8 @@ mod tests {
     #[test]
     fn overscaling_relaxes_voltages_further() {
         let (d, cfg, mut solver) = setup(40.0, 12.0);
-        let tight = thermal_aware_voltage_selection(&d, &cfg, &mut solver.clone(), 1.0);
-        let relaxed = thermal_aware_voltage_selection(&d, &cfg, &mut solver, 1.3);
+        let tight = run(&d, &cfg, &mut solver.clone(), 1.0);
+        let relaxed = run(&d, &cfg, &mut solver, 1.3);
         assert!(relaxed.power <= tight.power + 1e-12);
         assert!(relaxed.v_core <= tight.v_core);
     }
@@ -429,7 +494,7 @@ mod tests {
     #[test]
     fn later_iterations_are_cheaper_than_first() {
         let (d, cfg, mut solver) = setup(60.0, 12.0);
-        let res = thermal_aware_voltage_selection(&d, &cfg, &mut solver, 1.0);
+        let res = run(&d, &cfg, &mut solver, 1.0);
         if res.iters.len() >= 2 {
             let first = res.iters[0].evals;
             for it in &res.iters[1..] {

@@ -26,6 +26,7 @@
 
 use crate::config::Config;
 use crate::flow::design::Design;
+use crate::flow::error::FlowError;
 use crate::power::PowerModel;
 use crate::thermal::ThermalBackend;
 use crate::timing::{Sta, StaCacheArena};
@@ -52,6 +53,7 @@ pub struct Alg2Result {
 }
 
 /// Run Algorithm 2.
+#[deprecated(note = "construct flows through `flow::FlowSession::alg2`")]
 pub fn thermal_aware_energy_optimization(
     design: &Design,
     cfg: &Config,
@@ -59,9 +61,11 @@ pub fn thermal_aware_energy_optimization(
 ) -> Alg2Result {
     let sta = design.sta();
     let pm = design.power_model();
-    run_with(design, &sta, &pm, cfg, backend)
+    let mut arena = StaCacheArena::new();
+    unwrap_alg2(run_impl(design, &sta, &pm, cfg, backend, &mut arena))
 }
 
+#[deprecated(note = "construct flows through `flow::FlowSession::alg2`")]
 pub fn run_with(
     design: &Design,
     sta: &Sta<'_>,
@@ -70,14 +74,11 @@ pub fn run_with(
     backend: &mut dyn ThermalBackend,
 ) -> Alg2Result {
     let mut arena = StaCacheArena::new();
-    run_with_arena(design, sta, pm, cfg, backend, &mut arena)
+    unwrap_alg2(run_impl(design, sta, pm, cfg, backend, &mut arena))
 }
 
-/// Default (batched + memoizing) implementation. Bit-identical to
-/// [`run_naive_with`]: the batched flat STA prices each candidate with the
-/// scalar path's exact arithmetic, the prepared power sweep reuses the very
-/// same per-tile `exp` factors, and the arena only interns what the naive
-/// path would have rebuilt.
+/// Batched path, sharing a caller-owned [`StaCacheArena`].
+#[deprecated(note = "construct flows through `flow::FlowSession::alg2`")]
 pub fn run_with_arena(
     design: &Design,
     sta: &Sta<'_>,
@@ -86,6 +87,32 @@ pub fn run_with_arena(
     backend: &mut dyn ThermalBackend,
     arena: &mut StaCacheArena,
 ) -> Alg2Result {
+    unwrap_alg2(run_impl(design, sta, pm, cfg, backend, arena))
+}
+
+/// The deprecated shims promised an infallible signature; they keep it by
+/// panicking on the (config-validated-away) empty-grid error the typed API
+/// reports as `FlowError::EmptyVoltageGrid`.
+fn unwrap_alg2(r: Result<Alg2Result, FlowError>) -> Alg2Result {
+    match r {
+        Ok(out) => out,
+        Err(e) => panic!("{e}"),
+    }
+}
+
+/// Default (batched + memoizing) implementation. Bit-identical to the
+/// naive path: the batched flat STA prices each candidate with the scalar
+/// path's exact arithmetic, the prepared power sweep reuses the very same
+/// per-tile `exp` factors, and the arena only interns what the naive path
+/// would have rebuilt.
+pub(crate) fn run_impl(
+    design: &Design,
+    sta: &Sta<'_>,
+    pm: &PowerModel<'_>,
+    cfg: &Config,
+    backend: &mut dyn ThermalBackend,
+    arena: &mut StaCacheArena,
+) -> Result<Alg2Result, FlowError> {
     let vnc = cfg.arch.v_core_nom;
     let vnb = cfg.arch.v_bram_nom;
     let gb = 1.0 + cfg.flow.guardband;
@@ -193,17 +220,16 @@ pub fn run_with_arena(
             });
         }
     }
-    let mut out = best.expect("voltage grid is non-empty");
+    let mut out = best.ok_or(FlowError::EmptyVoltageGrid)?;
     out.pairs_pruned_energy = pairs_pruned_energy;
     out.thermal_solves = thermal_solves;
     out.thermal_reused = thermal_reused;
-    out
+    Ok(out)
 }
 
 /// Pre-refactor evaluation path: per-probe flat STA, per-iteration cache
-/// rebuilds, per-tile `exp` on every candidate. Kept (a) as the `--naive`
-/// fallback the bench times the batched engine against in the same run, and
-/// (b) as the differential baseline the equivalence tests compare to.
+/// rebuilds, per-tile `exp` on every candidate.
+#[deprecated(note = "construct flows through `flow::FlowSession::alg2` with `Fidelity::Naive`")]
 pub fn run_naive_with(
     design: &Design,
     sta: &Sta<'_>,
@@ -211,6 +237,21 @@ pub fn run_naive_with(
     cfg: &Config,
     backend: &mut dyn ThermalBackend,
 ) -> Alg2Result {
+    unwrap_alg2(run_naive_impl(design, sta, pm, cfg, backend))
+}
+
+/// Pre-refactor evaluation path behind `Fidelity::Naive`: per-probe flat
+/// STA, per-iteration cache rebuilds, per-tile `exp` on every candidate.
+/// Kept (a) as the `--naive` fallback the bench times the batched engine
+/// against in the same run, and (b) as the differential baseline the
+/// equivalence tests compare to.
+pub(crate) fn run_naive_impl(
+    design: &Design,
+    sta: &Sta<'_>,
+    pm: &PowerModel<'_>,
+    cfg: &Config,
+    backend: &mut dyn ThermalBackend,
+) -> Result<Alg2Result, FlowError> {
     let vnc = cfg.arch.v_core_nom;
     let vnb = cfg.arch.v_bram_nom;
     let gb = 1.0 + cfg.flow.guardband;
@@ -305,15 +346,16 @@ pub fn run_naive_with(
             }
         }
     }
-    let mut out = best.expect("voltage grid is non-empty");
+    let mut out = best.ok_or(FlowError::EmptyVoltageGrid)?;
     out.pairs_pruned_energy = pairs_pruned_energy;
     out.thermal_solves = thermal_solves;
     out.thermal_reused = thermal_reused;
-    out
+    Ok(out)
 }
 
 /// Naive-path convenience mirror of [`thermal_aware_energy_optimization`]
 /// (the CLI's `energy-opt --naive`).
+#[deprecated(note = "construct flows through `flow::FlowSession::alg2` with `Fidelity::Naive`")]
 pub fn thermal_aware_energy_optimization_naive(
     design: &Design,
     cfg: &Config,
@@ -321,17 +363,28 @@ pub fn thermal_aware_energy_optimization_naive(
 ) -> Alg2Result {
     let sta = design.sta();
     let pm = design.power_model();
-    run_naive_with(design, &sta, &pm, cfg, backend)
+    unwrap_alg2(run_naive_impl(design, &sta, &pm, cfg, backend))
 }
 
 /// Baseline energy rate: nominal voltages at the worst-case-guaranteed clock
 /// (the same clock Algorithm 1's baseline runs), at the thermal fixed point.
+#[deprecated(note = "derive from `flow::FlowSession::baseline` (energy = power / f_clk)")]
 pub fn baseline_energy(
     design: &Design,
     cfg: &Config,
     backend: &mut dyn ThermalBackend,
 ) -> (f64, f64) {
-    let base = super::alg1::baseline(design, cfg, backend);
+    let sta = design.sta();
+    let pm = design.power_model();
+    let base = super::alg1::fixed_point_impl(
+        design,
+        &sta,
+        &pm,
+        cfg,
+        backend,
+        cfg.arch.v_core_nom,
+        cfg.arch.v_bram_nom,
+    );
     let period = 1.0 / base.f_clk;
     (base.power * period, base.power)
 }
@@ -354,11 +407,35 @@ mod tests {
         (d, cfg, solver)
     }
 
+    /// Direct-impl harness (the session facade is exercised by
+    /// `tests/session.rs`; the unit tests pin the algorithm itself).
+    fn run(d: &Design, cfg: &Config, backend: &mut dyn ThermalBackend) -> Alg2Result {
+        let sta = d.sta();
+        let pm = d.power_model();
+        let mut arena = StaCacheArena::new();
+        run_impl(d, &sta, &pm, cfg, backend, &mut arena).unwrap()
+    }
+
+    fn base_energy(d: &Design, cfg: &Config, backend: &mut dyn ThermalBackend) -> f64 {
+        let sta = d.sta();
+        let pm = d.power_model();
+        let b = super::super::alg1::fixed_point_impl(
+            d,
+            &sta,
+            &pm,
+            cfg,
+            backend,
+            cfg.arch.v_core_nom,
+            cfg.arch.v_bram_nom,
+        );
+        b.power / b.f_clk
+    }
+
     #[test]
     fn energy_optimum_trades_frequency_for_energy() {
         let (d, cfg, mut solver) = setup(65.0);
-        let res = thermal_aware_energy_optimization(&d, &cfg, &mut solver);
-        let (base_e, _) = baseline_energy(&d, &cfg, &mut solver.clone());
+        let res = run(&d, &cfg, &mut solver);
+        let base_e = base_energy(&d, &cfg, &mut solver.clone());
         // Fig. 7: substantial energy saving, frequency ratio well below 1
         let saving = 1.0 - res.energy / base_e;
         assert!(
@@ -380,9 +457,9 @@ mod tests {
     fn pruning_preserves_the_optimum() {
         let (d, mut cfg, mut solver) = setup(65.0);
         cfg.flow.prune = true;
-        let fast = thermal_aware_energy_optimization(&d, &cfg, &mut solver.clone());
+        let fast = run(&d, &cfg, &mut solver.clone());
         cfg.flow.prune = false;
-        let slow = thermal_aware_energy_optimization(&d, &cfg, &mut solver);
+        let slow = run(&d, &cfg, &mut solver);
         assert_eq!(fast.v_core, slow.v_core, "pruning changed V_core");
         assert_eq!(fast.v_bram, slow.v_bram, "pruning changed V_bram");
         let rel = (fast.energy - slow.energy).abs() / slow.energy;
@@ -398,9 +475,13 @@ mod tests {
         // §IV: the energy flow reaches much lower V_core than the power flow
         // because the clock is allowed to stretch.
         let (d, cfg, mut solver) = setup(65.0);
-        let power_res =
-            super::super::alg1::thermal_aware_voltage_selection(&d, &cfg, &mut solver.clone(), 1.0);
-        let energy_res = thermal_aware_energy_optimization(&d, &cfg, &mut solver);
+        let power_res = {
+            let sta = d.sta();
+            let pm = d.power_model();
+            let mut arena = StaCacheArena::new();
+            super::super::alg1::run_impl(&d, &sta, &pm, &cfg, &mut solver.clone(), 1.0, &mut arena)
+        };
+        let energy_res = run(&d, &cfg, &mut solver);
         assert!(
             energy_res.v_core <= power_res.v_core,
             "energy V_core {} vs power V_core {}",

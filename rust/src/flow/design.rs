@@ -9,6 +9,7 @@ use crate::activity::{estimate, Activities};
 use crate::arch::Device;
 use crate::chardb::CharTable;
 use crate::config::Config;
+use crate::flow::error::FlowError;
 use crate::netlist::{cluster_netlist, Netlist};
 use crate::place::{place, BlockGraph, BlockKind, Placement, PlaceOpts};
 use crate::power::PowerModel;
@@ -17,7 +18,8 @@ use crate::synth::{benchmark, generate, BenchProfile};
 use crate::timing::Sta;
 
 /// How much placer effort to spend (quick for tests, full for benches).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// `Hash` because the session's design cache keys on `(benchmark, Effort)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Effort {
     /// Fast: small move budget (unit tests, smoke runs).
     Quick,
@@ -42,9 +44,10 @@ pub struct Design {
 
 impl Design {
     /// Implement a named benchmark through the whole pipeline.
-    pub fn build(name: &str, cfg: &Config, effort: Effort) -> anyhow::Result<Design> {
-        let profile = benchmark(name)
-            .ok_or_else(|| anyhow::anyhow!("unknown benchmark {name}"))?;
+    pub fn build(name: &str, cfg: &Config, effort: Effort) -> Result<Design, FlowError> {
+        let profile = benchmark(name).ok_or_else(|| FlowError::UnknownBenchmark {
+            name: name.to_string(),
+        })?;
         let nl = generate(profile);
         Design::from_netlist(nl, profile, cfg, effort)
     }
@@ -54,7 +57,7 @@ impl Design {
         profile: &BenchProfile,
         cfg: &Config,
         effort: Effort,
-    ) -> anyhow::Result<Design> {
+    ) -> Result<Design, FlowError> {
         let cl = cluster_netlist(&nl, &cfg.arch);
         let bg = BlockGraph::build(&nl, &cl);
         let count = |k: BlockKind| bg.kinds.iter().filter(|&&x| x == k).count();

@@ -8,8 +8,52 @@
 use crate::config::Config;
 use crate::flow::alg1;
 use crate::flow::design::Design;
+use crate::flow::error::FlowError;
+use crate::power::PowerModel;
 use crate::thermal::ThermalBackend;
-use crate::timing::StaCacheArena;
+use crate::timing::{Sta, StaCacheArena};
+
+/// Validated parameters of a (T → V) LUT ambient sweep — the internal form
+/// `FlowSession::voltage_lut` lowers its `LutSpec` into.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct LutSweep {
+    pub t_amb_lo: f64,
+    pub t_amb_hi: f64,
+    pub step_c: f64,
+    /// §III-D CP-violation budget (1.0 = the safe table).
+    pub rate: f64,
+}
+
+impl LutSweep {
+    /// Reject sweeps that cannot terminate or cannot produce a table. The
+    /// legacy `VoltageLut::build` looped forever on `step <= 0`.
+    pub(crate) fn validated(
+        t_amb_lo: f64,
+        t_amb_hi: f64,
+        step_c: f64,
+        rate: f64,
+    ) -> Result<LutSweep, FlowError> {
+        if !step_c.is_finite() || step_c <= 0.0 {
+            return Err(FlowError::BadLutSpec {
+                reason: format!("ambient step {step_c} °C (must be finite and > 0)"),
+            });
+        }
+        if !t_amb_lo.is_finite() || !t_amb_hi.is_finite() || t_amb_lo > t_amb_hi {
+            return Err(FlowError::BadLutSpec {
+                reason: format!("ambient range [{t_amb_lo}, {t_amb_hi}] °C"),
+            });
+        }
+        if !rate.is_finite() || rate < 1.0 {
+            return Err(FlowError::InvalidRate { rate });
+        }
+        Ok(LutSweep {
+            t_amb_lo,
+            t_amb_hi,
+            step_c,
+            rate,
+        })
+    }
+}
 
 /// One LUT row: junction temperature key → optimal rails.
 #[derive(Clone, Copy, Debug)]
@@ -33,10 +77,8 @@ pub struct VoltageLut {
 
 impl VoltageLut {
     /// Build by sweeping ambient temperature and recording the converged
-    /// junction temperature of each Algorithm-1 solution. One
-    /// [`StaCacheArena`] spans the whole sweep: the `d_worst` STA at
-    /// (T_max, V_nom) and every delay cache whose (V, T-map) condition
-    /// recurs across ambients are computed once.
+    /// junction temperature of each Algorithm-1 solution.
+    #[deprecated(note = "construct flows through `flow::FlowSession::voltage_lut` with `LutSpec::Sweep`")]
     pub fn build(
         design: &Design,
         cfg: &Config,
@@ -45,7 +87,26 @@ impl VoltageLut {
         t_amb_hi: f64,
         step: f64,
     ) -> VoltageLut {
-        Self::build_rate(design, cfg, backend, t_amb_lo, t_amb_hi, step, 1.0)
+        // bit-identity contract: inverted (or NaN) bounds made the legacy
+        // while loop run zero times — keep returning the empty table here
+        if t_amb_lo.is_nan() || t_amb_hi.is_nan() || t_amb_lo > t_amb_hi {
+            return VoltageLut {
+                entries: Vec::new(),
+                v_core_nom: cfg.arch.v_core_nom,
+                v_bram_nom: cfg.arch.v_bram_nom,
+            };
+        }
+        let sweep = match LutSweep::validated(t_amb_lo, t_amb_hi, step, 1.0) {
+            Ok(s) => s,
+            // the legacy signature is infallible: a spec the typed API
+            // rejects panics here (a zero step used to hang the sweep
+            // forever; infinite bounds never terminated either)
+            Err(e) => panic!("{e}"),
+        };
+        let sta = design.sta();
+        let pm = design.power_model();
+        let mut arena = StaCacheArena::new();
+        build_impl(design, &sta, &pm, cfg, backend, sweep, &mut arena)
     }
 
     /// [`build`](Self::build) with the timing constraint relaxed to
@@ -53,6 +114,7 @@ impl VoltageLut {
     /// run accepts the given CP-violation budget, so the recorded rails sit
     /// below the safe table's — the fleet's overscaled-dynamic policy
     /// drives its controller off this table.
+    #[deprecated(note = "construct flows through `flow::FlowSession::voltage_lut` with `LutSpec::SweepRate`")]
     pub fn build_rate(
         design: &Design,
         cfg: &Config,
@@ -62,57 +124,36 @@ impl VoltageLut {
         step: f64,
         rate: f64,
     ) -> VoltageLut {
+        // see `build`: inverted/NaN bounds legacy-return an empty table
+        if t_amb_lo.is_nan() || t_amb_hi.is_nan() || t_amb_lo > t_amb_hi {
+            return VoltageLut {
+                entries: Vec::new(),
+                v_core_nom: cfg.arch.v_core_nom,
+                v_bram_nom: cfg.arch.v_bram_nom,
+            };
+        }
+        let sweep = match LutSweep::validated(t_amb_lo, t_amb_hi, step, rate) {
+            Ok(s) => s,
+            Err(e) => panic!("{e}"),
+        };
         let sta = design.sta();
         let pm = design.power_model();
         let mut arena = StaCacheArena::new();
-        let mut entries = Vec::new();
-        let mut t = t_amb_lo;
-        while t <= t_amb_hi + 1e-9 {
-            let mut c = cfg.clone();
-            c.flow.t_amb = t;
-            let r = alg1::run_with_arena(design, &sta, &pm, &c, backend, rate, &mut arena);
-            if !r.infeasible {
-                entries.push(LutEntry {
-                    t_junct: crate::util::stats::max(&r.temp),
-                    v_core: r.v_core,
-                    v_bram: r.v_bram,
-                    power: r.power,
-                });
-            }
-            t += step;
-        }
-        entries.sort_by(|a, b| a.t_junct.total_cmp(&b.t_junct));
-        // Safety envelope: Algorithm 1 may trade the rails non-monotonically
-        // across temperature (Fig. 4a). A sensed temperature between two keys
-        // must never command less than any cooler key requires, so both rails
-        // are made non-decreasing in T (conservative: a few mV of the
-        // cross-rail trade is given up for guaranteed timing).
-        let mut vc_run: f64 = 0.0;
-        let mut vb_run: f64 = 0.0;
-        for e in entries.iter_mut() {
-            vc_run = vc_run.max(e.v_core);
-            vb_run = vb_run.max(e.v_bram);
-            e.v_core = vc_run;
-            e.v_bram = vb_run;
-        }
-        // `lookup` binary-searches on t_junct; the sort above established
-        // the invariant, checked once here rather than on every 1 ms tick
-        debug_assert!(
-            entries.windows(2).all(|w| w[0].t_junct <= w[1].t_junct),
-            "VoltageLut entries not sorted by t_junct"
-        );
-        VoltageLut {
-            entries,
-            v_core_nom: cfg.arch.v_core_nom,
-            v_bram_nom: cfg.arch.v_bram_nom,
-        }
+        build_impl(design, &sta, &pm, cfg, backend, sweep, &mut arena)
     }
 
     /// Degenerate single-row LUT that always commands the given rails —
     /// the static scheme expressed as a controller input, so the fleet
     /// simulator can run static and dynamic policies through the identical
     /// plant model.
+    #[deprecated(note = "construct flows through `flow::FlowSession::voltage_lut` with `LutSpec::Fixed`")]
     pub fn fixed(v_core: f64, v_bram: f64) -> VoltageLut {
+        Self::fixed_rails(v_core, v_bram)
+    }
+
+    /// Crate-internal form of the degenerate fixed-rails table (the policy
+    /// engine's static leg runs the plant off one of these every job).
+    pub(crate) fn fixed_rails(v_core: f64, v_bram: f64) -> VoltageLut {
         VoltageLut {
             entries: vec![LutEntry {
                 t_junct: f64::MAX,
@@ -144,6 +185,63 @@ impl VoltageLut {
             // fall back to the safe nominal rails
             None => (self.v_core_nom, self.v_bram_nom),
         }
+    }
+}
+
+/// The validated ambient sweep behind `FlowSession::voltage_lut`: one
+/// Algorithm-1 run per ambient point, all sharing the caller's
+/// [`StaCacheArena`] (the `d_worst` STA at (T_max, V_nom) and every delay
+/// cache whose (V, T-map) condition recurs across ambients are computed
+/// once).
+pub(crate) fn build_impl(
+    design: &Design,
+    sta: &Sta<'_>,
+    pm: &PowerModel<'_>,
+    cfg: &Config,
+    backend: &mut dyn ThermalBackend,
+    sweep: LutSweep,
+    arena: &mut StaCacheArena,
+) -> VoltageLut {
+    let mut entries = Vec::new();
+    let mut t = sweep.t_amb_lo;
+    while t <= sweep.t_amb_hi + 1e-9 {
+        let mut c = cfg.clone();
+        c.flow.t_amb = t;
+        let r = alg1::run_impl(design, sta, pm, &c, backend, sweep.rate, arena);
+        if !r.infeasible {
+            entries.push(LutEntry {
+                t_junct: crate::util::stats::max(&r.temp),
+                v_core: r.v_core,
+                v_bram: r.v_bram,
+                power: r.power,
+            });
+        }
+        t += sweep.step_c;
+    }
+    entries.sort_by(|a, b| a.t_junct.total_cmp(&b.t_junct));
+    // Safety envelope: Algorithm 1 may trade the rails non-monotonically
+    // across temperature (Fig. 4a). A sensed temperature between two keys
+    // must never command less than any cooler key requires, so both rails
+    // are made non-decreasing in T (conservative: a few mV of the
+    // cross-rail trade is given up for guaranteed timing).
+    let mut vc_run: f64 = 0.0;
+    let mut vb_run: f64 = 0.0;
+    for e in entries.iter_mut() {
+        vc_run = vc_run.max(e.v_core);
+        vb_run = vb_run.max(e.v_bram);
+        e.v_core = vc_run;
+        e.v_bram = vb_run;
+    }
+    // `lookup` binary-searches on t_junct; the sort above established
+    // the invariant, checked once here rather than on every 1 ms tick
+    debug_assert!(
+        entries.windows(2).all(|w| w[0].t_junct <= w[1].t_junct),
+        "VoltageLut entries not sorted by t_junct"
+    );
+    VoltageLut {
+        entries,
+        v_core_nom: cfg.arch.v_core_nom,
+        v_bram_nom: cfg.arch.v_bram_nom,
     }
 }
 
@@ -214,7 +312,7 @@ mod tests {
         };
         assert_eq!(empty.lookup(45.0, 5.0), (0.80, 0.95));
         // the fixed (static-policy) LUT answers its rails at any temperature
-        let fixed = VoltageLut::fixed(0.72, 0.88);
+        let fixed = VoltageLut::fixed_rails(0.72, 0.88);
         assert_eq!(fixed.lookup(-40.0, 0.0), (0.72, 0.88));
         assert_eq!(fixed.lookup(300.0, 10.0), (0.72, 0.88));
     }
@@ -228,7 +326,11 @@ mod tests {
             ThermalGrid::calibrated(d.dev.rows, d.dev.cols, &cfg.thermal),
             &cfg.thermal,
         );
-        let lut = VoltageLut::build(&d, &cfg, &mut solver, 10.0, 70.0, 20.0);
+        let sta = d.sta();
+        let pm = d.power_model();
+        let mut arena = StaCacheArena::new();
+        let sweep = LutSweep::validated(10.0, 70.0, 20.0, 1.0).unwrap();
+        let lut = build_impl(&d, &sta, &pm, &cfg, &mut solver, sweep, &mut arena);
         assert!(lut.entries.len() >= 3);
         // safety envelope: hotter keys never have lower voltage on EITHER
         // rail (lookup conservativeness for the online controller)

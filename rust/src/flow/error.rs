@@ -1,0 +1,126 @@
+//! Typed errors for every thermal-aware flow entry point.
+//!
+//! Before the session facade the flow surfaced failures three different
+//! ways: `anyhow!` string errors (`Design::build`), panics (`expect` on the
+//! voltage grid, `assert!` on controller traces), and one silent hang
+//! (a zero-step LUT sweep looped forever). [`FlowError`] replaces all of
+//! them with one crate-wide enum so callers — the CLI, the fleet, a future
+//! server frontend — can match on the failure class instead of parsing
+//! strings. Hand-rolled `thiserror`-style (`Display` + `std::error::Error`);
+//! no new dependencies, and the vendored `anyhow` subset converts it via
+//! `?` wherever callers still aggregate errors.
+
+use std::fmt;
+
+/// Everything that can go wrong on the flow path, from user input down to
+/// the STA arena. Variants carry the offending values so messages (and
+/// callers) can be precise.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FlowError {
+    /// The requested benchmark name matches neither the VTR-profile suite
+    /// (`synth::benchmark_names`) nor the ML accelerator profiles
+    /// (`lenet_systolic`, `hd_engine`).
+    UnknownBenchmark { name: String },
+    /// A configuration value is unusable (non-finite, out of range, or a
+    /// degenerate combination like `v_min > v_max`).
+    InvalidConfig {
+        field: &'static str,
+        reason: String,
+    },
+    /// A CP-delay violation rate outside `[1.0, ∞)` — the §III-D budget
+    /// only ever *relaxes* the timing constraint.
+    InvalidRate { rate: f64 },
+    /// A voltage-LUT specification that cannot produce a table: zero or
+    /// negative ambient step (the legacy sweep looped forever on this),
+    /// inverted bounds, or non-finite rails.
+    BadLutSpec { reason: String },
+    /// A LUT sweep finished without a single feasible Algorithm-1 point —
+    /// the design cannot meet timing anywhere in the requested ambient
+    /// range.
+    InfeasibleSweep {
+        bench: String,
+        t_amb_lo: f64,
+        t_amb_hi: f64,
+    },
+    /// The voltage grid resolved to no candidate pairs (defensive: a
+    /// hand-built `Config` bypassing validation).
+    EmptyVoltageGrid,
+    /// An ambient-temperature trace with fewer than the two breakpoints
+    /// interpolation needs (the legacy controller `assert!`ed here).
+    EmptyTrace { len: usize },
+}
+
+impl fmt::Display for FlowError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FlowError::UnknownBenchmark { name } => {
+                write!(f, "unknown benchmark `{name}`")
+            }
+            FlowError::InvalidConfig { field, reason } => {
+                write!(f, "invalid config `{field}`: {reason}")
+            }
+            FlowError::InvalidRate { rate } => {
+                write!(
+                    f,
+                    "invalid CP-violation rate {rate} (must be finite and >= 1.0)"
+                )
+            }
+            FlowError::BadLutSpec { reason } => {
+                write!(f, "bad voltage-LUT spec: {reason}")
+            }
+            FlowError::InfeasibleSweep {
+                bench,
+                t_amb_lo,
+                t_amb_hi,
+            } => {
+                write!(
+                    f,
+                    "no feasible LUT point for {bench} in [{t_amb_lo}, {t_amb_hi}] C"
+                )
+            }
+            FlowError::EmptyVoltageGrid => {
+                write!(f, "voltage grid resolved to no candidate pairs")
+            }
+            FlowError::EmptyTrace { len } => {
+                write!(
+                    f,
+                    "ambient trace needs at least 2 breakpoints (got {len})"
+                )
+            }
+        }
+    }
+}
+
+impl std::error::Error for FlowError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_carries_the_offending_values() {
+        let e = FlowError::UnknownBenchmark {
+            name: "nope".into(),
+        };
+        assert!(e.to_string().contains("nope"));
+        let e = FlowError::InvalidRate { rate: 0.5 };
+        assert!(e.to_string().contains("0.5"));
+        let e = FlowError::BadLutSpec {
+            reason: "step 0 would never terminate".into(),
+        };
+        assert!(e.to_string().contains("never terminate"));
+        let e = FlowError::EmptyTrace { len: 1 };
+        assert!(e.to_string().contains("got 1"));
+    }
+
+    #[test]
+    fn converts_into_anyhow_via_question_mark() {
+        fn inner() -> anyhow::Result<()> {
+            let r: Result<(), FlowError> = Err(FlowError::EmptyVoltageGrid);
+            r?;
+            Ok(())
+        }
+        let err = inner().unwrap_err();
+        assert!(format!("{err:#}").contains("no candidate pairs"));
+    }
+}

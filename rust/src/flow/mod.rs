@@ -1,12 +1,27 @@
 //! The paper's flows: Algorithm 1 (thermal-aware voltage selection),
 //! Algorithm 2 (thermal-aware energy optimization), the timing-speculative
 //! over-scaling flow (§III-D) and the dynamic (sensor-driven) scheme.
+//!
+//! **Entry point:** [`FlowSession`] — the typed facade that owns the shared
+//! state (config, design cache, STA arenas, thermal backends) and exposes
+//! one request/outcome pair per algorithm. The positional free functions in
+//! [`alg1`] / [`alg2`] / [`overscale`] and the `VoltageLut` sweep
+//! constructors are `#[deprecated]` shims kept only so the differential
+//! tests can pin the session bit-identical to the pre-session API.
 
 pub mod alg1;
 pub mod alg2;
 pub mod design;
 pub mod dynamic;
+pub mod error;
 pub mod overscale;
+pub mod session;
 
-pub use alg1::{baseline, thermal_aware_voltage_selection, Alg1Result};
+pub use alg1::Alg1Result;
+pub use alg2::Alg2Result;
 pub use design::{Design, Effort};
+pub use error::FlowError;
+pub use session::{
+    Alg1Outcome, Alg1Request, Alg2Outcome, Alg2Request, BaselineRequest, Condition, Fidelity,
+    FlowSession, LutOutcome, LutRequest, LutSpec, OverscaleOutcome, OverscaleRequest,
+};

@@ -18,6 +18,7 @@
 //! true wall arrives. The resulting error rates drive the ML workloads
 //! (`crate::ml`).
 
+use crate::activity::Activities;
 use crate::config::Config;
 use crate::flow::alg1::{self, Alg1Result};
 use crate::flow::design::Design;
@@ -64,6 +65,7 @@ pub struct OverscaleResult {
 /// search and the post-P&R timing simulation share one [`StaCacheArena`],
 /// so the error model prices the converged (T, V) off caches the search
 /// already built.
+#[deprecated(note = "construct flows through `flow::FlowSession::overscale`")]
 pub fn overscale(
     design: &Design,
     cfg: &Config,
@@ -73,8 +75,8 @@ pub fn overscale(
     let sta = design.sta();
     let pm = design.power_model();
     let mut arena = StaCacheArena::new();
-    let res = alg1::run_with_arena(design, &sta, &pm, cfg, backend, rate, &mut arena);
-    let error = error_model_with(design, &sta, cfg, &res, &mut arena);
+    let res = alg1::run_impl(design, &sta, &pm, cfg, backend, rate, &mut arena);
+    let error = error_model_impl(design, &design.acts, &sta, cfg, &res, &mut arena);
     OverscaleResult {
         rate,
         alg1: res,
@@ -84,15 +86,31 @@ pub fn overscale(
 
 /// Post-P&R timing simulation: endpoint arrivals at the converged (T, V)
 /// versus the operating clock.
+#[deprecated(note = "construct flows through `flow::FlowSession::overscale`")]
 pub fn error_model(design: &Design, cfg: &Config, res: &Alg1Result) -> ErrorModel {
     let sta = design.sta();
     let mut arena = StaCacheArena::new();
-    error_model_with(design, &sta, cfg, res, &mut arena)
+    error_model_impl(design, &design.acts, &sta, cfg, res, &mut arena)
 }
 
 /// Arena-sharing form of [`error_model`].
+#[deprecated(note = "construct flows through `flow::FlowSession::overscale`")]
 pub fn error_model_with(
     design: &Design,
+    sta: &Sta<'_>,
+    cfg: &Config,
+    res: &Alg1Result,
+    arena: &mut StaCacheArena,
+) -> ErrorModel {
+    error_model_impl(design, &design.acts, sta, cfg, res, arena)
+}
+
+/// Post-P&R timing simulation behind `FlowSession::overscale`. `acts` is
+/// passed explicitly (instead of read off the design) so activity-override
+/// requests price endpoint activations at the requested α.
+pub(crate) fn error_model_impl(
+    design: &Design,
+    acts: &Activities,
     sta: &Sta<'_>,
     cfg: &Config,
     res: &Alg1Result,
@@ -108,7 +126,7 @@ pub fn error_model_with(
         let p_act = design.nl.cells[e.cell as usize]
             .inputs
             .first()
-            .map(|&n| design.acts.alpha[n as usize])
+            .map(|&n| acts.alpha[n as usize])
             .unwrap_or(0.0)
             .clamp(0.0, 1.0);
         let p = if e.arrival > t_clk {
@@ -152,12 +170,23 @@ mod tests {
         (d, cfg, solver)
     }
 
+    /// Direct-impl harness (the session facade is exercised by
+    /// `tests/session.rs`; the unit tests pin the flow itself).
+    fn run(d: &Design, cfg: &Config, backend: &mut dyn ThermalBackend, rate: f64) -> OverscaleResult {
+        let sta = d.sta();
+        let pm = d.power_model();
+        let mut arena = StaCacheArena::new();
+        let res = alg1::run_impl(d, &sta, &pm, cfg, backend, rate, &mut arena);
+        let error = error_model_impl(d, &d.acts, &sta, cfg, &res, &mut arena);
+        OverscaleResult { rate, alg1: res, error }
+    }
+
     #[test]
     fn fig8_error_shape_quiet_then_spike() {
         let (d, cfg, mut solver) = setup();
-        let r10 = overscale(&d, &cfg, &mut solver.clone(), 1.0);
-        let r12 = overscale(&d, &cfg, &mut solver.clone(), 1.2);
-        let r14 = overscale(&d, &cfg, &mut solver, 1.42);
+        let r10 = run(&d, &cfg, &mut solver.clone(), 1.0);
+        let r12 = run(&d, &cfg, &mut solver.clone(), 1.2);
+        let r14 = run(&d, &cfg, &mut solver, 1.42);
         // no violation budget ⇒ error-free
         assert_eq!(r10.error.hard_fraction, 0.0);
         assert!(r10.error.mean_rate < 1e-12);
@@ -198,7 +227,7 @@ mod tests {
         let (d, cfg, mut solver) = setup();
         let mut prev = f64::INFINITY;
         for rate in [1.0, 1.15, 1.3] {
-            let r = overscale(&d, &cfg, &mut solver.clone(), rate);
+            let r = run(&d, &cfg, &mut solver.clone(), rate);
             assert!(r.alg1.power <= prev + 1e-12, "power not monotone at {rate}");
             prev = r.alg1.power;
         }

@@ -1,0 +1,971 @@
+//! `FlowSession` — the unified, typed facade over every thermal-aware flow
+//! entry point.
+//!
+//! Three PRs of growth left the paper's flows behind a sprawl of
+//! positional-argument free functions (`alg1::run_with_arena`,
+//! `alg2::run_naive_with`, `VoltageLut::build_rate`, `overscale::...`),
+//! each caller hand-threading `Config` / `Design` / `StaCacheArena` /
+//! effort in its own order. The session replaces that accidental interface
+//! with one owner of the shared state and one typed request/outcome pair
+//! per paper algorithm:
+//!
+//! * [`FlowSession::alg1`] — Algorithm 1, thermal-aware voltage selection
+//!   (§III-B), with the §III-D `rate` knob;
+//! * [`FlowSession::baseline`] — the fixed-rails thermal fixed point
+//!   (nominal rails by default, or any rails for the Fig. 4/6/7
+//!   activity-range re-evaluations);
+//! * [`FlowSession::alg2`] / [`FlowSession::energy_opt`] — Algorithm 2,
+//!   thermal-aware energy optimization (§III-C), with a [`Fidelity`] knob
+//!   selecting the batched engine or the pre-refactor naive path;
+//! * [`FlowSession::voltage_lut`] — the (T → V) table behind the dynamic
+//!   scheme, with a [`LutSpec`] subsuming the safe sweep, the over-scaled
+//!   sweep, and the degenerate fixed-rails table;
+//! * [`FlowSession::overscale`] — the §III-D over-scaling flow plus its
+//!   post-P&R timing-error model.
+//!
+//! ## Ownership and caching
+//!
+//! The session owns everything the flows share:
+//!
+//! * an [`Arc<Config>`] — the base operating condition; requests override
+//!   ambient / θ_JA / activity per call without touching the base;
+//! * a memoizing **design cache** keyed by `(benchmark, effort)`: the CAD
+//!   pipeline (synthesize → pack → place → route → characterize) runs once
+//!   per key, then every request reuses the placed design (`Arc<Design>`);
+//! * the process-wide [`CharTable`] (via [`CharTable::shared`]);
+//! * one reusable [`StaCacheArena`] **per cached design** (arenas intern
+//!   per-device delay caches, so they must never cross designs) plus one
+//!   thermal backend per (design, θ_JA) — both live as long as the session.
+//!
+//! Everything cached is *memoization only*: a session answers every request
+//! bit-identically to a cold run of the legacy free functions
+//! (`tests/session.rs` pins this differentially, including the Algorithm-2
+//! search-effort counters).
+//!
+//! Known cost: the borrowed `Sta` / `PowerModel` views are rebuilt per
+//! request (they borrow the design, so they cannot live in the cache next
+//! to it without an owned-arena refactor of `timing`/`power`). Both are a
+//! single O(netlist) pass — small against the dozens of full STA/thermal
+//! evaluations any one flow request performs — so the facade keeps the
+//! simpler shape until a profile says otherwise.
+//!
+//! ## Deprecation policy
+//!
+//! The legacy free functions survive as `#[deprecated]` shims so the
+//! differential tests can pin the new API against the old one; non-test
+//! code must not call them (CI greps for it). They will be removed once a
+//! release has shipped with the session API.
+
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::activity::Activities;
+use crate::chardb::CharTable;
+use crate::config::Config;
+use crate::flow::alg1::{self, Alg1Result};
+use crate::flow::alg2::{self, Alg2Result};
+use crate::flow::design::{Design, Effort};
+use crate::flow::dynamic::{self, LutSweep, VoltageLut};
+use crate::flow::error::FlowError;
+use crate::flow::overscale::{self, ErrorModel};
+use crate::runtime::select_backend;
+use crate::thermal::ThermalBackend;
+use crate::timing::{ArenaStats, StaCacheArena};
+
+// ------------------------------------------------------------ requests --
+
+/// Evaluation fidelity for Algorithm 2: the batched, memoizing STA engine
+/// or the pre-refactor per-probe path (kept for benchmarking and as the
+/// differential baseline — results are bit-identical by construction).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Fidelity {
+    /// Batched flat STA + prepared-power sweep + arena memoization.
+    #[default]
+    Fast,
+    /// Pre-refactor per-probe evaluation (the CLI's `energy-opt --naive`).
+    Naive,
+}
+
+/// What (T → V) table to build: subsumes the legacy
+/// `VoltageLut::{build, build_rate, fixed}` constructors.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LutSpec {
+    /// Safe ambient sweep (rate 1.0): one Algorithm-1 run per `step_c`
+    /// from `t_amb_lo` to `t_amb_hi`.
+    Sweep {
+        t_amb_lo: f64,
+        t_amb_hi: f64,
+        step_c: f64,
+    },
+    /// Sweep with the §III-D CP-violation budget relaxing every run's
+    /// timing constraint to `rate × d_worst`.
+    SweepRate {
+        t_amb_lo: f64,
+        t_amb_hi: f64,
+        step_c: f64,
+        rate: f64,
+    },
+    /// Degenerate single-row table that always commands the given rails
+    /// (the static scheme expressed as a controller input).
+    Fixed { v_core: f64, v_bram: f64 },
+}
+
+/// Request for Algorithm 1 (thermal-aware voltage selection).
+#[derive(Clone, Debug)]
+pub struct Alg1Request {
+    /// Benchmark name: the VTR-profile suite plus the ML accelerator
+    /// profiles `lenet_systolic` and `hd_engine`.
+    pub bench: String,
+    /// Ambient temperature override (°C); `None` = the session config's.
+    pub ambient: Option<f64>,
+    /// θ_JA override (°C/W); `None` = the session config's.
+    pub theta_ja: Option<f64>,
+    /// Primary-input activity override; `None` = the session config's.
+    pub alpha: Option<f64>,
+    /// Allowed CP-delay violation (1.0 = none; §III-D over-scaling hook).
+    pub rate: f64,
+    /// Placer effort override; `None` = the session default.
+    pub effort: Option<Effort>,
+}
+
+impl Alg1Request {
+    pub fn new(bench: impl Into<String>) -> Alg1Request {
+        Alg1Request {
+            bench: bench.into(),
+            ambient: None,
+            theta_ja: None,
+            alpha: None,
+            rate: 1.0,
+            effort: None,
+        }
+    }
+}
+
+/// Request for the fixed-rails thermal fixed point (the baseline curve and
+/// the activity-range re-evaluation of a chosen operating point).
+#[derive(Clone, Debug)]
+pub struct BaselineRequest {
+    pub bench: String,
+    pub ambient: Option<f64>,
+    pub theta_ja: Option<f64>,
+    pub alpha: Option<f64>,
+    /// `(v_core, v_bram)` to hold fixed; `None` = the nominal rails (the
+    /// paper's one-size-fits-all baseline).
+    pub rails: Option<(f64, f64)>,
+    pub effort: Option<Effort>,
+}
+
+impl BaselineRequest {
+    pub fn new(bench: impl Into<String>) -> BaselineRequest {
+        BaselineRequest {
+            bench: bench.into(),
+            ambient: None,
+            theta_ja: None,
+            alpha: None,
+            rails: None,
+            effort: None,
+        }
+    }
+}
+
+/// Request for Algorithm 2 (thermal-aware energy optimization).
+#[derive(Clone, Debug)]
+pub struct Alg2Request {
+    pub bench: String,
+    pub ambient: Option<f64>,
+    pub theta_ja: Option<f64>,
+    pub alpha: Option<f64>,
+    /// Batched engine or the pre-refactor naive path.
+    pub fidelity: Fidelity,
+    /// Override for the §III-C pruning rules; `None` = the session
+    /// config's `flow.prune`.
+    pub prune: Option<bool>,
+    pub effort: Option<Effort>,
+}
+
+impl Alg2Request {
+    pub fn new(bench: impl Into<String>) -> Alg2Request {
+        Alg2Request {
+            bench: bench.into(),
+            ambient: None,
+            theta_ja: None,
+            alpha: None,
+            fidelity: Fidelity::Fast,
+            prune: None,
+            effort: None,
+        }
+    }
+}
+
+/// Request for a (T → V) voltage lookup table.
+#[derive(Clone, Debug)]
+pub struct LutRequest {
+    pub bench: String,
+    pub theta_ja: Option<f64>,
+    pub alpha: Option<f64>,
+    pub spec: LutSpec,
+    pub effort: Option<Effort>,
+}
+
+impl LutRequest {
+    pub fn new(bench: impl Into<String>, spec: LutSpec) -> LutRequest {
+        LutRequest {
+            bench: bench.into(),
+            theta_ja: None,
+            alpha: None,
+            spec,
+            effort: None,
+        }
+    }
+}
+
+/// Request for the §III-D over-scaling flow (Algorithm 1 at a CP-violation
+/// budget plus the post-P&R timing-error model at the converged (T, V)).
+#[derive(Clone, Debug)]
+pub struct OverscaleRequest {
+    pub bench: String,
+    pub ambient: Option<f64>,
+    pub theta_ja: Option<f64>,
+    pub alpha: Option<f64>,
+    /// CP-delay violation budget, ≥ 1.0.
+    pub rate: f64,
+    pub effort: Option<Effort>,
+}
+
+impl OverscaleRequest {
+    pub fn new(bench: impl Into<String>, rate: f64) -> OverscaleRequest {
+        OverscaleRequest {
+            bench: bench.into(),
+            ambient: None,
+            theta_ja: None,
+            alpha: None,
+            rate,
+            effort: None,
+        }
+    }
+}
+
+// ------------------------------------------------------------ outcomes --
+
+/// Operating condition a request resolved to (base config + overrides) —
+/// attached to every outcome so reports never re-derive it.
+#[derive(Clone, Copy, Debug)]
+pub struct Condition {
+    pub t_amb_c: f64,
+    pub theta_ja: f64,
+    pub alpha: f64,
+}
+
+/// Outcome of [`FlowSession::alg1`] / [`FlowSession::baseline`].
+#[derive(Clone, Debug)]
+pub struct Alg1Outcome {
+    pub bench: String,
+    pub condition: Condition,
+    pub result: Alg1Result,
+}
+
+/// Outcome of [`FlowSession::alg2`].
+#[derive(Clone, Debug)]
+pub struct Alg2Outcome {
+    pub bench: String,
+    pub condition: Condition,
+    pub fidelity: Fidelity,
+    pub result: Alg2Result,
+}
+
+/// Outcome of [`FlowSession::voltage_lut`].
+#[derive(Clone, Debug)]
+pub struct LutOutcome {
+    pub bench: String,
+    pub spec: LutSpec,
+    pub lut: VoltageLut,
+}
+
+/// Outcome of [`FlowSession::overscale`].
+#[derive(Clone, Debug)]
+pub struct OverscaleOutcome {
+    pub bench: String,
+    pub condition: Condition,
+    /// CP-delay violation budget the rails were optimized for.
+    pub rate: f64,
+    /// The Algorithm-1 solution under the relaxed constraint.
+    pub alg1: Alg1Result,
+    /// Per-endpoint timing-violation model at the converged (T, V).
+    pub error: ErrorModel,
+}
+
+// ------------------------------------------------------------- session --
+
+/// Per-design cached state: the placed design, its STA arena (arenas
+/// intern per-device delay caches and must never cross designs), one
+/// thermal backend per θ_JA actually requested, and the activity estimates
+/// for every override-α actually requested (keyed by the α bit pattern —
+/// `estimate` is a pure function of (netlist, α), so caching is
+/// observationally invisible).
+struct DesignEntry {
+    design: Arc<Design>,
+    arena: StaCacheArena,
+    backends: HashMap<u64, Box<dyn ThermalBackend>>,
+    acts: HashMap<u64, Arc<Activities>>,
+}
+
+/// The unified facade over every thermal-aware flow entry point. See the
+/// module docs for the ownership/caching model.
+pub struct FlowSession {
+    cfg: Arc<Config>,
+    effort: Effort,
+    table: Arc<CharTable>,
+    designs: HashMap<(String, Effort), DesignEntry>,
+}
+
+impl FlowSession {
+    /// Open a session over a validated base configuration, with
+    /// [`Effort::Quick`] as the default placer effort.
+    pub fn new(cfg: Config) -> Result<FlowSession, FlowError> {
+        FlowSession::with_effort(cfg, Effort::Quick)
+    }
+
+    /// Open a session with an explicit default placer effort.
+    pub fn with_effort(cfg: Config, effort: Effort) -> Result<FlowSession, FlowError> {
+        validate_config(&cfg)?;
+        Ok(FlowSession {
+            cfg: Arc::new(cfg),
+            effort,
+            table: CharTable::shared(),
+            designs: HashMap::new(),
+        })
+    }
+
+    /// The session's base configuration.
+    pub fn config(&self) -> &Config {
+        &self.cfg
+    }
+
+    /// The session's default placer effort.
+    pub fn effort(&self) -> Effort {
+        self.effort
+    }
+
+    /// The process-wide characterized library the session's designs share.
+    pub fn char_table(&self) -> &Arc<CharTable> {
+        &self.table
+    }
+
+    /// The placed design for `bench` at the session's default effort,
+    /// building (and caching) it on first use.
+    pub fn design(&mut self, bench: &str) -> Result<Arc<Design>, FlowError> {
+        self.design_at(bench, None)
+    }
+
+    /// [`design`](Self::design) with an explicit effort override.
+    pub fn design_at(
+        &mut self,
+        bench: &str,
+        effort: Option<Effort>,
+    ) -> Result<Arc<Design>, FlowError> {
+        let effort = effort.unwrap_or(self.effort);
+        let entry = Self::entry(&mut self.designs, &self.cfg, bench, effort)?;
+        Ok(entry.design.clone())
+    }
+
+    /// Cumulative STA-arena hit/miss counters for a cached design (`None`
+    /// until the first request touches it). Counters only ever grow over a
+    /// session's lifetime — the cache-reuse tests probe exactly that.
+    pub fn arena_stats(&self, bench: &str, effort: Option<Effort>) -> Option<ArenaStats> {
+        let effort = effort.unwrap_or(self.effort);
+        self.designs
+            .get(&(bench.to_string(), effort))
+            .map(|e| e.arena.stats)
+    }
+
+    /// Number of designs the session has built and cached.
+    pub fn cached_designs(&self) -> usize {
+        self.designs.len()
+    }
+
+    /// Name of the thermal backend serving `bench` at the session's base
+    /// condition (building design and backend on first use) — lets
+    /// integration tests pin the PJRT AOT hot path without reaching into
+    /// the session's internals.
+    pub fn backend_name(&mut self, bench: &str) -> Result<&'static str, FlowError> {
+        let cfg = self.resolved(None, None, None, None)?;
+        let effort = self.effort;
+        let (_design, _acts, _arena, backend) =
+            Self::ctx(&mut self.designs, &self.cfg, &cfg, bench, effort, None)?;
+        Ok(backend.name())
+    }
+
+    /// The memoized activity estimate for `bench` at `alpha` — the same
+    /// object override-α requests price power with, so callers that need a
+    /// custom power evaluation (e.g. fig7's energy re-pricing at α = 0.1)
+    /// don't re-run the netlist estimate the session already holds.
+    pub fn activities(&mut self, bench: &str, alpha: f64) -> Result<Arc<Activities>, FlowError> {
+        let cfg = self.resolved(None, None, Some(alpha), None)?;
+        let effort = self.effort;
+        let (design, acts, _arena, _backend) =
+            Self::ctx(&mut self.designs, &self.cfg, &cfg, bench, effort, Some(alpha))?;
+        // alpha equal to the base config's: the design's own activities
+        Ok(acts.unwrap_or_else(|| Arc::new(design.acts.clone())))
+    }
+
+    // ---------------------------------------------------------- flows --
+
+    /// Algorithm 1 — thermal-aware voltage selection (§III-B), optionally
+    /// with a §III-D CP-violation budget (`rate` > 1).
+    pub fn alg1(&mut self, req: Alg1Request) -> Result<Alg1Outcome, FlowError> {
+        validate_rate(req.rate)?;
+        let cfg = self.resolved(req.ambient, req.theta_ja, req.alpha, None)?;
+        let effort = req.effort.unwrap_or(self.effort);
+        let (design, acts, arena, backend) =
+            Self::ctx(&mut self.designs, &self.cfg, &cfg, &req.bench, effort, req.alpha)?;
+        let sta = design.sta();
+        let pm = match &acts {
+            Some(a) => design.power_model_at(a),
+            None => design.power_model(),
+        };
+        let result = alg1::run_impl(&design, &sta, &pm, &cfg, backend, req.rate, arena);
+        Ok(Alg1Outcome {
+            bench: req.bench,
+            condition: condition_of(&cfg),
+            result,
+        })
+    }
+
+    /// The thermal fixed point at fixed rails: the nominal-rails baseline
+    /// (the denominator of every "power reduction" number) or any explicit
+    /// rails (the Fig. 4/6/7 activity-range re-evaluations).
+    pub fn baseline(&mut self, req: BaselineRequest) -> Result<Alg1Outcome, FlowError> {
+        if let Some((vc, vb)) = req.rails {
+            for (name, v) in [("v_core", vc), ("v_bram", vb)] {
+                if !v.is_finite() || v <= 0.0 {
+                    return Err(FlowError::InvalidConfig {
+                        field: "rails",
+                        reason: format!("{name} = {v} V (must be finite and > 0)"),
+                    });
+                }
+            }
+        }
+        let cfg = self.resolved(req.ambient, req.theta_ja, req.alpha, None)?;
+        let effort = req.effort.unwrap_or(self.effort);
+        let (design, acts, _arena, backend) =
+            Self::ctx(&mut self.designs, &self.cfg, &cfg, &req.bench, effort, req.alpha)?;
+        let sta = design.sta();
+        let pm = match &acts {
+            Some(a) => design.power_model_at(a),
+            None => design.power_model(),
+        };
+        let (vc, vb) = req
+            .rails
+            .unwrap_or((cfg.arch.v_core_nom, cfg.arch.v_bram_nom));
+        let result = alg1::fixed_point_impl(&design, &sta, &pm, &cfg, backend, vc, vb);
+        Ok(Alg1Outcome {
+            bench: req.bench,
+            condition: condition_of(&cfg),
+            result,
+        })
+    }
+
+    /// Algorithm 2 — thermal-aware energy optimization (§III-C). The
+    /// [`Fidelity`] knob selects the batched engine or the pre-refactor
+    /// naive path (bit-identical results, different wall-clock).
+    pub fn alg2(&mut self, req: Alg2Request) -> Result<Alg2Outcome, FlowError> {
+        let cfg = self.resolved(req.ambient, req.theta_ja, req.alpha, req.prune)?;
+        let effort = req.effort.unwrap_or(self.effort);
+        let (design, acts, arena, backend) =
+            Self::ctx(&mut self.designs, &self.cfg, &cfg, &req.bench, effort, req.alpha)?;
+        let sta = design.sta();
+        let pm = match &acts {
+            Some(a) => design.power_model_at(a),
+            None => design.power_model(),
+        };
+        let result = match req.fidelity {
+            Fidelity::Fast => alg2::run_impl(&design, &sta, &pm, &cfg, backend, arena)?,
+            // the naive path deliberately bypasses the arena — it is the
+            // pre-refactor evaluation the bench times the engine against
+            Fidelity::Naive => alg2::run_naive_impl(&design, &sta, &pm, &cfg, backend)?,
+        };
+        Ok(Alg2Outcome {
+            bench: req.bench,
+            condition: condition_of(&cfg),
+            fidelity: req.fidelity,
+            result,
+        })
+    }
+
+    /// Paper-name alias for [`alg2`](Self::alg2) (§III-C calls the flow
+    /// "thermal-aware energy optimization").
+    pub fn energy_opt(&mut self, req: Alg2Request) -> Result<Alg2Outcome, FlowError> {
+        self.alg2(req)
+    }
+
+    /// Build a (T → V) lookup table per the request's [`LutSpec`] —
+    /// the safe ambient sweep, the §III-D over-scaled sweep, or the
+    /// degenerate fixed-rails table.
+    ///
+    /// A sweep where *every* ambient point is infeasible returns
+    /// [`FlowError::InfeasibleSweep`] rather than an empty table (an empty
+    /// table silently falls back to nominal rails on every lookup).
+    pub fn voltage_lut(&mut self, req: LutRequest) -> Result<LutOutcome, FlowError> {
+        let sweep = match req.spec {
+            LutSpec::Fixed { v_core, v_bram } => {
+                for (name, v) in [("v_core", v_core), ("v_bram", v_bram)] {
+                    if !v.is_finite() || v <= 0.0 {
+                        return Err(FlowError::BadLutSpec {
+                            reason: format!("fixed rail {name} = {v} V"),
+                        });
+                    }
+                }
+                return Ok(LutOutcome {
+                    bench: req.bench,
+                    spec: req.spec,
+                    lut: VoltageLut::fixed_rails(v_core, v_bram),
+                });
+            }
+            LutSpec::Sweep {
+                t_amb_lo,
+                t_amb_hi,
+                step_c,
+            } => LutSweep::validated(t_amb_lo, t_amb_hi, step_c, 1.0)?,
+            LutSpec::SweepRate {
+                t_amb_lo,
+                t_amb_hi,
+                step_c,
+                rate,
+            } => LutSweep::validated(t_amb_lo, t_amb_hi, step_c, rate)?,
+        };
+        let cfg = self.resolved(None, req.theta_ja, req.alpha, None)?;
+        let effort = req.effort.unwrap_or(self.effort);
+        let (design, acts, arena, backend) =
+            Self::ctx(&mut self.designs, &self.cfg, &cfg, &req.bench, effort, req.alpha)?;
+        let sta = design.sta();
+        let pm = match &acts {
+            Some(a) => design.power_model_at(a),
+            None => design.power_model(),
+        };
+        let lut = dynamic::build_impl(&design, &sta, &pm, &cfg, backend, sweep, arena);
+        if lut.entries.is_empty() {
+            // every ambient point came back infeasible — surface the typed
+            // error instead of handing back a table that silently falls
+            // through to nominal rails on every lookup
+            return Err(FlowError::InfeasibleSweep {
+                bench: req.bench,
+                t_amb_lo: sweep.t_amb_lo,
+                t_amb_hi: sweep.t_amb_hi,
+            });
+        }
+        Ok(LutOutcome {
+            bench: req.bench,
+            spec: req.spec,
+            lut,
+        })
+    }
+
+    /// The §III-D over-scaling flow: Algorithm 1 at the CP-violation
+    /// budget, then the post-P&R timing simulation pricing every endpoint
+    /// at the converged (T, V). Search and error model share the design's
+    /// arena, so the error model reads caches the search already built.
+    pub fn overscale(&mut self, req: OverscaleRequest) -> Result<OverscaleOutcome, FlowError> {
+        validate_rate(req.rate)?;
+        let cfg = self.resolved(req.ambient, req.theta_ja, req.alpha, None)?;
+        let effort = req.effort.unwrap_or(self.effort);
+        let (design, acts, arena, backend) =
+            Self::ctx(&mut self.designs, &self.cfg, &cfg, &req.bench, effort, req.alpha)?;
+        let sta = design.sta();
+        let pm = match &acts {
+            Some(a) => design.power_model_at(a),
+            None => design.power_model(),
+        };
+        let alg1_result = alg1::run_impl(&design, &sta, &pm, &cfg, backend, req.rate, arena);
+        let acts_ref: &Activities = acts.as_deref().unwrap_or(&design.acts);
+        let error =
+            overscale::error_model_impl(&design, acts_ref, &sta, &cfg, &alg1_result, arena);
+        Ok(OverscaleOutcome {
+            bench: req.bench,
+            condition: condition_of(&cfg),
+            rate: req.rate,
+            alg1: alg1_result,
+            error,
+        })
+    }
+
+    // ------------------------------------------------------- plumbing --
+
+    /// Base config with per-request overrides applied, re-validated so a
+    /// bad override is caught with the same typed error as a bad base.
+    fn resolved(
+        &self,
+        ambient: Option<f64>,
+        theta_ja: Option<f64>,
+        alpha: Option<f64>,
+        prune: Option<bool>,
+    ) -> Result<Config, FlowError> {
+        let mut cfg = (*self.cfg).clone();
+        if let Some(t) = ambient {
+            cfg.flow.t_amb = t;
+        }
+        if let Some(th) = theta_ja {
+            cfg.thermal.theta_ja = th;
+        }
+        if let Some(a) = alpha {
+            cfg.flow.alpha_in = a;
+        }
+        if let Some(p) = prune {
+            cfg.flow.prune = p;
+        }
+        validate_config(&cfg)?;
+        Ok(cfg)
+    }
+
+    /// The cached design entry for `(bench, effort)`, building the design
+    /// on first use. Associated function (not `&mut self`) so callers can
+    /// split borrows between the cache and the base config.
+    fn entry<'s>(
+        designs: &'s mut HashMap<(String, Effort), DesignEntry>,
+        base: &Config,
+        bench: &str,
+        effort: Effort,
+    ) -> Result<&'s mut DesignEntry, FlowError> {
+        match designs.entry((bench.to_string(), effort)) {
+            Entry::Occupied(e) => Ok(e.into_mut()),
+            Entry::Vacant(v) => {
+                let design = build_design(bench, base, effort)?;
+                Ok(v.insert(DesignEntry {
+                    design: Arc::new(design),
+                    arena: StaCacheArena::new(),
+                    backends: HashMap::new(),
+                    acts: HashMap::new(),
+                }))
+            }
+        }
+    }
+
+    /// Everything one request needs from the cache: the design, its
+    /// activities for the request's α override (memoized per α — `None`
+    /// means the design's own base-α activities apply), its arena, and the
+    /// thermal backend for the resolved θ_JA (built on first use; both
+    /// backends are stateless per solve, so reuse is bit-identical).
+    fn ctx<'s>(
+        designs: &'s mut HashMap<(String, Effort), DesignEntry>,
+        base: &Config,
+        cfg: &Config,
+        bench: &str,
+        effort: Effort,
+        alpha: Option<f64>,
+    ) -> Result<FlowCtx<'s>, FlowError> {
+        let entry = Self::entry(designs, base, bench, effort)?;
+        let design = entry.design.clone();
+        // `resolved()` already rejected out-of-range α before any caller
+        // reaches here (ctx is only entered with a validated request)
+        debug_assert!(
+            alpha.is_none_or(|a| a.is_finite() && a > 0.0 && a <= 1.0),
+            "ctx called with unvalidated alpha"
+        );
+        let acts = match alpha {
+            None => None,
+            Some(a) if a == base.flow.alpha_in => None,
+            Some(a) => Some(
+                entry
+                    .acts
+                    .entry(a.to_bits())
+                    .or_insert_with(|| Arc::new(design.activities_at(a)))
+                    .clone(),
+            ),
+        };
+        let backend = entry
+            .backends
+            .entry(cfg.thermal.theta_ja.to_bits())
+            .or_insert_with(|| {
+                select_backend(
+                    &cfg.artifacts_dir,
+                    design.dev.rows,
+                    design.dev.cols,
+                    &cfg.thermal,
+                )
+            });
+        Ok((design, acts, &mut entry.arena, backend.as_mut()))
+    }
+}
+
+/// The borrowed working set one request runs on: the cached design, the
+/// memoized activities for the request's α override (if any), its STA
+/// arena, and the thermal backend for the resolved θ_JA.
+type FlowCtx<'s> = (
+    Arc<Design>,
+    Option<Arc<Activities>>,
+    &'s mut StaCacheArena,
+    &'s mut dyn ThermalBackend,
+);
+
+/// Resolve a benchmark name to a placed design: the VTR-profile suite by
+/// name, plus the two ML accelerator profiles the over-scaling study uses.
+fn build_design(bench: &str, cfg: &Config, effort: Effort) -> Result<Design, FlowError> {
+    if let Some(profile) = crate::synth::benchmark(bench) {
+        return Design::from_netlist(crate::synth::generate(profile), profile, cfg, effort);
+    }
+    let profile = match bench {
+        "lenet_systolic" => crate::synth::lenet_accel(),
+        "hd_engine" => crate::synth::hd_accel(),
+        _ => {
+            return Err(FlowError::UnknownBenchmark {
+                name: bench.to_string(),
+            })
+        }
+    };
+    Design::from_netlist(crate::synth::generate(&profile), &profile, cfg, effort)
+}
+
+fn condition_of(cfg: &Config) -> Condition {
+    Condition {
+        t_amb_c: cfg.flow.t_amb,
+        theta_ja: cfg.thermal.theta_ja,
+        alpha: cfg.flow.alpha_in,
+    }
+}
+
+fn validate_rate(rate: f64) -> Result<(), FlowError> {
+    if !rate.is_finite() || rate < 1.0 {
+        return Err(FlowError::InvalidRate { rate });
+    }
+    Ok(())
+}
+
+/// Reject configurations the flows cannot run on. The worst offender was
+/// `voltage.step <= 0`, which made the grid constructor attempt a
+/// usize::MAX-element axis; everything else either panicked deep in a flow
+/// or silently produced NaN results.
+pub(crate) fn validate_config(cfg: &Config) -> Result<(), FlowError> {
+    let finite = |field: &'static str, v: f64| -> Result<(), FlowError> {
+        if v.is_finite() {
+            Ok(())
+        } else {
+            Err(FlowError::InvalidConfig {
+                field,
+                reason: format!("{v} is not finite"),
+            })
+        }
+    };
+    let positive = |field: &'static str, v: f64| -> Result<(), FlowError> {
+        finite(field, v)?;
+        if v > 0.0 {
+            Ok(())
+        } else {
+            Err(FlowError::InvalidConfig {
+                field,
+                reason: format!("{v} must be > 0"),
+            })
+        }
+    };
+    positive("voltage.step", cfg.vgrid.step)?;
+    positive("voltage.v_core_min", cfg.vgrid.v_core_min)?;
+    positive("voltage.v_bram_min", cfg.vgrid.v_bram_min)?;
+    finite("voltage.v_core_max", cfg.vgrid.v_core_max)?;
+    finite("voltage.v_bram_max", cfg.vgrid.v_bram_max)?;
+    for (field, lo, hi) in [
+        (
+            "voltage.v_core_min/max",
+            cfg.vgrid.v_core_min,
+            cfg.vgrid.v_core_max,
+        ),
+        (
+            "voltage.v_bram_min/max",
+            cfg.vgrid.v_bram_min,
+            cfg.vgrid.v_bram_max,
+        ),
+    ] {
+        if lo > hi {
+            return Err(FlowError::InvalidConfig {
+                field,
+                reason: format!("min {lo} > max {hi}"),
+            });
+        }
+    }
+    positive("thermal.theta_ja", cfg.thermal.theta_ja)?;
+    positive("thermal.delta_t", cfg.thermal.delta_t)?;
+    finite("flow.t_amb", cfg.flow.t_amb)?;
+    finite("flow.guardband", cfg.flow.guardband)?;
+    if cfg.flow.guardband < 0.0 {
+        return Err(FlowError::InvalidConfig {
+            field: "flow.guardband",
+            reason: format!("{} must be >= 0", cfg.flow.guardband),
+        });
+    }
+    if !(0.0..=1.0).contains(&cfg.flow.alpha_in) || cfg.flow.alpha_in == 0.0 {
+        return Err(FlowError::InvalidConfig {
+            field: "flow.alpha_in",
+            reason: format!("activity {} (must be in (0, 1])", cfg.flow.alpha_in),
+        });
+    }
+    if cfg.flow.max_iters == 0 {
+        return Err(FlowError::InvalidConfig {
+            field: "flow.max_iters",
+            reason: "must be >= 1".to_string(),
+        });
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bad_configs_are_rejected_with_typed_errors() {
+        let mut cfg = Config::new();
+        cfg.vgrid.step = 0.0;
+        // pre-session this OOM'd building a usize::MAX-element voltage axis
+        match FlowSession::new(cfg).err() {
+            Some(FlowError::InvalidConfig { field, .. }) => {
+                assert_eq!(field, "voltage.step")
+            }
+            other => panic!("expected InvalidConfig, got {other:?}"),
+        }
+
+        let mut cfg = Config::new();
+        cfg.thermal.theta_ja = -1.0;
+        assert!(matches!(
+            FlowSession::new(cfg),
+            Err(FlowError::InvalidConfig {
+                field: "thermal.theta_ja",
+                ..
+            })
+        ));
+
+        let mut cfg = Config::new();
+        cfg.vgrid.v_core_min = 0.9;
+        cfg.vgrid.v_core_max = 0.6;
+        assert!(matches!(
+            FlowSession::new(cfg),
+            Err(FlowError::InvalidConfig { .. })
+        ));
+    }
+
+    #[test]
+    fn unknown_benchmark_is_a_typed_error() {
+        let mut s = FlowSession::new(Config::new()).unwrap();
+        match s.alg1(Alg1Request::new("definitely-not-a-benchmark")) {
+            Err(FlowError::UnknownBenchmark { name }) => {
+                assert_eq!(name, "definitely-not-a-benchmark")
+            }
+            other => panic!("expected UnknownBenchmark, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn invalid_rates_and_lut_specs_are_rejected() {
+        let mut s = FlowSession::new(Config::new()).unwrap();
+        assert!(matches!(
+            s.alg1(Alg1Request {
+                rate: 0.8,
+                ..Alg1Request::new("mkPktMerge")
+            }),
+            Err(FlowError::InvalidRate { .. })
+        ));
+        assert!(matches!(
+            s.overscale(OverscaleRequest::new("mkPktMerge", f64::NAN)),
+            Err(FlowError::InvalidRate { .. })
+        ));
+        // a zero ambient step hung the legacy sweep forever
+        assert!(matches!(
+            s.voltage_lut(LutRequest::new(
+                "mkPktMerge",
+                LutSpec::Sweep {
+                    t_amb_lo: 0.0,
+                    t_amb_hi: 80.0,
+                    step_c: 0.0
+                }
+            )),
+            Err(FlowError::BadLutSpec { .. })
+        ));
+        // inverted bounds
+        assert!(matches!(
+            s.voltage_lut(LutRequest::new(
+                "mkPktMerge",
+                LutSpec::Sweep {
+                    t_amb_lo: 60.0,
+                    t_amb_hi: 10.0,
+                    step_c: 5.0
+                }
+            )),
+            Err(FlowError::BadLutSpec { .. })
+        ));
+        // none of the rejections should have paid for a design build
+        assert_eq!(s.cached_designs(), 0);
+    }
+
+    #[test]
+    fn all_infeasible_sweep_is_a_typed_error() {
+        // pin both rails to the 0.55 V floor: mkPktMerge's BRAM-critical
+        // path can never meet the nominal-rail d_worst there, so every
+        // ambient point of the sweep comes back infeasible and the session
+        // must report InfeasibleSweep instead of an empty (silently
+        // nominal-falling-back) table
+        let mut cfg = Config::new();
+        cfg.thermal.theta_ja = 12.0;
+        cfg.vgrid.v_core_min = 0.55;
+        cfg.vgrid.v_core_max = 0.55;
+        cfg.vgrid.v_bram_min = 0.55;
+        cfg.vgrid.v_bram_max = 0.55;
+        let mut s = FlowSession::new(cfg).unwrap();
+        match s.voltage_lut(LutRequest::new(
+            "mkPktMerge",
+            LutSpec::Sweep {
+                t_amb_lo: 20.0,
+                t_amb_hi: 60.0,
+                step_c: 20.0,
+            },
+        )) {
+            Err(FlowError::InfeasibleSweep {
+                bench,
+                t_amb_lo,
+                t_amb_hi,
+            }) => {
+                assert_eq!(bench, "mkPktMerge");
+                assert_eq!(t_amb_lo, 20.0);
+                assert_eq!(t_amb_hi, 60.0);
+            }
+            Ok(out) => panic!(
+                "expected InfeasibleSweep, got a table with {} entries",
+                out.lut.entries.len()
+            ),
+            Err(other) => panic!("expected InfeasibleSweep, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn fixed_lut_spec_needs_no_design_build() {
+        let mut s = FlowSession::new(Config::new()).unwrap();
+        let out = s
+            .voltage_lut(LutRequest::new(
+                "mkPktMerge",
+                LutSpec::Fixed {
+                    v_core: 0.72,
+                    v_bram: 0.88,
+                },
+            ))
+            .unwrap();
+        assert_eq!(out.lut.lookup(55.0, 5.0), (0.72, 0.88));
+        assert_eq!(s.cached_designs(), 0, "Fixed spec must not build a design");
+        assert!(matches!(
+            s.voltage_lut(LutRequest::new(
+                "x",
+                LutSpec::Fixed {
+                    v_core: -0.1,
+                    v_bram: 0.9
+                }
+            )),
+            Err(FlowError::BadLutSpec { .. })
+        ));
+    }
+
+    #[test]
+    fn design_cache_is_keyed_by_bench_and_effort() {
+        let mut s = FlowSession::new(Config::new()).unwrap();
+        let a = s.design("mkPktMerge").unwrap();
+        let b = s.design("mkPktMerge").unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "same key must reuse the design");
+        assert_eq!(s.cached_designs(), 1);
+        let c = s.design_at("mkPktMerge", Some(Effort::Quick)).unwrap();
+        assert!(Arc::ptr_eq(&a, &c), "explicit default effort is the same key");
+    }
+}

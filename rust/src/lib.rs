@@ -18,7 +18,10 @@
 //! * [`activity`]— switching-activity estimation (ACE substitute)
 //! * [`power`]   — per-tile leakage + dynamic power maps
 //! * [`thermal`] — steady-state thermal solver (native + PJRT artifact)
-//! * [`flow`]    — Algorithms 1 & 2 + voltage over-scaling flow
+//! * [`flow`]    — Algorithms 1 & 2 + voltage over-scaling flow, fronted by
+//!   the typed [`flow::FlowSession`] facade (owns the design cache, STA
+//!   arenas and thermal backends; every CLI/report/fleet caller goes
+//!   through it)
 //! * [`sim`]     — post-P&R timing simulation / error injection
 //! * [`ml`]      — LeNet + HD over-scaling workloads (PJRT-driven)
 //! * [`runtime`] — PJRT client wrapper around the `xla` crate (feature `pjrt`)
@@ -32,15 +35,15 @@
 //! * [`report`]  — regenerates every paper table/figure
 
 // The crate predates clippy in CI; these style lints fire all over the
-// numeric kernels (index-heavy grid sweeps, many-parameter flow plumbing)
-// where the "fix" would hurt readability.
+// numeric kernels (index-heavy grid sweeps) where the "fix" would hurt
+// readability. `too_many_arguments` and `type_complexity` were dropped when
+// the session facade replaced the long positional flow signatures with
+// request structs (PR 4).
 #![allow(
     clippy::needless_range_loop,
-    clippy::too_many_arguments,
     clippy::many_single_char_names,
     clippy::manual_range_contains,
-    clippy::new_without_default,
-    clippy::type_complexity
+    clippy::new_without_default
 )]
 
 pub mod activity;

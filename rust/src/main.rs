@@ -25,17 +25,17 @@ use std::path::Path;
 use std::sync::Arc;
 use std::time::Instant;
 
-use thermovolt::chardb::CharTable;
 use thermovolt::config::Config;
 use thermovolt::coordinator::{mean_power, DynamicController, Tsd};
 use thermovolt::fleet::policy::PolicyKind;
 use thermovolt::fleet::telemetry::FleetTelemetry;
 use thermovolt::fleet::trace::Scenario;
 use thermovolt::fleet::{Fleet, FleetConfig};
-use thermovolt::flow::dynamic::VoltageLut;
-use thermovolt::flow::{alg1, alg2, overscale, Design, Effort};
+use thermovolt::flow::{
+    Alg1Request, Alg2Request, BaselineRequest, Effort, Fidelity, FlowSession, LutRequest,
+    LutSpec, OverscaleRequest,
+};
 use thermovolt::report;
-use thermovolt::runtime::select_backend;
 use thermovolt::synth;
 use thermovolt::util::cli::Args;
 use thermovolt::util::table::{f2, f3, mv, mw, pct, Table};
@@ -48,7 +48,10 @@ fn main() {
     }
 }
 
-fn config_from(args: &Args) -> Config {
+/// Parse the shared condition flags. Unparseable values are hard errors —
+/// they used to fall back to the default silently, so a typo'd `--tamb`
+/// ran the whole flow at the wrong corner without a word.
+fn config_from(args: &Args) -> Result<Config> {
     let mut cfg = match args.opt("config") {
         Some(path) => Config::from_file(Path::new(path)).unwrap_or_else(|e| {
             eprintln!("warning: {e}; using defaults");
@@ -56,16 +59,20 @@ fn config_from(args: &Args) -> Config {
         }),
         None => Config::new(),
     };
+    fn parsed(flag: &str, v: &str) -> Result<f64> {
+        v.parse()
+            .map_err(|_| anyhow::anyhow!("--{flag} {v}: not a number"))
+    }
     if let Some(t) = args.opt("tamb") {
-        cfg.flow.t_amb = t.parse().unwrap_or(cfg.flow.t_amb);
+        cfg.flow.t_amb = parsed("tamb", t)?;
     }
     if let Some(t) = args.opt("theta") {
-        cfg.thermal.theta_ja = t.parse().unwrap_or(cfg.thermal.theta_ja);
+        cfg.thermal.theta_ja = parsed("theta", t)?;
     }
     if let Some(a) = args.opt("alpha") {
-        cfg.flow.alpha_in = a.parse().unwrap_or(cfg.flow.alpha_in);
+        cfg.flow.alpha_in = parsed("alpha", a)?;
     }
-    cfg
+    Ok(cfg)
 }
 
 fn effort_from(args: &Args) -> Effort {
@@ -77,7 +84,7 @@ fn effort_from(args: &Args) -> Effort {
 }
 
 fn run(args: &Args) -> Result<()> {
-    let cfg = config_from(args);
+    let cfg = config_from(args)?;
     let effort = effort_from(args);
     let results = Path::new("results");
     match args.subcommand.as_str() {
@@ -111,21 +118,14 @@ fn run(args: &Args) -> Result<()> {
         }
         "power-opt" => {
             let bench = args.opt_or("bench", "mkDelayWorker");
-            let design = Design::build(bench, &cfg, effort)?;
-            let mut backend = select_backend(
-                &cfg.artifacts_dir,
-                design.dev.rows,
-                design.dev.cols,
-                &cfg.thermal,
-            );
+            let mut session = FlowSession::with_effort(cfg.clone(), effort)?;
+            let design = session.design(bench)?;
             println!(
-                "design {bench}: {}x{} device, backend = {}",
-                design.dev.rows,
-                design.dev.cols,
-                backend.name()
+                "design {bench}: {}x{} device",
+                design.dev.rows, design.dev.cols
             );
-            let r = alg1::thermal_aware_voltage_selection(&design, &cfg, backend.as_mut(), 1.0);
-            let base = alg1::baseline(&design, &cfg, backend.as_mut());
+            let r = session.alg1(Alg1Request::new(bench))?.result;
+            let base = session.baseline(BaselineRequest::new(bench))?.result;
             println!(
                 "T_amb={:.0}C  d_worst={:.2}ns  f={:.1}MHz",
                 cfg.flow.t_amb,
@@ -159,21 +159,22 @@ fn run(args: &Args) -> Result<()> {
             if args.opt("tamb").is_none() {
                 cfg.flow.t_amb = 65.0;
             }
-            let design = Design::build(bench, &cfg, effort)?;
-            let mut backend = select_backend(
-                &cfg.artifacts_dir,
-                design.dev.rows,
-                design.dev.cols,
-                &cfg.thermal,
-            );
+            let mut session = FlowSession::with_effort(cfg, effort)?;
             // --naive: pre-refactor per-probe evaluation path (bit-identical
             // results; kept for the bench comparison and as a fallback)
-            let r = if args.flag("naive") {
-                alg2::thermal_aware_energy_optimization_naive(&design, &cfg, backend.as_mut())
+            let fidelity = if args.flag("naive") {
+                Fidelity::Naive
             } else {
-                alg2::thermal_aware_energy_optimization(&design, &cfg, backend.as_mut())
+                Fidelity::Fast
             };
-            let (base_e, base_p) = alg2::baseline_energy(&design, &cfg, backend.as_mut());
+            let r = session
+                .alg2(Alg2Request {
+                    fidelity,
+                    ..Alg2Request::new(bench)
+                })?
+                .result;
+            let base = session.baseline(BaselineRequest::new(bench))?.result;
+            let (base_e, base_p) = (base.power / base.f_clk, base.power);
             println!(
                 "V = ({}, {}) mV  period {:.2} ns (freq ratio {})  P={} mW",
                 mv(r.v_core),
@@ -197,22 +198,11 @@ fn run(args: &Args) -> Result<()> {
         "overscale" => {
             let bench = args.opt_or("bench", "lenet_systolic");
             let rate = args.opt_f64("rate", 1.2);
-            let profile = match bench {
-                "lenet_systolic" => synth::lenet_accel(),
-                "hd_engine" => synth::hd_accel(),
-                other => synth::benchmark(other)
-                    .ok_or_else(|| anyhow::anyhow!("unknown bench {other}"))?
-                    .clone(),
-            };
-            let design = Design::from_netlist(synth::generate(&profile), &profile, &cfg, effort)?;
-            let mut backend = select_backend(
-                &cfg.artifacts_dir,
-                design.dev.rows,
-                design.dev.cols,
-                &cfg.thermal,
-            );
-            let base = alg1::baseline(&design, &cfg, backend.as_mut());
-            let o = overscale::overscale(&design, &cfg, backend.as_mut(), rate);
+            // the session resolves accelerator profiles (lenet_systolic,
+            // hd_engine) and suite benchmarks through one name space
+            let mut session = FlowSession::with_effort(cfg.clone(), effort)?;
+            let base = session.baseline(BaselineRequest::new(bench))?.result;
+            let o = session.overscale(OverscaleRequest::new(bench, rate))?;
             println!(
                 "rate {rate}: V=({}, {}) mV  saving {} %  mean violation rate {:.3e}  hard {:.4}",
                 mv(o.alg1.v_core),
@@ -224,15 +214,19 @@ fn run(args: &Args) -> Result<()> {
         }
         "serve" => {
             let bench = args.opt_or("bench", "mkPktMerge");
-            let design = Design::build(bench, &cfg, effort)?;
-            let mut backend = select_backend(
-                &cfg.artifacts_dir,
-                design.dev.rows,
-                design.dev.cols,
-                &cfg.thermal,
-            );
+            let mut session = FlowSession::with_effort(cfg.clone(), effort)?;
             println!("building (T → V) lookup table for {bench}…");
-            let lut = VoltageLut::build(&design, &cfg, backend.as_mut(), 0.0, 80.0, 10.0);
+            let lut = session
+                .voltage_lut(LutRequest::new(
+                    bench,
+                    LutSpec::Sweep {
+                        t_amb_lo: 0.0,
+                        t_amb_hi: 80.0,
+                        step_c: 10.0,
+                    },
+                ))?
+                .lut;
+            let design = session.design(bench)?;
             for e in &lut.entries {
                 println!(
                     "  Tj <= {:>5.1} C → V=({}, {}) mV   P={} mW",
@@ -265,7 +259,7 @@ fn run(args: &Args) -> Result<()> {
                 },
             };
             let trace = vec![(0.0, 20.0), (90_000.0, 55.0), (180_000.0, 20.0)];
-            let log = controller.run(&trace, 1.0, 5_000.0);
+            let log = controller.run(&trace, 1.0, 5_000.0)?;
             println!("t(s)  T_amb  T_j    V_core  V_bram  P(mW)");
             for s in &log {
                 println!(
@@ -290,7 +284,11 @@ fn run(args: &Args) -> Result<()> {
         "report" => {
             let all = args.flag("all");
             std::fs::create_dir_all(results)?;
-            let table = CharTable::shared();
+            // one session for the whole report run: figures share placed
+            // designs, STA arenas and thermal backends (fig4/table2/fig6
+            // all reuse the same mkDelayWorker implementation, for one)
+            let mut session = FlowSession::with_effort(cfg.clone(), effort)?;
+            let table = session.char_table().clone();
             if all || args.flag("table1") {
                 report::table1(&cfg).emit(results, "table1")?;
             }
@@ -306,29 +304,29 @@ fn run(args: &Args) -> Result<()> {
                 r.emit(results, "fig3_right")?;
             }
             if all || args.flag("fig4") {
-                report::fig4(&cfg, effort)?.emit(results, "fig4")?;
+                report::fig4(&mut session)?.emit(results, "fig4")?;
             }
             if all || args.flag("table2") {
-                report::table2(&cfg, effort)?.emit(results, "table2")?;
+                report::table2(&mut session)?.emit(results, "table2")?;
             }
             if all || args.flag("fig6") {
                 let names = synth::benchmark_names();
-                report::fig6(&cfg, effort, 40.0, 12.0, &names)?.emit(results, "fig6a")?;
-                report::fig6(&cfg, effort, 65.0, 2.0, &names)?.emit(results, "fig6b")?;
+                report::fig6(&mut session, 40.0, 12.0, &names)?.emit(results, "fig6a")?;
+                report::fig6(&mut session, 65.0, 2.0, &names)?.emit(results, "fig6b")?;
             }
             if all || args.flag("fig7") {
                 let names = synth::benchmark_names();
-                report::fig7(&cfg, effort, &names)?.emit(results, "fig7")?;
+                report::fig7(&mut session, &names)?.emit(results, "fig7")?;
             }
             if all || args.flag("fig8") {
-                match report::fig8(&cfg, effort) {
+                match report::fig8(&mut session) {
                     Ok(t) => t.emit(results, "fig8")?,
                     Err(e) if all => eprintln!("fig8 skipped: {e:#}"),
                     Err(e) => return Err(e),
                 }
             }
             if all || args.flag("runtime") {
-                report::runtime_claims(&cfg, effort)?.emit(results, "runtime_claims")?;
+                report::runtime_claims(&mut session)?.emit(results, "runtime_claims")?;
             }
             if all || args.flag("leakage") {
                 report::leakage_fit(&cfg)?.emit(results, "leakage_fit")?;
@@ -499,7 +497,8 @@ fn run(args: &Args) -> Result<()> {
                 names
             };
             std::fs::create_dir_all(results)?;
-            let t = report::fig6(&cfg, effort, 40.0, 12.0, &run_names)?;
+            let mut session = FlowSession::with_effort(cfg.clone(), effort)?;
+            let t = report::fig6(&mut session, 40.0, 12.0, &run_names)?;
             t.emit(results, "e2e_fig6a")?;
             let avg = t.rows.last().unwrap();
             println!(

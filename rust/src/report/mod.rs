@@ -8,27 +8,20 @@ use crate::chardb::{CharDb, CharTable, Rail, ResourceType, ALL_RESOURCES};
 use crate::config::Config;
 use crate::fleet::telemetry::FleetTelemetry;
 use crate::fleet::DeviceSpec;
-use crate::flow::alg1::{self, fixed_voltage_fixed_point};
-use crate::flow::{alg2, Design, Effort};
+use crate::flow::{
+    Alg1Request, Alg2Request, BaselineRequest, Design, Effort, FlowSession,
+};
 #[cfg(feature = "pjrt")]
-use crate::flow::overscale;
+use crate::flow::OverscaleRequest;
 #[cfg(feature = "pjrt")]
 use crate::ml::{HdWorkload, LenetWorkload};
-use crate::runtime::select_backend;
 #[cfg(feature = "pjrt")]
 use crate::runtime::Runtime;
 #[cfg(feature = "pjrt")]
 use crate::sim::ml_error_rates;
 use crate::synth::benchmark_names;
-#[cfg(feature = "pjrt")]
-use crate::synth::{hd_accel, lenet_accel};
 use crate::util::stats;
 use crate::util::table::{f1, f2, f3, mv, mw, pct, Table};
-
-/// Backend factory shared by all experiments.
-fn backend_for(design: &Design, cfg: &Config) -> Box<dyn crate::thermal::ThermalBackend> {
-    select_backend(&cfg.artifacts_dir, design.dev.rows, design.dev.cols, &cfg.thermal)
-}
 
 // ------------------------------------------------------------- Table I --
 
@@ -163,16 +156,25 @@ pub fn fig3(cfg: &Config, quick: bool) -> (Table, Table) {
 /// Fig. 4: mkDelayWorker case study sweep over ambient temperature
 /// (θ_JA = 12 °C/W): (a) optimal voltages, (b) power bounds for
 /// α ∈ [0.1, 1.0] vs baseline, (c) junction-temperature rise bounds.
-pub fn fig4(cfg_in: &Config, effort: Effort) -> anyhow::Result<Table> {
-    let mut cfg = cfg_in.clone();
-    cfg.thermal.theta_ja = 12.0;
-    cfg.flow.alpha_in = 1.0;
-    let design = Design::build("mkDelayWorker", &cfg, effort)?;
-    let sta = design.sta();
-    let pm_hi = design.power_model();
-    let acts_lo = design.activities_at(0.1);
-    let pm_lo = design.power_model_at(&acts_lo);
-    let mut backend = backend_for(&design, &cfg);
+///
+/// The whole sweep runs through one [`FlowSession`]: the design is placed
+/// once and every ambient's Algorithm-1 run shares the session's STA arena
+/// (the `d_worst` STA and recurring delay caches are computed once).
+pub fn fig4(session: &mut FlowSession) -> anyhow::Result<Table> {
+    let bench = "mkDelayWorker";
+    let cond = |t_amb: f64, alpha: f64| Alg1Request {
+        ambient: Some(t_amb),
+        theta_ja: Some(12.0),
+        alpha: Some(alpha),
+        ..Alg1Request::new(bench)
+    };
+    let base_at = |t_amb: f64, alpha: f64, rails: Option<(f64, f64)>| BaselineRequest {
+        ambient: Some(t_amb),
+        theta_ja: Some(12.0),
+        alpha: Some(alpha),
+        rails,
+        ..BaselineRequest::new(bench)
+    };
 
     let mut t = Table::new(
         "Fig. 4 — mkDelayWorker vs ambient temperature (theta_JA = 12 C/W)",
@@ -183,13 +185,13 @@ pub fn fig4(cfg_in: &Config, effort: Effort) -> anyhow::Result<Table> {
     );
     let mut t_amb = 0.0;
     while t_amb <= 85.0 + 1e-9 {
-        let mut c = cfg.clone();
-        c.flow.t_amb = t_amb;
-        let r = alg1::run_with(&design, &sta, &pm_hi, &c, backend.as_mut(), 1.0);
+        let r = session.alg1(cond(t_amb, 1.0))?.result;
         // α = 0.1 re-evaluation at the chosen voltages
-        let lo = fixed_voltage_fixed_point(&design, &sta, &pm_lo, &c, backend.as_mut(), r.v_core, r.v_bram);
-        let base_hi = alg1::baseline_with(&design, &sta, &pm_hi, &c, backend.as_mut());
-        let base_lo = alg1::baseline_with(&design, &sta, &pm_lo, &c, backend.as_mut());
+        let lo = session
+            .baseline(base_at(t_amb, 0.1, Some((r.v_core, r.v_bram))))?
+            .result;
+        let base_hi = session.baseline(base_at(t_amb, 1.0, None))?.result;
+        let base_lo = session.baseline(base_at(t_amb, 0.1, None))?.result;
         let dtj_hi = stats::max(&r.temp) - t_amb;
         let dtj_lo = stats::max(&lo.temp) - t_amb;
         t.row(vec![
@@ -210,14 +212,15 @@ pub fn fig4(cfg_in: &Config, effort: Effort) -> anyhow::Result<Table> {
 }
 
 /// Table II: Algorithm-1 iteration log for mkDelayWorker @ T_amb = 60 °C.
-pub fn table2(cfg_in: &Config, effort: Effort) -> anyhow::Result<Table> {
-    let mut cfg = cfg_in.clone();
-    cfg.thermal.theta_ja = 12.0;
-    cfg.flow.t_amb = 60.0;
-    cfg.flow.alpha_in = 1.0;
-    let design = Design::build("mkDelayWorker", &cfg, effort)?;
-    let mut backend = backend_for(&design, &cfg);
-    let r = alg1::thermal_aware_voltage_selection(&design, &cfg, backend.as_mut(), 1.0);
+pub fn table2(session: &mut FlowSession) -> anyhow::Result<Table> {
+    let r = session
+        .alg1(Alg1Request {
+            ambient: Some(60.0),
+            theta_ja: Some(12.0),
+            alpha: Some(1.0),
+            ..Alg1Request::new("mkDelayWorker")
+        })?
+        .result;
     let mut t = Table::new(
         "Table II — Algorithm 1 iterations, mkDelayWorker @ T_amb = 60 C",
         &["iter", "V_core(mV)", "V_bram(mV)", "Power(mW)", "T_junct(C)", "Time(s)", "evals"],
@@ -241,16 +244,11 @@ pub fn table2(cfg_in: &Config, effort: Effort) -> anyhow::Result<Table> {
 /// Fig. 6: per-benchmark power-reduction range (α ∈ [0.1, 1.0]) and optimal
 /// voltages, at (40 °C, θ_JA = 12) for (a) and (65 °C, θ_JA = 2) for (b).
 pub fn fig6(
-    cfg_in: &Config,
-    effort: Effort,
+    session: &mut FlowSession,
     t_amb: f64,
     theta_ja: f64,
     names: &[&str],
 ) -> anyhow::Result<Table> {
-    let mut cfg = cfg_in.clone();
-    cfg.flow.t_amb = t_amb;
-    cfg.thermal.theta_ja = theta_ja;
-    cfg.flow.alpha_in = 1.0;
     let mut t = Table::new(
         &format!("Fig. 6 — power reduction @ {t_amb} C (theta_JA = {theta_ja} C/W)"),
         &[
@@ -260,17 +258,26 @@ pub fn fig6(
     let mut lo_all = Vec::new();
     let mut hi_all = Vec::new();
     for name in names {
-        let design = Design::build(name, &cfg, effort)?;
-        let sta = design.sta();
-        let pm_hi = design.power_model();
-        let acts_lo = design.activities_at(0.1);
-        let pm_lo = design.power_model_at(&acts_lo);
-        let mut backend = backend_for(&design, &cfg);
-        let r = alg1::run_with(&design, &sta, &pm_hi, &cfg, backend.as_mut(), 1.0);
-        let base_hi = alg1::baseline_with(&design, &sta, &pm_hi, &cfg, backend.as_mut());
-        let prop_lo =
-            fixed_voltage_fixed_point(&design, &sta, &pm_lo, &cfg, backend.as_mut(), r.v_core, r.v_bram);
-        let base_lo = alg1::baseline_with(&design, &sta, &pm_lo, &cfg, backend.as_mut());
+        let cond = |alpha: f64, rails: Option<(f64, f64)>| BaselineRequest {
+            ambient: Some(t_amb),
+            theta_ja: Some(theta_ja),
+            alpha: Some(alpha),
+            rails,
+            ..BaselineRequest::new(*name)
+        };
+        let r = session
+            .alg1(Alg1Request {
+                ambient: Some(t_amb),
+                theta_ja: Some(theta_ja),
+                alpha: Some(1.0),
+                ..Alg1Request::new(*name)
+            })?
+            .result;
+        let base_hi = session.baseline(cond(1.0, None))?.result;
+        let prop_lo = session
+            .baseline(cond(0.1, Some((r.v_core, r.v_bram))))?
+            .result;
+        let base_lo = session.baseline(cond(0.1, None))?.result;
         // saving range across the activity band (α = 0.1 … 1.0)
         let s_lo = 1.0 - prop_lo.power / base_lo.power;
         let s_hi = 1.0 - r.power / base_hi.power;
@@ -301,11 +308,7 @@ pub fn fig6(
 
 /// Fig. 7: per-benchmark energy-saving range at 65 °C with the optimal
 /// voltages and frequency ratio.
-pub fn fig7(cfg_in: &Config, effort: Effort, names: &[&str]) -> anyhow::Result<Table> {
-    let mut cfg = cfg_in.clone();
-    cfg.flow.t_amb = 65.0;
-    cfg.thermal.theta_ja = 2.0;
-    cfg.flow.alpha_in = 1.0;
+pub fn fig7(session: &mut FlowSession, names: &[&str]) -> anyhow::Result<Table> {
     let mut t = Table::new(
         "Fig. 7 — energy savings @ 65 C (theta_JA = 2 C/W)",
         &[
@@ -316,22 +319,36 @@ pub fn fig7(cfg_in: &Config, effort: Effort, names: &[&str]) -> anyhow::Result<T
     let mut hi_all = Vec::new();
     let mut fr_all = Vec::new();
     for name in names {
-        let design = Design::build(name, &cfg, effort)?;
-        let sta = design.sta();
-        let pm_hi = design.power_model();
-        let acts_lo = design.activities_at(0.1);
-        let pm_lo = design.power_model_at(&acts_lo);
-        let mut backend = backend_for(&design, &cfg);
-        let r = alg2::run_with(&design, &sta, &pm_hi, &cfg, backend.as_mut());
-        let (base_e_hi, _) = {
-            let b = alg1::baseline_with(&design, &sta, &pm_hi, &cfg, backend.as_mut());
-            (b.power / b.f_clk, b.power)
+        let cond = |alpha: f64, rails: Option<(f64, f64)>| BaselineRequest {
+            ambient: Some(65.0),
+            theta_ja: Some(2.0),
+            alpha: Some(alpha),
+            rails,
+            ..BaselineRequest::new(*name)
         };
-        // α = 0.1: re-evaluate chosen point and baseline
-        let lo_pt =
-            fixed_voltage_fixed_point(&design, &sta, &pm_lo, &cfg, backend.as_mut(), r.v_core, r.v_bram);
+        let r = session
+            .alg2(Alg2Request {
+                ambient: Some(65.0),
+                theta_ja: Some(2.0),
+                alpha: Some(1.0),
+                ..Alg2Request::new(*name)
+            })?
+            .result;
+        let base_e_hi = {
+            let b = session.baseline(cond(1.0, None))?.result;
+            b.power / b.f_clk
+        };
+        // α = 0.1: re-evaluate chosen point and baseline. The activities
+        // come from the session's memo — the same object the baseline
+        // requests below price power with, estimated exactly once.
+        let design = session.design(name)?;
+        let acts_lo = session.activities(name, 0.1)?;
+        let pm_lo = design.power_model_at(&acts_lo);
+        let lo_pt = session
+            .baseline(cond(0.1, Some((r.v_core, r.v_bram))))?
+            .result;
         let e_lo_pt = pm_lo.total_power(&lo_pt.temp, 1.0 / r.period, r.v_core, r.v_bram) * r.period;
-        let base_lo = alg1::baseline_with(&design, &sta, &pm_lo, &cfg, backend.as_mut());
+        let base_lo = session.baseline(cond(0.1, None))?.result;
         let base_e_lo = base_lo.power / base_lo.f_clk;
         let s_hi = 1.0 - r.energy / base_e_hi;
         let s_lo = 1.0 - e_lo_pt / base_e_lo;
@@ -368,32 +385,22 @@ pub fn fig7(cfg_in: &Config, effort: Effort, names: &[&str]) -> anyhow::Result<T
 /// Needs the `pjrt` feature (AOT LeNet/HD inference); the offline stub
 /// signature below reports the missing capability instead.
 #[cfg(feature = "pjrt")]
-pub fn fig8(cfg_in: &Config, effort: Effort) -> anyhow::Result<Table> {
-    let mut cfg = cfg_in.clone();
-    cfg.flow.t_amb = 40.0;
-    cfg.thermal.theta_ja = 12.0;
-    cfg.flow.alpha_in = 1.0;
+pub fn fig8(session: &mut FlowSession) -> anyhow::Result<Table> {
+    let artifacts = session.config().artifacts_dir.clone();
+    let mut rt = Runtime::new(&artifacts)?;
+    let lenet = LenetWorkload::load(&artifacts)?;
+    let hd = HdWorkload::load(&artifacts)?;
 
-    let lenet_design = Design::from_netlist(
-        crate::synth::generate(&lenet_accel()),
-        &lenet_accel(),
-        &cfg,
-        effort,
-    )?;
-    let hd_design = Design::from_netlist(
-        crate::synth::generate(&hd_accel()),
-        &hd_accel(),
-        &cfg,
-        effort,
-    )?;
-    let mut rt = Runtime::new(&cfg.artifacts_dir)?;
-    let lenet = LenetWorkload::load(&cfg.artifacts_dir)?;
-    let hd = HdWorkload::load(&cfg.artifacts_dir)?;
-
-    let mut backend_l = backend_for(&lenet_design, &cfg);
-    let mut backend_h = backend_for(&hd_design, &cfg);
-    let base_l = alg1::baseline(&lenet_design, &cfg, backend_l.as_mut());
-    let base_h = alg1::baseline(&hd_design, &cfg, backend_h.as_mut());
+    let cond40 = |bench: &str| BaselineRequest {
+        ambient: Some(40.0),
+        theta_ja: Some(12.0),
+        alpha: Some(1.0),
+        ..BaselineRequest::new(bench)
+    };
+    let base_l = session.baseline(cond40("lenet_systolic"))?.result;
+    let base_h = session.baseline(cond40("hd_engine"))?.result;
+    let lenet_design = session.design("lenet_systolic")?;
+    let hd_design = session.design("hd_engine")?;
 
     let mut t = Table::new(
         "Fig. 8 — voltage over-scaling: power reduction & accuracy @ 40 C",
@@ -403,8 +410,14 @@ pub fn fig8(cfg_in: &Config, effort: Effort) -> anyhow::Result<Table> {
         ],
     );
     for rate in [1.0, 1.05, 1.1, 1.15, 1.2, 1.25, 1.3, 1.35, 1.4] {
-        let ol = overscale::overscale(&lenet_design, &cfg, backend_l.as_mut(), rate);
-        let oh = overscale::overscale(&hd_design, &cfg, backend_h.as_mut(), rate);
+        let over = |bench: &str| OverscaleRequest {
+            ambient: Some(40.0),
+            theta_ja: Some(12.0),
+            alpha: Some(1.0),
+            ..OverscaleRequest::new(bench, rate)
+        };
+        let ol = session.overscale(over("lenet_systolic"))?;
+        let oh = session.overscale(over("hd_engine"))?;
         let rl = ml_error_rates(&lenet_design, &ol.alg1, &ol.error);
         let rh = ml_error_rates(&hd_design, &oh.alg1, &oh.error);
         let acc_l = lenet.accuracy(&mut rt, rl.mac_rate, 0x516)?;
@@ -424,7 +437,7 @@ pub fn fig8(cfg_in: &Config, effort: Effort) -> anyhow::Result<Table> {
 
 /// Offline stub: Fig. 8 needs PJRT inference over the AOT ML artifacts.
 #[cfg(not(feature = "pjrt"))]
-pub fn fig8(_cfg: &Config, _effort: Effort) -> anyhow::Result<Table> {
+pub fn fig8(_session: &mut FlowSession) -> anyhow::Result<Table> {
     anyhow::bail!(
         "fig8 needs the `pjrt` feature (build with `--features pjrt` after `make artifacts`)"
     )
@@ -434,25 +447,33 @@ pub fn fig8(_cfg: &Config, _effort: Effort) -> anyhow::Result<Table> {
 
 /// §III-B/§III-C runtime claims: Alg-1 convergence + per-iteration cost,
 /// Alg-2 pruning speedup.
-pub fn runtime_claims(cfg_in: &Config, effort: Effort) -> anyhow::Result<Table> {
-    let mut cfg = cfg_in.clone();
-    cfg.flow.t_amb = 60.0;
-    cfg.thermal.theta_ja = 12.0;
-    let design = Design::build("mkPktMerge", &cfg, effort)?;
-    let mut backend = backend_for(&design, &cfg);
-    let r = alg1::thermal_aware_voltage_selection(&design, &cfg, backend.as_mut(), 1.0);
+pub fn runtime_claims(session: &mut FlowSession) -> anyhow::Result<Table> {
+    use crate::flow::Fidelity;
+    let bench = "mkPktMerge";
+    let cond = |prune: Option<bool>, fidelity: Fidelity| Alg2Request {
+        ambient: Some(60.0),
+        theta_ja: Some(12.0),
+        prune,
+        fidelity,
+        ..Alg2Request::new(bench)
+    };
+    let r = session
+        .alg1(Alg1Request {
+            ambient: Some(60.0),
+            theta_ja: Some(12.0),
+            ..Alg1Request::new(bench)
+        })?
+        .result;
     let t0 = std::time::Instant::now();
-    let pruned = alg2::thermal_aware_energy_optimization(&design, &cfg, backend.as_mut());
+    let pruned = session.alg2(cond(None, Fidelity::Fast))?.result;
     let t_pruned = t0.elapsed().as_secs_f64();
-    let mut cfg_np = cfg.clone();
-    cfg_np.flow.prune = false;
     let t1 = std::time::Instant::now();
-    let _full = alg2::thermal_aware_energy_optimization(&design, &cfg_np, backend.as_mut());
+    let _full = session.alg2(cond(Some(false), Fidelity::Fast))?.result;
     let t_full = t1.elapsed().as_secs_f64();
     // pre-refactor evaluation path (per-probe STA, no batching/arena) on the
-    // same pruned config — the bit-identity is asserted in tests/batch_sta.rs
+    // same pruned config — the bit-identity is asserted in tests/session.rs
     let t2 = std::time::Instant::now();
-    let _naive = alg2::thermal_aware_energy_optimization_naive(&design, &cfg, backend.as_mut());
+    let _naive = session.alg2(cond(None, Fidelity::Naive))?.result;
     let t_naive = t2.elapsed().as_secs_f64();
     let mut t = Table::new(
         "Runtime claims (§III-B / §III-C)",

@@ -17,7 +17,8 @@
 //!
 //! Two interchangeable backends solve the same system:
 //! * [`NativeSolver`] — red-black SOR in rust (oracle + fallback);
-//! * [`crate::runtime::ThermalArtifact`] — the L1/L2 Pallas/JAX program
+//! * `crate::runtime::ThermalArtifact` (feature `pjrt`) — the L1/L2
+//!   Pallas/JAX program
 //!   AOT-compiled to HLO and executed via PJRT (the production hot path).
 
 use crate::config::ThermalConfig;

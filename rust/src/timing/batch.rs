@@ -96,7 +96,7 @@ const MAX_FLAT_RESULTS: usize = 256;
 /// Interning arena for STA delay caches and flat results. One arena per
 /// design; cheap to create, grows with the number of *distinct*
 /// (voltage, temperature-map) conditions actually probed, bounded to the
-/// [`MAX_TEMP_MAPS`] most recently used maps and [`MAX_FLAT_RESULTS`] flat
+/// `MAX_TEMP_MAPS` most recently used maps and `MAX_FLAT_RESULTS` flat
 /// memo entries (eviction only rebuilds — it can never change a result).
 #[derive(Default)]
 pub struct StaCacheArena {

@@ -29,7 +29,7 @@ use crate::netlist::{CellKind, Netlist, NO_NET};
 use crate::place::{BlockGraph, Placement};
 use crate::route::{Hop, Routing};
 
-pub use batch::StaCacheArena;
+pub use batch::{ArenaStats, StaCacheArena};
 
 /// A timing endpoint (path terminus).
 #[derive(Clone, Copy, Debug)]

@@ -3,6 +3,12 @@
 //! bit-identical to the naive `Sta::analyze` / `Sta::analyze_flat`, over a
 //! randomized (V, T-map) grid — and the searches rebuilt on top of it must
 //! reproduce the pre-refactor results exactly.
+//!
+//! This file intentionally exercises the `#[deprecated]` legacy entry
+//! points: they ARE the pre-refactor reference the engine is pinned
+//! against (the session facade's own differential tests live in
+//! `tests/session.rs`).
+#![allow(deprecated)]
 
 use thermovolt::config::Config;
 use thermovolt::flow::dynamic::VoltageLut;

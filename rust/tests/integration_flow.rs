@@ -4,18 +4,15 @@
 
 use std::path::{Path, PathBuf};
 use thermovolt::config::Config;
-use thermovolt::flow::{alg1, Design, Effort};
+use thermovolt::flow::{Alg1Request, Design, Effort, FlowSession};
 #[cfg(feature = "pjrt")]
-use thermovolt::flow::overscale;
+use thermovolt::flow::{BaselineRequest, OverscaleRequest};
 #[cfg(feature = "pjrt")]
 use thermovolt::ml::LenetWorkload;
-use thermovolt::runtime::select_backend;
 #[cfg(feature = "pjrt")]
 use thermovolt::runtime::Runtime;
 #[cfg(feature = "pjrt")]
 use thermovolt::sim::ml_error_rates;
-#[cfg(feature = "pjrt")]
-use thermovolt::synth;
 use thermovolt::timing::longest_bram_path;
 
 fn artifacts() -> PathBuf {
@@ -37,11 +34,17 @@ fn alg1_on_pjrt_backend_meets_paper_band() {
     cfg.artifacts_dir = artifacts();
     cfg.flow.t_amb = 40.0;
     cfg.thermal.theta_ja = 12.0;
-    let d = Design::build("boundtop", &cfg, Effort::Quick).unwrap();
-    let mut backend = select_backend(&cfg.artifacts_dir, d.dev.rows, d.dev.cols, &cfg.thermal);
-    assert_eq!(backend.name(), "pjrt-artifact", "must use the AOT hot path");
-    let r = alg1::thermal_aware_voltage_selection(&d, &cfg, backend.as_mut(), 1.0);
-    let base = alg1::baseline(&d, &cfg, backend.as_mut());
+    let mut session = FlowSession::new(cfg).unwrap();
+    assert_eq!(
+        session.backend_name("boundtop").unwrap(),
+        "pjrt-artifact",
+        "must use the AOT hot path"
+    );
+    let r = session.alg1(Alg1Request::new("boundtop")).unwrap().result;
+    let base = session
+        .baseline(BaselineRequest::new("boundtop"))
+        .unwrap()
+        .result;
     let saving = 1.0 - r.power / base.power;
     // Fig. 6(a) band, per-benchmark tolerance
     assert!(
@@ -50,6 +53,7 @@ fn alg1_on_pjrt_backend_meets_paper_band() {
     );
     assert!(r.iters.len() <= 6, "paper: converges in < 6 iterations");
     // timing must hold at the converged map
+    let d = session.design("boundtop").unwrap();
     let sta = d.sta();
     let cp = sta.analyze(&r.temp, r.v_core, r.v_bram).critical_path;
     assert!(cp <= r.d_worst + 1e-15);
@@ -80,9 +84,8 @@ fn lu8peeng_vbram_hits_the_floor_in_power_flow() {
     cfg.artifacts_dir = artifacts();
     cfg.flow.t_amb = 40.0;
     cfg.thermal.theta_ja = 12.0;
-    let d = Design::build("LU8PEEng", &cfg, Effort::Quick).unwrap();
-    let mut backend = select_backend(&cfg.artifacts_dir, d.dev.rows, d.dev.cols, &cfg.thermal);
-    let r = alg1::thermal_aware_voltage_selection(&d, &cfg, backend.as_mut(), 1.0);
+    let mut session = FlowSession::new(cfg).unwrap();
+    let r = session.alg1(Alg1Request::new("LU8PEEng")).unwrap().result;
     // paper: V_bram down to the 0.55 V floor; our BRAM near-threshold wall
     // stops a step or two higher depending on the converged hotspot map —
     // the qualitative claim is V_bram deep below nominal (0.95 V), unlike
@@ -105,20 +108,24 @@ fn fig8_spine_flow_to_pjrt_inference() {
     cfg.artifacts_dir = artifacts();
     cfg.flow.t_amb = 40.0;
     cfg.thermal.theta_ja = 12.0;
-    let profile = synth::lenet_accel();
-    let d = Design::from_netlist(synth::generate(&profile), &profile, &cfg, Effort::Quick).unwrap();
-    let mut backend = select_backend(&cfg.artifacts_dir, d.dev.rows, d.dev.cols, &cfg.thermal);
-    let mut rt = Runtime::new(&cfg.artifacts_dir).unwrap();
-    let lenet = LenetWorkload::load(&cfg.artifacts_dir).unwrap();
+    let artifacts_dir = cfg.artifacts_dir.clone();
+    let mut session = FlowSession::new(cfg).unwrap();
+    let d = session.design("lenet_systolic").unwrap();
+    let mut rt = Runtime::new(&artifacts_dir).unwrap();
+    let lenet = LenetWorkload::load(&artifacts_dir).unwrap();
 
     // no violation budget ⇒ accuracy ≈ clean
-    let o1 = overscale::overscale(&d, &cfg, backend.as_mut(), 1.0);
+    let o1 = session
+        .overscale(OverscaleRequest::new("lenet_systolic", 1.0))
+        .unwrap();
     let r1 = ml_error_rates(&d, &o1.alg1, &o1.error);
     let acc1 = lenet.accuracy(&mut rt, r1.mac_rate, 11).unwrap();
     assert!((acc1 - lenet.clean_acc).abs() < 0.02, "acc@1.0 = {acc1}");
 
     // far past the guardband wall ⇒ accuracy collapses
-    let o2 = overscale::overscale(&d, &cfg, backend.as_mut(), 1.55);
+    let o2 = session
+        .overscale(OverscaleRequest::new("lenet_systolic", 1.55))
+        .unwrap();
     let r2 = ml_error_rates(&d, &o2.alg1, &o2.error);
     assert!(r2.mac_rate > r1.mac_rate);
     let acc2 = lenet.accuracy(&mut rt, r2.mac_rate, 11).unwrap();

@@ -1,0 +1,338 @@
+//! Differential tests for the `FlowSession` facade: every session request
+//! must be bit-identical to the legacy free-function API it replaced, even
+//! though the session reuses designs, STA arenas and thermal backends
+//! across requests (memoization must be observationally invisible).
+//!
+//! This file is the one place (besides `tests/batch_sta.rs`) that is
+//! *supposed* to call the `#[deprecated]` legacy entry points — they are
+//! the pre-refactor reference.
+#![allow(deprecated)]
+
+use std::sync::Arc;
+
+use thermovolt::config::Config;
+use thermovolt::flow::dynamic::VoltageLut;
+use thermovolt::flow::{
+    alg1, alg2, overscale, Alg1Request, Alg1Result, Alg2Request, Alg2Result, BaselineRequest,
+    Design, Effort, Fidelity, FlowSession, LutRequest, LutSpec, OverscaleRequest,
+};
+use thermovolt::runtime::select_backend;
+use thermovolt::thermal::ThermalBackend;
+use thermovolt::util::Xoshiro256;
+
+/// Legacy-path condition: a fresh design, fresh backend, fresh everything —
+/// exactly what pre-session callers did per invocation.
+fn legacy_setup(bench: &str, cfg: &Config) -> (Design, Box<dyn ThermalBackend>) {
+    let d = Design::build(bench, cfg, Effort::Quick).unwrap();
+    let b = select_backend(&cfg.artifacts_dir, d.dev.rows, d.dev.cols, &cfg.thermal);
+    (d, b)
+}
+
+fn cfg_at(t_amb: f64, theta: f64) -> Config {
+    let mut cfg = Config::new();
+    cfg.flow.t_amb = t_amb;
+    cfg.thermal.theta_ja = theta;
+    cfg
+}
+
+fn assert_alg1_identical(s: &Alg1Result, l: &Alg1Result, what: &str) {
+    assert_eq!(s.v_core.to_bits(), l.v_core.to_bits(), "{what}: v_core");
+    assert_eq!(s.v_bram.to_bits(), l.v_bram.to_bits(), "{what}: v_bram");
+    assert_eq!(s.power.to_bits(), l.power.to_bits(), "{what}: power");
+    assert_eq!(s.d_worst.to_bits(), l.d_worst.to_bits(), "{what}: d_worst");
+    assert_eq!(s.f_clk.to_bits(), l.f_clk.to_bits(), "{what}: f_clk");
+    assert_eq!(s.infeasible, l.infeasible, "{what}: infeasible");
+    assert_eq!(s.temp.len(), l.temp.len(), "{what}: map size");
+    for (a, b) in s.temp.iter().zip(&l.temp) {
+        assert_eq!(a.to_bits(), b.to_bits(), "{what}: temperature map");
+    }
+    // identical search trajectory, not just the same winner (time_s is
+    // wall-clock and excluded)
+    assert_eq!(s.iters.len(), l.iters.len(), "{what}: iteration count");
+    for (i, (si, li)) in s.iters.iter().zip(&l.iters).enumerate() {
+        assert_eq!(si.evals, li.evals, "{what}: iter {i} evals");
+        assert_eq!(
+            si.v_core.to_bits(),
+            li.v_core.to_bits(),
+            "{what}: iter {i} v_core"
+        );
+        assert_eq!(
+            si.t_junct.to_bits(),
+            li.t_junct.to_bits(),
+            "{what}: iter {i} t_junct"
+        );
+    }
+}
+
+fn assert_alg2_identical(s: &Alg2Result, l: &Alg2Result, what: &str) {
+    assert_eq!(s.v_core.to_bits(), l.v_core.to_bits(), "{what}: v_core");
+    assert_eq!(s.v_bram.to_bits(), l.v_bram.to_bits(), "{what}: v_bram");
+    assert_eq!(s.period.to_bits(), l.period.to_bits(), "{what}: period");
+    assert_eq!(s.energy.to_bits(), l.energy.to_bits(), "{what}: energy");
+    assert_eq!(s.power.to_bits(), l.power.to_bits(), "{what}: power");
+    assert_eq!(
+        s.freq_ratio.to_bits(),
+        l.freq_ratio.to_bits(),
+        "{what}: freq_ratio"
+    );
+    for (a, b) in s.temp.iter().zip(&l.temp) {
+        assert_eq!(a.to_bits(), b.to_bits(), "{what}: temperature map");
+    }
+    // the fast-vs-naive counters are part of the pinned contract
+    assert_eq!(s.pairs_total, l.pairs_total, "{what}: pairs_total");
+    assert_eq!(
+        s.pairs_pruned_energy, l.pairs_pruned_energy,
+        "{what}: pairs_pruned"
+    );
+    assert_eq!(s.thermal_solves, l.thermal_solves, "{what}: thermal_solves");
+    assert_eq!(s.thermal_reused, l.thermal_reused, "{what}: thermal_reused");
+}
+
+#[test]
+fn session_alg1_bit_identical_to_legacy_over_random_draws() {
+    let mut rng = Xoshiro256::new(0x5E55_1001);
+    // ONE session serves every draw — designs, arenas and backends are
+    // reused across conditions; the legacy side rebuilds everything fresh
+    let mut session = FlowSession::new(Config::new()).unwrap();
+    let benches = ["mkPktMerge", "sha"];
+    for draw in 0..4 {
+        let bench = benches[rng.below(benches.len())];
+        let t_amb = rng.uniform(15.0, 75.0);
+        let theta = if rng.chance(0.5) { 2.0 } else { 12.0 };
+        let rate = [1.0, 1.15, 1.3][rng.below(3)];
+
+        let cfg = cfg_at(t_amb, theta);
+        let (d, mut backend) = legacy_setup(bench, &cfg);
+        let legacy = alg1::thermal_aware_voltage_selection(&d, &cfg, backend.as_mut(), rate);
+
+        let got = session
+            .alg1(Alg1Request {
+                ambient: Some(t_amb),
+                theta_ja: Some(theta),
+                rate,
+                ..Alg1Request::new(bench)
+            })
+            .unwrap();
+        assert_alg1_identical(
+            &got.result,
+            &legacy,
+            &format!("draw {draw}: {bench} @ {t_amb:.1}C theta {theta} rate {rate}"),
+        );
+        assert_eq!(got.condition.t_amb_c, t_amb);
+        assert_eq!(got.condition.theta_ja, theta);
+    }
+}
+
+#[test]
+fn session_baseline_bit_identical_to_legacy() {
+    let mut session = FlowSession::new(Config::new()).unwrap();
+    for (t_amb, theta) in [(40.0, 12.0), (65.0, 2.0)] {
+        let cfg = cfg_at(t_amb, theta);
+        let (d, mut backend) = legacy_setup("mkPktMerge", &cfg);
+        let legacy = alg1::baseline(&d, &cfg, backend.as_mut());
+        let got = session
+            .baseline(BaselineRequest {
+                ambient: Some(t_amb),
+                theta_ja: Some(theta),
+                ..BaselineRequest::new("mkPktMerge")
+            })
+            .unwrap();
+        assert_alg1_identical(&got.result, &legacy, &format!("baseline @ {t_amb}"));
+
+        // explicit rails = the legacy fixed_voltage_fixed_point leg
+        let sta = d.sta();
+        let pm = d.power_model();
+        let legacy_fixed =
+            alg1::fixed_voltage_fixed_point(&d, &sta, &pm, &cfg, backend.as_mut(), 0.7, 0.9);
+        let got_fixed = session
+            .baseline(BaselineRequest {
+                ambient: Some(t_amb),
+                theta_ja: Some(theta),
+                rails: Some((0.7, 0.9)),
+                ..BaselineRequest::new("mkPktMerge")
+            })
+            .unwrap();
+        assert_alg1_identical(
+            &got_fixed.result,
+            &legacy_fixed,
+            &format!("fixed rails @ {t_amb}"),
+        );
+    }
+}
+
+#[test]
+fn session_alg2_bit_identical_to_legacy_including_counters() {
+    let t_amb = 65.0;
+    let theta = 2.0;
+    let cfg = cfg_at(t_amb, theta);
+    let (d, mut backend) = legacy_setup("mkPktMerge", &cfg);
+    let sta = d.sta();
+    let pm = d.power_model();
+    let legacy_fast = alg2::run_with(&d, &sta, &pm, &cfg, backend.as_mut());
+    let legacy_naive = alg2::run_naive_with(&d, &sta, &pm, &cfg, backend.as_mut());
+
+    let mut session = FlowSession::new(Config::new()).unwrap();
+    // warm the session caches with an unrelated request first: the arena it
+    // leaves behind must not perturb the Algorithm-2 results one bit
+    session
+        .alg1(Alg1Request {
+            ambient: Some(t_amb),
+            theta_ja: Some(theta),
+            ..Alg1Request::new("mkPktMerge")
+        })
+        .unwrap();
+    let req = |fidelity| Alg2Request {
+        ambient: Some(t_amb),
+        theta_ja: Some(theta),
+        fidelity,
+        ..Alg2Request::new("mkPktMerge")
+    };
+    let fast = session.alg2(req(Fidelity::Fast)).unwrap();
+    let naive = session.energy_opt(req(Fidelity::Naive)).unwrap();
+    assert_alg2_identical(&fast.result, &legacy_fast, "fast fidelity");
+    assert_alg2_identical(&naive.result, &legacy_naive, "naive fidelity");
+    assert_eq!(fast.fidelity, Fidelity::Fast);
+    assert_eq!(naive.fidelity, Fidelity::Naive);
+}
+
+#[test]
+fn session_voltage_lut_bit_identical_to_legacy_builds() {
+    let theta = 12.0;
+    let cfg = cfg_at(40.0, theta);
+    let (d, mut backend) = legacy_setup("mkPktMerge", &cfg);
+    let legacy_safe = VoltageLut::build(&d, &cfg, backend.as_mut(), 20.0, 70.0, 25.0);
+    let legacy_over = VoltageLut::build_rate(&d, &cfg, backend.as_mut(), 20.0, 70.0, 25.0, 1.2);
+
+    let mut session = FlowSession::new(cfg_at(40.0, theta)).unwrap();
+    let safe = session
+        .voltage_lut(LutRequest::new(
+            "mkPktMerge",
+            LutSpec::Sweep {
+                t_amb_lo: 20.0,
+                t_amb_hi: 70.0,
+                step_c: 25.0,
+            },
+        ))
+        .unwrap()
+        .lut;
+    let over = session
+        .voltage_lut(LutRequest::new(
+            "mkPktMerge",
+            LutSpec::SweepRate {
+                t_amb_lo: 20.0,
+                t_amb_hi: 70.0,
+                step_c: 25.0,
+                rate: 1.2,
+            },
+        ))
+        .unwrap()
+        .lut;
+    for (name, s, l) in [("safe", &safe, &legacy_safe), ("over", &over, &legacy_over)] {
+        assert_eq!(s.entries.len(), l.entries.len(), "{name}: entry count");
+        for (se, le) in s.entries.iter().zip(&l.entries) {
+            assert_eq!(se.t_junct.to_bits(), le.t_junct.to_bits(), "{name}: key");
+            assert_eq!(se.v_core.to_bits(), le.v_core.to_bits(), "{name}: v_core");
+            assert_eq!(se.v_bram.to_bits(), le.v_bram.to_bits(), "{name}: v_bram");
+            assert_eq!(se.power.to_bits(), le.power.to_bits(), "{name}: power");
+        }
+        assert_eq!(s.v_core_nom, l.v_core_nom);
+        assert_eq!(s.v_bram_nom, l.v_bram_nom);
+    }
+    // the over-scaled table must actually sit at-or-below the safe one
+    for (se, oe) in safe.entries.iter().zip(&over.entries) {
+        assert!(oe.v_core <= se.v_core + 1e-12);
+    }
+}
+
+#[test]
+fn session_overscale_bit_identical_to_legacy() {
+    let cfg = cfg_at(40.0, 12.0);
+    let (d, mut backend) = legacy_setup("mkPktMerge", &cfg);
+    let legacy = overscale::overscale(&d, &cfg, backend.as_mut(), 1.25);
+
+    let mut session = FlowSession::new(Config::new()).unwrap();
+    let got = session
+        .overscale(OverscaleRequest {
+            ambient: Some(40.0),
+            theta_ja: Some(12.0),
+            ..OverscaleRequest::new("mkPktMerge", 1.25)
+        })
+        .unwrap();
+    assert_alg1_identical(&got.alg1, &legacy.alg1, "overscale alg1 leg");
+    assert_eq!(got.rate.to_bits(), legacy.rate.to_bits());
+    assert_eq!(
+        got.error.mean_rate.to_bits(),
+        legacy.error.mean_rate.to_bits(),
+        "mean violation rate"
+    );
+    assert_eq!(
+        got.error.hard_fraction.to_bits(),
+        legacy.error.hard_fraction.to_bits()
+    );
+    assert_eq!(got.error.t_clk.to_bits(), legacy.error.t_clk.to_bits());
+    assert_eq!(got.error.p_viol.len(), legacy.error.p_viol.len());
+    for (a, b) in got.error.p_viol.iter().zip(&legacy.error.p_viol) {
+        assert_eq!(a.to_bits(), b.to_bits(), "p_viol diverged");
+    }
+}
+
+#[test]
+fn session_reuses_design_and_arena_across_requests() {
+    let mut session = FlowSession::new(cfg_at(40.0, 12.0)).unwrap();
+
+    let d1 = session.design("mkPktMerge").unwrap();
+    session.alg1(Alg1Request::new("mkPktMerge")).unwrap();
+    let stats1 = session.arena_stats("mkPktMerge", None).unwrap();
+    assert!(
+        stats1.core_misses > 0,
+        "first request must populate the arena"
+    );
+
+    // second request at the same condition: the design is the same
+    // allocation and the arena counters keep growing — they must NOT reset
+    // (a reset would mean the session rebuilt its caches per request)
+    session.alg1(Alg1Request::new("mkPktMerge")).unwrap();
+    let d2 = session.design("mkPktMerge").unwrap();
+    assert!(Arc::ptr_eq(&d1, &d2), "design was rebuilt between requests");
+    let stats2 = session.arena_stats("mkPktMerge", None).unwrap();
+    assert!(stats2.core_hits + stats2.core_misses > stats1.core_hits + stats1.core_misses);
+    assert!(stats2.core_misses >= stats1.core_misses);
+    assert!(
+        stats2.flat_hits > stats1.flat_hits,
+        "second run must memo-hit the d_worst STA ({stats1:?} -> {stats2:?})"
+    );
+    assert!(
+        stats2.core_hits > stats1.core_hits,
+        "second run must hit the first run's delay caches"
+    );
+    assert_eq!(session.cached_designs(), 1);
+
+    // a different effort is a different cache key
+    session
+        .alg1(Alg1Request {
+            effort: Some(Effort::Quick),
+            ..Alg1Request::new("mkPktMerge")
+        })
+        .unwrap();
+    assert_eq!(session.cached_designs(), 1, "same effort must share the key");
+}
+
+#[test]
+fn session_condition_overrides_do_not_leak_into_the_base_config() {
+    let mut session = FlowSession::new(cfg_at(40.0, 12.0)).unwrap();
+    let hot = session
+        .alg1(Alg1Request {
+            ambient: Some(70.0),
+            theta_ja: Some(2.0),
+            ..Alg1Request::new("mkPktMerge")
+        })
+        .unwrap();
+    assert_eq!(hot.condition.t_amb_c, 70.0);
+    // base config untouched
+    assert_eq!(session.config().flow.t_amb, 40.0);
+    assert_eq!(session.config().thermal.theta_ja, 12.0);
+    // and a follow-up request without overrides runs at the base condition
+    let base = session.alg1(Alg1Request::new("mkPktMerge")).unwrap();
+    assert_eq!(base.condition.t_amb_c, 40.0);
+    assert_eq!(base.condition.theta_ja, 12.0);
+}

@@ -1,9 +1,12 @@
 //! `cargo bench --bench search` — thin wrapper over `benchkit` (the same
 //! harness behind `thermovolt bench`): times Algorithm 1, Algorithm 2
 //! (batched engine vs the pre-refactor naive path, results checked
-//! bit-identical in the same run), the VoltageLut ambient sweep, and a small
-//! fleet run. Plain harness=false binary — criterion is not vendored
-//! offline. Writes BENCH_search.json (override with --out).
+//! bit-identical in the same run), the VoltageLut ambient sweep, a small
+//! fleet run, the datacenter-scale fleet bench, and the thermal-inertia
+//! transient sweep. Plain harness=false binary — criterion is not vendored
+//! offline. Writes BENCH_search.json / BENCH_fleet.json /
+//! BENCH_transient.json (override with --out / --fleet-out /
+//! --transient-out).
 //!
 //! Flags: --quick (reduced LUT/fleet sizes), --bench <name>, --out <path>.
 
@@ -40,6 +43,19 @@ fn main() -> anyhow::Result<()> {
         fs.workers,
         fs.saving_dyn * 100.0,
         fs.saving_over * 100.0
+    );
+    // thermal-inertia sweep: same fleet under the instantaneous vs the RC
+    // transient plant (migration/energy deltas → BENCH_transient.json)
+    let transient_out =
+        Path::new(args.opt_or("transient-out", "BENCH_transient.json")).to_path_buf();
+    let ts = benchkit::run_transient(&Config::new(), &opts, &transient_out)?;
+    println!(
+        "== transient bench: saving {:.1} % → {:.1} % under the RC plant \
+         ({:+} migrations, overshoot {:.2} C) ==",
+        ts.instant_saving * 100.0,
+        ts.transient_saving * 100.0,
+        ts.delta_migrations,
+        ts.transient_peak_overshoot_c
     );
     Ok(())
 }

@@ -7,7 +7,7 @@
 use std::sync::Arc;
 
 use thermovolt::config::Config;
-use thermovolt::coordinator::{mean_power, DynamicController, Tsd};
+use thermovolt::coordinator::{mean_power, DynamicController, PlantModel, Tsd};
 use thermovolt::flow::{FlowSession, LutRequest, LutSpec};
 
 fn main() -> anyhow::Result<()> {
@@ -52,6 +52,7 @@ fn main() -> anyhow::Result<()> {
         tau_ms: 3000.0,
         margin: cfg.flow.sensor_margin,
         tsd: Tsd::default(),
+        plant: PlantModel::FirstOrder, // see examples/transient_response.rs for the RC plant
         power_fn: move |vc: f64, vb: f64, tj: f64| {
             let tmap = vec![tj; n];
             pm.total_power(&tmap, f_clk, vc, vb)

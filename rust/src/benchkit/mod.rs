@@ -25,6 +25,12 @@
 //! [`run_fleet`] is the datacenter-scale companion: a ≥2048-device fleet
 //! through the event-driven planner and the three-way policy engine
 //! (static / dynamic / overscaled-dynamic), emitting `BENCH_fleet.json`.
+//!
+//! [`run_transient`] is the thermal-inertia scenario sweep: the RC
+//! integrator's step response and throughput, then the *same* heat-wave
+//! fleet twice — instantaneous vs transient plant — emitting the
+//! migration/energy deltas to `BENCH_transient.json` (serial vs parallel
+//! fingerprints hard-checked with transients enabled).
 
 use std::path::Path;
 use std::time::Instant;
@@ -36,7 +42,9 @@ use crate::fleet::trace::Scenario;
 use crate::fleet::{Fleet, FleetConfig};
 use crate::flow::{
     Alg1Request, Alg2Request, Effort, Fidelity, FlowSession, LutRequest, LutSpec,
+    TransientRequest,
 };
+use crate::thermal::{RcNetwork, ThermalDynamics};
 
 /// One `thermovolt bench` invocation's knobs.
 #[derive(Clone, Debug)]
@@ -367,6 +375,156 @@ pub fn run_fleet(cfg_in: &Config, opts: &BenchOpts, out: &Path) -> anyhow::Resul
     Ok(s)
 }
 
+/// Measured numbers of the transient scenario sweep (`BENCH_transient.json`).
+#[derive(Clone, Debug, Default)]
+pub struct TransientBenchSummary {
+    pub quick: bool,
+    pub bench: String,
+    pub scenario: String,
+    pub devices: usize,
+    pub jobs: usize,
+    pub horizon_ms: f64,
+    pub rc_stages: usize,
+    /// Step response of the design's session-built network (dominant τ).
+    pub step_tau_ms: f64,
+    pub step_t63_ms: f64,
+    pub step_t95_ms: f64,
+    pub step_t_settle_c: f64,
+    /// Raw exact-integrator throughput (million steps / s).
+    pub step_msteps_per_s: f64,
+    pub instant_energy_static_j: f64,
+    pub instant_energy_dyn_j: f64,
+    pub instant_saving: f64,
+    pub instant_migrations: usize,
+    pub transient_energy_static_j: f64,
+    pub transient_energy_dyn_j: f64,
+    pub transient_saving: f64,
+    pub transient_migrations: usize,
+    pub transient_peak_overshoot_c: f64,
+    pub transient_fingerprint_match: bool,
+    pub delta_migrations: i64,
+    pub delta_energy_dyn_j: f64,
+    pub delta_saving: f64,
+}
+
+/// Transient scenario sweep: (1) the RC network's step response through
+/// `FlowSession::transient` plus the raw integrator throughput, then
+/// (2) the same heat-wave fleet under the instantaneous and the transient
+/// plant — same seed, same jobs — reporting the migration and energy
+/// deltas thermal inertia produces. The transient run executes serially
+/// *and* on the pool with the telemetry fingerprints hard-checked.
+pub fn run_transient(
+    cfg_in: &Config,
+    opts: &BenchOpts,
+    out: &Path,
+) -> anyhow::Result<TransientBenchSummary> {
+    let (devices, jobs, horizon_ms) = if opts.quick {
+        (4, 12, 240_000.0)
+    } else {
+        (8, 24, 600_000.0)
+    };
+    let scenario = Scenario::HeatWave;
+    let rc_stages = 2;
+    let mut s = TransientBenchSummary {
+        quick: opts.quick,
+        bench: opts.bench.clone(),
+        scenario: scenario.name().to_string(),
+        devices,
+        jobs,
+        horizon_ms,
+        rc_stages,
+        ..TransientBenchSummary::default()
+    };
+
+    // ---- step response via the session (the production path) ----
+    println!("[bench] transient: step response of {}…", opts.bench);
+    let (t_base, theta) = scenario.corner();
+    let mut cfg = cfg_in.clone();
+    cfg.flow.t_amb = t_base;
+    cfg.thermal.theta_ja = theta;
+    let mut session = FlowSession::with_effort(cfg, Effort::Quick)?;
+    let step = session.transient(TransientRequest {
+        stages: rc_stages,
+        tau_ms: 3000.0,
+        dt_ms: 10.0,
+        horizon_ms: 60_000.0,
+        ..TransientRequest::new(&opts.bench)
+    })?;
+    s.step_tau_ms = step.tau_ms;
+    s.step_t63_ms = step.t63_ms.unwrap_or(-1.0);
+    s.step_t95_ms = step.t95_ms.unwrap_or(-1.0);
+    s.step_t_settle_c = step.t_settle_c;
+
+    // raw integrator throughput: 1 ms steps on a 3-stage network
+    let mut net = RcNetwork::foster(theta, 3000.0, 3);
+    let n_steps: usize = if opts.quick { 200_000 } else { 1_000_000 };
+    let t0 = Instant::now();
+    let mut sink = 0.0;
+    for _ in 0..n_steps {
+        sink += net.step(0.5, t_base, 1.0);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    anyhow::ensure!(sink.is_finite(), "integrator produced non-finite output");
+    s.step_msteps_per_s = n_steps as f64 / wall.max(1e-9) / 1e6;
+    println!(
+        "[bench] transient: t63 {:.0} ms, t95 {:.0} ms, settle {:.1} C, {:.1} Msteps/s",
+        s.step_t63_ms, s.step_t95_ms, s.step_t_settle_c, s.step_msteps_per_s
+    );
+
+    // ---- the same fleet under both plants ----
+    let build = |transient: bool| -> anyhow::Result<Fleet> {
+        let mut fcfg = FleetConfig::new(devices, jobs, scenario);
+        fcfg.benches = vec![opts.bench.clone()];
+        fcfg.horizon_ms = horizon_ms;
+        fcfg.transient = transient;
+        fcfg.rc_stages = rc_stages;
+        Fleet::build(fcfg, cfg_in)
+    };
+    println!("[bench] transient: fleet under the instantaneous plant…");
+    let instant = build(false)?;
+    let plan_i = instant.plan();
+    let tel_i = FleetTelemetry::aggregate(devices, instant.execute(&plan_i, 1))
+        .with_unplaceable(plan_i.unplaceable.len());
+    println!("[bench] transient: the same fleet under the RC plant…");
+    let transient = build(true)?;
+    let plan_t = transient.plan();
+    let serial = transient.execute(&plan_t, 1);
+    let workers = transient.effective_workers();
+    let parallel = transient.execute(&plan_t, workers);
+    let tel_t_serial = FleetTelemetry::aggregate(devices, serial);
+    let tel_t = FleetTelemetry::aggregate(devices, parallel)
+        .with_unplaceable(plan_t.unplaceable.len());
+    s.transient_fingerprint_match = tel_t_serial.fingerprint() == tel_t.fingerprint();
+    anyhow::ensure!(
+        s.transient_fingerprint_match,
+        "transient fleet telemetry diverged between serial and {workers}-worker runs"
+    );
+
+    s.instant_energy_static_j = tel_i.energy_static_j;
+    s.instant_energy_dyn_j = tel_i.energy_dyn_j;
+    s.instant_saving = tel_i.saving();
+    s.instant_migrations = tel_i.migrations;
+    s.transient_energy_static_j = tel_t.energy_static_j;
+    s.transient_energy_dyn_j = tel_t.energy_dyn_j;
+    s.transient_saving = tel_t.saving();
+    s.transient_migrations = tel_t.migrations;
+    s.transient_peak_overshoot_c = tel_t.peak_overshoot_c;
+    s.delta_migrations = tel_t.migrations as i64 - tel_i.migrations as i64;
+    s.delta_energy_dyn_j = tel_t.energy_dyn_j - tel_i.energy_dyn_j;
+    s.delta_saving = tel_t.saving() - tel_i.saving();
+    println!("{}", crate::report::transient_table(&tel_i, &tel_t).render());
+
+    let json = transient_to_json(&s);
+    if let Some(dir) = out.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(out, &json)?;
+    println!("[bench] wrote {}", out.display());
+    Ok(s)
+}
+
 fn alg2_identical(a: &crate::flow::Alg2Result, b: &crate::flow::Alg2Result) -> bool {
     a.v_core.to_bits() == b.v_core.to_bits()
         && a.v_bram.to_bits() == b.v_bram.to_bits()
@@ -523,9 +681,95 @@ fn fleet_to_json(s: &FleetBenchSummary) -> String {
     )
 }
 
+/// Hand-rolled JSON for the transient sweep (same conventions as
+/// [`to_json`]).
+fn transient_to_json(s: &TransientBenchSummary) -> String {
+    let esc = json_escape;
+    let b = json_bool;
+    format!(
+        concat!(
+            "{{\n",
+            "  \"schema\": \"thermovolt-bench-transient/1\",\n",
+            "  \"quick\": {quick},\n",
+            "  \"bench\": \"{bench}\",\n",
+            "  \"scenario\": \"{scenario}\",\n",
+            "  \"devices\": {devices},\n",
+            "  \"jobs\": {jobs},\n",
+            "  \"horizon_ms\": {horizon},\n",
+            "  \"rc_stages\": {stages},\n",
+            "  \"step\": {{ \"tau_ms\": {tau}, \"t63_ms\": {t63}, \"t95_ms\": {t95}, ",
+            "\"t_settle_c\": {settle}, \"msteps_per_s\": {rate} }},\n",
+            "  \"instantaneous\": {{ \"energy_static_j\": {ies}, \"energy_dyn_j\": {ied}, ",
+            "\"saving\": {isv}, \"migrations\": {imig} }},\n",
+            "  \"transient\": {{ \"energy_static_j\": {tes}, \"energy_dyn_j\": {ted}, ",
+            "\"saving\": {tsv}, \"migrations\": {tmig}, \"peak_overshoot_c\": {tov}, ",
+            "\"fingerprint_match\": {tfp} }},\n",
+            "  \"delta\": {{ \"migrations\": {dmig}, \"energy_dyn_j\": {ded}, ",
+            "\"saving\": {dsv} }}\n",
+            "}}\n"
+        ),
+        quick = b(s.quick),
+        bench = esc(&s.bench),
+        scenario = esc(&s.scenario),
+        devices = s.devices,
+        jobs = s.jobs,
+        horizon = s.horizon_ms,
+        stages = s.rc_stages,
+        tau = s.step_tau_ms,
+        t63 = s.step_t63_ms,
+        t95 = s.step_t95_ms,
+        settle = s.step_t_settle_c,
+        rate = s.step_msteps_per_s,
+        ies = s.instant_energy_static_j,
+        ied = s.instant_energy_dyn_j,
+        isv = s.instant_saving,
+        imig = s.instant_migrations,
+        tes = s.transient_energy_static_j,
+        ted = s.transient_energy_dyn_j,
+        tsv = s.transient_saving,
+        tmig = s.transient_migrations,
+        tov = s.transient_peak_overshoot_c,
+        tfp = b(s.transient_fingerprint_match),
+        dmig = s.delta_migrations,
+        ded = s.delta_energy_dyn_j,
+        dsv = s.delta_saving,
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn transient_json_shape_is_valid_enough() {
+        let s = TransientBenchSummary {
+            bench: "mkPktMerge".to_string(),
+            scenario: "heat-wave".to_string(),
+            devices: 4,
+            jobs: 12,
+            rc_stages: 2,
+            delta_migrations: -1,
+            transient_fingerprint_match: true,
+            ..TransientBenchSummary::default()
+        };
+        let j = transient_to_json(&s);
+        assert_eq!(
+            j.matches('{').count(),
+            j.matches('}').count(),
+            "unbalanced braces:\n{j}"
+        );
+        for key in [
+            "\"thermovolt-bench-transient/1\"",
+            "\"step\"",
+            "\"instantaneous\"",
+            "\"transient\"",
+            "\"delta\"",
+            "\"migrations\": -1",
+            "\"peak_overshoot_c\"",
+        ] {
+            assert!(j.contains(key), "missing {key} in:\n{j}");
+        }
+    }
 
     #[test]
     fn fleet_json_shape_is_valid_enough() {

@@ -9,20 +9,33 @@
 //!
 //! Implemented as a discrete-event simulation over an ambient-temperature
 //! trace: deterministic, testable, and replayable in real time by the
-//! `thermovolt serve` CLI. The plant model is first-order: junction
-//! temperature relaxes toward `T_amb + θ_JA · P(V, T)` with a thermal time
-//! constant of seconds — sensor sampling at 1 ms is far faster than the
-//! plant, exactly the regime the paper argues makes 1 ms sampling safe
-//! (heat-up takes "orders of seconds" [40]).
+//! `thermovolt serve` CLI. Two interchangeable plant models ([`PlantModel`]):
+//!
+//! * [`PlantModel::FirstOrder`] (default) — the pre-transient forward-Euler
+//!   relaxation toward `T_amb + θ_JA · P(V, T)` with time constant
+//!   `tau_ms`; kept bit-identical so every earlier result reproduces;
+//! * [`PlantModel::Rc`] — a Foster RC network
+//!   ([`thermal::transient`](crate::thermal::transient)) stepped by the
+//!   exact exponential integrator. In this mode the guardband is evaluated
+//!   against the **predicted peak** junction temperature over a look-ahead
+//!   horizon (`ThermalDynamics::predict`), not just the instantaneous
+//!   (noisy, possibly lagged) sensor reading, and [`RunStats`] accounts the
+//!   transient overshoot the inertia produces.
+//!
+//! Sensor sampling at 1 ms is far faster than either plant, exactly the
+//! regime the paper argues makes 1 ms sampling safe (heat-up takes "orders
+//! of seconds" [40]).
 //!
 //! The controller owns its state (`Arc<VoltageLut>` + a `Send + Sync` power
 //! hook) so one instance can run per fleet worker thread — the `fleet`
 //! subsystem drives hundreds of these concurrently over shared traces.
 
+use std::collections::VecDeque;
 use std::sync::Arc;
 
 use crate::flow::dynamic::VoltageLut;
 use crate::flow::error::FlowError;
+use crate::thermal::{RcNetwork, ThermalDynamics};
 
 /// Regulator model: VID-stepped output with finite slew rate.
 #[derive(Clone, Debug)]
@@ -54,9 +67,12 @@ impl Regulator {
         self.v_target = (v / self.step - 1e-9).ceil() * self.step;
     }
 
-    /// Advance by `dt_ms`; the output slews toward the target.
+    /// Advance by `dt_ms`; the output slews toward the target. A
+    /// non-positive (or NaN) budget is a no-op — a negative `dt` used to
+    /// flip the clamp bounds and panic (`f64::clamp` requires `min <= max`,
+    /// surfaced by the transient dt sweeps).
     pub fn tick(&mut self, dt_ms: f64) {
-        let max_dv = self.slew_v_per_ms * dt_ms;
+        let max_dv = (self.slew_v_per_ms * dt_ms).max(0.0);
         let dv = (self.v_target - self.v_now).clamp(-max_dv, max_dv);
         self.v_now += dv;
     }
@@ -69,6 +85,11 @@ pub struct Tsd {
     pub range: (f64, f64),
     /// Absolute sensor error bound (°C).
     pub error: f64,
+    /// Sensor pipeline latency (ms): a reading reflects the junction this
+    /// long ago. When the lag exceeds the control period, readings go stale
+    /// by multiple steps — the sensor margin has to absorb that too. 0
+    /// (the default) is the pre-transient instantaneous sensor.
+    pub lag_ms: f64,
 }
 
 impl Default for Tsd {
@@ -76,6 +97,7 @@ impl Default for Tsd {
         Tsd {
             range: (-40.0, 125.0),
             error: 2.0,
+            lag_ms: 0.0,
         }
     }
 }
@@ -126,6 +148,49 @@ pub struct RunStats {
     pub peak_t_junct: f64,
     /// Highest instantaneous power seen (W).
     pub peak_power_w: f64,
+    /// Peak transient overshoot (°C): how far the junction ran *above* the
+    /// instantaneous steady state `T_amb + θ·P` thanks to thermal inertia
+    /// (nonzero when ambient falls faster than the plant can cool; zero for
+    /// a plant always at or below its settling point).
+    pub peak_overshoot_c: f64,
+    /// Hottest guardband key the controller acted on (°C): the sensed —
+    /// in transient mode, sensed-or-predicted — temperature fed to the LUT.
+    pub peak_t_key_c: f64,
+}
+
+/// Plant (junction-thermal) model the controller simulates against.
+#[derive(Clone, Debug, Default)]
+pub enum PlantModel {
+    /// Pre-transient forward-Euler relaxation toward `T_amb + θ_JA·P` with
+    /// time constant `tau_ms` (rate clamped at 1). Kept as the default so
+    /// every pre-transient result stays bit-identical.
+    #[default]
+    FirstOrder,
+    /// Foster RC network stepped by the exact exponential integrator
+    /// ([`ThermalDynamics`]); the guardband key becomes the predicted peak
+    /// temperature over `lookahead_ms` at the current power draw.
+    Rc {
+        net: RcNetwork,
+        /// Prediction horizon for the guardband key (ms). Should cover the
+        /// sensing + regulator-slew latency; [`PlantModel::rc`] defaults it
+        /// to [`PlantModel::DEFAULT_LOOKAHEAD_MS`].
+        lookahead_ms: f64,
+    },
+}
+
+impl PlantModel {
+    /// Default guardband-prediction horizon (ms): covers the ~1 ms sensing
+    /// period plus a full worst-case regulator slew (≈ 0.3 V at 10 mV/ms)
+    /// with ample slack.
+    pub const DEFAULT_LOOKAHEAD_MS: f64 = 500.0;
+
+    /// Transient plant over `net` with the default look-ahead.
+    pub fn rc(net: RcNetwork) -> PlantModel {
+        PlantModel::Rc {
+            net,
+            lookahead_ms: Self::DEFAULT_LOOKAHEAD_MS,
+        }
+    }
 }
 
 /// Controller + plant simulation.
@@ -136,11 +201,14 @@ pub struct RunStats {
 pub struct DynamicController<F: Fn(f64, f64, f64) -> f64 + Send + Sync> {
     pub lut: Arc<VoltageLut>,
     pub theta_ja: f64,
-    /// Thermal time constant (ms).
+    /// Thermal time constant (ms) of the [`PlantModel::FirstOrder`] plant
+    /// (the RC plant carries its own poles).
     pub tau_ms: f64,
     /// Sensor margin (°C).
     pub margin: f64,
     pub tsd: Tsd,
+    /// Junction-thermal plant the simulation integrates.
+    pub plant: PlantModel,
     /// Power model hook: (v_core, v_bram, t_junct) → watts.
     pub power_fn: F,
 }
@@ -162,7 +230,11 @@ impl<F: Fn(f64, f64, f64) -> f64 + Send + Sync> DynamicController<F> {
     }
 
     /// Like [`run`](Self::run), but also returns exact per-step aggregates
-    /// (energy integral, violation count, peaks).
+    /// (energy integral, violation count, peaks, transient overshoot).
+    ///
+    /// A non-positive or non-finite `dt_ms` is a typed
+    /// [`FlowError::InvalidTimeStep`] — `dt = 0` used to spin this loop
+    /// forever and a negative step panicked inside `Regulator::tick`.
     pub fn run_stats(
         &self,
         trace: &[(f64, f64)],
@@ -171,6 +243,9 @@ impl<F: Fn(f64, f64, f64) -> f64 + Send + Sync> DynamicController<F> {
     ) -> Result<(Vec<Sample>, RunStats), FlowError> {
         if trace.len() < 2 {
             return Err(FlowError::EmptyTrace { len: trace.len() });
+        }
+        if !(dt_ms.is_finite() && dt_ms > 0.0) {
+            return Err(FlowError::InvalidTimeStep { dt_ms });
         }
         let t_end = trace[trace.len() - 1].0;
         let times: Vec<f64> = trace.iter().map(|&(t, _)| t).collect();
@@ -181,19 +256,71 @@ impl<F: Fn(f64, f64, f64) -> f64 + Send + Sync> DynamicController<F> {
         let mut reg_core = Regulator::new(v0c);
         let mut reg_bram = Regulator::new(v0b);
         let mut t_junct = amb(0.0);
+        // transient plant state (`None` ⇒ legacy first-order relaxation)
+        let mut rc: Option<(RcNetwork, f64)> = match &self.plant {
+            PlantModel::FirstOrder => None,
+            PlantModel::Rc { net, lookahead_ms } => {
+                let mut n = net.clone();
+                n.reset();
+                Some((n, *lookahead_ms))
+            }
+        };
+        let theta_eff = match &rc {
+            Some((net, _)) => net.r_total(),
+            None => self.theta_ja,
+        };
+        // sensor lag: a reading reflects the junction `lag_ms` ago, i.e.
+        // `ceil(lag/dt)` control periods back (the ring holds exactly that
+        // much history; before it warms up the sensor sees the start temp).
+        // A lag longer than the whole run can never warm up — the sensor is
+        // pinned at the start temperature, so skip the ring entirely
+        // instead of accumulating one f64 per step for nothing.
+        let lag_steps = if self.tsd.lag_ms > 0.0 {
+            (self.tsd.lag_ms / dt_ms).ceil() as usize
+        } else {
+            0
+        };
+        let frozen_sensor = lag_steps > 0 && lag_steps > (t_end / dt_ms).floor() as usize;
+        let mut first_t: Option<f64> = None;
+        let mut lag_buf: VecDeque<f64> = VecDeque::new();
         let mut out = Vec::new();
         let mut stats = RunStats {
             peak_t_junct: t_junct,
+            // like peak_t_junct, seed with the start temperature so cold
+            // (sub-zero) traces report the real hottest key instead of the
+            // 0.0 the Default would pin them at
+            peak_t_key_c: t_junct,
             ..RunStats::default()
         };
         let mut next_sample = 0.0;
         let mut tick = 0u64;
         let mut t_ms = 0.0;
+        let mut p_prev = 0.0;
         while t_ms <= t_end {
             let t_amb = amb(t_ms);
-            // sensor + control every 1 ms
-            let sensed = self.tsd.read(t_junct, tick);
-            let (vc_cmd, vb_cmd) = self.lut.lookup(sensed, self.margin);
+            // sensor + control every dt: what the TSD can see is the
+            // junction `lag_steps` periods ago
+            let t_visible = if lag_steps == 0 {
+                t_junct
+            } else if frozen_sensor {
+                *first_t.get_or_insert(t_junct)
+            } else {
+                lag_buf.push_back(t_junct);
+                if lag_buf.len() > lag_steps {
+                    lag_buf.pop_front().unwrap()
+                } else {
+                    lag_buf[0]
+                }
+            };
+            let sensed = self.tsd.read(t_visible, tick);
+            // transient mode: the guardband key is the *predicted peak*
+            // over the look-ahead horizon at the current draw, so the
+            // controller raises rails before the inertia delivers the heat
+            let t_key = match &rc {
+                Some((net, look)) => sensed.max(net.predict(p_prev, t_amb, *look)),
+                None => sensed,
+            };
+            let (vc_cmd, vb_cmd) = self.lut.lookup(t_key, self.margin);
             reg_core.command(vc_cmd);
             reg_bram.command(vb_cmd);
             reg_core.tick(dt_ms);
@@ -201,10 +328,16 @@ impl<F: Fn(f64, f64, f64) -> f64 + Send + Sync> DynamicController<F> {
             // during slew, run at the *higher* of current/target to stay safe
             let vc = reg_core.v_now.max(vc_cmd);
             let vb = reg_bram.v_now.max(vb_cmd);
-            // plant: first-order relaxation toward the steady state
             let p = (self.power_fn)(vc, vb, t_junct);
-            let t_ss = t_amb + self.theta_ja * p;
-            t_junct += (t_ss - t_junct) * (dt_ms / self.tau_ms).min(1.0);
+            // plant step: exact RC integration, or the legacy first-order
+            // relaxation toward the steady state
+            match &mut rc {
+                Some((net, _)) => t_junct = net.step(p, t_amb, dt_ms),
+                None => {
+                    let t_ss = t_amb + self.theta_ja * p;
+                    t_junct += (t_ss - t_junct) * (dt_ms / self.tau_ms).min(1.0);
+                }
+            }
             // violation check: required rails at the *true* junction temp
             let (vreq_c, vreq_b) = self.lut.lookup(t_junct, 0.0);
             let violation = vc < vreq_c - 1e-9 || vb < vreq_b - 1e-9;
@@ -213,6 +346,10 @@ impl<F: Fn(f64, f64, f64) -> f64 + Send + Sync> DynamicController<F> {
             stats.violations += violation as u64;
             stats.peak_t_junct = stats.peak_t_junct.max(t_junct);
             stats.peak_power_w = stats.peak_power_w.max(p);
+            stats.peak_overshoot_c = stats
+                .peak_overshoot_c
+                .max((t_junct - (t_amb + theta_eff * p)).max(0.0));
+            stats.peak_t_key_c = stats.peak_t_key_c.max(t_key);
             if t_ms + 1e-9 >= next_sample {
                 out.push(Sample {
                     t_ms,
@@ -227,6 +364,7 @@ impl<F: Fn(f64, f64, f64) -> f64 + Send + Sync> DynamicController<F> {
             }
             t_ms += dt_ms;
             tick += 1;
+            p_prev = p;
         }
         stats.sim_ms = stats.steps as f64 * dt_ms;
         if stats.sim_ms > 0.0 {
@@ -273,7 +411,15 @@ mod tests {
             tau_ms: 3000.0,
             margin: 5.0,
             tsd: Tsd::default(),
+            plant: PlantModel::FirstOrder,
             power_fn: toy_power,
+        }
+    }
+
+    fn rc_controller(stages: usize) -> DynamicController<fn(f64, f64, f64) -> f64> {
+        DynamicController {
+            plant: PlantModel::rc(RcNetwork::foster(12.0, 3000.0, stages)),
+            ..controller()
         }
     }
 
@@ -362,6 +508,130 @@ mod tests {
     }
 
     #[test]
+    fn rc_plant_keeps_zero_violations_and_accounts_overshoot() {
+        for stages in [1usize, 2, 3] {
+            let c = rc_controller(stages);
+            // ramp up then *fall fast*: inertia holds the junction above the
+            // instantaneous steady state on the way down — that gap is the
+            // transient overshoot the stats must account
+            let trace = vec![(0.0, 25.0), (60_000.0, 70.0), (80_000.0, 25.0)];
+            let (log, stats) = c.run_stats(&trace, 1.0, 250.0).unwrap();
+            assert_eq!(stats.violations, 0, "stages={stages}: guardband violated");
+            assert!(log.iter().all(|s| !s.violation));
+            assert!(
+                stats.peak_overshoot_c > 0.5,
+                "stages={stages}: fast ambient fall must overshoot, got {}",
+                stats.peak_overshoot_c
+            );
+            // the guardband key is at least as hot as anything ever sensed
+            assert!(stats.peak_t_key_c >= stats.peak_t_junct - c.tsd.error - 0.2);
+        }
+    }
+
+    #[test]
+    fn rc_and_first_order_plants_agree_on_steady_conditions() {
+        // constant ambient: both plants settle to the same fixed point, so
+        // the long-run energies must agree closely
+        let fo = controller();
+        let rc = rc_controller(1);
+        let trace = vec![(0.0, 45.0), (120_000.0, 45.0)];
+        let (_, s_fo) = fo.run_stats(&trace, 1.0, 10_000.0).unwrap();
+        let (_, s_rc) = rc.run_stats(&trace, 1.0, 10_000.0).unwrap();
+        let rel = (s_fo.energy_j - s_rc.energy_j).abs() / s_fo.energy_j;
+        assert!(rel < 0.02, "steady energies diverged: {rel}");
+        assert!((s_fo.peak_t_junct - s_rc.peak_t_junct).abs() < 1.0);
+    }
+
+    #[test]
+    fn invalid_time_steps_are_typed_errors_not_hangs_or_panics() {
+        // regression (transient dt audit): dt = 0 spun the loop forever,
+        // negative dt panicked in Regulator::tick's clamp
+        let c = controller();
+        let trace = vec![(0.0, 25.0), (10_000.0, 30.0)];
+        for dt in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            match c.run_stats(&trace, dt, 100.0) {
+                Err(FlowError::InvalidTimeStep { dt_ms }) => {
+                    assert!(dt_ms.is_nan() == dt.is_nan() && (dt.is_nan() || dt_ms == dt))
+                }
+                other => panic!("dt={dt}: expected InvalidTimeStep, got {:?}", other.map(|_| ())),
+            }
+        }
+    }
+
+    #[test]
+    fn huge_dt_is_stable_under_the_exact_integrator() {
+        // dt far beyond every pole: the exact integrator lands on the
+        // settling point instead of oscillating (forward Euler would need
+        // its rate clamp); the run stays finite and bounded
+        let c = rc_controller(2);
+        let trace = vec![(0.0, 30.0), (300_000.0, 50.0)];
+        let (_, stats) = c.run_stats(&trace, 60_000.0, 60_000.0).unwrap();
+        assert!(stats.steps >= 5);
+        assert!(stats.energy_j.is_finite() && stats.energy_j > 0.0);
+        // never beyond the hottest conceivable settling point
+        let p_max = stats.peak_power_w;
+        assert!(stats.peak_t_junct <= 50.0 + 12.0 * p_max + 1e-6);
+    }
+
+    #[test]
+    fn sensor_lag_longer_than_a_step_stays_safe_on_slow_ramps() {
+        // 250 ms lag at a 1 ms control period: readings are 250 steps stale.
+        // On a slow ramp (45 °C over 90 s ⇒ 0.5 °C/s) the staleness costs
+        // ~0.13 °C — far inside the 5 °C margin, so still zero violations.
+        let mut c = controller();
+        c.tsd.lag_ms = 250.0;
+        let trace = vec![(0.0, 25.0), (90_000.0, 70.0)];
+        let (_, stats) = c.run_stats(&trace, 1.0, 500.0).unwrap();
+        assert_eq!(stats.violations, 0, "lagged sensor violated the guardband");
+
+        // lag = 0 must remain bit-identical to the default sensor
+        let base = controller();
+        let mut zero = controller();
+        zero.tsd.lag_ms = 0.0;
+        let (_, a) = base.run_stats(&trace, 1.0, 500.0).unwrap();
+        let (_, b) = zero.run_stats(&trace, 1.0, 500.0).unwrap();
+        assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits());
+        assert_eq!(a.violations, b.violations);
+
+        // an extreme lag (sensor frozen at the start temp) must degrade
+        // gracefully — the run completes and the stale rails are *reported*
+        // as violations rather than panicking or hanging
+        let mut frozen = controller();
+        frozen.tsd.lag_ms = 1e9;
+        let (_, s) = frozen.run_stats(&trace, 1.0, 500.0).unwrap();
+        assert!(s.energy_j.is_finite());
+        assert!(s.violations > 0, "a frozen sensor cannot stay safe on a 45 C ramp");
+    }
+
+    #[test]
+    fn peak_key_is_reported_on_sub_zero_traces() {
+        // regression: peak_t_key_c was Default-seeded at 0.0 and only
+        // max()-ed, so an all-negative run reported a 0 °C key the
+        // controller never acted on (the TSD range reaches −40 °C)
+        let c = controller();
+        let trace = vec![(0.0, -30.0), (60_000.0, -25.0)];
+        let (_, stats) = c.run_stats(&trace, 1.0, 10_000.0).unwrap();
+        assert!(
+            stats.peak_t_key_c < 0.0,
+            "phantom 0 C key: {}",
+            stats.peak_t_key_c
+        );
+        assert!(stats.peak_t_key_c >= stats.peak_t_junct - c.tsd.error - 0.2);
+    }
+
+    #[test]
+    fn regulator_tick_tolerates_nonpositive_budgets() {
+        let mut r = Regulator::new(0.80);
+        r.command(0.60);
+        for dt in [0.0, -3.0, f64::NAN] {
+            r.tick(dt); // used to panic on dt < 0 (flipped clamp bounds)
+            assert!((r.v_now - 0.80).abs() < 1e-12, "dt={dt} moved the rail");
+        }
+        r.tick(1.0);
+        assert!(r.v_now < 0.80, "positive budget must still slew");
+    }
+
+    #[test]
     fn regulator_slew_is_bounded() {
         let mut r = Regulator::new(0.95);
         r.command(0.55);
@@ -409,6 +679,20 @@ mod tests {
         for tick in 0..200 {
             let r = tsd.read(55.0, tick);
             assert!((r - 55.0).abs() <= tsd.error + 0.2, "reading {r}");
+        }
+    }
+
+    #[test]
+    fn tsd_clamps_out_of_range_temperatures_to_its_ten_bit_scale() {
+        // surfaced by the transient dt sweeps: a huge-dt RC step can land
+        // far outside the physical range; the 10-bit conversion must pin to
+        // full scale instead of extrapolating
+        let tsd = Tsd::default();
+        for tick in 0..50 {
+            let hot = tsd.read(500.0, tick);
+            assert!(hot <= 125.0 + 1e-9, "hot reading {hot} beyond full scale");
+            let cold = tsd.read(-300.0, tick);
+            assert!(cold >= -40.0 - 1e-9, "cold reading {cold} below scale");
         }
     }
 }

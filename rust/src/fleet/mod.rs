@@ -29,6 +29,17 @@
 //! the static worst-case comparison runs the identical plant at nominal
 //! rails — the paper's "one-size-fits-all" provisioning.
 //!
+//! Thermal model: by default the plant is the instantaneous first-order
+//! relaxation (bit-identical to every pre-transient result). With
+//! [`FleetConfig::transient`] the fleet switches to the Foster RC network
+//! ([`DeviceSpec::rc_network`]: a fast die pole at `tau_ms` plus, from two
+//! stages up, a slow package/heatsink pole at [`SINK_TAU_RATIO`] × that),
+//! the controller evaluates its guardband against *predicted* peak
+//! temperature, and the planner places jobs — and applies the ≤ 2 °C
+//! migration rule — on `ThermalDynamics::predict(duration)` instead of the
+//! instantaneous `T_amb + θ_JA·P̂`: a short job no longer pays for a steady
+//! state it will never reach.
+//!
 //! Determinism contract: placement is a pure function of the (seeded)
 //! traces, and each job execution is a pure function of its assignment, so
 //! serial and multi-threaded runs produce bit-identical telemetry. The CLI
@@ -46,10 +57,17 @@ use crate::flow::dynamic::VoltageLut;
 use crate::flow::{
     Design, Effort, FlowSession, LutRequest, LutSpec, OverscaleRequest,
 };
+use crate::thermal::{RcNetwork, RcStage};
 use crate::util::rng::Xoshiro256;
 use crate::util::stats;
 use policy::{OverscaleSpec, PolicyKind};
 use trace::Scenario;
+
+/// Package/heatsink pole of the transient device network, as a multiple of
+/// the die time constant: the die reaches its local equilibrium in seconds
+/// (`tau_ms`, [40]) while the sink behind it drifts for minutes — the
+/// inertia that makes job-timescale transients worth modeling.
+pub const SINK_TAU_RATIO: f64 = 25.0;
 
 /// One simulated FPGA unit in the fleet.
 #[derive(Clone, Debug)]
@@ -70,6 +88,37 @@ pub struct DeviceSpec {
     pub margin_c: f64,
     /// Per-unit process variation on power (≈ ±4 %).
     pub power_scale: f64,
+}
+
+impl DeviceSpec {
+    /// This unit's Foster thermal network for the transient fleet mode.
+    ///
+    /// One stage is the lumped single-pole plant (θ_JA at `tau_ms` — the
+    /// exact-integrator twin of the legacy first-order model). From two
+    /// stages up the network splits junction-to-ambient into a slow
+    /// package/heatsink pole ([`SINK_TAU_RATIO`] × `tau_ms`, 60 % of θ_JA)
+    /// and die-side poles sharing the remaining 40 % — total resistance
+    /// stays θ_JA, so the settling point is unchanged; only the path there
+    /// gains minutes-scale inertia.
+    pub fn rc_network(&self, stages: usize) -> RcNetwork {
+        match stages {
+            0 | 1 => RcNetwork::single(self.theta_ja, self.tau_ms),
+            n => {
+                let mut v = vec![RcStage {
+                    r: 0.6 * self.theta_ja,
+                    tau_ms: SINK_TAU_RATIO * self.tau_ms,
+                }];
+                let fast_r = 0.4 * self.theta_ja / (n - 1) as f64;
+                for i in 0..(n - 1) {
+                    v.push(RcStage {
+                        r: fast_r,
+                        tau_ms: self.tau_ms / (1u64 << i.min(60)) as f64,
+                    });
+                }
+                RcNetwork::from_stages(v)
+            }
+        }
+    }
 }
 
 /// Separable power surface `P(v_core, v_bram, T_j)` precomputed from a
@@ -320,6 +369,15 @@ pub struct FleetConfig {
     /// Per-kind governing policies, aligned with `benches`. Empty ⇒ every
     /// kind uses `policy`.
     pub kind_policies: Vec<PolicyKind>,
+    /// Simulate RC thermal-network transients instead of the instantaneous
+    /// first-order plant: the controller guardband runs on predicted peak
+    /// temperature and the planner places on `predict(duration)`. Off by
+    /// default — the instantaneous model stays bit-identical to every
+    /// pre-transient result.
+    pub transient: bool,
+    /// Foster stages of the per-device network in transient mode
+    /// (1 = lumped single pole; ≥ 2 adds the slow heatsink pole).
+    pub rc_stages: usize,
 }
 
 impl FleetConfig {
@@ -337,6 +395,8 @@ impl FleetConfig {
             overscale_rate: 0.0,
             policy: PolicyKind::Dynamic,
             kind_policies: Vec::new(),
+            transient: false,
+            rc_stages: 2,
         }
     }
 }
@@ -361,6 +421,11 @@ impl Fleet {
         anyhow::ensure!(fcfg.devices > 0, "need at least one device");
         anyhow::ensure!(fcfg.jobs > 0, "need at least one job");
         anyhow::ensure!(!fcfg.benches.is_empty(), "need at least one benchmark");
+        anyhow::ensure!(
+            !fcfg.transient || (1..=8).contains(&fcfg.rc_stages),
+            "transient mode needs 1..=8 RC stages (got {})",
+            fcfg.rc_stages
+        );
 
         let (t_base, theta) = fcfg.scenario.corner();
         let mut base = base_in.clone();

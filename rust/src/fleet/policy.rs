@@ -19,7 +19,10 @@
 //! (`lut`, `overscale`), the policy just selects it. The executor runs
 //! every job under all three for the three-way telemetry comparison;
 //! `Fleet::policies` records which one *governs* each job kind (selectable
-//! per kind, CLI `--policy`).
+//! per kind, CLI `--policy`). Policies are plant-agnostic: the same three
+//! tables drive the instantaneous first-order plant and the transient RC
+//! plant (`FleetConfig::transient`) — only the junction trajectory under
+//! them changes.
 
 use std::sync::Arc;
 

@@ -7,8 +7,10 @@
 //!    an event queue of job *arrivals*, device *finishes*, and *migration*
 //!    probes replaces the pre-refactor fixed-`busy_until` loop. An arriving
 //!    job goes to the coolest eligible idle device (predicted junction
-//!    temperature = rack-local ambient + θ_JA · expected load power); when
-//!    every eligible device is busy it queues on the one that frees up
+//!    temperature: rack-local ambient + θ_JA · expected load power, or —
+//!    in the fleet's transient mode — the device RC network's
+//!    `predict(duration)`, the temperature the job will actually reach);
+//!    when every eligible device is busy it queues on the one that frees up
 //!    first. When a device frees with nothing queued, it probes the other
 //!    queues: a waiting job may migrate — preemption-free, before it ever
 //!    starts — off a hot, busy device onto the freed one, provided the move
@@ -39,9 +41,10 @@ use std::thread;
 use super::policy::{self, Policy};
 use super::telemetry::JobResult;
 use super::{trace, DeviceSpec, Fleet, JobKind};
-use crate::coordinator::{DynamicController, RunStats, Tsd};
+use crate::coordinator::{DynamicController, PlantModel, RunStats, Tsd};
 use crate::flow::dynamic::VoltageLut;
 use crate::ml;
+use crate::thermal::{RcNetwork, ThermalDynamics};
 use crate::util::stats::interp1;
 
 /// A migration's destination may be at most this much hotter (predicted
@@ -139,11 +142,21 @@ struct PlanState<'a> {
     seq: u64,
     assignments: Vec<Assignment>,
     migrations: usize,
+    /// Per-device RC networks for transient placement predictions
+    /// (`None` ⇒ instantaneous `T_amb + θ_JA·P̂`).
+    nets: Option<Vec<RcNetwork>>,
 }
 
 impl<'a> PlanState<'a> {
     fn new(fleet: &'a Fleet) -> PlanState<'a> {
         let n = fleet.specs.len();
+        let nets = fleet.cfg.transient.then(|| {
+            fleet
+                .specs
+                .iter()
+                .map(|s| s.rc_network(fleet.cfg.rc_stages))
+                .collect()
+        });
         PlanState {
             fleet,
             times: fleet.ambient.iter().map(|&(t, _)| t).collect(),
@@ -155,6 +168,7 @@ impl<'a> PlanState<'a> {
             seq: 0,
             assignments: Vec::with_capacity(fleet.jobs.len()),
             migrations: 0,
+            nets,
         }
     }
 
@@ -173,12 +187,21 @@ impl<'a> PlanState<'a> {
     }
 
     /// Predicted junction temperature of `device` running `kind` at
-    /// `at_ms`: rack-local ambient + θ_JA · expected load power, scaled by
-    /// this unit's process spread.
-    fn t_pred(&self, device: usize, kind: &JobKind, at_ms: f64) -> f64 {
+    /// `at_ms`, with the unit's process spread on the expected load power.
+    ///
+    /// Instantaneous mode: rack-local ambient + θ_JA·P̂ (the steady state,
+    /// as if the die heated instantly). Transient mode: the RC network's
+    /// `predict(run_ms)` from a cooled-down start — the temperature the job
+    /// would actually see by its end, so a short job on a big-inertia unit
+    /// is no longer priced at a steady state it never reaches.
+    fn t_pred(&self, device: usize, kind: &JobKind, at_ms: f64, run_ms: f64) -> f64 {
         let spec = &self.fleet.specs[device];
         let t_amb = interp1(&self.times, &self.temps, at_ms) + spec.rack_offset_c;
-        t_amb + spec.theta_ja * kind.power_estimate() * spec.power_scale
+        let p = kind.power_estimate() * spec.power_scale;
+        match &self.nets {
+            Some(nets) => nets[device].predict(p, t_amb, run_ms),
+            None => t_amb + spec.theta_ja * p,
+        }
     }
 
     fn start(&mut self, device: usize, job: Job, t_ms: f64, migrated: bool) {
@@ -209,7 +232,7 @@ impl<'a> PlanState<'a> {
         let mut best_queued: Option<(f64, f64, usize)> = None;
         for spec in fleet.specs.iter().filter(|s| s.grid_edge >= edge) {
             if self.idle(spec.id, t_ms) {
-                let tp = self.t_pred(spec.id, kind, t_ms);
+                let tp = self.t_pred(spec.id, kind, t_ms, job.duration_ms);
                 let better = match best_idle {
                     None => true,
                     Some((b_tp, _)) => tp < b_tp - 1e-12,
@@ -219,7 +242,7 @@ impl<'a> PlanState<'a> {
                 }
             } else {
                 let start = self.committed_until[spec.id].max(t_ms);
-                let tp = self.t_pred(spec.id, kind, start);
+                let tp = self.t_pred(spec.id, kind, start, job.duration_ms);
                 let better = match best_queued {
                     None => true,
                     Some((b_start, b_tp, _)) => {
@@ -279,8 +302,10 @@ impl<'a> PlanState<'a> {
                 continue;
             }
             // thermal guard: never migrate onto a meaningfully hotter unit
-            let tp_dest = self.t_pred(device, kind, t_ms);
-            let tp_src = self.t_pred(src, kind, src_start);
+            // (in transient mode both sides are end-of-job *predictions*,
+            // so the ≤ 2 °C rule compares what the job will actually see)
+            let tp_dest = self.t_pred(device, kind, t_ms, job.duration_ms);
+            let tp_src = self.t_pred(src, kind, src_start, job.duration_ms);
             if tp_dest > tp_src + MIGRATE_MAX_HOTTER_C {
                 continue;
             }
@@ -397,6 +422,7 @@ fn simulate(
     local: &[(f64, f64)],
     dt_ms: f64,
     sample_every_ms: f64,
+    plant: PlantModel,
 ) -> RunStats {
     let scale = spec.power_scale;
     let surface = kind.surface.clone();
@@ -406,17 +432,20 @@ fn simulate(
         tau_ms: spec.tau_ms,
         margin: spec.margin_c,
         tsd: Tsd::default(),
+        plant,
         power_fn: move |vc: f64, vb: f64, tj: f64| scale * surface.eval(vc, vb, tj),
     };
     // fleet trace windows always carry ≥ 2 breakpoints (`trace::window`
-    // pads both ends), so the EmptyTrace error is unreachable here
+    // pads both ends) and dt is the fixed 1 ms control period, so neither
+    // typed error is reachable here
     ctl.run_stats(local, dt_ms, sample_every_ms)
         .expect("fleet trace window has >= 2 breakpoints")
         .1
 }
 
 /// Run one placed job through the policy engine: static, dynamic, and
-/// overscaled-dynamic rails over the identical plant.
+/// overscaled-dynamic rails over the identical plant (instantaneous or,
+/// with `FleetConfig::transient`, the device's Foster RC network).
 fn run_one(fleet: &Fleet, a: &Assignment) -> JobResult {
     let spec = &fleet.specs[a.device];
     let kind = &fleet.kinds[a.job.kind];
@@ -429,9 +458,15 @@ fn run_one(fleet: &Fleet, a: &Assignment) -> JobResult {
     );
     let dt_ms = 1.0; // 1 ms sensor/control period [38]
     let sparse = a.job.duration_ms; // stats only; the sampled log is unused
+    let plant = if fleet.cfg.transient {
+        PlantModel::rc(spec.rc_network(fleet.cfg.rc_stages))
+    } else {
+        PlantModel::FirstOrder
+    };
 
     // every policy runs through the same leg — only the LUT differs
-    let sim = |p: &dyn Policy| simulate(p.lut(kind), spec, kind, &local, dt_ms, sparse);
+    let sim =
+        |p: &dyn Policy| simulate(p.lut(kind), spec, kind, &local, dt_ms, sparse, plant.clone());
     let dyn_stats = sim(&policy::Dynamic);
     let static_stats = sim(&policy::Static);
     // without an over-scale spec the overscaled policy's LUT *is* the
@@ -477,6 +512,7 @@ fn run_one(fleet: &Fleet, a: &Assignment) -> JobResult {
         expected_errors,
         quality,
         peak_t_junct_c: dyn_stats.peak_t_junct,
+        overshoot_c: dyn_stats.peak_overshoot_c,
     }
 }
 
@@ -488,6 +524,7 @@ fn run_one(fleet: &Fleet, a: &Assignment) -> JobResult {
 /// tests). Note its known holes, fixed in [`plan`]: it aborts via `expect`
 /// when a job fits no device, and its `entries[0]` power estimate panics on
 /// an empty LUT / goes blind on a `fixed` one.
+#[deprecated(note = "differential-test reference only; schedule through `Fleet::plan`")]
 pub fn plan_legacy(fleet: &Fleet) -> Vec<Assignment> {
     let times: Vec<f64> = fleet.ambient.iter().map(|&(t, _)| t).collect();
     let temps: Vec<f64> = fleet.ambient.iter().map(|&(_, a)| a).collect();
@@ -548,6 +585,7 @@ pub struct LegacyResult {
 
 /// The pre-refactor executor (serial), kept verbatim so the differential
 /// tests can assert the policy engine reproduces it bit for bit.
+#[deprecated(note = "differential-test reference only; execute through `Fleet::execute`")]
 pub fn execute_legacy(fleet: &Fleet, plan: &[Assignment]) -> Vec<LegacyResult> {
     plan.iter().map(|a| run_one_legacy(fleet, a)).collect()
 }
@@ -573,6 +611,7 @@ fn run_one_legacy(fleet: &Fleet, a: &Assignment) -> LegacyResult {
         tau_ms: spec.tau_ms,
         margin: spec.margin_c,
         tsd: Tsd::default(),
+        plant: PlantModel::FirstOrder,
         power_fn: move |vc: f64, vb: f64, tj: f64| scale * dyn_surface.eval(vc, vb, tj),
     };
     let (_, dyn_stats) = dynamic
@@ -586,6 +625,7 @@ fn run_one_legacy(fleet: &Fleet, a: &Assignment) -> LegacyResult {
         tau_ms: spec.tau_ms,
         margin: spec.margin_c,
         tsd: Tsd::default(),
+        plant: PlantModel::FirstOrder,
         power_fn: move |vc: f64, vb: f64, tj: f64| scale * static_surface.eval(vc, vb, tj),
     };
     let (_, static_stats) = static_ctl

@@ -54,6 +54,11 @@ pub struct JobResult {
     /// rate (clean accuracy when nothing is overscaled).
     pub quality: f64,
     pub peak_t_junct_c: f64,
+    /// Peak transient overshoot of the dynamic controller (°C): how far the
+    /// junction ran above the instantaneous steady state thanks to thermal
+    /// inertia — die-scale (seconds of τ) under the default first-order
+    /// plant, minutes-scale under the transient RC plant's heatsink pole.
+    pub overshoot_c: f64,
 }
 
 impl JobResult {
@@ -149,6 +154,8 @@ pub struct FleetTelemetry {
     pub migrations: usize,
     /// Jobs no device could fit (reported, not executed).
     pub unplaceable: usize,
+    /// Hottest per-job transient overshoot seen fleet-wide (°C).
+    pub peak_overshoot_c: f64,
     /// First arrival → last completion (virtual ms).
     pub makespan_ms: f64,
     /// Completed jobs per virtual hour.
@@ -204,6 +211,7 @@ impl FleetTelemetry {
             jobs.iter().map(|r| r.quality).sum::<f64>() / jobs.len() as f64
         };
         let quality_min = jobs.iter().map(|r| r.quality).fold(1.0f64, f64::min);
+        let peak_overshoot_c = jobs.iter().map(|r| r.overshoot_c).fold(0.0f64, f64::max);
         let first_arrival = jobs
             .iter()
             .map(|r| r.arrival_ms)
@@ -245,6 +253,7 @@ impl FleetTelemetry {
             expected_errors,
             quality_mean,
             quality_min,
+            peak_overshoot_c,
             migrations,
             unplaceable: 0,
             makespan_ms,
@@ -320,6 +329,7 @@ impl FleetTelemetry {
             mix(r.expected_errors.to_bits());
             mix(r.quality.to_bits());
             mix(r.peak_t_junct_c.to_bits());
+            mix(r.overshoot_c.to_bits());
         }
         mix(self.jobs.len() as u64);
         acc
@@ -352,6 +362,7 @@ mod tests {
             expected_errors: 0.0,
             quality: 1.0,
             peak_t_junct_c: 50.0,
+            overshoot_c: 0.0,
         }
     }
 
@@ -430,5 +441,11 @@ mod tests {
         e[0].migrated = true;
         let te = FleetTelemetry::aggregate(2, e);
         assert_ne!(ta.fingerprint(), te.fingerprint());
+        // transient overshoot participates too
+        let mut g = ta.jobs.clone();
+        g[0].overshoot_c = 1.25;
+        let tg = FleetTelemetry::aggregate(2, g);
+        assert_ne!(ta.fingerprint(), tg.fingerprint());
+        assert!((tg.peak_overshoot_c - 1.25).abs() < 1e-12);
     }
 }

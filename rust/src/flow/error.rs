@@ -48,6 +48,14 @@ pub enum FlowError {
     /// An ambient-temperature trace with fewer than the two breakpoints
     /// interpolation needs (the legacy controller `assert!`ed here).
     EmptyTrace { len: usize },
+    /// A non-positive or non-finite simulation step. The pre-audit
+    /// controller looped forever on `dt = 0` and panicked (flipped clamp
+    /// bounds in `Regulator::tick`) on a negative step.
+    InvalidTimeStep { dt_ms: f64 },
+    /// A transient (RC-network) request specification that cannot produce a
+    /// simulation: non-positive τ / dt / horizon, zero stages, or a horizon
+    /// that would take absurdly many steps.
+    BadTransientSpec { reason: String },
 }
 
 impl fmt::Display for FlowError {
@@ -87,6 +95,15 @@ impl fmt::Display for FlowError {
                     "ambient trace needs at least 2 breakpoints (got {len})"
                 )
             }
+            FlowError::InvalidTimeStep { dt_ms } => {
+                write!(
+                    f,
+                    "invalid simulation step {dt_ms} ms (must be finite and > 0)"
+                )
+            }
+            FlowError::BadTransientSpec { reason } => {
+                write!(f, "bad transient spec: {reason}")
+            }
         }
     }
 }
@@ -111,6 +128,12 @@ mod tests {
         assert!(e.to_string().contains("never terminate"));
         let e = FlowError::EmptyTrace { len: 1 };
         assert!(e.to_string().contains("got 1"));
+        let e = FlowError::InvalidTimeStep { dt_ms: 0.0 };
+        assert!(e.to_string().contains("0 ms"));
+        let e = FlowError::BadTransientSpec {
+            reason: "0 stages".into(),
+        };
+        assert!(e.to_string().contains("0 stages"));
     }
 
     #[test]

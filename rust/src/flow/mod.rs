@@ -24,4 +24,5 @@ pub use error::FlowError;
 pub use session::{
     Alg1Outcome, Alg1Request, Alg2Outcome, Alg2Request, BaselineRequest, Condition, Fidelity,
     FlowSession, LutOutcome, LutRequest, LutSpec, OverscaleOutcome, OverscaleRequest,
+    TransientOutcome, TransientRequest,
 };

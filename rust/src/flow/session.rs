@@ -70,7 +70,7 @@ use crate::flow::dynamic::{self, LutSweep, VoltageLut};
 use crate::flow::error::FlowError;
 use crate::flow::overscale::{self, ErrorModel};
 use crate::runtime::select_backend;
-use crate::thermal::ThermalBackend;
+use crate::thermal::{RcNetwork, ThermalBackend, ThermalDynamics};
 use crate::timing::{ArenaStats, StaCacheArena};
 
 // ------------------------------------------------------------ requests --
@@ -130,6 +130,18 @@ pub struct Alg1Request {
 }
 
 impl Alg1Request {
+    /// Request with every override at the session default.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use thermovolt::flow::Alg1Request;
+    ///
+    /// let req = Alg1Request { ambient: Some(40.0), ..Alg1Request::new("sha") };
+    /// assert_eq!(req.bench, "sha");
+    /// assert_eq!(req.rate, 1.0); // no CP-violation budget by default
+    /// assert!(req.theta_ja.is_none());
+    /// ```
     pub fn new(bench: impl Into<String>) -> Alg1Request {
         Alg1Request {
             bench: bench.into(),
@@ -157,6 +169,18 @@ pub struct BaselineRequest {
 }
 
 impl BaselineRequest {
+    /// Nominal-rails baseline (the paper's one-size-fits-all denominator).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use thermovolt::flow::BaselineRequest;
+    ///
+    /// let req = BaselineRequest::new("mkPktMerge");
+    /// assert!(req.rails.is_none()); // None ⇒ the nominal rails
+    /// let fig4 = BaselineRequest { rails: Some((0.70, 0.85)), ..req };
+    /// assert_eq!(fig4.rails, Some((0.70, 0.85)));
+    /// ```
     pub fn new(bench: impl Into<String>) -> BaselineRequest {
         BaselineRequest {
             bench: bench.into(),
@@ -185,6 +209,19 @@ pub struct Alg2Request {
 }
 
 impl Alg2Request {
+    /// Request on the batched engine ([`Fidelity::Fast`]) with session
+    /// defaults everywhere else.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use thermovolt::flow::{Alg2Request, Fidelity};
+    ///
+    /// let req = Alg2Request::new("sha");
+    /// assert_eq!(req.fidelity, Fidelity::Fast);
+    /// let naive = Alg2Request { fidelity: Fidelity::Naive, ..req };
+    /// assert_eq!(naive.fidelity, Fidelity::Naive); // the bench baseline
+    /// ```
     pub fn new(bench: impl Into<String>) -> Alg2Request {
         Alg2Request {
             bench: bench.into(),
@@ -209,6 +246,18 @@ pub struct LutRequest {
 }
 
 impl LutRequest {
+    /// Table request for the given [`LutSpec`].
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use thermovolt::flow::{LutRequest, LutSpec};
+    ///
+    /// let spec = LutSpec::Sweep { t_amb_lo: 0.0, t_amb_hi: 80.0, step_c: 10.0 };
+    /// let req = LutRequest::new("sha", spec);
+    /// assert_eq!(req.spec, spec);
+    /// assert!(req.theta_ja.is_none()); // session θ_JA unless overridden
+    /// ```
     pub fn new(bench: impl Into<String>, spec: LutSpec) -> LutRequest {
         LutRequest {
             bench: bench.into(),
@@ -234,6 +283,16 @@ pub struct OverscaleRequest {
 }
 
 impl OverscaleRequest {
+    /// §III-D request at the given CP-violation budget (≥ 1.0).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use thermovolt::flow::OverscaleRequest;
+    ///
+    /// let req = OverscaleRequest::new("lenet_systolic", 1.2);
+    /// assert_eq!(req.rate, 1.2); // rails optimized for 1.2 × d_worst
+    /// ```
     pub fn new(bench: impl Into<String>, rate: f64) -> OverscaleRequest {
         OverscaleRequest {
             bench: bench.into(),
@@ -241,6 +300,56 @@ impl OverscaleRequest {
             theta_ja: None,
             alpha: None,
             rate,
+            effort: None,
+        }
+    }
+}
+
+/// Request for an RC thermal-network transient (`thermal::transient`): the
+/// design's nominal-rails power step driven into a Foster network, returning
+/// the settling point, response times and a decimated trajectory.
+#[derive(Clone, Debug)]
+pub struct TransientRequest {
+    pub bench: String,
+    pub ambient: Option<f64>,
+    pub theta_ja: Option<f64>,
+    pub alpha: Option<f64>,
+    /// Dominant thermal time constant of the network (ms).
+    pub tau_ms: f64,
+    /// Foster stages (1 = the lumped single-pole plant, which settles
+    /// bit-identically to the steady-state θ_JA backend).
+    pub stages: usize,
+    /// Integrator step (ms).
+    pub dt_ms: f64,
+    /// Simulated horizon (ms).
+    pub horizon_ms: f64,
+    pub effort: Option<Effort>,
+}
+
+impl TransientRequest {
+    /// Defaults: τ = 3 s (die-scale inertia, [40]), 2 Foster stages, 50 ms
+    /// steps over a 30 s horizon.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use thermovolt::flow::TransientRequest;
+    ///
+    /// let req = TransientRequest { stages: 1, ..TransientRequest::new("sha") };
+    /// assert_eq!(req.tau_ms, 3000.0);
+    /// assert_eq!(req.stages, 1); // single pole ≡ the lumped θ_JA plant
+    /// assert!(req.horizon_ms / req.dt_ms >= 100.0);
+    /// ```
+    pub fn new(bench: impl Into<String>) -> TransientRequest {
+        TransientRequest {
+            bench: bench.into(),
+            ambient: None,
+            theta_ja: None,
+            alpha: None,
+            tau_ms: 3000.0,
+            stages: 2,
+            dt_ms: 50.0,
+            horizon_ms: 30_000.0,
             effort: None,
         }
     }
@@ -282,6 +391,33 @@ pub struct LutOutcome {
     pub lut: VoltageLut,
 }
 
+/// Outcome of [`FlowSession::transient`]: a power-step response of the
+/// design's RC thermal network.
+#[derive(Clone, Debug)]
+pub struct TransientOutcome {
+    pub bench: String,
+    pub condition: Condition,
+    /// Foster stages of the simulated network.
+    pub stages: usize,
+    /// Dominant time constant (ms).
+    pub tau_ms: f64,
+    /// Steady driving power (W): the design's nominal-rails thermal fixed
+    /// point at the resolved condition.
+    pub power_w: f64,
+    /// Junction at t = 0 (°C) — the ambient.
+    pub t_start_c: f64,
+    /// Steady-state junction temperature (°C): `T_amb + θ_JA · P`, which a
+    /// single-stage network reaches bit-identically to the lumped model.
+    pub t_settle_c: f64,
+    /// First time the rise crosses 63.2 % of its total (ms); `None` when
+    /// the horizon ended before it did.
+    pub t63_ms: Option<f64>,
+    /// First time the rise crosses 95 % (ms); `None` if not reached.
+    pub t95_ms: Option<f64>,
+    /// Decimated `(t_ms, T_j °C)` trajectory (≈ ≤ 512 points + endpoints).
+    pub samples: Vec<(f64, f64)>,
+}
+
 /// Outcome of [`FlowSession::overscale`].
 #[derive(Clone, Debug)]
 pub struct OverscaleOutcome {
@@ -308,6 +444,10 @@ struct DesignEntry {
     arena: StaCacheArena,
     backends: HashMap<u64, Box<dyn ThermalBackend>>,
     acts: HashMap<u64, Arc<Activities>>,
+    /// RC thermal networks keyed by (θ_JA bits, τ bits, stages) — like the
+    /// per-θ backends, a pure function of the key, so caching is
+    /// observationally invisible (requests clone and reset the template).
+    dynamics: HashMap<(u64, u64, usize), RcNetwork>,
 }
 
 /// The unified facade over every thermal-aware flow entry point. See the
@@ -589,6 +729,86 @@ impl FlowSession {
         })
     }
 
+    /// RC thermal-network transient (`thermal::transient`): drive the
+    /// design's nominal-rails fixed-point power as a step into a Foster
+    /// network (per-request τ / stage count) and return the settling point,
+    /// the 63.2 % / 95 % response times, and a decimated trajectory.
+    ///
+    /// The network for each `(θ_JA, τ, stages)` is cached on the design
+    /// entry exactly like the per-θ thermal backends; a single-stage
+    /// request settles **bit-identically** to the lumped `T_amb + θ_JA·P`
+    /// steady state (the differential tests pin this).
+    pub fn transient(&mut self, req: TransientRequest) -> Result<TransientOutcome, FlowError> {
+        validate_transient(&req)?;
+        let cfg = self.resolved(req.ambient, req.theta_ja, req.alpha, None)?;
+        let effort = req.effort.unwrap_or(self.effort);
+        let (design, acts, _arena, backend) =
+            Self::ctx(&mut self.designs, &self.cfg, &cfg, &req.bench, effort, req.alpha)?;
+        let sta = design.sta();
+        let pm = match &acts {
+            Some(a) => design.power_model_at(a),
+            None => design.power_model(),
+        };
+        // the driving step: the nominal-rails thermal fixed point (the same
+        // leg as `baseline`) gives the steady load the network is fed
+        let fixed = alg1::fixed_point_impl(
+            &design,
+            &sta,
+            &pm,
+            &cfg,
+            backend,
+            cfg.arch.v_core_nom,
+            cfg.arch.v_bram_nom,
+        );
+        let entry = self
+            .designs
+            .get_mut(&(req.bench.clone(), effort))
+            .expect("ctx built this design entry");
+        let mut net = entry
+            .dynamics
+            .entry((cfg.thermal.theta_ja.to_bits(), req.tau_ms.to_bits(), req.stages))
+            .or_insert_with(|| {
+                RcNetwork::foster(cfg.thermal.theta_ja, req.tau_ms, req.stages)
+            })
+            .clone();
+        net.reset();
+
+        let t_amb = cfg.flow.t_amb;
+        let p = fixed.power;
+        let t_settle = net.steady_state_c(p, t_amb);
+        let rise_total = t_settle - t_amb;
+        let n_steps = (req.horizon_ms / req.dt_ms).ceil() as usize;
+        let stride = n_steps.div_ceil(512).max(1);
+        let mut samples = vec![(0.0, t_amb)];
+        let (mut t63, mut t95) = (None, None);
+        let mut t_ms = 0.0;
+        for i in 1..=n_steps {
+            t_ms += req.dt_ms;
+            let t = net.step(p, t_amb, req.dt_ms);
+            if t63.is_none() && t - t_amb >= 0.632 * rise_total {
+                t63 = Some(t_ms);
+            }
+            if t95.is_none() && t - t_amb >= 0.95 * rise_total {
+                t95 = Some(t_ms);
+            }
+            if i % stride == 0 || i == n_steps {
+                samples.push((t_ms, t));
+            }
+        }
+        Ok(TransientOutcome {
+            bench: req.bench,
+            condition: condition_of(&cfg),
+            stages: req.stages,
+            tau_ms: req.tau_ms,
+            power_w: p,
+            t_start_c: t_amb,
+            t_settle_c: t_settle,
+            t63_ms: t63,
+            t95_ms: t95,
+            samples,
+        })
+    }
+
     // ------------------------------------------------------- plumbing --
 
     /// Base config with per-request overrides applied, re-validated so a
@@ -635,6 +855,7 @@ impl FlowSession {
                     arena: StaCacheArena::new(),
                     backends: HashMap::new(),
                     acts: HashMap::new(),
+                    dynamics: HashMap::new(),
                 }))
             }
         }
@@ -726,6 +947,39 @@ fn condition_of(cfg: &Config) -> Condition {
 fn validate_rate(rate: f64) -> Result<(), FlowError> {
     if !rate.is_finite() || rate < 1.0 {
         return Err(FlowError::InvalidRate { rate });
+    }
+    Ok(())
+}
+
+/// Cap on a transient simulation's step count (horizon / dt): far beyond
+/// any legitimate sweep, but small enough that a typo'd `dt_ms` fails fast
+/// instead of grinding for hours.
+const MAX_TRANSIENT_STEPS: f64 = 2e6;
+
+fn validate_transient(req: &TransientRequest) -> Result<(), FlowError> {
+    for (name, v) in [
+        ("tau_ms", req.tau_ms),
+        ("dt_ms", req.dt_ms),
+        ("horizon_ms", req.horizon_ms),
+    ] {
+        if !v.is_finite() || v <= 0.0 {
+            return Err(FlowError::BadTransientSpec {
+                reason: format!("{name} = {v} (must be finite and > 0)"),
+            });
+        }
+    }
+    if req.stages == 0 || req.stages > 8 {
+        return Err(FlowError::BadTransientSpec {
+            reason: format!("{} stages (must be 1..=8)", req.stages),
+        });
+    }
+    let steps = req.horizon_ms / req.dt_ms;
+    if steps > MAX_TRANSIENT_STEPS {
+        return Err(FlowError::BadTransientSpec {
+            reason: format!(
+                "horizon/dt = {steps:.0} steps (cap {MAX_TRANSIENT_STEPS})"
+            ),
+        });
     }
     Ok(())
 }
@@ -956,6 +1210,86 @@ mod tests {
             )),
             Err(FlowError::BadLutSpec { .. })
         ));
+    }
+
+    #[test]
+    fn bad_transient_specs_are_typed_errors_without_a_design_build() {
+        let mut s = FlowSession::new(Config::new()).unwrap();
+        for req in [
+            TransientRequest {
+                tau_ms: 0.0,
+                ..TransientRequest::new("mkPktMerge")
+            },
+            TransientRequest {
+                dt_ms: -1.0,
+                ..TransientRequest::new("mkPktMerge")
+            },
+            TransientRequest {
+                stages: 0,
+                ..TransientRequest::new("mkPktMerge")
+            },
+            TransientRequest {
+                stages: 99,
+                ..TransientRequest::new("mkPktMerge")
+            },
+            TransientRequest {
+                dt_ms: 1e-6,
+                horizon_ms: 1e9,
+                ..TransientRequest::new("mkPktMerge")
+            },
+        ] {
+            assert!(
+                matches!(s.transient(req.clone()), Err(FlowError::BadTransientSpec { .. })),
+                "accepted bad spec {req:?}"
+            );
+        }
+        assert_eq!(s.cached_designs(), 0, "rejections must not pay for P&R");
+    }
+
+    #[test]
+    fn transient_settles_to_the_lumped_steady_state_and_caches_the_design() {
+        let mut cfg = Config::new();
+        cfg.thermal.theta_ja = 12.0;
+        let mut s = FlowSession::new(cfg).unwrap();
+        let out = s
+            .transient(TransientRequest {
+                stages: 1,
+                tau_ms: 3000.0,
+                dt_ms: 50.0,
+                horizon_ms: 40_000.0,
+                ..TransientRequest::new("mkPktMerge")
+            })
+            .unwrap();
+        // single stage ⇒ the settle point is exactly T_amb + θ_JA·P
+        let lumped = out.condition.t_amb_c + out.condition.theta_ja * out.power_w;
+        assert!(
+            (out.t_settle_c - lumped).abs() < 1e-9,
+            "settle {} vs lumped {lumped}",
+            out.t_settle_c
+        );
+        // the 63.2 % crossing of a single pole sits at τ (within one dt)
+        let t63 = out.t63_ms.expect("40 s horizon covers 3 s pole");
+        assert!(
+            (t63 - 3000.0).abs() <= 50.0 + 1e-9,
+            "t63 {t63} ms away from τ"
+        );
+        let t95 = out.t95_ms.unwrap();
+        assert!(t95 > t63);
+        // trajectory is decimated, monotone, and ends near settle
+        assert!(out.samples.len() <= 514);
+        assert!(out.samples.windows(2).all(|w| w[1].1 >= w[0].1 - 1e-12));
+        let last = out.samples.last().unwrap().1;
+        assert!((last - out.t_settle_c).abs() < 0.01);
+        // the transient request cached the design like any other flow
+        assert_eq!(s.cached_designs(), 1);
+        let again = s
+            .transient(TransientRequest {
+                stages: 1,
+                ..TransientRequest::new("mkPktMerge")
+            })
+            .unwrap();
+        assert_eq!(s.cached_designs(), 1);
+        assert_eq!(again.power_w.to_bits(), out.power_w.to_bits());
     }
 
     #[test]

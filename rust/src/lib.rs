@@ -17,7 +17,9 @@
 //! * [`timing`]  — per-tile-(T,V) static timing analysis
 //! * [`activity`]— switching-activity estimation (ACE substitute)
 //! * [`power`]   — per-tile leakage + dynamic power maps
-//! * [`thermal`] — steady-state thermal solver (native + PJRT artifact)
+//! * [`thermal`] — steady-state thermal solver (native + PJRT artifact);
+//!   [`thermal::transient`] adds Foster RC-network time-domain dynamics
+//!   behind the [`thermal::ThermalDynamics`] trait
 //! * [`flow`]    — Algorithms 1 & 2 + voltage over-scaling flow, fronted by
 //!   the typed [`flow::FlowSession`] facade (owns the design cache, STA
 //!   arenas and thermal backends; every CLI/report/fleet caller goes
@@ -25,7 +27,9 @@
 //! * [`sim`]     — post-P&R timing simulation / error injection
 //! * [`ml`]      — LeNet + HD over-scaling workloads (PJRT-driven)
 //! * [`runtime`] — PJRT client wrapper around the `xla` crate (feature `pjrt`)
-//! * [`coordinator`] — online (sensor-driven) dynamic voltage controller
+//! * [`coordinator`] — online (sensor-driven) dynamic voltage controller;
+//!   the plant is selectable (first-order legacy or exact RC transient with
+//!   a predictive guardband)
 //! * [`fleet`]   — multi-device datacenter fleet simulator: event-driven
 //!   thermal-aware scheduler (arrival/finish/migration events) + the
 //!   three-way rail-provisioning policy engine (static / dynamic /

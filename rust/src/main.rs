@@ -8,15 +8,18 @@
 //! thermovolt overscale  --bench <b> --rate R                §III-D flow
 //! thermovolt report --table1|--fig2|--fig3|--fig4|--table2|--fig6|--fig7
 //!                   |--fig8|--runtime|--leakage|--all  [--full]
-//! thermovolt serve  --bench <b>                   dynamic controller demo
+//! thermovolt serve  --bench <b> [--transient]     dynamic controller demo
 //! thermovolt fleet  --devices N --jobs M --scenario <name>
 //!                   [--seed S] [--workers W] [--benches a,b] [--horizon-s T]
 //!                   [--policy static|dynamic|overscaled] [--overscale-rate R]
-//!                                                 datacenter fleet simulation
+//!                   [--transient] [--rc-stages N]  datacenter fleet simulation
+//!                                                 (RC thermal transients)
 //! thermovolt bench  [--quick] [--bench <b>] [--out F] [--fleet-out F]
+//!                   [--transient-out F]
 //!                   perf harness: Alg1 / Alg2 (batched vs --naive path,
 //!                   bit-checked) / LUT build / fleet; emits
-//!                   BENCH_search.json + a ≥2048-device BENCH_fleet.json
+//!                   BENCH_search.json + a ≥2048-device BENCH_fleet.json +
+//!                   the thermal-inertia sweep BENCH_transient.json
 //! thermovolt e2e    [--full]                      full-pipeline headline run
 //! ```
 
@@ -26,7 +29,8 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use thermovolt::config::Config;
-use thermovolt::coordinator::{mean_power, DynamicController, Tsd};
+use thermovolt::coordinator::{mean_power, DynamicController, PlantModel, Tsd};
+use thermovolt::thermal::RcNetwork;
 use thermovolt::fleet::policy::PolicyKind;
 use thermovolt::fleet::telemetry::FleetTelemetry;
 use thermovolt::fleet::trace::Scenario;
@@ -247,12 +251,21 @@ fn run(args: &Args) -> Result<()> {
             };
             let n = design.dev.n_tiles();
             let theta = cfg.thermal.theta_ja;
+            // --transient: the RC thermal-network plant with the guardband
+            // on predicted peak temperature (default: the legacy
+            // instantaneous first-order relaxation)
+            let plant = if args.flag("transient") {
+                PlantModel::rc(RcNetwork::foster(theta, 3000.0, 2))
+            } else {
+                PlantModel::FirstOrder
+            };
             let controller = DynamicController {
                 lut: Arc::new(lut),
                 theta_ja: theta,
                 tau_ms: 3000.0,
                 margin: cfg.flow.sensor_margin,
                 tsd: Tsd::default(),
+                plant,
                 power_fn: move |vc: f64, vb: f64, tj: f64| {
                     let tmap = vec![tj; n];
                     pm.total_power(&tmap, f_clk, vc, vb)
@@ -354,6 +367,9 @@ fn run(args: &Args) -> Result<()> {
                 fcfg.benches = b.split(',').map(str::to_string).collect();
             }
             fcfg.overscale_rate = args.opt_f64("overscale-rate", 0.0);
+            // --transient: RC thermal-network plant + predictive placement
+            fcfg.transient = args.flag("transient");
+            fcfg.rc_stages = args.opt_usize("rc-stages", fcfg.rc_stages);
             if let Some(p) = args.opt("policy") {
                 fcfg.policy = PolicyKind::from_name(p).ok_or_else(|| {
                     anyhow::anyhow!("unknown policy `{p}` (one of: static, dynamic, overscaled)")
@@ -370,12 +386,17 @@ fn run(args: &Args) -> Result<()> {
             }
             let (t_base, theta) = scenario.corner();
             println!(
-                "fleet: {devices} devices, {jobs} jobs, scenario {} ({t_base} C corner, theta_JA {theta} C/W), seed {:#x}, policy {}{}",
+                "fleet: {devices} devices, {jobs} jobs, scenario {} ({t_base} C corner, theta_JA {theta} C/W), seed {:#x}, policy {}{}{}",
                 scenario.name(),
                 fcfg.seed,
                 fcfg.policy.name(),
                 if fcfg.overscale_rate > 1.0 {
                     format!(" (overscale rate {})", fcfg.overscale_rate)
+                } else {
+                    String::new()
+                },
+                if fcfg.transient {
+                    format!(", transient RC plant ({} stages)", fcfg.rc_stages)
                 } else {
                     String::new()
                 }
@@ -435,6 +456,12 @@ fn run(args: &Args) -> Result<()> {
                     tel.expected_errors, tel.quality_mean, tel.quality_min
                 );
             }
+            if fleet.cfg.transient {
+                println!(
+                    "transient plant: peak overshoot {:.2} C above the instantaneous steady state",
+                    tel.peak_overshoot_c
+                );
+            }
             println!(
                 "violations: {} dyn / {} over  |  migrations {}  unplaceable {}  |  throughput {:.1} jobs/h  makespan {:.0} s  queue p50/p95 {:.1}/{:.1} s",
                 tel.violations,
@@ -481,6 +508,18 @@ fn run(args: &Args) -> Result<()> {
                 fs.workers,
                 fs.saving_dyn * 100.0,
                 fs.saving_over * 100.0
+            );
+            // thermal-inertia sweep: the same fleet under the instantaneous
+            // and the RC transient plant → BENCH_transient.json
+            let transient_out =
+                Path::new(args.opt_or("transient-out", "BENCH_transient.json")).to_path_buf();
+            let ts = thermovolt::benchkit::run_transient(&cfg, &opts, &transient_out)?;
+            println!(
+                "transient bench: saving {:.1} % → {:.1} % under the RC plant ({:+} migrations, peak overshoot {:.2} C)",
+                ts.instant_saving * 100.0,
+                ts.transient_saving * 100.0,
+                ts.delta_migrations,
+                ts.transient_peak_overshoot_c
             );
         }
         "e2e" => {

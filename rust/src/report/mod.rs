@@ -622,6 +622,68 @@ pub fn fleet_table(t: &FleetTelemetry, specs: &[DeviceSpec]) -> Table {
     tb
 }
 
+/// Thermal-inertia comparison: the same fleet under the instantaneous
+/// first-order plant and the transient RC plant (`thermovolt bench`'s
+/// transient sweep prints and emits this next to `BENCH_transient.json`).
+pub fn transient_table(instant: &FleetTelemetry, transient: &FleetTelemetry) -> Table {
+    let mut tb = Table::new(
+        "Transient — instantaneous vs RC thermal-network plant (same fleet, same jobs)",
+        &["metric", "instantaneous", "transient", "delta"],
+    );
+    let d = |a: f64, b: f64| format!("{:+.3}", b - a);
+    tb.row(vec![
+        "E_static (J)".into(),
+        f2(instant.energy_static_j),
+        f2(transient.energy_static_j),
+        d(instant.energy_static_j, transient.energy_static_j),
+    ]);
+    tb.row(vec![
+        "E_dyn (J)".into(),
+        f2(instant.energy_dyn_j),
+        f2(transient.energy_dyn_j),
+        d(instant.energy_dyn_j, transient.energy_dyn_j),
+    ]);
+    tb.row(vec![
+        "saving_dyn (%)".into(),
+        pct(instant.saving()),
+        pct(transient.saving()),
+        d(instant.saving() * 100.0, transient.saving() * 100.0),
+    ]);
+    tb.row(vec![
+        "migrations".into(),
+        instant.migrations.to_string(),
+        transient.migrations.to_string(),
+        format!("{:+}", transient.migrations as i64 - instant.migrations as i64),
+    ]);
+    tb.row(vec![
+        "violations".into(),
+        instant.violations.to_string(),
+        transient.violations.to_string(),
+        format!("{:+}", transient.violations as i64 - instant.violations as i64),
+    ]);
+    tb.row(vec![
+        "peak overshoot (C)".into(),
+        f2(instant.peak_overshoot_c),
+        f2(transient.peak_overshoot_c),
+        d(instant.peak_overshoot_c, transient.peak_overshoot_c),
+    ]);
+    tb.row(vec![
+        "peak T_junct (C)".into(),
+        f1(instant
+            .jobs
+            .iter()
+            .map(|j| j.peak_t_junct_c)
+            .fold(0.0f64, f64::max)),
+        f1(transient
+            .jobs
+            .iter()
+            .map(|j| j.peak_t_junct_c)
+            .fold(0.0f64, f64::max)),
+        "-".into(),
+    ]);
+    tb
+}
+
 /// Generate the characterized library table (also saved as an artifact).
 pub fn characterize(cfg: &Config) -> anyhow::Result<CharTable> {
     let db = CharDb::analytic();
@@ -662,6 +724,16 @@ mod tests {
         let row40 = a.rows.iter().find(|r| r[0] == "40").unwrap();
         let v: f64 = row40[sb_col].parse().unwrap();
         assert!((0.83..=0.87).contains(&v), "SB@40 = {v}");
+    }
+
+    #[test]
+    fn transient_table_has_one_row_per_metric() {
+        let a = FleetTelemetry::aggregate(2, vec![]);
+        let b = FleetTelemetry::aggregate(2, vec![]);
+        let t = transient_table(&a, &b);
+        assert_eq!(t.rows.len(), 7);
+        let r = t.render();
+        assert!(r.contains("instantaneous") && r.contains("migrations"));
     }
 
     #[test]

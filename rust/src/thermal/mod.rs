@@ -20,6 +20,14 @@
 //! * `crate::runtime::ThermalArtifact` (feature `pjrt`) — the L1/L2
 //!   Pallas/JAX program
 //!   AOT-compiled to HLO and executed via PJRT (the production hot path).
+//!
+//! The *time-domain* companion lives in [`transient`]: a Foster RC network
+//! behind the [`ThermalDynamics`] trait, whose single-stage form reduces
+//! exactly to this module's calibrated `T_j = T_amb + θ_JA·P` steady state.
+
+pub mod transient;
+
+pub use transient::{RcNetwork, RcStage, ThermalDynamics};
 
 use crate::config::ThermalConfig;
 

@@ -1,0 +1,445 @@
+//! RC thermal-network transients — the time-domain companion to the
+//! steady-state [`ThermalBackend`](super::ThermalBackend) (§III-A).
+//!
+//! The steady-state solver answers "where does the die settle"; real
+//! silicon takes seconds (die) to minutes (heatsink) to get there, and that
+//! inertia is exactly the headroom the paper's dynamic scheme exploits
+//! (heat-up takes "orders of seconds" [40]). This module models the lumped
+//! junction-to-ambient path as a **Foster network**: a series chain of
+//! parallel R‖C stages. Stage `i` holds a node state `y_i` obeying
+//!
+//! ```text
+//! τ_i · dy_i/dt = (w_i·T_amb + P·R_i) − y_i ,      T_j(t) = Σ_i y_i(t) ,
+//! ```
+//!
+//! where `τ_i = R_i·C_i` is the pole time constant and `w_i = R_i / ΣR` the
+//! stage's share of the ambient reference — so *both* self-heating and
+//! ambient swings are low-passed by the network (an ambient cliff reaches
+//! the junction through the same thermal mass the power does). Because the
+//! stages are decoupled, every step has the **exact** closed-form solution
+//!
+//! ```text
+//! y_i(t + Δt) = tgt_i + (y_i(t) − tgt_i) · e^(−Δt/τ_i) ,   tgt_i = w_i·T_amb + P·R_i ,
+//! ```
+//!
+//! so the integrator ([`ThermalDynamics::step`]) is unconditionally stable
+//! for any `Δt` — a step of 10 × τ lands on the steady state instead of
+//! oscillating like forward Euler would. At steady state `y_i = tgt_i`, so
+//! `T_j = T_amb + P·ΣR_i`: a network with `ΣR_i = θ_JA` settles
+//! *identically* to the paper's `T_j = T_amb + θ_JA·P` behaviour
+//! (Table II). For a **single stage** (`w = 1`, `R = θ_JA`) the ODE is
+//! exactly the legacy first-order plant `τ·dT/dt = (T_amb + θ_JA·P) − T`,
+//! integrated exactly instead of by clamped forward Euler, and
+//! [`settle`](ThermalDynamics::settle) performs the exact float ops of the
+//! lumped model — the differential tests pin it bit-identical.
+//!
+//! Relationship to [`ThermalBackend`](super::ThermalBackend): the backend
+//! solves the *spatial* problem (a per-tile temperature map at one instant,
+//! mean rise = θ_JA·P by calibration); `ThermalDynamics` solves the
+//! *temporal* one (the lumped junction trajectory between those instants).
+//! The flow uses the backend inside Algorithms 1/2; the online controller,
+//! the fleet plant and the placement predictor use the dynamics.
+
+/// One Foster stage: a thermal resistance with its pole time constant
+/// (`τ = R·C`; the capacitance is `τ / r` if ever needed explicitly).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RcStage {
+    /// Thermal resistance of this stage (°C/W).
+    pub r: f64,
+    /// Pole time constant `τ = R·C` (ms).
+    pub tau_ms: f64,
+}
+
+/// Time-domain interface next to [`ThermalBackend`](super::ThermalBackend):
+/// a stateful lumped plant that can be stepped, settled, and asked to
+/// predict its own future.
+///
+/// # Examples
+///
+/// ```
+/// use thermovolt::thermal::{RcNetwork, ThermalDynamics};
+///
+/// // θ_JA = 12 °C/W, τ = 3 s: a 0.5 W load settles 6 °C above ambient
+/// let mut net = RcNetwork::single(12.0, 3000.0);
+/// let after_one_tau = net.step(0.5, 40.0, 3000.0);
+/// assert!((after_one_tau - 43.79).abs() < 0.01); // 63.2 % of the rise
+/// assert!((net.settle(0.5, 40.0) - 46.0).abs() < 1e-9);
+///
+/// // predict() looks ahead without disturbing the state
+/// net.reset();
+/// let peek = net.predict(0.5, 40.0, 10_000.0);
+/// assert!(peek > 45.0 && net.temperature(40.0) == 40.0);
+/// ```
+pub trait ThermalDynamics {
+    /// Advance the plant by `dt_ms` under constant `power_w` and ambient
+    /// `t_amb_c`; returns the junction temperature (°C) at the end of the
+    /// step. Exact for any `dt_ms ≥ 0`; non-positive or non-finite steps
+    /// leave the state untouched. A freshly-reset plant initializes at the
+    /// ambient (junction = `t_amb_c` at t = 0).
+    fn step(&mut self, power_w: f64, t_amb_c: f64, dt_ms: f64) -> f64;
+
+    /// The junction temperature (°C) the plant *would* reach `dt_ms` from
+    /// now under constant `power_w` / `t_amb_c`, without mutating the
+    /// state — the controller's and the fleet planner's look-ahead.
+    fn predict(&self, power_w: f64, t_amb_c: f64, dt_ms: f64) -> f64;
+
+    /// Jump the state to the steady state of `(power_w, t_amb_c)` and
+    /// return it — `T_amb + P·ΣR`, identical to the calibrated
+    /// steady-state backend's mean rise.
+    fn settle(&mut self, power_w: f64, t_amb_c: f64) -> f64;
+
+    /// Forget the state: the plant re-initializes at ambient on the next
+    /// step.
+    fn reset(&mut self);
+
+    /// Backend-style identifier for logs and bench JSON.
+    fn name(&self) -> &'static str;
+}
+
+/// A Foster RC chain with per-stage node state.
+#[derive(Clone, Debug)]
+pub struct RcNetwork {
+    stages: Vec<RcStage>,
+    /// Ambient share per stage: `R_i / ΣR` (sums to 1).
+    w: Vec<f64>,
+    /// Per-stage node state `y_i` (°C); junction = `Σ y_i`. `None` until
+    /// the first step/settle initializes it at the ambient.
+    y: Option<Vec<f64>>,
+}
+
+impl RcNetwork {
+    /// Network from explicit stages. Panics on an empty chain or a stage
+    /// with non-positive `r` / `tau_ms` (programming error — the session
+    /// validates user-facing specs before construction).
+    pub fn from_stages(stages: Vec<RcStage>) -> RcNetwork {
+        assert!(!stages.is_empty(), "RC network needs at least one stage");
+        for s in &stages {
+            assert!(
+                s.r.is_finite() && s.r > 0.0 && s.tau_ms.is_finite() && s.tau_ms > 0.0,
+                "invalid RC stage r={} tau_ms={}",
+                s.r,
+                s.tau_ms
+            );
+        }
+        let r_total: f64 = stages.iter().map(|s| s.r).sum();
+        let w = stages.iter().map(|s| s.r / r_total).collect();
+        RcNetwork {
+            stages,
+            w,
+            y: None,
+        }
+    }
+
+    /// Single-pole network: the lumped `θ_JA` plant with time constant
+    /// `tau_ms`. Its ODE is exactly the legacy first-order plant
+    /// `τ·dT/dt = (T_amb + θ_JA·P) − T`, and it settles bit-identically to
+    /// the steady-state `T_amb + θ_JA·P` model.
+    pub fn single(theta_ja: f64, tau_ms: f64) -> RcNetwork {
+        RcNetwork::from_stages(vec![RcStage {
+            r: theta_ja,
+            tau_ms,
+        }])
+    }
+
+    /// Canonical `n`-stage ladder: total resistance `θ_JA`, dominant pole
+    /// at `tau_ms`, each further stage a factor 4 faster carrying half the
+    /// remaining resistance (`R_i ∝ 2^{-i}`, `τ_i = τ/4^i`). `n = 1` is
+    /// exactly [`single`](Self::single).
+    pub fn foster(theta_ja: f64, tau_ms: f64, n: usize) -> RcNetwork {
+        assert!(n >= 1, "foster network needs at least one stage");
+        if n == 1 {
+            return RcNetwork::single(theta_ja, tau_ms);
+        }
+        let norm: f64 = (0..n).map(|i| 0.5f64.powi(i as i32)).sum();
+        let stages = (0..n)
+            .map(|i| RcStage {
+                r: theta_ja * 0.5f64.powi(i as i32) / norm,
+                tau_ms: tau_ms * 0.25f64.powi(i as i32),
+            })
+            .collect();
+        RcNetwork::from_stages(stages)
+    }
+
+    /// Total junction-to-ambient resistance `ΣR_i` (°C/W) — the network's
+    /// effective θ_JA.
+    pub fn r_total(&self) -> f64 {
+        self.stages.iter().map(|s| s.r).sum()
+    }
+
+    /// Slowest pole (ms) — the dominant thermal time constant.
+    pub fn tau_dominant_ms(&self) -> f64 {
+        self.stages
+            .iter()
+            .map(|s| s.tau_ms)
+            .fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Number of Foster stages.
+    pub fn n_stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Current junction temperature (°C). Before the first step the plant
+    /// sits at ambient, so `t_amb_c` is returned; once integrated the state
+    /// carries its own ambient reference and `t_amb_c` is ignored.
+    pub fn temperature(&self, t_amb_c: f64) -> f64 {
+        match &self.y {
+            Some(y) => y.iter().sum(),
+            None => t_amb_c,
+        }
+    }
+
+    /// Steady-state junction temperature of `(power_w, t_amb_c)` without
+    /// touching the state — the same float ops as
+    /// [`settle`](ThermalDynamics::settle).
+    pub fn steady_state_c(&self, power_w: f64, t_amb_c: f64) -> f64 {
+        self.stages
+            .iter()
+            .zip(&self.w)
+            .map(|(s, w)| w * t_amb_c + power_w * s.r)
+            .sum()
+    }
+
+    /// Per-stage target `w_i·T_amb + P·R_i` at index `i`.
+    fn target(&self, i: usize, power_w: f64, t_amb_c: f64) -> f64 {
+        self.w[i] * t_amb_c + power_w * self.stages[i].r
+    }
+}
+
+impl ThermalDynamics for RcNetwork {
+    fn step(&mut self, power_w: f64, t_amb_c: f64, dt_ms: f64) -> f64 {
+        // first contact initializes the node states at the ambient
+        if self.y.is_none() {
+            self.y = Some(self.w.iter().map(|w| w * t_amb_c).collect());
+        }
+        // non-positive / NaN steps leave the state untouched (a negative
+        // exponent would *amplify* the state — never integrate backwards)
+        if dt_ms > 0.0 && dt_ms.is_finite() {
+            for i in 0..self.stages.len() {
+                let tgt = self.target(i, power_w, t_amb_c);
+                let tau = self.stages[i].tau_ms;
+                let y = &mut self.y.as_mut().expect("initialized above")[i];
+                *y = tgt + (*y - tgt) * (-dt_ms / tau).exp();
+            }
+        }
+        self.y.as_ref().expect("initialized above").iter().sum()
+    }
+
+    fn predict(&self, power_w: f64, t_amb_c: f64, dt_ms: f64) -> f64 {
+        let integrate = dt_ms > 0.0 && dt_ms.is_finite();
+        (0..self.stages.len())
+            .map(|i| {
+                let y_i = match &self.y {
+                    Some(y) => y[i],
+                    None => self.w[i] * t_amb_c,
+                };
+                if integrate {
+                    let tgt = self.target(i, power_w, t_amb_c);
+                    tgt + (y_i - tgt) * (-dt_ms / self.stages[i].tau_ms).exp()
+                } else {
+                    y_i
+                }
+            })
+            .sum()
+    }
+
+    fn settle(&mut self, power_w: f64, t_amb_c: f64) -> f64 {
+        let y: Vec<f64> = (0..self.stages.len())
+            .map(|i| self.target(i, power_w, t_amb_c))
+            .collect();
+        let t = y.iter().sum();
+        self.y = Some(y);
+        t
+    }
+
+    fn reset(&mut self) {
+        self.y = None;
+    }
+
+    fn name(&self) -> &'static str {
+        "foster-rc"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Xoshiro256;
+
+    #[test]
+    fn single_stage_settle_is_bit_identical_to_lumped_theta_ja() {
+        // the acceptance-criterion differential: for random (P, T_amb, θ)
+        // draws, settle() performs the exact float ops of the lumped model
+        // (w = r/r = 1.0 exactly, so y = 1.0·T_amb + P·R = T_amb + θ·P)
+        let mut rng = Xoshiro256::new(0x7C_2A57);
+        for _ in 0..500 {
+            let theta = rng.uniform(0.5, 20.0);
+            let p = rng.uniform(0.01, 5.0);
+            let t_amb = rng.uniform(-10.0, 70.0);
+            let mut net = RcNetwork::single(theta, 3000.0);
+            let settled = net.settle(p, t_amb);
+            let lumped = t_amb + theta * p;
+            assert_eq!(
+                settled.to_bits(),
+                lumped.to_bits(),
+                "θ={theta} P={p} T_amb={t_amb}: {settled} vs {lumped}"
+            );
+            assert_eq!(net.steady_state_c(p, t_amb).to_bits(), lumped.to_bits());
+        }
+    }
+
+    #[test]
+    fn multi_stage_settle_preserves_total_theta() {
+        let mut rng = Xoshiro256::new(0xF057E2);
+        for n in 1..=5usize {
+            for _ in 0..100 {
+                let theta = rng.uniform(1.0, 15.0);
+                let p = rng.uniform(0.05, 2.0);
+                let t_amb = rng.uniform(0.0, 65.0);
+                let mut net = RcNetwork::foster(theta, 3000.0, n);
+                let settled = net.settle(p, t_amb);
+                assert!(
+                    (settled - (t_amb + theta * p)).abs() < 1e-9,
+                    "n={n}: settle {settled} vs analytic {}",
+                    t_amb + theta * p
+                );
+                assert!((net.r_total() - theta).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn step_follows_the_exact_exponential() {
+        let mut net = RcNetwork::single(12.0, 3000.0);
+        // after exactly one time constant the rise is 1 − e^{-1}
+        let t = net.step(0.5, 40.0, 3000.0);
+        let expected = 40.0 + 12.0 * 0.5 * (1.0 - (-1.0f64).exp());
+        assert!((t - expected).abs() < 1e-9, "{t} vs {expected}");
+        // two half-steps equal one full step (exact integrator property)
+        let mut half = RcNetwork::single(12.0, 3000.0);
+        half.step(0.5, 40.0, 1500.0);
+        let t2 = half.step(0.5, 40.0, 1500.0);
+        assert!((t - t2).abs() < 1e-9, "split-step diverged: {t} vs {t2}");
+    }
+
+    #[test]
+    fn ambient_changes_are_low_passed_like_the_first_order_plant() {
+        // an ambient cliff must NOT teleport the junction: it reaches it
+        // through the same thermal mass the power does
+        let mut net = RcNetwork::foster(12.0, 3000.0, 2);
+        net.settle(0.5, 60.0); // junction at 66 °C
+        let just_after = net.step(0.5, 20.0, 1.0); // ambient drops 40 °C
+        assert!(
+            just_after > 60.0,
+            "junction teleported with the ambient: {just_after}"
+        );
+        // ...but eventually follows it down to the new steady state
+        let later = net.step(0.5, 20.0, 120_000.0);
+        assert!((later - 26.0).abs() < 1e-6, "did not track ambient: {later}");
+    }
+
+    #[test]
+    fn single_stage_step_matches_the_legacy_euler_plant_in_the_limit() {
+        // the single-pole ODE is the legacy first-order plant; fine-step
+        // Euler must converge to the exact integrator
+        let (theta, tau, p) = (12.0, 3000.0, 0.45);
+        let mut net = RcNetwork::single(theta, tau);
+        let mut t_euler = 25.0f64;
+        let dt = 1.0;
+        let mut exact = 25.0;
+        for k in 0..20_000 {
+            // ambient ramps 25 → 45 over the window
+            let t_amb = 25.0 + 20.0 * (k as f64 / 20_000.0);
+            exact = net.step(p, t_amb, dt);
+            let t_ss = t_amb + theta * p;
+            t_euler += (t_ss - t_euler) * (dt / tau).min(1.0);
+        }
+        assert!(
+            (exact - t_euler).abs() < 0.05,
+            "exact {exact} vs euler {t_euler}"
+        );
+    }
+
+    #[test]
+    fn step_is_unconditionally_stable_and_monotone_toward_settle() {
+        let mut rng = Xoshiro256::new(0x57AB1E);
+        for n in [1usize, 2, 4] {
+            let mut net = RcNetwork::foster(9.0, 2500.0, n);
+            let settle = net.steady_state_c(0.8, 30.0);
+            let mut prev = 30.0;
+            for _ in 0..200 {
+                let dt = rng.uniform(1.0, 50_000.0); // up to 20 × τ
+                let t = net.step(0.8, 30.0, dt);
+                assert!(
+                    t >= prev - 1e-12 && t <= settle + 1e-9,
+                    "n={n}: {t} escaped [{prev}, {settle}]"
+                );
+                prev = t;
+            }
+            assert!((prev - settle).abs() < 1e-6, "did not converge: {prev}");
+        }
+    }
+
+    #[test]
+    fn zero_negative_and_nan_steps_leave_state_untouched() {
+        let mut net = RcNetwork::foster(12.0, 3000.0, 3);
+        net.step(0.5, 40.0, 1000.0);
+        let before = net.temperature(40.0);
+        for dt in [0.0, -5.0, f64::NAN, f64::INFINITY] {
+            let t = net.step(0.5, 40.0, dt);
+            assert_eq!(t.to_bits(), before.to_bits(), "dt={dt} mutated the state");
+        }
+    }
+
+    #[test]
+    fn predict_matches_step_without_mutation() {
+        let mut rng = Xoshiro256::new(0x9E7D1C);
+        let mut net = RcNetwork::foster(12.0, 3000.0, 2);
+        net.step(0.3, 45.0, 700.0);
+        for _ in 0..50 {
+            let dt = rng.uniform(0.0, 20_000.0);
+            let peek = net.predict(0.3, 45.0, dt);
+            let frozen = net.temperature(45.0);
+            let mut fork = net.clone();
+            let stepped = fork.step(0.3, 45.0, dt);
+            assert_eq!(peek.to_bits(), stepped.to_bits(), "dt={dt}");
+            assert_eq!(net.temperature(45.0).to_bits(), frozen.to_bits());
+        }
+        // predicting from a fresh (reset) plant starts at ambient (within
+        // the Σw_i·T_amb rounding of the stage split)
+        net.reset();
+        assert!((net.predict(0.3, 45.0, 0.0) - 45.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cooling_decays_back_to_ambient_and_reset_is_instant() {
+        let mut net = RcNetwork::foster(12.0, 3000.0, 2);
+        net.settle(0.5, 40.0);
+        // power removed, ambient lowered: the junction relaxes to the new
+        // ambient through the poles
+        let t = net.step(0.0, 25.0, 120_000.0);
+        assert!((t - 25.0).abs() < 1e-3, "did not cool: {t}");
+        net.settle(0.5, 40.0);
+        net.reset();
+        assert_eq!(net.temperature(40.0), 40.0);
+    }
+
+    #[test]
+    fn foster_ladder_shape() {
+        let net = RcNetwork::foster(12.0, 4000.0, 3);
+        assert_eq!(net.n_stages(), 3);
+        assert!((net.r_total() - 12.0).abs() < 1e-12);
+        assert_eq!(net.tau_dominant_ms(), 4000.0);
+        // one-stage ladder is exactly the single-pole network
+        let a = RcNetwork::foster(7.0, 1234.0, 1);
+        let b = RcNetwork::single(7.0, 1234.0);
+        assert_eq!(a.stages, b.stages);
+        assert_eq!(a.name(), "foster-rc");
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid RC stage")]
+    fn invalid_stage_is_rejected() {
+        RcNetwork::from_stages(vec![RcStage { r: -1.0, tau_ms: 10.0 }]);
+    }
+}

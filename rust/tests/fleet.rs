@@ -6,9 +6,11 @@
 //! differential tests pinning the event-driven planner and policy-engine
 //! executor to the pre-refactor paths, three-way policy invariants
 //! (overscaled ≤ dynamic ≤ static energy; modeled errors only where the
-//! error model allows them), and hand-rolled property tests (proptest is
+//! error model allows them), hand-rolled property tests (proptest is
 //! not vendored offline; cases are seeded + enumerated) for trace
-//! interpolation: monotone-bounded between breakpoints.
+//! interpolation: monotone-bounded between breakpoints, and the transient
+//! (RC thermal-network) mode: bit-identical serial/parallel runs, changed
+//! physics, unchanged zero-violation guarantee.
 
 use std::sync::Arc;
 
@@ -25,11 +27,22 @@ use thermovolt::util::Xoshiro256;
 /// Small fleet that exercises heterogeneity + queueing but stays fast:
 /// one benchmark (single P&R + LUT build), short horizon.
 fn small_fleet(scenario: Scenario, devices: usize, jobs: usize, seed: u64) -> Fleet {
+    small_fleet_at(scenario, devices, jobs, seed, false)
+}
+
+fn small_fleet_at(
+    scenario: Scenario,
+    devices: usize,
+    jobs: usize,
+    seed: u64,
+    transient: bool,
+) -> Fleet {
     let mut fcfg = FleetConfig::new(devices, jobs, scenario);
     fcfg.seed = seed;
     fcfg.horizon_ms = 240_000.0;
     fcfg.benches = vec!["mkPktMerge".to_string()];
     fcfg.lut_step_c = 25.0;
+    fcfg.transient = transient;
     Fleet::build(fcfg, &Config::new()).expect("fleet build")
 }
 
@@ -167,6 +180,7 @@ fn scheduler_respects_arrivals_eligibility_and_capacity() {
 // ---------------------------------------------------------------------
 
 #[test]
+#[allow(deprecated)] // the legacy paths are the differential references
 fn policy_engine_reproduces_legacy_executor_bit_for_bit() {
     // same plan through both executors: the refactor must not change a
     // single bit of the static/dynamic telemetry
@@ -203,6 +217,7 @@ fn policy_engine_reproduces_legacy_executor_bit_for_bit() {
 }
 
 #[test]
+#[allow(deprecated)] // the legacy planner is the differential reference
 fn event_planner_matches_legacy_planner_when_uncontended() {
     // more devices than jobs ⇒ no queueing, no migrations — the event pass
     // must reduce to the legacy placement exactly
@@ -218,6 +233,68 @@ fn event_planner_matches_legacy_planner_when_uncontended() {
         assert_eq!(n.start_ms.to_bits(), l.start_ms.to_bits());
         assert!(!n.migrated);
     }
+}
+
+// ---------------------------------------------------------------------
+// transient (RC thermal-network) fleet mode
+// ---------------------------------------------------------------------
+
+#[test]
+fn transient_fleet_is_bit_identical_across_worker_counts_and_rebuilds() {
+    // the determinism contract must survive the RC plant: placement stays
+    // a pure function of the traces and each job a pure function of its
+    // assignment, so serial and parallel transient runs cannot diverge
+    let fleet = small_fleet_at(Scenario::HeatWave, 4, 10, 0x7247_51E7, true);
+    let plan = fleet.plan();
+    let t1 = FleetTelemetry::aggregate(4, fleet.execute(&plan, 1));
+    let t4 = FleetTelemetry::aggregate(4, fleet.execute(&plan, 4));
+    let t8 = FleetTelemetry::aggregate(4, fleet.execute(&plan, 8));
+    assert_eq!(t1.fingerprint(), t4.fingerprint(), "1 vs 4 workers diverged");
+    assert_eq!(t1.fingerprint(), t8.fingerprint(), "1 vs 8 workers diverged");
+    let again = small_fleet_at(Scenario::HeatWave, 4, 10, 0x7247_51E7, true);
+    let plan2 = again.plan();
+    let t2 = FleetTelemetry::aggregate(4, again.execute(&plan2, 2));
+    assert_eq!(t1.fingerprint(), t2.fingerprint(), "transient rebuild diverged");
+}
+
+#[test]
+fn transient_plant_changes_the_numbers_but_keeps_the_guarantees() {
+    // the same fleet (same seed, same jobs) under both plants: thermal
+    // inertia must actually change the simulated physics — while keeping
+    // every job placed and the guardband intact
+    let instant = small_fleet_at(Scenario::HeatWave, 4, 10, 0x1E47_11, false);
+    let transient = small_fleet_at(Scenario::HeatWave, 4, 10, 0x1E47_11, true);
+    let plan_i = instant.plan();
+    let plan_t = transient.plan();
+    assert_eq!(
+        plan_i.assignments.len() + plan_i.unplaceable.len(),
+        plan_t.assignments.len() + plan_t.unplaceable.len(),
+    );
+    let tel_i = FleetTelemetry::aggregate(4, instant.execute(&plan_i, 2));
+    let tel_t = FleetTelemetry::aggregate(4, transient.execute(&plan_t, 2));
+    // different physics ⇒ different energies (bitwise)
+    assert_ne!(
+        tel_i.energy_dyn_j.to_bits(),
+        tel_t.energy_dyn_j.to_bits(),
+        "the RC plant changed nothing"
+    );
+    // both plants keep the zero-violation guarantee: the margin (and, in
+    // transient mode, the predictive guardband key) covers the inertia
+    assert_eq!(tel_i.violations, 0);
+    assert_eq!(tel_t.violations, 0, "transient plant violated the guardband");
+    // heat-wave recovery leaves junctions stranded above the instantaneous
+    // steady state — the overshoot accounting must see it
+    assert!(
+        tel_t.peak_overshoot_c > 0.0,
+        "no transient overshoot recorded over a heat wave"
+    );
+    // the big sink pole means jobs end cooler than the steady state, so
+    // the dynamic scheme must still save energy (sanity: savings band)
+    let saving = tel_t.saving();
+    assert!(
+        (0.05..=0.70).contains(&saving),
+        "transient fleet saving {saving} implausible"
+    );
 }
 
 // ---------------------------------------------------------------------

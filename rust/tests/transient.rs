@@ -1,0 +1,150 @@
+//! Transient ↔ steady-state consistency: the Foster RC network must agree
+//! with the steady-state thermal stack wherever their domains overlap.
+//!
+//! * single-stage `settle()` is **bit-identical** to the lumped
+//!   `T_amb + θ_JA·P` model (the acceptance-criterion differential);
+//! * `settle()` matches the calibrated SOR backend's *mean* temperature
+//!   over random power maps (the backend's calibration makes the mean rise
+//!   exactly θ_JA·P_total, so the lumped network is its envelope);
+//! * the online controller's energy under the RC plant is insensitive to
+//!   the integration step (the exact integrator has no dt error for
+//!   constant inputs), and stays violation-free across a dt sweep.
+
+use std::sync::Arc;
+
+use thermovolt::config::ThermalConfig;
+use thermovolt::coordinator::{DynamicController, PlantModel, Tsd};
+use thermovolt::flow::dynamic::{LutEntry, VoltageLut};
+use thermovolt::thermal::{NativeSolver, RcNetwork, ThermalDynamics, ThermalGrid};
+use thermovolt::util::stats;
+use thermovolt::util::Xoshiro256;
+
+#[test]
+fn prop_single_stage_settle_is_bit_identical_to_the_lumped_backend_model() {
+    // random (P, T_amb, θ_JA) draws: the single-stage network's settling
+    // point must reproduce the steady-state θ_JA model's float ops exactly
+    let mut rng = Xoshiro256::new(0x5E771E);
+    for _ in 0..2000 {
+        let theta = rng.uniform(0.25, 25.0);
+        let p = rng.uniform(1e-3, 8.0);
+        let t_amb = rng.uniform(-20.0, 85.0);
+        let tau = rng.uniform(100.0, 100_000.0);
+        let mut net = RcNetwork::single(theta, tau);
+        let settled = net.settle(p, t_amb);
+        let lumped = t_amb + theta * p;
+        assert_eq!(
+            settled.to_bits(),
+            lumped.to_bits(),
+            "θ={theta} P={p} T_amb={t_amb}: {settled} != {lumped}"
+        );
+        // and stepping far past every pole converges to the same point
+        net.reset();
+        let stepped = net.step(p, t_amb, 1e9 * tau);
+        assert!((stepped - lumped).abs() < 1e-9, "step(∞) {stepped} vs {lumped}");
+    }
+}
+
+#[test]
+fn settle_matches_the_sor_backend_mean_over_random_power_maps() {
+    // the SOR backend is calibrated so mean(ΔT) = θ_JA · P_total holds for
+    // any power shape; the lumped network must land on the same mean
+    let mut rng = Xoshiro256::new(0xB0A7E5);
+    for round in 0..6 {
+        let theta = rng.uniform(2.0, 12.0);
+        let p_total = rng.uniform(0.1, 2.0);
+        let t_amb = rng.uniform(10.0, 60.0);
+        let c = ThermalConfig {
+            theta_ja: theta,
+            ..Default::default()
+        };
+        let grid = ThermalGrid::calibrated(32, 32, &c);
+        let solver = NativeSolver::new(grid, &c);
+        let n = 32 * 32;
+        let mut power: Vec<f64> = (0..n).map(|_| rng.uniform(0.0, 1.0)).collect();
+        let sum: f64 = power.iter().sum();
+        for p in &mut power {
+            *p *= p_total / sum;
+        }
+        let map = solver.solve(&power, t_amb);
+        let mean = stats::mean(&map);
+        for stages in [1usize, 3] {
+            let mut net = RcNetwork::foster(theta, 3000.0, stages);
+            let settled = net.settle(p_total, t_amb);
+            assert!(
+                (settled - mean).abs() < 0.05 * p_total.max(1.0),
+                "round {round} stages {stages}: settle {settled} vs SOR mean {mean}"
+            );
+        }
+    }
+}
+
+fn toy_lut() -> VoltageLut {
+    VoltageLut {
+        entries: vec![
+            LutEntry { t_junct: 45.0, v_core: 0.68, v_bram: 0.80, power: 0.3 },
+            LutEntry { t_junct: 65.0, v_core: 0.72, v_bram: 0.86, power: 0.4 },
+            LutEntry { t_junct: 90.0, v_core: 0.76, v_bram: 0.92, power: 0.5 },
+        ],
+        v_core_nom: 0.80,
+        v_bram_nom: 0.95,
+    }
+}
+
+fn toy_power(vc: f64, vb: f64, tj: f64) -> f64 {
+    0.5 * (vc * vc / 0.64) * (0.015 * (tj - 25.0)).exp() * 0.7 + 0.1 * (vb * vb / 0.9025)
+}
+
+fn rc_controller() -> DynamicController<fn(f64, f64, f64) -> f64> {
+    DynamicController {
+        lut: Arc::new(toy_lut()),
+        theta_ja: 12.0,
+        tau_ms: 3000.0,
+        margin: 5.0,
+        tsd: Tsd::default(),
+        plant: PlantModel::rc(RcNetwork::foster(12.0, 3000.0, 2)),
+        power_fn: toy_power,
+    }
+}
+
+#[test]
+fn controller_energy_is_dt_insensitive_under_the_exact_integrator() {
+    // the transient dt sweep that surfaced the Regulator/Tsd edge cases:
+    // across a 32× range of control periods the energy integral moves by
+    // a few percent at most, and the guardband holds at every step size
+    let trace = vec![(0.0, 25.0), (90_000.0, 62.0), (180_000.0, 30.0)];
+    let reference = rc_controller().run_stats(&trace, 1.0, 10_000.0).unwrap().1;
+    assert_eq!(reference.violations, 0);
+    for dt in [0.5, 2.0, 8.0, 16.0] {
+        let stats = rc_controller().run_stats(&trace, dt, 10_000.0).unwrap().1;
+        assert_eq!(stats.violations, 0, "dt={dt}: guardband violated");
+        let rel = (stats.energy_j - reference.energy_j).abs() / reference.energy_j;
+        assert!(rel < 0.05, "dt={dt}: energy drifted {rel} from the 1 ms run");
+        assert!(
+            (stats.peak_t_junct - reference.peak_t_junct).abs() < 2.0,
+            "dt={dt}: peak T diverged"
+        );
+    }
+}
+
+#[test]
+fn transient_overshoot_appears_on_fast_ambient_falls_and_not_on_rises() {
+    // pure heat-up: the junction approaches the settle point from below,
+    // so the overshoot accounting must stay at zero
+    let rise = vec![(0.0, 25.0), (120_000.0, 25.0)];
+    let s = rc_controller().run_stats(&rise, 1.0, 10_000.0).unwrap().1;
+    assert!(
+        s.peak_overshoot_c < 0.6,
+        "steady ambient produced overshoot {}",
+        s.peak_overshoot_c
+    );
+    // a cliff-drop in ambient leaves the junction stranded above the new
+    // steady state by thermal inertia — that gap is the overshoot
+    let cliff = vec![(0.0, 60.0), (60_000.0, 60.0), (61_000.0, 20.0), (120_000.0, 20.0)];
+    let s = rc_controller().run_stats(&cliff, 1.0, 10_000.0).unwrap().1;
+    assert!(
+        s.peak_overshoot_c > 10.0,
+        "a 40 C ambient cliff must strand the junction, got {}",
+        s.peak_overshoot_c
+    );
+    assert_eq!(s.violations, 0, "overshoot must still be guardband-safe");
+}

@@ -31,6 +31,13 @@
 //! fleet twice — instantaneous vs transient plant — emitting the
 //! migration/energy deltas to `BENCH_transient.json` (serial vs parallel
 //! fingerprints hard-checked with transients enabled).
+//!
+//! [`run_faults`] is the undervolt fault-injection companion: the per-unit
+//! shmoo campaign (1-worker vs 4-worker guardband fingerprints
+//! hard-checked), the accuracy-vs-rail cliff, then the *same* fleet under
+//! the fixed and the measured margins — the measured run must come in at
+//! lower dynamic energy with zero violations and zero injected faults —
+//! emitting `BENCH_faults.json`.
 
 use std::path::Path;
 use std::time::Instant;
@@ -40,9 +47,10 @@ use crate::fleet::policy::PolicyKind;
 use crate::fleet::telemetry::FleetTelemetry;
 use crate::fleet::trace::Scenario;
 use crate::fleet::{Fleet, FleetConfig};
+use crate::faults::AccuracyPoint;
 use crate::flow::{
     Alg1Request, Alg2Request, Effort, Fidelity, FlowSession, LutRequest, LutSpec,
-    TransientRequest,
+    ShmooRequest, TransientRequest,
 };
 use crate::thermal::{RcNetwork, ThermalDynamics};
 
@@ -525,6 +533,196 @@ pub fn run_transient(
     Ok(s)
 }
 
+/// Measured numbers of the fault-injection / guardband bench
+/// (`BENCH_faults.json`).
+#[derive(Clone, Debug, Default)]
+pub struct FaultsBenchSummary {
+    pub quick: bool,
+    pub bench: String,
+    /// Virtual units the shmoo characterized.
+    pub devices: usize,
+    pub corners: usize,
+    pub shmoo_wall_s: f64,
+    /// Total fault-population draws across the campaign.
+    pub shmoo_probes: usize,
+    pub margin_mean_c: f64,
+    pub margin_worst_c: f64,
+    pub capped_units: usize,
+    /// The fixed sensor margin the measured ones replace.
+    pub fixed_margin_c: f64,
+    /// Hex guardband-store fingerprint (string in the JSON — u64 does not
+    /// survive a double round-trip).
+    pub store_fingerprint: u64,
+    /// 1-worker vs 4-worker campaign produced bit-identical stores.
+    pub campaign_fingerprint_match: bool,
+    /// BRAM bit-flip rate (faults/bit/s) at the bottom of the accuracy
+    /// sweep (below the voltage grid's floor) and at its top.
+    pub rate_at_sweep_floor: f64,
+    pub rate_at_sweep_top: f64,
+    /// Highest BRAM rail with LeNet accuracy below 50 % (−1 = no cliff in
+    /// the sweep), unprotected and with the deepest layer protected.
+    pub cliff_v_bram: f64,
+    pub cliff_v_bram_protected: f64,
+    pub fleet_devices: usize,
+    pub fleet_jobs: usize,
+    pub fleet_energy_fixed_j: f64,
+    pub fleet_energy_measured_j: f64,
+    /// `1 − measured/fixed` dynamic-policy energy.
+    pub fleet_energy_saving: f64,
+    pub fleet_violations: u64,
+    pub fleet_injected_faults: u64,
+    pub fleet_fingerprint_match: bool,
+}
+
+/// Fault-injection / guardband bench: (1) the per-unit undervolt shmoo
+/// through `FlowSession::shmoo`, run with 1 worker *and* 4 workers and the
+/// guardband stores hard-checked bit-identical; (2) the accuracy-vs-rail
+/// cliff with and without critical-layer protection; (3) the same diurnal
+/// fleet under the fixed and the measured margins — same seed, same jobs —
+/// where the measured run must spend strictly less dynamic energy with
+/// zero guardband violations and zero injected faults. Summary in `out`
+/// (`BENCH_faults.json`).
+pub fn run_faults(
+    cfg_in: &Config,
+    opts: &BenchOpts,
+    out: &Path,
+) -> anyhow::Result<FaultsBenchSummary> {
+    let (devices, corners, lut_step) = if opts.quick { (4, 3, 25.0) } else { (8, 5, 10.0) };
+    let mut s = FaultsBenchSummary {
+        quick: opts.quick,
+        bench: opts.bench.clone(),
+        devices,
+        corners,
+        ..FaultsBenchSummary::default()
+    };
+
+    // ---- shmoo campaign via the session (the production path) ----
+    println!("[bench] faults: shmoo of {} units on {}…", devices, opts.bench);
+    let mut session = FlowSession::with_effort(cfg_in.clone(), Effort::Quick)?;
+    let req = |workers: usize| ShmooRequest {
+        devices,
+        corners,
+        lut_step_c: lut_step,
+        workers,
+        mc_samples: if opts.quick { 200 } else { 400 },
+        ..ShmooRequest::new(&opts.bench)
+    };
+    let t0 = Instant::now();
+    let o = session.shmoo(req(1))?;
+    s.shmoo_wall_s = t0.elapsed().as_secs_f64();
+    s.shmoo_probes = o.results.iter().map(|r| r.probes).sum();
+    s.margin_mean_c = o.results.iter().map(|r| r.margin_c).sum::<f64>()
+        / o.results.len().max(1) as f64;
+    s.margin_worst_c = o.results.iter().map(|r| r.margin_c).fold(0.0, f64::max);
+    s.capped_units = o.results.iter().filter(|r| r.capped).count();
+    s.fixed_margin_c = o.fixed_margin_c;
+    s.store_fingerprint = o.store.fingerprint();
+    // the campaign must be bit-identical for any worker count
+    let o4 = session.shmoo(req(4))?;
+    s.campaign_fingerprint_match = o.store.fingerprint() == o4.store.fingerprint();
+    anyhow::ensure!(
+        s.campaign_fingerprint_match,
+        "4-worker shmoo campaign diverged from the serial run"
+    );
+    println!(
+        "[bench] faults: shmoo {:.2} s, {} probes, margins mean {:.2} / worst {:.2} C \
+         (fixed {:.1} C), 1-vs-4-worker stores bit-identical",
+        s.shmoo_wall_s, s.shmoo_probes, s.margin_mean_c, s.margin_worst_c, s.fixed_margin_c
+    );
+
+    // ---- accuracy-vs-rail cliff ----
+    let cliff = |pts: &[AccuracyPoint]| {
+        pts.iter()
+            .rev()
+            .find(|p| p.lenet_acc < 0.5)
+            .map_or(-1.0, |p| p.v_bram)
+    };
+    if let (Some(lo), Some(hi)) = (o.accuracy.first(), o.accuracy.last()) {
+        s.rate_at_sweep_floor = lo.rate;
+        s.rate_at_sweep_top = hi.rate;
+    }
+    anyhow::ensure!(
+        s.rate_at_sweep_top == 0.0,
+        "fault rate at the top of the rail sweep is {:e}, expected exactly 0 — \
+         commanded rails must sit above the wall",
+        s.rate_at_sweep_top
+    );
+    s.cliff_v_bram = cliff(&o.accuracy);
+    s.cliff_v_bram_protected = cliff(&o.accuracy_protected);
+
+    // ---- the same fleet under fixed vs measured margins ----
+    let (fdevices, fjobs, horizon_ms) = if opts.quick {
+        (3, 6, 240_000.0)
+    } else {
+        (6, 18, 600_000.0)
+    };
+    s.fleet_devices = fdevices;
+    s.fleet_jobs = fjobs;
+    let build = |measured: bool| -> anyhow::Result<Fleet> {
+        let mut fcfg = FleetConfig::new(fdevices, fjobs, Scenario::Diurnal);
+        fcfg.benches = vec![opts.bench.clone()];
+        fcfg.horizon_ms = horizon_ms;
+        // fine LUT rows so a 2 °C margin difference actually changes the
+        // commanded rails instead of landing in the same row
+        fcfg.lut_step_c = 2.0;
+        fcfg.measured_guardbands = measured;
+        Fleet::build(fcfg, cfg_in)
+    };
+    println!("[bench] faults: fleet under the fixed margins…");
+    let fixed = build(false)?;
+    let plan_f = fixed.plan();
+    let tel_f = FleetTelemetry::aggregate(fdevices, fixed.execute(&plan_f, 1))
+        .with_unplaceable(plan_f.unplaceable.len());
+    println!("[bench] faults: the same fleet under the measured margins…");
+    let measured = build(true)?;
+    let plan_m = measured.plan();
+    let serial = measured.execute(&plan_m, 1);
+    let workers = measured.effective_workers();
+    let parallel = measured.execute(&plan_m, workers);
+    let tel_m_serial = FleetTelemetry::aggregate(fdevices, serial);
+    let tel_m = FleetTelemetry::aggregate(fdevices, parallel)
+        .with_unplaceable(plan_m.unplaceable.len());
+    s.fleet_fingerprint_match = tel_m_serial.fingerprint() == tel_m.fingerprint();
+    anyhow::ensure!(
+        s.fleet_fingerprint_match,
+        "measured-guardband fleet telemetry diverged between serial and {workers}-worker runs"
+    );
+    s.fleet_energy_fixed_j = tel_f.energy_dyn_j;
+    s.fleet_energy_measured_j = tel_m.energy_dyn_j;
+    s.fleet_energy_saving = 1.0 - tel_m.energy_dyn_j / tel_f.energy_dyn_j.max(1e-12);
+    s.fleet_violations = tel_m.violations;
+    s.fleet_injected_faults = tel_m.injected_faults;
+    anyhow::ensure!(
+        tel_m.violations == 0 && tel_m.injected_faults == 0,
+        "measured-guardband fleet: {} violations, {} injected faults — both must be 0",
+        tel_m.violations,
+        tel_m.injected_faults
+    );
+    anyhow::ensure!(
+        s.fleet_energy_measured_j < s.fleet_energy_fixed_j,
+        "measured margins did not save energy: {:.3} J vs fixed {:.3} J",
+        s.fleet_energy_measured_j,
+        s.fleet_energy_fixed_j
+    );
+    println!(
+        "[bench] faults: dynamic energy {:.1} J fixed → {:.1} J measured ({:.1} % saved), \
+         0 violations, 0 injected faults",
+        s.fleet_energy_fixed_j,
+        s.fleet_energy_measured_j,
+        s.fleet_energy_saving * 100.0
+    );
+
+    let json = faults_to_json(&s);
+    if let Some(dir) = out.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(out, &json)?;
+    println!("[bench] wrote {}", out.display());
+    Ok(s)
+}
+
 fn alg2_identical(a: &crate::flow::Alg2Result, b: &crate::flow::Alg2Result) -> bool {
     a.v_core.to_bits() == b.v_core.to_bits()
         && a.v_bram.to_bits() == b.v_bram.to_bits()
@@ -736,6 +934,60 @@ fn transient_to_json(s: &TransientBenchSummary) -> String {
     )
 }
 
+/// Hand-rolled JSON for the fault-injection bench (same conventions as
+/// [`to_json`]; the store fingerprint is a hex *string* — a u64 does not
+/// survive a round-trip through a JSON double).
+fn faults_to_json(s: &FaultsBenchSummary) -> String {
+    let esc = json_escape;
+    let b = json_bool;
+    format!(
+        concat!(
+            "{{\n",
+            "  \"schema\": \"thermovolt-bench-faults/1\",\n",
+            "  \"quick\": {quick},\n",
+            "  \"bench\": \"{bench}\",\n",
+            "  \"shmoo\": {{ \"devices\": {devices}, \"corners\": {corners}, ",
+            "\"wall_s\": {wall}, \"probes\": {probes}, ",
+            "\"margin_mean_c\": {mmean}, \"margin_worst_c\": {mworst}, ",
+            "\"capped_units\": {capped}, \"fixed_margin_c\": {fixed}, ",
+            "\"store_fingerprint\": \"{fp:#018x}\", ",
+            "\"campaign_fingerprint_match\": {cfm} }},\n",
+            "  \"accuracy\": {{ \"rate_at_sweep_floor\": {rlo}, ",
+            "\"rate_at_sweep_top\": {rhi}, \"cliff_v_bram\": {cliff}, ",
+            "\"cliff_v_bram_protected\": {cliffp} }},\n",
+            "  \"fleet\": {{ \"devices\": {fd}, \"jobs\": {fj}, ",
+            "\"energy_fixed_j\": {ef}, \"energy_measured_j\": {em}, ",
+            "\"energy_saving\": {esv}, \"violations\": {viol}, ",
+            "\"injected_faults\": {inj}, \"fingerprint_match\": {ffm} }}\n",
+            "}}\n"
+        ),
+        quick = b(s.quick),
+        bench = esc(&s.bench),
+        devices = s.devices,
+        corners = s.corners,
+        wall = s.shmoo_wall_s,
+        probes = s.shmoo_probes,
+        mmean = s.margin_mean_c,
+        mworst = s.margin_worst_c,
+        capped = s.capped_units,
+        fixed = s.fixed_margin_c,
+        fp = s.store_fingerprint,
+        cfm = b(s.campaign_fingerprint_match),
+        rlo = s.rate_at_sweep_floor,
+        rhi = s.rate_at_sweep_top,
+        cliff = s.cliff_v_bram,
+        cliffp = s.cliff_v_bram_protected,
+        fd = s.fleet_devices,
+        fj = s.fleet_jobs,
+        ef = s.fleet_energy_fixed_j,
+        em = s.fleet_energy_measured_j,
+        esv = s.fleet_energy_saving,
+        viol = s.fleet_violations,
+        inj = s.fleet_injected_faults,
+        ffm = b(s.fleet_fingerprint_match),
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -795,6 +1047,39 @@ mod tests {
             "\"schedule\"",
             "\"energy\"",
             "\"errors\"",
+        ] {
+            assert!(j.contains(key), "missing {key} in:\n{j}");
+        }
+    }
+
+    #[test]
+    fn faults_json_shape_is_valid_enough() {
+        let s = FaultsBenchSummary {
+            bench: "mkPktMerge".to_string(),
+            devices: 4,
+            corners: 3,
+            store_fingerprint: 0xDEAD_BEEF,
+            campaign_fingerprint_match: true,
+            cliff_v_bram: -1.0,
+            fleet_devices: 3,
+            fleet_jobs: 6,
+            fleet_fingerprint_match: true,
+            ..FaultsBenchSummary::default()
+        };
+        let j = faults_to_json(&s);
+        assert_eq!(
+            j.matches('{').count(),
+            j.matches('}').count(),
+            "unbalanced braces:\n{j}"
+        );
+        for key in [
+            "\"thermovolt-bench-faults/1\"",
+            "\"shmoo\"",
+            "\"accuracy\"",
+            "\"fleet\"",
+            "\"store_fingerprint\": \"0x00000000deadbeef\"",
+            "\"cliff_v_bram\": -1",
+            "\"injected_faults\"",
         ] {
             assert!(j.contains(key), "missing {key} in:\n{j}");
         }

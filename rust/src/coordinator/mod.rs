@@ -5,7 +5,10 @@
 //! reading every ~1 ms [38]), indexes the per-design (T → V_core, V_bram)
 //! lookup table built at configuration time (`flow::dynamic::VoltageLut`),
 //! and programs the on-chip regulator (FIVR-class, VID-stepped, finite slew
-//! [39]). A ~5 °C margin absorbs TSD error and spatial gradients [41].
+//! [39]). A ~5 °C margin absorbs TSD error and spatial gradients [41] —
+//! or, when a [`faults::GuardbandStore`](crate::faults::GuardbandStore)
+//! holds a measured per-unit margin from the undervolt shmoo
+//! (`thermovolt shmoo`), that learned value replaces the fixed one.
 //!
 //! Implemented as a discrete-event simulation over an ambient-temperature
 //! trace: deterministic, testable, and replayable in real time by the
@@ -204,7 +207,9 @@ pub struct DynamicController<F: Fn(f64, f64, f64) -> f64 + Send + Sync> {
     /// Thermal time constant (ms) of the [`PlantModel::FirstOrder`] plant
     /// (the RC plant carries its own poles).
     pub tau_ms: f64,
-    /// Sensor margin (°C).
+    /// Sensor margin (°C). Either the fixed config default or a per-unit
+    /// measured guardband learned by the undervolt shmoo
+    /// ([`faults::GuardbandStore`](crate::faults::GuardbandStore)).
     pub margin: f64,
     pub tsd: Tsd,
     /// Junction-thermal plant the simulation integrates.

@@ -1,0 +1,1310 @@
+//! `faults` — undervolt fault injection and per-unit guardband discovery.
+//!
+//! The flow's closed-form [`crate::flow::overscale::ErrorModel`] prices
+//! timing-violation errors, but Salami et al. show that *reduced-voltage
+//! BRAM faults* behave differently: below a per-device voltage "wall" the
+//! bit-flip rate explodes by decades over a few tens of mV, the flips are
+//! spatially clustered within blocks, and the wall moves with temperature
+//! (hotter is safer — the same inverted temperature dependence the rest of
+//! this crate exploits). "Exceeding Conservative Limits" adds that the wall
+//! position is a *per-unit* property: datasheet guardbands leave margin on
+//! every device that only measurement can reclaim.
+//!
+//! This module turns those observations into a physics-to-policy pipeline:
+//!
+//! 1. **Rate models** ([`BramBitFlip`], [`ConfigCellUpset`] behind the
+//!    [`FaultModel`] trait) — exponential rate curves whose wall position is
+//!    fit against the `chardb` delay surface: the voltage where the fitted
+//!    delay stretch crosses [`WALL_STRETCH`] is where storage cells stop
+//!    holding state. Rates below [`RATE_FLOOR`] truncate to *exactly zero*,
+//!    so nominal-rail operation is structurally fault-free rather than
+//!    "rare at float precision".
+//! 2. **Clustered sampling** ([`Injector`], [`BramMap`], [`FaultSet`]) — a
+//!    Poisson number of clusters lands on a design's placed BRAM blocks;
+//!    each cluster flips a run of adjacent words. Every draw is keyed by an
+//!    explicit seed, so populations are bit-reproducible.
+//! 3. **Workload corruption** ([`accuracy_vs_rail`], [`Protection`]) —
+//!    Monte-Carlo LeNet/HD inference under injected word-corruption rates
+//!    replaces `ml::expected_accuracy`'s closed form and supports the
+//!    critical-layer-protection experiment.
+//! 4. **Guardband discovery** ([`shmoo_device`], [`GuardbandStore`],
+//!    [`campaign`]) — a per-device undervolt shmoo binary-searches the
+//!    minimum safe rail per temperature corner against the device's sampled
+//!    fault population, converts safe rails into a sensor-margin uplift
+//!    against the device's voltage LUTs, and persists the learned margins.
+//!    [`campaign`] runs the shmoo over a fleet with bit-identical results
+//!    for any worker count.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::chardb::{CharTable, ResourceType};
+use crate::config::{ArchConfig, VoltageGrid};
+use crate::flow::design::Design;
+use crate::flow::dynamic::VoltageLut;
+use crate::ml;
+use crate::place::BlockKind;
+use crate::util::{mix64, Xoshiro256};
+
+/// Delay-stretch ratio (vs. the rail's nominal voltage) at which a storage
+/// cell is taken to lose state — the "voltage wall". The chardb delay fit
+/// is extrapolated to find where it crosses this value; stretch 12 sits
+/// decades below any rail Algorithm 1 would command (feasible operating
+/// points live at stretch ≈ 1.3–1.7), so the wall is structurally separated
+/// from commanded rails on the same chardb curve.
+pub const WALL_STRETCH: f64 = 12.0;
+
+/// Sharpening factor applied to the chardb-fit exponential slope. The raw
+/// delay fit softens over the full grid (slope ≈ −6.5/V); measured fault
+/// walls collapse a decade per ~10 mV. Multiplying the fitted slope by this
+/// factor reproduces that cliff while keeping the wall *position* and its
+/// temperature dependence anchored to chardb.
+pub const WALL_SHARPEN: f64 = 35.0;
+
+/// Fault rate (faults/bit/s) exactly at the wall voltage.
+pub const LAMBDA_WALL_BRAM: f64 = 0.1;
+
+/// Configuration-cell upsets are far rarer than BRAM flips at the same
+/// overdrive (config cells are larger and harder to disturb).
+pub const LAMBDA_WALL_CONFIG: f64 = 1e-3;
+
+/// Rates below this truncate to exactly 0.0. The hard cutoff matters:
+/// fleet-wide exposure is ~10^13 bit·s, so any soft exponential tail would
+/// leak nonzero expected faults into nominally safe operation.
+pub const RATE_FLOOR: f64 = 1e-15;
+
+/// Rate ceiling (faults/bit/s) deep below the wall.
+pub const RATE_CAP: f64 = 1.0;
+
+/// Per-unit threshold-voltage shift range (V). Positive shifts move the
+/// wall *up* (a weaker device); the spread matches the per-unit guardband
+/// variation reported by "Exceeding Conservative Limits".
+pub const VTH_SHIFT_LO: f64 = -0.010;
+pub const VTH_SHIFT_HI: f64 = 0.030;
+
+/// Clearance added above the lowest sampled-clean level when reporting a
+/// safe rail. One probe soak cannot bound the asymptotic rate; 40 mV of
+/// standoff puts the commanded rail in the structurally-zero region.
+pub const WALL_CLEARANCE_V: f64 = 0.04;
+
+/// Cap on the expected fault count of a single population draw. Probes at
+/// deeply unsafe levels would otherwise allocate millions of sites just to
+/// report "dirty".
+const MAX_EXPECTED: f64 = 65_536.0;
+
+/// Temperatures at which the rate model is fit; the wall interpolates
+/// linearly between them (and clamps outside).
+const T_FIT_LO: f64 = 25.0;
+const T_FIT_HI: f64 = 100.0;
+
+/// BRAM read-buffer lifetime (s) — how long a word sits exposed before it
+/// is consumed, for converting faults/bit/s into a per-read corruption
+/// probability.
+pub const BUFFER_LIFETIME_S: f64 = 1e-3;
+
+/// Salt deriving each unit's process-variation (threshold-shift) stream
+/// from a campaign or fleet seed. Kept apart from the fleet's roster RNG so
+/// adding the fault subsystem never perturbs an existing roster.
+pub const VTH_SEED_SALT: u64 = 0x7157_5EED_D00D_0001;
+
+/// Salt deriving each unit's shmoo probe stream from a campaign seed.
+pub const SHMOO_SEED_SALT: u64 = 0x7157_5EED_D00D_0002;
+
+/// Salt deriving each job's fault-population seed from the fleet seed.
+pub const JOB_FAULT_SALT: u64 = 0x7157_5EED_D00D_0003;
+
+// ---------------------------------------------------------------------------
+// fault specification
+// ---------------------------------------------------------------------------
+
+/// Knobs of the fault injector shared by the shmoo and the fleet campaign.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultSpec {
+    /// Mean spatial cluster size (bits per upset event). Salami et al.
+    /// observe clustered, not independent, flips.
+    pub cluster_mean: f64,
+    /// Soak time (s) each shmoo probe represents.
+    pub exposure_s: f64,
+    /// Independent population draws per probe point; a level counts as
+    /// clean only if every draw is empty.
+    pub samples: usize,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec {
+            cluster_mean: 4.0,
+            exposure_s: 3600.0,
+            samples: 4,
+        }
+    }
+}
+
+impl FaultSpec {
+    /// Validate; returns a human-readable reason on the first bad field.
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.cluster_mean.is_finite() || self.cluster_mean < 1.0 {
+            return Err(format!("cluster_mean {} not in [1, ∞)", self.cluster_mean));
+        }
+        if !self.exposure_s.is_finite() || self.exposure_s <= 0.0 {
+            return Err(format!("exposure_s {} must be finite and > 0", self.exposure_s));
+        }
+        if self.samples == 0 || self.samples > 64 {
+            return Err(format!("samples {} not in 1..=64", self.samples));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// rate models
+// ---------------------------------------------------------------------------
+
+/// Exponential fit of the delay-stretch curve at one temperature, reduced
+/// to the two numbers the rate model needs.
+#[derive(Clone, Copy, Debug)]
+struct TempFit {
+    /// Voltage where the fitted stretch crosses [`WALL_STRETCH`].
+    v_wall: f64,
+    /// Sharpened exponential slope (1/V, negative).
+    slope: f64,
+}
+
+fn fit_at(table: &CharTable, res: ResourceType, levels: &[f64], v_nom: f64, t_c: f64) -> TempFit {
+    let d_nom = table.delay(res, t_c, v_nom);
+    let ratios: Vec<f64> = levels.iter().map(|&v| table.delay(res, t_c, v) / d_nom).collect();
+    let (a, b) = crate::util::stats::fit_exponential(levels, &ratios);
+    let b = b.min(-1e-3); // stretch must decay with voltage
+    let v_wall = (WALL_STRETCH.ln() - a.max(1e-300).ln()) / b;
+    TempFit { v_wall, slope: WALL_SHARPEN * b }
+}
+
+/// Voltage/temperature-dependent fault-rate curve for one resource class,
+/// fit against the `chardb` delay surface.
+#[derive(Clone, Debug)]
+pub struct RateModel {
+    name: &'static str,
+    lambda_wall: f64,
+    lo: TempFit,
+    hi: TempFit,
+    /// Per-unit wall shift (V); positive = weaker device.
+    vth_shift: f64,
+}
+
+impl RateModel {
+    fn fit(
+        table: &CharTable,
+        res: ResourceType,
+        levels: &[f64],
+        v_nom: f64,
+        name: &'static str,
+        lambda_wall: f64,
+        vth_shift: f64,
+    ) -> RateModel {
+        RateModel {
+            name,
+            lambda_wall,
+            lo: fit_at(table, res, levels, v_nom, T_FIT_LO),
+            hi: fit_at(table, res, levels, v_nom, T_FIT_HI),
+            vth_shift,
+        }
+    }
+
+    fn frac(t_c: f64) -> f64 {
+        ((t_c - T_FIT_LO) / (T_FIT_HI - T_FIT_LO)).clamp(0.0, 1.0)
+    }
+
+    /// Wall voltage at `t_c` for this unit (includes its threshold shift).
+    /// Decreases with temperature: the inverted temperature dependence makes
+    /// hot silicon tolerate lower rails.
+    pub fn wall_v(&self, t_c: f64) -> f64 {
+        let w = Self::frac(t_c);
+        self.lo.v_wall * (1.0 - w) + self.hi.v_wall * w + self.vth_shift
+    }
+
+    fn slope(&self, t_c: f64) -> f64 {
+        let w = Self::frac(t_c);
+        self.lo.slope * (1.0 - w) + self.hi.slope * w
+    }
+
+    /// Fault rate (faults/bit/s) at rail voltage `v` and junction
+    /// temperature `t_c`. Monotonically non-increasing in `v`; exactly 0.0
+    /// once the exponential falls below [`RATE_FLOOR`].
+    pub fn rate(&self, v: f64, t_c: f64) -> f64 {
+        if !v.is_finite() || !t_c.is_finite() {
+            return 0.0;
+        }
+        let r = self.lambda_wall * (self.slope(t_c) * (v - self.wall_v(t_c))).exp();
+        if r < RATE_FLOOR {
+            0.0
+        } else {
+            r.min(RATE_CAP)
+        }
+    }
+
+    /// Return a copy of this model with a different per-unit wall shift.
+    pub fn with_shift(&self, vth_shift: f64) -> RateModel {
+        RateModel { vth_shift, ..self.clone() }
+    }
+}
+
+/// A voltage/temperature-dependent fault mechanism that can be sampled over
+/// a design's BRAM map.
+pub trait FaultModel: Send + Sync {
+    fn name(&self) -> &'static str;
+    /// Fault rate in faults/bit/s at rail voltage `v`, junction temp `t_c`.
+    fn rate(&self, v: f64, t_c: f64) -> f64;
+    /// Draw a spatially clustered fault population over `exposure_s`.
+    fn sample(
+        &self,
+        map: &BramMap,
+        v: f64,
+        t_c: f64,
+        exposure_s: f64,
+        cluster_mean: f64,
+        rng: &mut Xoshiro256,
+    ) -> FaultSet;
+}
+
+/// Reduced-voltage BRAM bit flips on the BRAM rail (Salami et al.).
+#[derive(Clone, Debug)]
+pub struct BramBitFlip(pub RateModel);
+
+/// Configuration-cell upsets on the core rail — rarer, but they corrupt
+/// routing/LUT state rather than data, so any hit is fatal to the run.
+#[derive(Clone, Debug)]
+pub struct ConfigCellUpset(pub RateModel);
+
+impl BramBitFlip {
+    pub fn fit(table: &CharTable, grid: &VoltageGrid, arch: &ArchConfig, vth_shift: f64) -> Self {
+        BramBitFlip(RateModel::fit(
+            table,
+            ResourceType::Bram,
+            &grid.bram_levels(),
+            arch.v_bram_nom,
+            "bram-bit-flip",
+            LAMBDA_WALL_BRAM,
+            vth_shift,
+        ))
+    }
+}
+
+impl ConfigCellUpset {
+    pub fn fit(table: &CharTable, grid: &VoltageGrid, arch: &ArchConfig, vth_shift: f64) -> Self {
+        ConfigCellUpset(RateModel::fit(
+            table,
+            ResourceType::Lut,
+            &grid.core_levels(),
+            arch.v_core_nom,
+            "config-cell-upset",
+            LAMBDA_WALL_CONFIG,
+            vth_shift,
+        ))
+    }
+}
+
+impl FaultModel for BramBitFlip {
+    fn name(&self) -> &'static str {
+        self.0.name
+    }
+    fn rate(&self, v: f64, t_c: f64) -> f64 {
+        self.0.rate(v, t_c)
+    }
+    fn sample(
+        &self,
+        map: &BramMap,
+        v: f64,
+        t_c: f64,
+        exposure_s: f64,
+        cluster_mean: f64,
+        rng: &mut Xoshiro256,
+    ) -> FaultSet {
+        sample_clustered(self.rate(v, t_c), map, exposure_s, cluster_mean, rng)
+    }
+}
+
+impl FaultModel for ConfigCellUpset {
+    fn name(&self) -> &'static str {
+        self.0.name
+    }
+    fn rate(&self, v: f64, t_c: f64) -> f64 {
+        self.0.rate(v, t_c)
+    }
+    fn sample(
+        &self,
+        map: &BramMap,
+        v: f64,
+        t_c: f64,
+        exposure_s: f64,
+        cluster_mean: f64,
+        rng: &mut Xoshiro256,
+    ) -> FaultSet {
+        sample_clustered(self.rate(v, t_c), map, exposure_s, cluster_mean, rng)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// BRAM map + fault populations
+// ---------------------------------------------------------------------------
+
+/// One physical BRAM block: a device site holding `words` × `bits` cells.
+#[derive(Clone, Copy, Debug)]
+pub struct BramBlock {
+    pub x: usize,
+    pub y: usize,
+    pub words: usize,
+    pub bits: usize,
+}
+
+/// The BRAM blocks faults can land on.
+#[derive(Clone, Debug, Default)]
+pub struct BramMap {
+    pub blocks: Vec<BramBlock>,
+}
+
+impl BramMap {
+    /// Map of a placed design: the BRAM blocks the netlist actually uses,
+    /// at their placed sites. Falls back to the device's full BRAM column
+    /// set when the design instantiates none (the exposure is then the
+    /// fabric itself, as in a configuration-scrubbing view).
+    pub fn of_design(design: &Design) -> BramMap {
+        let words = design.dev.arch.bram_words;
+        let bits = design.dev.arch.bram_bits;
+        let mut blocks: Vec<BramBlock> = design
+            .bg
+            .kinds
+            .iter()
+            .enumerate()
+            .filter(|(_, k)| **k == BlockKind::Bram)
+            .map(|(b, _)| {
+                let s = design.pl.site_of_block[b];
+                BramBlock { x: s.x, y: s.y, words, bits }
+            })
+            .collect();
+        if blocks.is_empty() {
+            blocks = design
+                .dev
+                .bram_sites
+                .iter()
+                .map(|s| BramBlock { x: s.x, y: s.y, words, bits })
+                .collect();
+        }
+        BramMap { blocks }
+    }
+
+    /// Synthetic map: a BRAM column every `period` columns, a block every
+    /// 6 rows (the arch default tile height). For tests and sizing studies.
+    pub fn grid(rows: usize, cols: usize, period: usize, words: usize, bits: usize) -> BramMap {
+        let period = period.max(1);
+        let mut blocks = Vec::new();
+        let mut x = period / 2;
+        while x < cols {
+            let mut y = 0;
+            while y < rows {
+                blocks.push(BramBlock { x, y, words, bits });
+                y += 6;
+            }
+            x += period;
+        }
+        BramMap { blocks }
+    }
+
+    /// Total storage cells in the map.
+    pub fn total_bits(&self) -> u64 {
+        self.blocks.iter().map(|b| (b.words * b.bits) as u64).sum()
+    }
+}
+
+/// One flipped cell.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultSite {
+    /// Index into [`BramMap::blocks`].
+    pub block: u32,
+    pub word: u32,
+    pub bit: u32,
+}
+
+/// A sampled fault population.
+#[derive(Clone, Debug, Default)]
+pub struct FaultSet {
+    pub sites: Vec<FaultSite>,
+}
+
+impl FaultSet {
+    pub fn len(&self) -> usize {
+        self.sites.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.sites.is_empty()
+    }
+    pub fn merge(&mut self, other: FaultSet) {
+        self.sites.extend(other.sites);
+    }
+    /// Order-sensitive content fingerprint (the sampling order is itself
+    /// deterministic, so this doubles as a bit-identity check).
+    pub fn fingerprint(&self) -> u64 {
+        let mut acc = 0xFA17_5E75_FA17_5E75u64;
+        for s in &self.sites {
+            acc = mix64(acc, s.block as u64);
+            acc = mix64(acc, ((s.word as u64) << 32) | s.bit as u64);
+        }
+        mix64(acc, self.sites.len() as u64)
+    }
+}
+
+/// Poisson sample: Knuth's product method below mean 32, normal
+/// approximation above (the tail regime only feeds "dirty" verdicts, where
+/// the exact count is irrelevant).
+pub fn poisson(rng: &mut Xoshiro256, mean: f64) -> usize {
+    if !(mean > 0.0) {
+        return 0;
+    }
+    if mean < 32.0 {
+        let l = (-mean).exp();
+        let mut k = 0usize;
+        let mut p = 1.0;
+        loop {
+            p *= rng.next_f64();
+            if p <= l {
+                return k;
+            }
+            k += 1;
+        }
+    } else {
+        (mean + mean.sqrt() * rng.gaussian()).round().max(0.0) as usize
+    }
+}
+
+/// Draw a clustered fault population at `rate` faults/bit/s over
+/// `exposure_s`. Cluster count is Poisson in the expected fault count /
+/// mean cluster size; each cluster flips a run of adjacent words within one
+/// block (random bit per flip).
+pub fn sample_clustered(
+    rate: f64,
+    map: &BramMap,
+    exposure_s: f64,
+    cluster_mean: f64,
+    rng: &mut Xoshiro256,
+) -> FaultSet {
+    let mut set = FaultSet::default();
+    if map.blocks.is_empty() || !(rate > 0.0) || !(exposure_s > 0.0) {
+        return set;
+    }
+    let expected = (rate * map.total_bits() as f64 * exposure_s).min(MAX_EXPECTED);
+    let mean = cluster_mean.max(1.0);
+    let n_clusters = poisson(rng, expected / mean);
+    for _ in 0..n_clusters {
+        let bi = rng.below(map.blocks.len());
+        let b = map.blocks[bi];
+        if b.words == 0 || b.bits == 0 {
+            continue;
+        }
+        let w0 = rng.below(b.words);
+        let size = rng.fanout(mean).min(b.words * b.bits);
+        for k in 0..size {
+            set.sites.push(FaultSite {
+                block: bi as u32,
+                word: ((w0 + k / b.bits) % b.words) as u32,
+                bit: rng.below(b.bits) as u32,
+            });
+        }
+    }
+    set
+}
+
+// ---------------------------------------------------------------------------
+// injector
+// ---------------------------------------------------------------------------
+
+/// Both fault mechanisms of one device, fit against a shared `chardb`
+/// table. Cheap to clone; per-unit variants derive via [`Injector::with_shift`].
+#[derive(Clone, Debug)]
+pub struct Injector {
+    pub bram: BramBitFlip,
+    pub config: ConfigCellUpset,
+    pub spec: FaultSpec,
+}
+
+impl Injector {
+    pub fn fit(
+        table: &CharTable,
+        grid: &VoltageGrid,
+        arch: &ArchConfig,
+        spec: FaultSpec,
+        vth_shift: f64,
+    ) -> Injector {
+        Injector {
+            bram: BramBitFlip::fit(table, grid, arch, vth_shift),
+            config: ConfigCellUpset::fit(table, grid, arch, vth_shift),
+            spec,
+        }
+    }
+
+    /// Re-target the injector at a different per-unit threshold shift
+    /// without re-fitting the chardb curves.
+    pub fn with_shift(&self, vth_shift: f64) -> Injector {
+        Injector {
+            bram: BramBitFlip(self.bram.0.with_shift(vth_shift)),
+            config: ConfigCellUpset(self.config.0.with_shift(vth_shift)),
+            spec: self.spec,
+        }
+    }
+
+    /// Sample the combined fault population at commanded rails
+    /// `(v_core, v_bram)` and junction temperature `t_c` over `exposure_s`.
+    /// Fully determined by `seed`.
+    pub fn population(
+        &self,
+        map: &BramMap,
+        v_core: f64,
+        v_bram: f64,
+        t_c: f64,
+        exposure_s: f64,
+        seed: u64,
+    ) -> FaultSet {
+        let mut rng = Xoshiro256::new(seed);
+        let mut set = self
+            .bram
+            .sample(map, v_bram, t_c, exposure_s, self.spec.cluster_mean, &mut rng);
+        set.merge(
+            self.config
+                .sample(map, v_core, t_c, exposure_s, self.spec.cluster_mean, &mut rng),
+        );
+        set
+    }
+}
+
+/// Sample a Bernoulli flip mask of `len` entries at probability `p`.
+/// (Moved here from `sim`, which keeps a deprecated re-export.)
+pub fn sample_mask(len: usize, p: f64, rng: &mut Xoshiro256) -> Vec<f32> {
+    if p <= 0.0 {
+        return vec![0.0f32; len];
+    }
+    (0..len)
+        .map(|_| if rng.chance(p) { 1.0f32 } else { 0.0f32 })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// workload corruption — accuracy under injected faults
+// ---------------------------------------------------------------------------
+
+/// Critical-layer protection: run one layer's buffers at nominal rail
+/// (e.g. via a dual-rail BRAM bank) while the rest undervolt.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Protection {
+    None,
+    /// Protect LeNet layer `l` (index into [`ml::LENET_K`]).
+    Layer(usize),
+}
+
+/// One point of an accuracy-vs-rail curve.
+#[derive(Clone, Copy, Debug)]
+pub struct AccuracyPoint {
+    pub v_bram: f64,
+    /// BRAM bit-flip rate at this rail (faults/bit/s).
+    pub rate: f64,
+    /// Per-read word corruption probability.
+    pub p_word: f64,
+    pub lenet_acc: f64,
+    pub hd_acc: f64,
+}
+
+/// Per-read word corruption probability at `rate` faults/bit/s: the chance
+/// any of the word's cells flips within its buffer lifetime.
+pub fn word_error_probability(rate: f64, bits_per_word: usize) -> f64 {
+    let p_bit = 1.0 - (-rate.max(0.0) * BUFFER_LIFETIME_S).exp();
+    1.0 - (1.0 - p_bit).powi(bits_per_word as i32)
+}
+
+/// Monte-Carlo LeNet accuracy under per-read word corruption `p_word`. An
+/// image is corrupted if any unprotected layer's multi-read window fires;
+/// corrupted images fall to the chance rate.
+pub fn lenet_accuracy_under_faults(
+    clean_acc: f64,
+    chance_acc: f64,
+    p_word: f64,
+    protect: Protection,
+    n_images: usize,
+    seed: u64,
+) -> f64 {
+    let n = n_images.max(1);
+    let mut rng = Xoshiro256::new(seed);
+    let mut correct = 0usize;
+    for _ in 0..n {
+        let corrupted = ml::LENET_K.iter().enumerate().any(|(l, &k)| {
+            protect != Protection::Layer(l) && rng.chance(crate::sim::amplify(p_word, k))
+        });
+        let p = if corrupted { chance_acc } else { clean_acc };
+        if rng.chance(p) {
+            correct += 1;
+        }
+    }
+    correct as f64 / n as f64
+}
+
+/// HD-classifier accuracy under faults, surrogate form: the fraction of a
+/// query hypervector's dimensions flipped by corruption is sampled (normal
+/// approximation of Binomial(HD_DIM, p_dim)); similarity degrades linearly
+/// to chance at 50 % flips (a fully decorrelated bipolar vector).
+pub fn hd_accuracy_under_faults(
+    clean_acc: f64,
+    chance_acc: f64,
+    p_word: f64,
+    n_queries: usize,
+    seed: u64,
+) -> f64 {
+    let n = n_queries.max(1);
+    let p_dim = crate::sim::amplify(p_word, ml::HD_K).clamp(0.0, 1.0);
+    let dim = ml::HD_DIM as f64;
+    let mut rng = Xoshiro256::new(seed);
+    let mut acc = 0.0;
+    for _ in 0..n {
+        let mean = p_dim * dim;
+        let sd = (dim * p_dim * (1.0 - p_dim)).sqrt();
+        let flipped = (mean + sd * rng.gaussian()).clamp(0.0, dim);
+        let frac = flipped / dim;
+        acc += chance_acc + (clean_acc - chance_acc) * (1.0 - frac / 0.5).max(0.0);
+    }
+    acc / n as f64
+}
+
+/// HD-classifier accuracy on the *real* artifact: queries are scored
+/// against class prototypes with a per-dimension sign-flip mask sampled at
+/// `p_dim`. Used when `artifacts/` holds trained workloads; the surrogate
+/// above covers CI.
+pub fn hd_accuracy_native(w: &ml::HdWorkload, p_dim: f64, max_queries: usize, seed: u64) -> f64 {
+    let dim = ml::HD_DIM;
+    if w.n_test == 0 || w.n_classes == 0 {
+        return 0.0;
+    }
+    let n = w.n_test.min(max_queries.max(1));
+    let mut rng = Xoshiro256::new(seed);
+    let mut correct = 0usize;
+    for qi in 0..n {
+        let q = &w.q_test[qi * dim..(qi + 1) * dim];
+        let mask = sample_mask(dim, p_dim, &mut rng);
+        let mut best = (f32::NEG_INFINITY, 0usize);
+        for c in 0..w.n_classes {
+            let proto = &w.prototypes[c * dim..(c + 1) * dim];
+            let mut dot = 0.0f32;
+            for d in 0..dim {
+                let x = if mask[d] > 0.0 { -q[d] } else { q[d] };
+                dot += x * proto[d];
+            }
+            if dot > best.0 {
+                best = (dot, c);
+            }
+        }
+        if best.1 as i32 == w.y_test[qi] {
+            correct += 1;
+        }
+    }
+    correct as f64 / n as f64
+}
+
+/// Accuracy-vs-rail curve for a BRAM fault model: for each rail level,
+/// convert the rate into a word corruption probability and Monte-Carlo the
+/// LeNet and HD workloads under it.
+#[allow(clippy::too_many_arguments)]
+pub fn accuracy_vs_rail(
+    model: &dyn FaultModel,
+    levels: &[f64],
+    t_c: f64,
+    clean_acc: f64,
+    chance_acc: f64,
+    protect: Protection,
+    bits_per_word: usize,
+    n_images: usize,
+    seed: u64,
+) -> Vec<AccuracyPoint> {
+    levels
+        .iter()
+        .enumerate()
+        .map(|(i, &v)| {
+            let rate = model.rate(v, t_c);
+            let p_word = word_error_probability(rate, bits_per_word);
+            let s = mix64(seed, i as u64);
+            AccuracyPoint {
+                v_bram: v,
+                rate,
+                p_word,
+                lenet_acc: lenet_accuracy_under_faults(
+                    clean_acc,
+                    chance_acc,
+                    p_word,
+                    protect,
+                    n_images,
+                    mix64(s, 0x1E9E7),
+                ),
+                hd_acc: hd_accuracy_under_faults(
+                    clean_acc,
+                    chance_acc,
+                    p_word,
+                    n_images,
+                    mix64(s, 0x4D0),
+                ),
+            }
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// shmoo — per-device guardband discovery
+// ---------------------------------------------------------------------------
+
+/// Parameters of a per-device undervolt shmoo.
+#[derive(Clone, Copy, Debug)]
+pub struct ShmooSpec {
+    /// Temperature corner range (°C); corners are spread linearly across it.
+    pub t_lo: f64,
+    pub t_hi: f64,
+    pub corners: usize,
+    /// Learned margins never drop below this (°C) — it must stay above the
+    /// temperature sensor's worst-case error so guardband-violation checks
+    /// keep passing.
+    pub margin_floor_c: f64,
+    pub margin_max_c: f64,
+    pub margin_step_c: f64,
+    /// Worst-case sensor under-read (°C) assumed when converting safe rails
+    /// into a margin.
+    pub sensor_error_c: f64,
+    pub fault: FaultSpec,
+}
+
+impl Default for ShmooSpec {
+    fn default() -> Self {
+        ShmooSpec {
+            t_lo: 25.0,
+            t_hi: 75.0,
+            corners: 5,
+            margin_floor_c: 3.0,
+            margin_max_c: 10.0,
+            margin_step_c: 0.25,
+            sensor_error_c: 2.0,
+            fault: FaultSpec::default(),
+        }
+    }
+}
+
+/// Safe rails found at one temperature corner.
+#[derive(Clone, Copy, Debug)]
+pub struct CornerResult {
+    pub t_c: f64,
+    /// Lowest sampled-clean BRAM rail + [`WALL_CLEARANCE_V`].
+    pub v_safe_bram: f64,
+    /// Lowest sampled-clean core rail + [`WALL_CLEARANCE_V`].
+    pub v_safe_core: f64,
+}
+
+/// Outcome of one device's shmoo.
+#[derive(Clone, Debug)]
+pub struct ShmooResult {
+    pub device: usize,
+    pub vth_shift: f64,
+    /// Learned sensor margin (°C): the smallest margin whose commanded
+    /// rails clear the measured safe rails at every corner.
+    pub margin_c: f64,
+    /// True when no margin ≤ `margin_max_c` was safe (margin capped there).
+    pub capped: bool,
+    /// Total population draws spent.
+    pub probes: usize,
+    pub corners: Vec<CornerResult>,
+}
+
+/// Binary-search the lowest sampled-clean level. Each (level, sample) probe
+/// draws from its own derived seed, so the outcome is independent of visit
+/// order — re-runs and different search schedules agree bit-for-bit.
+fn search_safe_level(
+    model: &dyn FaultModel,
+    map: &BramMap,
+    levels: &[f64],
+    t_c: f64,
+    fault: &FaultSpec,
+    probe_seed: u64,
+    probes: &mut usize,
+) -> f64 {
+    let clean = |li: usize, probes: &mut usize| -> bool {
+        (0..fault.samples).all(|s| {
+            *probes += 1;
+            let seed = mix64(mix64(probe_seed, li as u64), s as u64);
+            let mut rng = Xoshiro256::new(seed);
+            model
+                .sample(map, levels[li], t_c, fault.exposure_s, fault.cluster_mean, &mut rng)
+                .is_empty()
+        })
+    };
+    let last = levels.len() - 1;
+    if !clean(last, probes) {
+        // even the top of the grid faults — report it with clearance and
+        // let the margin search cap
+        return levels[last] + WALL_CLEARANCE_V;
+    }
+    let mut lo = 0usize;
+    let mut hi = last;
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        if clean(mid, probes) {
+            hi = mid;
+        } else {
+            lo = mid + 1;
+        }
+    }
+    levels[hi] + WALL_CLEARANCE_V
+}
+
+/// Shmoo one device: find safe rails per temperature corner, then the
+/// smallest sensor margin whose commanded rails (looked up at the
+/// worst-case under-read temperature) clear them against every LUT the
+/// device may run.
+#[allow(clippy::too_many_arguments)]
+pub fn shmoo_device(
+    inj: &Injector,
+    map: &BramMap,
+    luts: &[Arc<VoltageLut>],
+    core_levels: &[f64],
+    bram_levels: &[f64],
+    spec: &ShmooSpec,
+    device: usize,
+    seed: u64,
+) -> ShmooResult {
+    let n = spec.corners.max(1);
+    let mut probes = 0usize;
+    let mut corners = Vec::with_capacity(n);
+    for i in 0..n {
+        let t = if n == 1 {
+            spec.t_lo
+        } else {
+            spec.t_lo + (spec.t_hi - spec.t_lo) * i as f64 / (n - 1) as f64
+        };
+        let cseed = mix64(seed, i as u64);
+        let v_safe_bram = search_safe_level(
+            &inj.bram,
+            map,
+            bram_levels,
+            t,
+            &spec.fault,
+            mix64(cseed, 0xB4A3),
+            &mut probes,
+        );
+        let v_safe_core = search_safe_level(
+            &inj.config,
+            map,
+            core_levels,
+            t,
+            &spec.fault,
+            mix64(cseed, 0xC04E),
+            &mut probes,
+        );
+        corners.push(CornerResult { t_c: t, v_safe_bram, v_safe_core });
+    }
+
+    // margin uplift: commanded rails under a worst-case sensor under-read
+    // must clear the safe rails at every corner, for every LUT
+    let safe_at = |m: f64| -> bool {
+        corners.iter().all(|c| {
+            luts.iter().all(|lut| {
+                let (vc, vb) = lut.lookup(c.t_c - spec.sensor_error_c, m);
+                vb + 1e-9 >= c.v_safe_bram && vc + 1e-9 >= c.v_safe_core
+            })
+        })
+    };
+    let mut margin = spec.margin_floor_c;
+    let mut capped = false;
+    loop {
+        if safe_at(margin) {
+            break;
+        }
+        if margin >= spec.margin_max_c {
+            margin = spec.margin_max_c;
+            capped = true;
+            break;
+        }
+        margin = (margin + spec.margin_step_c).min(spec.margin_max_c);
+    }
+
+    let vth_shift = inj.bram.0.vth_shift;
+    ShmooResult { device, vth_shift, margin_c: margin, capped, probes, corners }
+}
+
+// ---------------------------------------------------------------------------
+// guardband store
+// ---------------------------------------------------------------------------
+
+/// One device's learned guardband.
+#[derive(Clone, Copy, Debug)]
+pub struct GuardbandEntry {
+    pub device: usize,
+    pub margin_c: f64,
+    pub vth_shift: f64,
+    /// Worst (highest) safe BRAM rail across corners.
+    pub v_safe_bram: f64,
+    pub v_safe_core: f64,
+    pub capped: bool,
+    pub probes: usize,
+}
+
+/// Measured per-unit guardbands, persistable as a small TOML document.
+#[derive(Clone, Debug, Default)]
+pub struct GuardbandStore {
+    /// Sorted by device id.
+    pub entries: Vec<GuardbandEntry>,
+}
+
+impl GuardbandStore {
+    pub fn from_results(results: &[ShmooResult]) -> GuardbandStore {
+        let mut entries: Vec<GuardbandEntry> = results
+            .iter()
+            .map(|r| GuardbandEntry {
+                device: r.device,
+                margin_c: r.margin_c,
+                vth_shift: r.vth_shift,
+                v_safe_bram: crate::util::stats::max(
+                    &r.corners.iter().map(|c| c.v_safe_bram).collect::<Vec<_>>(),
+                ),
+                v_safe_core: crate::util::stats::max(
+                    &r.corners.iter().map(|c| c.v_safe_core).collect::<Vec<_>>(),
+                ),
+                capped: r.capped,
+                probes: r.probes,
+            })
+            .collect();
+        entries.sort_by_key(|e| e.device);
+        GuardbandStore { entries }
+    }
+
+    /// Measured margin for `device`, if the campaign covered it.
+    pub fn margin_of(&self, device: usize) -> Option<f64> {
+        self.entries
+            .binary_search_by_key(&device, |e| e.device)
+            .ok()
+            .map(|i| self.entries[i].margin_c)
+    }
+
+    /// Order-and-value-sensitive fingerprint for bit-identity checks.
+    pub fn fingerprint(&self) -> u64 {
+        let mut acc = 0x6A4D_BA2D_6A4D_BA2Du64;
+        for e in &self.entries {
+            acc = mix64(acc, e.device as u64);
+            acc = mix64(acc, e.margin_c.to_bits());
+            acc = mix64(acc, e.vth_shift.to_bits());
+            acc = mix64(acc, e.v_safe_bram.to_bits());
+            acc = mix64(acc, e.v_safe_core.to_bits());
+            acc = mix64(acc, e.capped as u64);
+            acc = mix64(acc, e.probes as u64);
+        }
+        mix64(acc, self.entries.len() as u64)
+    }
+
+    /// Serialize as a TOML document (`tomlite` subset).
+    pub fn to_toml(&self) -> String {
+        let mut s = String::from("# thermovolt guardband store\nschema = \"thermovolt-guardbands/1\"\n");
+        s.push_str(&format!("count = {}\n", self.entries.len()));
+        for (i, e) in self.entries.iter().enumerate() {
+            s.push_str(&format!(
+                "\n[unit.{i}]\ndevice = {}\nmargin_c = {}\nvth_shift = {}\nv_safe_bram = {}\nv_safe_core = {}\ncapped = {}\nprobes = {}\n",
+                e.device, e.margin_c, e.vth_shift, e.v_safe_bram, e.v_safe_core, e.capped, e.probes
+            ));
+        }
+        s
+    }
+
+    /// Parse a document produced by [`GuardbandStore::to_toml`].
+    pub fn from_toml(text: &str) -> anyhow::Result<GuardbandStore> {
+        let doc = crate::util::tomlite::Doc::parse(text)?;
+        let count = doc.usize_or("count", 0);
+        let mut entries = Vec::with_capacity(count);
+        for i in 0..count {
+            let key = |f: &str| format!("unit.{i}.{f}");
+            let device = doc.i64_or(&key("device"), -1);
+            anyhow::ensure!(device >= 0, "guardband store: missing unit.{i}.device");
+            entries.push(GuardbandEntry {
+                device: device as usize,
+                margin_c: doc.f64_or(&key("margin_c"), f64::NAN),
+                vth_shift: doc.f64_or(&key("vth_shift"), 0.0),
+                v_safe_bram: doc.f64_or(&key("v_safe_bram"), f64::NAN),
+                v_safe_core: doc.f64_or(&key("v_safe_core"), f64::NAN),
+                capped: doc.bool_or(&key("capped"), false),
+                probes: doc.usize_or(&key("probes"), 0),
+            });
+            anyhow::ensure!(
+                entries[i].margin_c.is_finite(),
+                "guardband store: bad unit.{i}.margin_c"
+            );
+        }
+        entries.sort_by_key(|e| e.device);
+        Ok(GuardbandStore { entries })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// campaign — deterministic parallel map
+// ---------------------------------------------------------------------------
+
+/// Run `f` over `items` with `workers` threads, returning results in item
+/// order. Results are keyed by item index, and `f` must be a pure function
+/// of its `(index, item)` arguments (all randomness via derived seeds), so
+/// the output is bit-identical for any worker count — the property the
+/// fleet campaign's serial/parallel fingerprint test pins down.
+pub fn campaign<T, R, F>(items: &[T], workers: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let workers = workers.max(1).min(items.len().max(1));
+    if workers == 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<R>>> = (0..items.len()).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let r = f(i, &items[i]);
+                *slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("campaign: missing slot result"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chardb::CharTable;
+    use crate::config::Config;
+
+    fn base_injector() -> Injector {
+        let cfg = Config::default();
+        Injector::fit(
+            &CharTable::shared(),
+            &cfg.vgrid,
+            &cfg.arch,
+            FaultSpec::default(),
+            0.0,
+        )
+    }
+
+    #[test]
+    fn rate_is_monotone_non_increasing_in_voltage() {
+        let inj = base_injector();
+        for t in [25.0, 60.0, 100.0] {
+            let mut prev = f64::INFINITY;
+            for v in Config::default().vgrid.bram_levels() {
+                let r = inj.bram.rate(v, t);
+                assert!(r <= prev + 1e-18, "rate rose at v={v} t={t}: {r} > {prev}");
+                prev = r;
+            }
+        }
+    }
+
+    #[test]
+    fn wall_moves_down_with_temperature() {
+        // inverted temperature dependence: hot silicon tolerates lower rails
+        let inj = base_injector();
+        assert!(inj.bram.0.wall_v(100.0) < inj.bram.0.wall_v(25.0));
+    }
+
+    #[test]
+    fn nominal_rails_are_structurally_fault_free() {
+        let cfg = Config::default();
+        let inj = base_injector();
+        // the weakest unit in the population still holds at nominal rails
+        let weak = inj.with_shift(VTH_SHIFT_HI);
+        for t in [25.0, 60.0, 100.0] {
+            assert_eq!(weak.bram.rate(cfg.arch.v_bram_nom, t), 0.0);
+            assert_eq!(weak.config.rate(cfg.arch.v_core_nom, t), 0.0);
+        }
+        // and deep undervolt (below the ~0.43 V fitted wall region) faults
+        assert!(inj.bram.rate(0.43, 25.0) > 1e-9);
+        assert!(inj.bram.rate(0.30, 25.0) >= inj.bram.rate(0.43, 25.0));
+    }
+
+    #[test]
+    fn populations_are_seed_reproducible_and_clustered() {
+        let inj = base_injector();
+        let map = BramMap::grid(60, 80, 8, 1024, 32);
+        // probe below the fitted wall, where the rate is macroscopic
+        let a = inj.population(&map, 0.43, 0.43, 25.0, 10.0, 42);
+        let b = inj.population(&map, 0.43, 0.43, 25.0, 10.0, 42);
+        assert!(!a.is_empty(), "deep undervolt should fault");
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        let c = inj.population(&map, 0.43, 0.43, 25.0, 10.0, 43);
+        assert_ne!(a.fingerprint(), c.fingerprint(), "seed must matter");
+        // clustered: distinct blocks hit ≪ sites
+        let blocks: std::collections::HashSet<u32> = a.sites.iter().map(|s| s.block).collect();
+        assert!(blocks.len() < a.len(), "{} blocks for {} sites", blocks.len(), a.len());
+    }
+
+    #[test]
+    fn poisson_mean_tracks_request() {
+        let mut rng = Xoshiro256::new(17);
+        for &mean in &[0.5, 4.0, 40.0] {
+            let n = 20_000;
+            let m: f64 = (0..n).map(|_| poisson(&mut rng, mean) as f64).sum::<f64>() / n as f64;
+            assert!((m - mean).abs() < mean.max(1.0) * 0.05, "mean {mean} got {m}");
+        }
+        assert_eq!(poisson(&mut rng, 0.0), 0);
+        assert_eq!(poisson(&mut rng, -1.0), 0);
+        assert_eq!(poisson(&mut rng, f64::NAN), 0);
+    }
+
+    #[test]
+    fn word_error_probability_is_bounded_and_monotone() {
+        assert_eq!(word_error_probability(0.0, 32), 0.0);
+        let lo = word_error_probability(1e-3, 32);
+        let hi = word_error_probability(1e-1, 32);
+        assert!(0.0 < lo && lo < hi && hi <= 1.0, "lo={lo} hi={hi}");
+    }
+
+    #[test]
+    fn accuracy_curve_is_clean_above_wall_and_chance_below() {
+        let inj = base_injector();
+        // sweep past the grid floor so the curve crosses the wall: the rate
+        // model extrapolates below v_bram_min
+        let levels: Vec<f64> = (0..14).map(|i| 0.30 + 0.05 * i as f64).collect();
+        let pts = accuracy_vs_rail(
+            &inj.bram,
+            &levels,
+            25.0,
+            0.98,
+            0.1,
+            Protection::None,
+            32,
+            600,
+            7,
+        );
+        let top = pts.last().unwrap();
+        let bottom = &pts[0];
+        assert!(top.lenet_acc > 0.9, "clean end degraded: {}", top.lenet_acc);
+        assert!(top.hd_acc > 0.9, "clean end degraded: {}", top.hd_acc);
+        assert!(bottom.lenet_acc < 0.3, "faulty end intact: {}", bottom.lenet_acc);
+        assert!(bottom.hd_acc < 0.3, "faulty end intact: {}", bottom.hd_acc);
+    }
+
+    #[test]
+    fn layer_protection_helps_in_the_transition_band() {
+        // pick a p_word in the transition band and check protecting the
+        // deepest layer (largest K) recovers accuracy
+        let deepest = ml::LENET_K
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &k)| k)
+            .map(|(l, _)| l)
+            .unwrap();
+        let p_word = 5e-3;
+        let none = lenet_accuracy_under_faults(0.98, 0.1, p_word, Protection::None, 4000, 11);
+        let prot =
+            lenet_accuracy_under_faults(0.98, 0.1, p_word, Protection::Layer(deepest), 4000, 11);
+        assert!(prot > none + 0.02, "protection gained nothing: {prot} vs {none}");
+    }
+
+    #[test]
+    fn shmoo_is_invariant_under_rerun_and_finds_floor_margin_for_strong_unit() {
+        let cfg = Config::default();
+        let inj = base_injector();
+        let map = BramMap::grid(30, 40, 8, 1024, 32);
+        // a LUT that always commands nominal rails: any floor margin is safe
+        let lut = Arc::new(VoltageLut::fixed(cfg.arch.v_core_nom, cfg.arch.v_bram_nom));
+        let spec = ShmooSpec { corners: 3, ..ShmooSpec::default() };
+        let luts = vec![lut];
+        let a = shmoo_device(
+            &inj,
+            &map,
+            &luts,
+            &cfg.vgrid.core_levels(),
+            &cfg.vgrid.bram_levels(),
+            &spec,
+            0,
+            99,
+        );
+        let b = shmoo_device(
+            &inj,
+            &map,
+            &luts,
+            &cfg.vgrid.core_levels(),
+            &cfg.vgrid.bram_levels(),
+            &spec,
+            0,
+            99,
+        );
+        assert_eq!(a.margin_c.to_bits(), b.margin_c.to_bits());
+        assert_eq!(a.probes, b.probes);
+        for (ca, cb) in a.corners.iter().zip(&b.corners) {
+            assert_eq!(ca.v_safe_bram.to_bits(), cb.v_safe_bram.to_bits());
+            assert_eq!(ca.v_safe_core.to_bits(), cb.v_safe_core.to_bits());
+        }
+        assert_eq!(a.margin_c, spec.margin_floor_c, "nominal rails should pass at the floor");
+        assert!(!a.capped);
+        // safe rails sit near the wall, well below nominal
+        assert!(a.corners[0].v_safe_bram < cfg.arch.v_bram_nom);
+    }
+
+    #[test]
+    fn campaign_is_bit_identical_across_worker_counts() {
+        let items: Vec<u64> = (0..23).collect();
+        let run = |w: usize| -> Vec<u64> {
+            campaign(&items, w, |i, &x| mix64(x, i as u64))
+        };
+        let serial = run(1);
+        for w in [2, 4, 8] {
+            assert_eq!(serial, run(w), "workers={w}");
+        }
+    }
+
+    #[test]
+    fn guardband_store_roundtrips_through_toml() {
+        let store = GuardbandStore {
+            entries: vec![
+                GuardbandEntry {
+                    device: 0,
+                    margin_c: 3.25,
+                    vth_shift: 0.012,
+                    v_safe_bram: 0.66,
+                    v_safe_core: 0.61,
+                    capped: false,
+                    probes: 120,
+                },
+                GuardbandEntry {
+                    device: 3,
+                    margin_c: 10.0,
+                    vth_shift: 0.029,
+                    v_safe_bram: 0.71,
+                    v_safe_core: 0.63,
+                    capped: true,
+                    probes: 132,
+                },
+            ],
+        };
+        let parsed = GuardbandStore::from_toml(&store.to_toml()).unwrap();
+        assert_eq!(parsed.fingerprint(), store.fingerprint());
+        assert_eq!(parsed.margin_of(3), Some(10.0));
+        assert_eq!(parsed.margin_of(1), None);
+    }
+
+    #[test]
+    fn fault_spec_validation_rejects_bad_fields() {
+        assert!(FaultSpec::default().validate().is_ok());
+        assert!(FaultSpec { cluster_mean: 0.5, ..FaultSpec::default() }.validate().is_err());
+        assert!(FaultSpec { exposure_s: 0.0, ..FaultSpec::default() }.validate().is_err());
+        assert!(FaultSpec { exposure_s: f64::NAN, ..FaultSpec::default() }.validate().is_err());
+        assert!(FaultSpec { samples: 0, ..FaultSpec::default() }.validate().is_err());
+    }
+
+    #[test]
+    fn mask_rate_matches_probability() {
+        let mut rng = Xoshiro256::new(7);
+        let m = sample_mask(100_000, 0.23, &mut rng);
+        let rate = m.iter().map(|&x| x as f64).sum::<f64>() / m.len() as f64;
+        assert!((rate - 0.23).abs() < 0.01, "rate {rate}");
+        assert!(sample_mask(1000, 0.0, &mut rng).iter().all(|&x| x == 0.0));
+    }
+}

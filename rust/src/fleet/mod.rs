@@ -53,11 +53,13 @@ pub mod trace;
 use std::sync::Arc;
 
 use crate::config::Config;
+use crate::faults::{self, BramMap, FaultSpec, GuardbandStore, Injector};
 use crate::flow::dynamic::VoltageLut;
 use crate::flow::{
     Design, Effort, FlowSession, LutRequest, LutSpec, OverscaleRequest,
 };
 use crate::thermal::{RcNetwork, RcStage};
+use crate::util::mix64;
 use crate::util::rng::Xoshiro256;
 use crate::util::stats;
 use policy::{OverscaleSpec, PolicyKind};
@@ -88,9 +90,22 @@ pub struct DeviceSpec {
     pub margin_c: f64,
     /// Per-unit process variation on power (≈ ±4 %).
     pub power_scale: f64,
+    /// Per-unit threshold-voltage shift (V) of this unit's fault wall — the
+    /// process variation the fault subsystem sees. Drawn from its own
+    /// seed-derived stream so it never perturbs the roster RNG above.
+    pub vth_shift: f64,
+    /// Shmoo-learned sensor margin (°C); `None` until a characterization
+    /// campaign ran ([`FleetConfig::measured_guardbands`]).
+    pub measured_margin_c: Option<f64>,
 }
 
 impl DeviceSpec {
+    /// Margin the controller actually runs at: the measured guardband when
+    /// the fleet learned one, else the fixed worst-case `margin_c`.
+    pub fn effective_margin_c(&self) -> f64 {
+        self.measured_margin_c.unwrap_or(self.margin_c)
+    }
+
     /// This unit's Foster thermal network for the transient fleet mode.
     ///
     /// One stage is the lumped single-pole plant (θ_JA at `tau_ms` — the
@@ -378,6 +393,14 @@ pub struct FleetConfig {
     /// Foster stages of the per-device network in transient mode
     /// (1 = lumped single pole; ≥ 2 adds the slow heatsink pole).
     pub rc_stages: usize,
+    /// Run the per-device undervolt characterization campaign at build time
+    /// and drive every controller at its *measured* margin instead of the
+    /// fixed `margin_c` (CLI `fleet --measured-guardbands`). Off by default
+    /// — the fixed-margin fleet stays bit-identical to every prior result.
+    pub measured_guardbands: bool,
+    /// Fault-injection knobs shared by the campaign's shmoo probes and the
+    /// executor's per-job population draws.
+    pub fault: FaultSpec,
 }
 
 impl FleetConfig {
@@ -397,8 +420,25 @@ impl FleetConfig {
             kind_policies: Vec::new(),
             transient: false,
             rc_stages: 2,
+            measured_guardbands: false,
+            fault: FaultSpec::default(),
         }
     }
+}
+
+/// Fleet-level fault-injection state shared by the campaign and the
+/// executor: per-kind BRAM maps, the zero-shift injector fit against the
+/// shared `chardb` (per-unit variants derive via [`Injector::with_shift`]),
+/// and the learned guardband store when the campaign ran.
+#[derive(Clone, Debug)]
+pub struct FleetFaults {
+    /// Per-kind BRAM maps, aligned with `Fleet::kinds`.
+    pub maps: Vec<Arc<BramMap>>,
+    /// Nominal-threshold injector; never sampled directly for a unit —
+    /// shift it by the unit's `vth_shift` first.
+    pub base: Injector,
+    /// Per-unit measured guardbands ([`FleetConfig::measured_guardbands`]).
+    pub guardbands: Option<GuardbandStore>,
 }
 
 /// A fully instantiated fleet: device roster, shared job kinds, shared
@@ -414,6 +454,9 @@ pub struct Fleet {
     pub ambient: Vec<(f64, f64)>,
     /// Job stream sorted by arrival.
     pub jobs: Vec<scheduler::Job>,
+    /// Fault-injection context (always present; sampling at commanded rails
+    /// is structurally fault-free, so the fixed-margin fleet pays nothing).
+    pub faults: FleetFaults,
 }
 
 impl Fleet {
@@ -426,6 +469,9 @@ impl Fleet {
             "transient mode needs 1..=8 RC stages (got {})",
             fcfg.rc_stages
         );
+        if let Err(reason) = fcfg.fault.validate() {
+            anyhow::bail!("bad fleet fault spec: {reason}");
+        }
 
         let (t_base, theta) = fcfg.scenario.corner();
         let mut base = base_in.clone();
@@ -484,7 +530,7 @@ impl Fleet {
         let mut rng = Xoshiro256::new(fcfg.seed);
         let min_edge = kinds.iter().map(|k| k.grid_edge()).min().unwrap();
         let max_edge = kinds.iter().map(|k| k.grid_edge()).max().unwrap();
-        let specs: Vec<DeviceSpec> = (0..fcfg.devices)
+        let mut specs: Vec<DeviceSpec> = (0..fcfg.devices)
             .map(|id| DeviceSpec {
                 id,
                 grid_edge: if id % 3 == 2 && min_edge < max_edge {
@@ -497,8 +543,74 @@ impl Fleet {
                 rack_offset_c: offsets[id],
                 margin_c: base.flow.sensor_margin + rng.uniform(0.0, 1.5),
                 power_scale: rng.uniform(0.96, 1.04),
+                vth_shift: 0.0,
+                measured_margin_c: None,
             })
             .collect();
+        // per-unit fault-wall shift from its own seed-derived stream — the
+        // roster RNG above must keep producing the exact draws it always has
+        for s in &mut specs {
+            let mut r = Xoshiro256::new(mix64(fcfg.seed ^ faults::VTH_SEED_SALT, s.id as u64));
+            s.vth_shift = r.uniform(faults::VTH_SHIFT_LO, faults::VTH_SHIFT_HI);
+        }
+
+        // fault-injection context: per-kind BRAM maps off the cached designs
+        // plus the nominal-threshold injector fit against the shared chardb
+        let mut maps = Vec::with_capacity(kinds.len());
+        for bench in &fcfg.benches {
+            let design = session.design(bench)?;
+            maps.push(Arc::new(BramMap::of_design(&design)));
+        }
+        let base_inj = Injector::fit(session.char_table(), &base.vgrid, &base.arch, fcfg.fault, 0.0);
+
+        // characterization campaign: shmoo every unit against every kind's
+        // LUT over the same ambient range the controllers will run, on the
+        // largest BRAM map (the binding fault population)
+        let guardbands = if fcfg.measured_guardbands {
+            let map = maps
+                .iter()
+                .max_by_key(|m| m.total_bits())
+                .cloned()
+                .expect("at least one job kind");
+            let luts: Vec<Arc<VoltageLut>> = kinds.iter().map(|k| k.lut.clone()).collect();
+            let sspec = faults::ShmooSpec {
+                t_lo: lut_lo,
+                t_hi: lut_hi,
+                fault: fcfg.fault,
+                ..faults::ShmooSpec::default()
+            };
+            let core_levels = base.vgrid.core_levels();
+            let bram_levels = base.vgrid.bram_levels();
+            let workers = if fcfg.workers > 0 {
+                fcfg.workers
+            } else {
+                std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(4)
+                    .clamp(2, 8)
+            };
+            // bit-identical for any worker count: each unit's work is keyed
+            // to its index and derived seeds, never a shared RNG
+            let results = faults::campaign(&specs, workers, |_, s: &DeviceSpec| {
+                faults::shmoo_device(
+                    &base_inj.with_shift(s.vth_shift),
+                    &map,
+                    &luts,
+                    &core_levels,
+                    &bram_levels,
+                    &sspec,
+                    s.id,
+                    mix64(fcfg.seed ^ faults::SHMOO_SEED_SALT, s.id as u64),
+                )
+            });
+            let store = GuardbandStore::from_results(&results);
+            for s in &mut specs {
+                s.measured_margin_c = store.margin_of(s.id);
+            }
+            Some(store)
+        } else {
+            None
+        };
 
         // job stream: arrival/duration from the scenario; kinds round-robin
         // so every (expensively built) benchmark class is exercised even
@@ -523,6 +635,11 @@ impl Fleet {
             policies,
             ambient,
             jobs,
+            faults: FleetFaults {
+                maps,
+                base: base_inj,
+                guardbands,
+            },
         })
     }
 

@@ -42,9 +42,11 @@ use super::policy::{self, Policy};
 use super::telemetry::JobResult;
 use super::{trace, DeviceSpec, Fleet, JobKind};
 use crate::coordinator::{DynamicController, PlantModel, RunStats, Tsd};
+use crate::faults;
 use crate::flow::dynamic::VoltageLut;
 use crate::ml;
 use crate::thermal::{RcNetwork, ThermalDynamics};
+use crate::util::mix64;
 use crate::util::stats::interp1;
 
 /// A migration's destination may be at most this much hotter (predicted
@@ -430,7 +432,7 @@ fn simulate(
         lut,
         theta_ja: spec.theta_ja,
         tau_ms: spec.tau_ms,
-        margin: spec.margin_c,
+        margin: spec.effective_margin_c(),
         tsd: Tsd::default(),
         plant,
         power_fn: move |vc: f64, vb: f64, tj: f64| scale * surface.eval(vc, vb, tj),
@@ -491,6 +493,31 @@ fn run_one(fleet: &Fleet, a: &Assignment) -> JobResult {
         policy::QUALITY_DEPTH,
     );
 
+    // injected-fault audit: sample this unit's fault population at the
+    // lowest rails the governing controller could command over the window.
+    // The fault wall moves *down* with temperature, so the coolest point —
+    // where the LUT also commands its lowest rails — is the binding corner;
+    // a worst-case sensor under-read makes the probe rails lower still.
+    let t_min = local.iter().map(|&(_, t)| t).fold(f64::INFINITY, f64::min);
+    let governing = fleet.policies[a.job.kind].as_policy().lut(kind);
+    let (vc_cmd, vb_cmd) = governing.lookup(
+        t_min - Tsd::default().error,
+        spec.effective_margin_c(),
+    );
+    let injected_faults = fleet
+        .faults
+        .base
+        .with_shift(spec.vth_shift)
+        .population(
+            &fleet.faults.maps[a.job.kind],
+            vc_cmd,
+            vb_cmd,
+            t_min,
+            a.job.duration_ms / 1e3,
+            mix64(fleet.cfg.seed ^ faults::JOB_FAULT_SALT, a.job.id as u64),
+        )
+        .len() as u64;
+
     JobResult {
         job_id: a.job.id,
         kind: a.job.kind,
@@ -511,6 +538,7 @@ fn run_one(fleet: &Fleet, a: &Assignment) -> JobResult {
         violations_over: over_stats.violations,
         expected_errors,
         quality,
+        injected_faults,
         peak_t_junct_c: dyn_stats.peak_t_junct,
         overshoot_c: dyn_stats.peak_overshoot_c,
     }

@@ -53,6 +53,11 @@ pub struct JobResult {
     /// `ml::expected_accuracy` quality proxy under the overscaled error
     /// rate (clean accuracy when nothing is overscaled).
     pub quality: f64,
+    /// Injected undervolt faults (`faults::Injector`) sampled at the lowest
+    /// rails the governing controller could command over the job's window.
+    /// Zero whenever the commanded rails sit above the unit's fault wall —
+    /// the invariant a measured-guardband fleet must keep.
+    pub injected_faults: u64,
     pub peak_t_junct_c: f64,
     /// Peak transient overshoot of the dynamic controller (°C): how far the
     /// junction ran above the instantaneous steady state thanks to thermal
@@ -145,6 +150,9 @@ pub struct FleetTelemetry {
     pub busy_ms: f64,
     pub violations: u64,
     pub violations_over: u64,
+    /// Total injected undervolt faults across the fleet (must stay zero —
+    /// rails are provisioned above every unit's fault wall).
+    pub injected_faults: u64,
     /// Total modeled timing errors under the overscaled rails.
     pub expected_errors: f64,
     /// Mean / worst per-job quality proxy (1 ⇒ clean).
@@ -182,6 +190,7 @@ impl FleetTelemetry {
         let mut busy_ms = 0.0;
         let mut violations = 0u64;
         let mut violations_over = 0u64;
+        let mut injected_faults = 0u64;
         let mut expected_errors = 0.0;
         let mut migrations = 0usize;
         for r in &jobs {
@@ -202,6 +211,7 @@ impl FleetTelemetry {
             busy_ms += r.duration_ms;
             violations += r.violations;
             violations_over += r.violations_over;
+            injected_faults += r.injected_faults;
             expected_errors += r.expected_errors;
             migrations += r.migrated as usize;
         }
@@ -250,6 +260,7 @@ impl FleetTelemetry {
             busy_ms,
             violations,
             violations_over,
+            injected_faults,
             expected_errors,
             quality_mean,
             quality_min,
@@ -326,6 +337,7 @@ impl FleetTelemetry {
             mix(r.energy_over_j.to_bits());
             mix(r.violations);
             mix(r.violations_over);
+            mix(r.injected_faults);
             mix(r.expected_errors.to_bits());
             mix(r.quality.to_bits());
             mix(r.peak_t_junct_c.to_bits());
@@ -361,6 +373,7 @@ mod tests {
             violations_over: 0,
             expected_errors: 0.0,
             quality: 1.0,
+            injected_faults: 0,
             peak_t_junct_c: 50.0,
             overshoot_c: 0.0,
         }
@@ -447,5 +460,11 @@ mod tests {
         let tg = FleetTelemetry::aggregate(2, g);
         assert_ne!(ta.fingerprint(), tg.fingerprint());
         assert!((tg.peak_overshoot_c - 1.25).abs() < 1e-12);
+        // injected-fault counts participate and aggregate
+        let mut h = ta.jobs.clone();
+        h[0].injected_faults = 7;
+        let th = FleetTelemetry::aggregate(2, h);
+        assert_ne!(ta.fingerprint(), th.fingerprint());
+        assert_eq!(th.injected_faults, 7);
     }
 }

@@ -56,6 +56,13 @@ pub enum FlowError {
     /// simulation: non-positive τ / dt / horizon, zero stages, or a horizon
     /// that would take absurdly many steps.
     BadTransientSpec { reason: String },
+    /// An undervolt-shmoo request that cannot run: inverted or non-finite
+    /// temperature corners, a margin window below the sensor-error floor,
+    /// zero devices, or a degenerate corner count.
+    BadShmooSpec { reason: String },
+    /// A fault-injection specification with unusable knobs (cluster size
+    /// below one bit, non-positive exposure, zero samples).
+    BadFaultSpec { reason: String },
 }
 
 impl fmt::Display for FlowError {
@@ -104,6 +111,12 @@ impl fmt::Display for FlowError {
             FlowError::BadTransientSpec { reason } => {
                 write!(f, "bad transient spec: {reason}")
             }
+            FlowError::BadShmooSpec { reason } => {
+                write!(f, "bad shmoo spec: {reason}")
+            }
+            FlowError::BadFaultSpec { reason } => {
+                write!(f, "bad fault spec: {reason}")
+            }
         }
     }
 }
@@ -134,6 +147,14 @@ mod tests {
             reason: "0 stages".into(),
         };
         assert!(e.to_string().contains("0 stages"));
+        let e = FlowError::BadShmooSpec {
+            reason: "t_lo 80 >= t_hi 25".into(),
+        };
+        assert!(e.to_string().contains("t_lo 80"));
+        let e = FlowError::BadFaultSpec {
+            reason: "samples 0 not in 1..=64".into(),
+        };
+        assert!(e.to_string().contains("samples 0"));
     }
 
     #[test]

@@ -24,5 +24,8 @@ pub use error::FlowError;
 pub use session::{
     Alg1Outcome, Alg1Request, Alg2Outcome, Alg2Request, BaselineRequest, Condition, Fidelity,
     FlowSession, LutOutcome, LutRequest, LutSpec, OverscaleOutcome, OverscaleRequest,
-    TransientOutcome, TransientRequest,
+    ShmooOutcome, ShmooRequest, TransientOutcome, TransientRequest,
 };
+
+// the fault-injection knobs ride on `ShmooRequest`, so re-export them here
+pub use crate::faults::FaultSpec;

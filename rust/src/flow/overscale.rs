@@ -49,8 +49,15 @@ impl ErrorModel {
     /// cycle count. This is the quantity the fleet's overscaled-dynamic
     /// policy reports per job (and what `ml::expected_accuracy` maps to a
     /// quality figure).
+    ///
+    /// Degenerate inputs — a non-finite clock, a negative or non-finite
+    /// duration — clamp to 0.0 expected errors instead of feeding negative
+    /// or NaN counts into fleet telemetry.
     pub fn expected_errors(&self, f_clk: f64, duration_s: f64) -> f64 {
-        self.mean_rate * f_clk * duration_s
+        if !f_clk.is_finite() || !duration_s.is_finite() {
+            return 0.0;
+        }
+        (self.mean_rate * f_clk * duration_s).max(0.0)
     }
 }
 
@@ -220,6 +227,12 @@ mod tests {
         let e = m.expected_errors(1e8, 10.0); // 1e9 cycles at 2e-6/cycle
         assert!((e - 2e3).abs() < 1e-9);
         assert_eq!(m.expected_errors(1e8, 0.0), 0.0);
+        // degenerate inputs clamp to zero instead of poisoning telemetry
+        assert_eq!(m.expected_errors(1e8, -5.0), 0.0);
+        assert_eq!(m.expected_errors(f64::NAN, 10.0), 0.0);
+        assert_eq!(m.expected_errors(f64::INFINITY, 10.0), 0.0);
+        assert_eq!(m.expected_errors(1e8, f64::NAN), 0.0);
+        assert_eq!(m.expected_errors(-1e8, 10.0), 0.0);
     }
 
     #[test]

@@ -63,6 +63,9 @@ use std::sync::Arc;
 use crate::activity::Activities;
 use crate::chardb::CharTable;
 use crate::config::Config;
+use crate::faults::{
+    self, AccuracyPoint, BramMap, FaultSpec, GuardbandStore, Injector, Protection, ShmooResult,
+};
 use crate::flow::alg1::{self, Alg1Result};
 use crate::flow::alg2::{self, Alg2Result};
 use crate::flow::design::{Design, Effort};
@@ -72,6 +75,7 @@ use crate::flow::overscale::{self, ErrorModel};
 use crate::runtime::select_backend;
 use crate::thermal::{RcNetwork, ThermalBackend, ThermalDynamics};
 use crate::timing::{ArenaStats, StaCacheArena};
+use crate::util::{mix64, Xoshiro256};
 
 // ------------------------------------------------------------ requests --
 
@@ -355,6 +359,81 @@ impl TransientRequest {
     }
 }
 
+/// Request for a per-device undervolt shmoo campaign (`faults`): per virtual
+/// unit, binary-search the lowest rails whose sampled fault population is
+/// clean at every temperature corner, then convert the safe rails into a
+/// measured sensor margin against the dynamic scheme's voltage LUT.
+#[derive(Clone, Debug)]
+pub struct ShmooRequest {
+    pub bench: String,
+    /// Virtual units to characterize; each draws its own process-variation
+    /// threshold shift from the request seed.
+    pub devices: usize,
+    pub seed: u64,
+    /// Temperature corner range (°C) — also the ambient range the voltage
+    /// LUT is swept over.
+    pub t_lo: f64,
+    pub t_hi: f64,
+    /// Ambient step of the LUT sweep (°C).
+    pub lut_step_c: f64,
+    /// Temperature corners probed per device (spread linearly over the
+    /// range).
+    pub corners: usize,
+    /// Learned margins never drop below this (°C); it must stay at or above
+    /// `sensor_error_c` so the zero-guardband-violation guarantee survives.
+    pub margin_floor_c: f64,
+    pub margin_max_c: f64,
+    pub margin_step_c: f64,
+    /// Worst-case sensor under-read (°C) assumed when converting safe rails
+    /// into a margin.
+    pub sensor_error_c: f64,
+    /// Fault-population knobs shared by every probe.
+    pub fault: FaultSpec,
+    /// Campaign worker threads. Results are bit-identical for any count —
+    /// the campaign keys every unit's work to its index and derived seeds.
+    pub workers: usize,
+    /// Monte-Carlo samples per accuracy-curve point.
+    pub mc_samples: usize,
+    pub theta_ja: Option<f64>,
+    pub effort: Option<Effort>,
+}
+
+impl ShmooRequest {
+    /// Defaults: 8 virtual units, 5 corners over 25–75 °C, margin search
+    /// from the 3 °C floor in 0.25 °C steps against a 2 °C sensor error,
+    /// one worker.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use thermovolt::flow::ShmooRequest;
+    ///
+    /// let req = ShmooRequest { devices: 4, workers: 4, ..ShmooRequest::new("sha") };
+    /// assert_eq!(req.corners, 5);
+    /// assert!(req.margin_floor_c >= req.sensor_error_c);
+    /// ```
+    pub fn new(bench: impl Into<String>) -> ShmooRequest {
+        ShmooRequest {
+            bench: bench.into(),
+            devices: 8,
+            seed: 0xFA17_CA4B,
+            t_lo: 25.0,
+            t_hi: 75.0,
+            lut_step_c: 10.0,
+            corners: 5,
+            margin_floor_c: 3.0,
+            margin_max_c: 10.0,
+            margin_step_c: 0.25,
+            sensor_error_c: 2.0,
+            fault: FaultSpec::default(),
+            workers: 1,
+            mc_samples: 400,
+            theta_ja: None,
+            effort: None,
+        }
+    }
+}
+
 // ------------------------------------------------------------ outcomes --
 
 /// Operating condition a request resolved to (base config + overrides) —
@@ -429,6 +508,30 @@ pub struct OverscaleOutcome {
     pub alg1: Alg1Result,
     /// Per-endpoint timing-violation model at the converged (T, V).
     pub error: ErrorModel,
+}
+
+/// Outcome of [`FlowSession::shmoo`]: the per-unit campaign results, the
+/// guardband store a fleet run can load in place of the fixed margin, and
+/// accuracy-vs-rail curves for the critical-layer-protection experiment.
+#[derive(Clone, Debug)]
+pub struct ShmooOutcome {
+    pub bench: String,
+    pub condition: Condition,
+    /// The fixed sensor margin the measured ones replace
+    /// (`cfg.flow.sensor_margin` — the fleet's per-unit base).
+    pub fixed_margin_c: f64,
+    /// Per-unit learned guardbands (serialize via
+    /// [`GuardbandStore::to_toml`]).
+    pub store: GuardbandStore,
+    /// Full per-unit shmoo traces, sorted by device id.
+    pub results: Vec<ShmooResult>,
+    /// Accuracy vs BRAM rail with no protection. The sweep extends below
+    /// the voltage grid's floor — in-grid rails can sit entirely above the
+    /// fault wall at cool corners, and the cliff is the point.
+    pub accuracy: Vec<AccuracyPoint>,
+    /// The same sweep with the deepest LeNet reduction layer protected
+    /// (run at nominal rail via a dual-rail bank).
+    pub accuracy_protected: Vec<AccuracyPoint>,
 }
 
 // ------------------------------------------------------------- session --
@@ -809,6 +912,115 @@ impl FlowSession {
         })
     }
 
+    /// Per-device undervolt shmoo campaign (`faults`): build the dynamic
+    /// scheme's voltage LUT over the requested ambient range, fit the fault
+    /// injector against the shared `chardb`, then — per virtual unit —
+    /// binary-search the lowest sampled-clean rails at every temperature
+    /// corner and convert them into a measured sensor margin. The outcome
+    /// also carries accuracy-vs-rail curves (with and without critical-layer
+    /// protection) from the same fitted models.
+    ///
+    /// Fully determined by `req.seed` and bit-identical for any `workers`
+    /// count: every unit's threshold shift and probe stream derive from
+    /// per-index seeds, never from a shared RNG.
+    pub fn shmoo(&mut self, req: ShmooRequest) -> Result<ShmooOutcome, FlowError> {
+        validate_shmoo(&req)?;
+        req.fault
+            .validate()
+            .map_err(|reason| FlowError::BadFaultSpec { reason })?;
+        let lut = self
+            .voltage_lut(LutRequest {
+                theta_ja: req.theta_ja,
+                effort: req.effort,
+                ..LutRequest::new(
+                    req.bench.clone(),
+                    LutSpec::Sweep {
+                        t_amb_lo: req.t_lo,
+                        t_amb_hi: req.t_hi,
+                        step_c: req.lut_step_c,
+                    },
+                )
+            })?
+            .lut;
+        let cfg = self.resolved(None, req.theta_ja, None, None)?;
+        let design = self.design_at(&req.bench, req.effort)?;
+        let map = BramMap::of_design(&design);
+        let base = Injector::fit(&self.table, &cfg.vgrid, &cfg.arch, req.fault, 0.0);
+        let sspec = faults::ShmooSpec {
+            t_lo: req.t_lo,
+            t_hi: req.t_hi,
+            corners: req.corners,
+            margin_floor_c: req.margin_floor_c,
+            margin_max_c: req.margin_max_c,
+            margin_step_c: req.margin_step_c,
+            sensor_error_c: req.sensor_error_c,
+            fault: req.fault,
+        };
+        let core_levels = cfg.vgrid.core_levels();
+        let bram_levels = cfg.vgrid.bram_levels();
+        let luts = vec![Arc::new(lut)];
+        let units: Vec<(usize, f64)> = (0..req.devices)
+            .map(|id| {
+                let mut r = Xoshiro256::new(mix64(req.seed ^ faults::VTH_SEED_SALT, id as u64));
+                (id, r.uniform(faults::VTH_SHIFT_LO, faults::VTH_SHIFT_HI))
+            })
+            .collect();
+        let results = faults::campaign(&units, req.workers, |_, &(id, shift)| {
+            faults::shmoo_device(
+                &base.with_shift(shift),
+                &map,
+                &luts,
+                &core_levels,
+                &bram_levels,
+                &sspec,
+                id,
+                mix64(req.seed ^ faults::SHMOO_SEED_SALT, id as u64),
+            )
+        });
+        let store = GuardbandStore::from_results(&results);
+
+        // accuracy-vs-rail at the mid corner on the nominal-threshold unit;
+        // the sweep extends below the grid floor (in-grid rates can be
+        // exactly zero at cool corners) so the cliff is visible
+        let t_mid = 0.5 * (req.t_lo + req.t_hi);
+        let mut acc_levels = Vec::new();
+        let mut v = ACC_SWEEP_FLOOR_V;
+        while v <= cfg.vgrid.v_bram_max + 1e-9 {
+            acc_levels.push(v);
+            v += ACC_SWEEP_STEP_V;
+        }
+        let clean = crate::fleet::policy::QUALITY_CLEAN_ACC;
+        let chance = crate::fleet::policy::QUALITY_CHANCE_ACC;
+        let deepest = (0..crate::ml::LENET_K.len())
+            .max_by_key(|&l| crate::ml::LENET_K[l])
+            .unwrap_or(0);
+        let acc_seed = mix64(req.seed, 0xACC);
+        let curve = |protect: Protection| {
+            faults::accuracy_vs_rail(
+                &base.bram,
+                &acc_levels,
+                t_mid,
+                clean,
+                chance,
+                protect,
+                cfg.arch.bram_bits,
+                req.mc_samples,
+                acc_seed,
+            )
+        };
+        let accuracy = curve(Protection::None);
+        let accuracy_protected = curve(Protection::Layer(deepest));
+        Ok(ShmooOutcome {
+            bench: req.bench,
+            condition: condition_of(&cfg),
+            fixed_margin_c: cfg.flow.sensor_margin,
+            store,
+            results,
+            accuracy,
+            accuracy_protected,
+        })
+    }
+
     // ------------------------------------------------------- plumbing --
 
     /// Base config with per-request overrides applied, re-validated so a
@@ -984,6 +1196,86 @@ fn validate_transient(req: &TransientRequest) -> Result<(), FlowError> {
     Ok(())
 }
 
+/// Accuracy-vs-rail sweeps start below the voltage grid's floor: the fault
+/// wall at cool corners sits under `v_bram_min`, and the curve's entire
+/// point is to cross it.
+const ACC_SWEEP_FLOOR_V: f64 = 0.30;
+const ACC_SWEEP_STEP_V: f64 = 0.025;
+
+fn validate_shmoo(req: &ShmooRequest) -> Result<(), FlowError> {
+    for (name, v) in [
+        ("t_lo", req.t_lo),
+        ("t_hi", req.t_hi),
+        ("lut_step_c", req.lut_step_c),
+        ("margin_floor_c", req.margin_floor_c),
+        ("margin_max_c", req.margin_max_c),
+        ("margin_step_c", req.margin_step_c),
+        ("sensor_error_c", req.sensor_error_c),
+    ] {
+        if !v.is_finite() {
+            return Err(FlowError::BadShmooSpec {
+                reason: format!("{name} = {v} is not finite"),
+            });
+        }
+    }
+    if req.t_lo >= req.t_hi {
+        return Err(FlowError::BadShmooSpec {
+            reason: format!("t_lo {} >= t_hi {}", req.t_lo, req.t_hi),
+        });
+    }
+    if req.lut_step_c <= 0.0 || req.margin_step_c <= 0.0 {
+        return Err(FlowError::BadShmooSpec {
+            reason: format!(
+                "steps must be > 0 (lut_step_c {}, margin_step_c {})",
+                req.lut_step_c, req.margin_step_c
+            ),
+        });
+    }
+    if req.sensor_error_c < 0.0 {
+        return Err(FlowError::BadShmooSpec {
+            reason: format!("sensor_error_c {} < 0", req.sensor_error_c),
+        });
+    }
+    if req.margin_floor_c < req.sensor_error_c {
+        return Err(FlowError::BadShmooSpec {
+            reason: format!(
+                "margin_floor_c {} below sensor_error_c {} — learned margins \
+                 could no longer absorb a worst-case sensor under-read",
+                req.margin_floor_c, req.sensor_error_c
+            ),
+        });
+    }
+    if req.margin_max_c < req.margin_floor_c {
+        return Err(FlowError::BadShmooSpec {
+            reason: format!(
+                "margin_max_c {} < margin_floor_c {}",
+                req.margin_max_c, req.margin_floor_c
+            ),
+        });
+    }
+    if req.devices == 0 || req.devices > 4096 {
+        return Err(FlowError::BadShmooSpec {
+            reason: format!("{} devices (must be 1..=4096)", req.devices),
+        });
+    }
+    if req.corners == 0 || req.corners > 64 {
+        return Err(FlowError::BadShmooSpec {
+            reason: format!("{} corners (must be 1..=64)", req.corners),
+        });
+    }
+    if req.workers == 0 || req.workers > 64 {
+        return Err(FlowError::BadShmooSpec {
+            reason: format!("{} workers (must be 1..=64)", req.workers),
+        });
+    }
+    if req.mc_samples == 0 || req.mc_samples > 1_000_000 {
+        return Err(FlowError::BadShmooSpec {
+            reason: format!("{} mc_samples (must be 1..=1_000_000)", req.mc_samples),
+        });
+    }
+    Ok(())
+}
+
 /// Reject configurations the flows cannot run on. The worst offender was
 /// `voltage.step <= 0`, which made the grid constructor attempt a
 /// usize::MAX-element axis; everything else either panicked deep in a flow
@@ -1144,6 +1436,50 @@ mod tests {
             Err(FlowError::BadLutSpec { .. })
         ));
         // none of the rejections should have paid for a design build
+        assert_eq!(s.cached_designs(), 0);
+    }
+
+    #[test]
+    fn bad_shmoo_and_fault_specs_are_rejected_before_any_build() {
+        let mut s = FlowSession::new(Config::new()).unwrap();
+        assert!(matches!(
+            s.shmoo(ShmooRequest {
+                t_lo: 80.0,
+                t_hi: 25.0,
+                ..ShmooRequest::new("mkPktMerge")
+            }),
+            Err(FlowError::BadShmooSpec { .. })
+        ));
+        // a floor below the sensor error would break the zero-violation
+        // guarantee the learned margins must keep
+        assert!(matches!(
+            s.shmoo(ShmooRequest {
+                margin_floor_c: 1.0,
+                ..ShmooRequest::new("mkPktMerge")
+            }),
+            Err(FlowError::BadShmooSpec { .. })
+        ));
+        assert!(matches!(
+            s.shmoo(ShmooRequest {
+                devices: 0,
+                ..ShmooRequest::new("mkPktMerge")
+            }),
+            Err(FlowError::BadShmooSpec { .. })
+        ));
+        assert!(matches!(
+            s.shmoo(ShmooRequest {
+                workers: 0,
+                ..ShmooRequest::new("mkPktMerge")
+            }),
+            Err(FlowError::BadShmooSpec { .. })
+        ));
+        let mut bad_fault = ShmooRequest::new("mkPktMerge");
+        bad_fault.fault.samples = 0;
+        assert!(matches!(
+            s.shmoo(bad_fault),
+            Err(FlowError::BadFaultSpec { .. })
+        ));
+        // none of the rejections paid for a design build
         assert_eq!(s.cached_designs(), 0);
     }
 

@@ -25,6 +25,9 @@
 //!   arenas and thermal backends; every CLI/report/fleet caller goes
 //!   through it)
 //! * [`sim`]     — post-P&R timing simulation / error injection
+//! * [`faults`]  — undervolt fault injector (clustered BRAM bit flips,
+//!   config-cell upsets fit against `chardb`) + per-device undervolt shmoo
+//!   and the measured-guardband store the fleet exploits
 //! * [`ml`]      — LeNet + HD over-scaling workloads (PJRT-driven)
 //! * [`runtime`] — PJRT client wrapper around the `xla` crate (feature `pjrt`)
 //! * [`coordinator`] — online (sensor-driven) dynamic voltage controller;
@@ -55,6 +58,7 @@ pub mod arch;
 pub mod benchkit;
 pub mod chardb;
 pub mod config;
+pub mod faults;
 pub mod fleet;
 pub mod flow;
 pub mod ml;

@@ -9,17 +9,25 @@
 //! thermovolt report --table1|--fig2|--fig3|--fig4|--table2|--fig6|--fig7
 //!                   |--fig8|--runtime|--leakage|--all  [--full]
 //! thermovolt serve  --bench <b> [--transient]     dynamic controller demo
+//! thermovolt shmoo  --bench <b> [--devices N] [--seed S] [--workers W]
+//!                   [--corners K] [--t-lo T] [--t-hi T] [--out F]
+//!                   per-device undervolt shmoo: learns measured guardbands
+//!                   against injected faults; --out persists the
+//!                   GuardbandStore as TOML
 //! thermovolt fleet  --devices N --jobs M --scenario <name>
 //!                   [--seed S] [--workers W] [--benches a,b] [--horizon-s T]
 //!                   [--policy static|dynamic|overscaled] [--overscale-rate R]
-//!                   [--transient] [--rc-stages N]  datacenter fleet simulation
-//!                                                 (RC thermal transients)
+//!                   [--transient] [--rc-stages N] [--measured-guardbands]
+//!                                                 datacenter fleet simulation
+//!                                                 (RC thermal transients;
+//!                                                 measured per-unit margins)
 //! thermovolt bench  [--quick] [--bench <b>] [--out F] [--fleet-out F]
-//!                   [--transient-out F]
+//!                   [--transient-out F] [--faults-out F]
 //!                   perf harness: Alg1 / Alg2 (batched vs --naive path,
 //!                   bit-checked) / LUT build / fleet; emits
 //!                   BENCH_search.json + a ≥2048-device BENCH_fleet.json +
-//!                   the thermal-inertia sweep BENCH_transient.json
+//!                   the thermal-inertia sweep BENCH_transient.json + the
+//!                   fault-injection/guardband sweep BENCH_faults.json
 //! thermovolt e2e    [--full]                      full-pipeline headline run
 //! ```
 
@@ -37,7 +45,7 @@ use thermovolt::fleet::trace::Scenario;
 use thermovolt::fleet::{Fleet, FleetConfig};
 use thermovolt::flow::{
     Alg1Request, Alg2Request, BaselineRequest, Effort, Fidelity, FlowSession, LutRequest,
-    LutSpec, OverscaleRequest,
+    LutSpec, OverscaleRequest, ShmooRequest,
 };
 use thermovolt::report;
 use thermovolt::synth;
@@ -294,6 +302,87 @@ fn run(args: &Args) -> Result<()> {
                 log.len()
             );
         }
+        "shmoo" => {
+            // Per-device undervolt characterization campaign: each virtual
+            // unit draws its own threshold shift, gets shmoo'd for safe
+            // rails at every temperature corner against its sampled fault
+            // population, and the smallest safe sensor margin is learned.
+            // The resulting GuardbandStore replaces the fleet's fixed
+            // sensor margin (`fleet --measured-guardbands`).
+            let bench = args.opt_or("bench", "lenet_systolic");
+            let mut req = ShmooRequest::new(bench);
+            req.devices = args.opt_usize("devices", req.devices);
+            req.seed = args.opt_u64("seed", req.seed);
+            req.workers = args.opt_usize("workers", req.workers).max(1);
+            req.corners = args.opt_usize("corners", req.corners);
+            req.t_lo = args.opt_f64("t-lo", req.t_lo);
+            req.t_hi = args.opt_f64("t-hi", req.t_hi);
+            // --theta is already folded into the session config; no override
+            req.effort = Some(effort);
+            let mut session = FlowSession::with_effort(cfg.clone(), effort)?;
+            println!(
+                "shmoo: {} units x {} corners over {:.0}-{:.0} C on {bench}, seed {:#x}, {} worker(s)",
+                req.devices, req.corners, req.t_lo, req.t_hi, req.seed, req.workers
+            );
+            let t0 = Instant::now();
+            let o = session.shmoo(req)?;
+            println!(
+                "campaign done in {:.1} s (T_amb {:.0} C, theta_JA {:.1} C/W):",
+                t0.elapsed().as_secs_f64(),
+                o.condition.t_amb_c,
+                o.condition.theta_ja
+            );
+            for r in &o.results {
+                let worst = r
+                    .corners
+                    .iter()
+                    .fold((f64::NEG_INFINITY, f64::NEG_INFINITY), |w, c| {
+                        (w.0.max(c.v_safe_core), w.1.max(c.v_safe_bram))
+                    });
+                println!(
+                    "  unit {:02}: vth {:+.1} mV  margin {:>4.1} C{}  safe rails ({}, {}) mV  ({} probes)",
+                    r.device,
+                    r.vth_shift * 1000.0,
+                    r.margin_c,
+                    if r.capped { " CAPPED" } else { "" },
+                    mv(worst.0),
+                    mv(worst.1),
+                    r.probes
+                );
+            }
+            let mean: f64 = o.results.iter().map(|r| r.margin_c).sum::<f64>()
+                / o.results.len().max(1) as f64;
+            println!(
+                "measured margins: mean {:.2} C vs fixed {:.1} C  (store fingerprint {:#x})",
+                mean,
+                o.fixed_margin_c,
+                o.store.fingerprint()
+            );
+            std::fs::create_dir_all(results)?;
+            report::guardband_table(&o.store, o.fixed_margin_c).emit(results, "guardbands")?;
+            // accuracy-vs-rail cliff: where the unprotected curve falls and
+            // how far protecting the deepest LeNet layer moves it
+            let cliff = |pts: &[thermovolt::faults::AccuracyPoint]| {
+                pts.iter()
+                    .rev()
+                    .find(|p| p.lenet_acc < 0.5)
+                    .map(|p| p.v_bram)
+            };
+            match (cliff(&o.accuracy), cliff(&o.accuracy_protected)) {
+                (Some(a), Some(b)) => println!(
+                    "accuracy cliff (LeNet < 50 %): {} mV unprotected → {} mV with the deepest layer protected",
+                    mv(a),
+                    mv(b)
+                ),
+                _ => println!(
+                    "accuracy cliff: not reached within the sweep (all rails above the fault wall)"
+                ),
+            }
+            if let Some(out) = args.opt("out") {
+                std::fs::write(out, o.store.to_toml())?;
+                println!("guardband store → {out}");
+            }
+        }
         "report" => {
             let all = args.flag("all");
             std::fs::create_dir_all(results)?;
@@ -370,6 +459,10 @@ fn run(args: &Args) -> Result<()> {
             // --transient: RC thermal-network plant + predictive placement
             fcfg.transient = args.flag("transient");
             fcfg.rc_stages = args.opt_usize("rc-stages", fcfg.rc_stages);
+            // --measured-guardbands: run the per-unit undervolt shmoo at
+            // build time and schedule with learned margins instead of the
+            // fixed sensor margin
+            fcfg.measured_guardbands = args.flag("measured-guardbands");
             if let Some(p) = args.opt("policy") {
                 fcfg.policy = PolicyKind::from_name(p).ok_or_else(|| {
                     anyhow::anyhow!("unknown policy `{p}` (one of: static, dynamic, overscaled)")
@@ -410,10 +503,13 @@ fn run(args: &Args) -> Result<()> {
             println!("fleet ready in {:.1} s:", t0.elapsed().as_secs_f64());
             if fleet.specs.len() <= 32 {
                 for s in &fleet.specs {
+                    let margin = match s.measured_margin_c {
+                        Some(m) => format!("margin {m:.1} C (measured; fixed {:.1})", s.margin_c),
+                        None => format!("margin {:.1} C", s.margin_c),
+                    };
                     println!(
-                        "  fpga-{:02}: {}x{} tiles  theta_JA {:.2} C/W  rack +{:.1} C  margin {:.1} C  power x{:.3}",
-                        s.id, s.grid_edge, s.grid_edge, s.theta_ja, s.rack_offset_c, s.margin_c,
-                        s.power_scale
+                        "  fpga-{:02}: {}x{} tiles  theta_JA {:.2} C/W  rack +{:.1} C  {margin}  power x{:.3}",
+                        s.id, s.grid_edge, s.grid_edge, s.theta_ja, s.rack_offset_c, s.power_scale
                     );
                 }
             } else {
@@ -462,10 +558,21 @@ fn run(args: &Args) -> Result<()> {
                     tel.peak_overshoot_c
                 );
             }
+            if fleet.cfg.measured_guardbands {
+                let (sum_m, sum_f, n) = fleet.specs.iter().fold((0.0, 0.0, 0usize), |acc, s| {
+                    (acc.0 + s.effective_margin_c(), acc.1 + s.margin_c, acc.2 + 1)
+                });
+                println!(
+                    "measured guardbands: mean margin {:.2} C vs fixed {:.2} C",
+                    sum_m / n.max(1) as f64,
+                    sum_f / n.max(1) as f64,
+                );
+            }
             println!(
-                "violations: {} dyn / {} over  |  migrations {}  unplaceable {}  |  throughput {:.1} jobs/h  makespan {:.0} s  queue p50/p95 {:.1}/{:.1} s",
+                "violations: {} dyn / {} over  |  injected faults {}  |  migrations {}  unplaceable {}  |  throughput {:.1} jobs/h  makespan {:.0} s  queue p50/p95 {:.1}/{:.1} s",
                 tel.violations,
                 tel.violations_over,
+                tel.injected_faults,
                 tel.migrations,
                 tel.unplaceable,
                 tel.throughput_jobs_per_hour,
@@ -521,6 +628,19 @@ fn run(args: &Args) -> Result<()> {
                 ts.delta_migrations,
                 ts.transient_peak_overshoot_c
             );
+            // undervolt fault-injection / measured-guardband sweep
+            // → BENCH_faults.json
+            let faults_out =
+                Path::new(args.opt_or("faults-out", "BENCH_faults.json")).to_path_buf();
+            let fa = thermovolt::benchkit::run_faults(&cfg, &opts, &faults_out)?;
+            println!(
+                "faults bench: margins mean {:.2} C vs fixed {:.1} C, fleet energy {:.1} → {:.1} J ({:.1} % saved, 0 violations / 0 injected faults)",
+                fa.margin_mean_c,
+                fa.fixed_margin_c,
+                fa.fleet_energy_fixed_j,
+                fa.fleet_energy_measured_j,
+                fa.fleet_energy_saving * 100.0
+            );
         }
         "e2e" => {
             // END-TO-END: benchmarks through the full pipeline on the PJRT
@@ -547,7 +667,7 @@ fn run(args: &Args) -> Result<()> {
         }
         "" | "help" => {
             println!(
-                "subcommands: characterize | bench-info | power-opt | energy-opt | overscale | report | serve | fleet | bench | e2e"
+                "subcommands: characterize | bench-info | power-opt | energy-opt | overscale | report | serve | shmoo | fleet | bench | e2e"
             );
         }
         other => anyhow::bail!("unknown subcommand `{other}` (try `help`)"),

@@ -13,7 +13,9 @@ use std::path::Path;
 #[cfg(feature = "pjrt")]
 use crate::runtime::{literal_f32_from_f32, Runtime};
 #[cfg(feature = "pjrt")]
-use crate::sim::{amplify, sample_mask, MlRates};
+use crate::faults::sample_mask;
+#[cfg(feature = "pjrt")]
+use crate::sim::{amplify, MlRates};
 #[cfg(feature = "pjrt")]
 use crate::util::Xoshiro256;
 use tensors::TensorFile;
@@ -48,8 +50,25 @@ pub const MAG_MSB_FACTOR: f64 = 2.0;
 /// collapsing to chance once hard violations dominate). The fleet's
 /// overscaled-dynamic policy uses this to turn each job kind's
 /// `ErrorModel::mean_rate` into quality telemetry.
+/// Edge cases are pinned rather than propagated: non-finite accuracies
+/// return 0.0 (an impossible quality, visible in telemetry), a NaN
+/// `p_cycle` is treated as fully corrupting (pessimistic, not poisonous),
+/// `p_cycle` clamps to [0, 1], and `depth == 0` — a zero-cycle reduction
+/// cannot violate — returns the clean accuracy.
 pub fn expected_accuracy(clean_acc: f64, chance_acc: f64, p_cycle: f64, depth: usize) -> f64 {
-    let p_op = crate::sim::amplify(p_cycle, depth);
+    if !clean_acc.is_finite() || !chance_acc.is_finite() {
+        return 0.0;
+    }
+    let clean_acc = clean_acc.clamp(0.0, 1.0);
+    if depth == 0 {
+        return clean_acc;
+    }
+    let chance_acc = chance_acc.clamp(0.0, 1.0);
+    let p_op = if p_cycle.is_nan() {
+        1.0
+    } else {
+        crate::sim::amplify(p_cycle, depth)
+    };
     (clean_acc * (1.0 - p_op) + chance_acc * p_op).clamp(0.0, 1.0)
 }
 
@@ -231,6 +250,22 @@ mod tests {
         }
         // deeper pipelines amplify the same per-cycle rate
         assert!(expected_accuracy(0.98, 0.1, 1e-4, 144) < expected_accuracy(0.98, 0.1, 1e-4, 9));
+    }
+
+    #[test]
+    fn expected_accuracy_pins_edge_cases() {
+        // p_cycle clamps to [0, 1] instead of extrapolating
+        assert!((expected_accuracy(0.98, 0.1, -0.5, 72) - 0.98).abs() < 1e-12);
+        assert!((expected_accuracy(0.98, 0.1, 7.0, 72) - 0.1).abs() < 1e-12);
+        // a zero-cycle reduction cannot violate
+        assert!((expected_accuracy(0.98, 0.1, 0.9, 0) - 0.98).abs() < 1e-12);
+        // NaN rate is pessimistic (chance), not propagated
+        let a = expected_accuracy(0.98, 0.1, f64::NAN, 72);
+        assert!((a - 0.1).abs() < 1e-12, "NaN p_cycle leaked: {a}");
+        // NaN accuracies become the impossible 0.0 instead of NaN telemetry
+        assert_eq!(expected_accuracy(f64::NAN, 0.1, 1e-6, 72), 0.0);
+        assert_eq!(expected_accuracy(0.98, f64::NAN, 1e-6, 72), 0.0);
+        assert_eq!(expected_accuracy(f64::INFINITY, 0.1, 1e-6, 72), 0.0);
     }
 }
 

@@ -622,6 +622,49 @@ pub fn fleet_table(t: &FleetTelemetry, specs: &[DeviceSpec]) -> Table {
     tb
 }
 
+// ----------------------------------------------------------- faults --
+
+/// Per-unit measured guardbands from the undervolt shmoo
+/// (`thermovolt shmoo`): one row per device with its process shift, the
+/// learned sensor margin, and the worst safe rails its fault population
+/// allowed, plus a FIXED reference row carrying the margin the
+/// measurements replace.
+pub fn guardband_table(store: &crate::faults::GuardbandStore, fixed_margin_c: f64) -> Table {
+    let mut tb = Table::new(
+        "Guardbands — measured per-unit sensor margins vs the fixed default",
+        &[
+            "device",
+            "vth(mV)",
+            "margin(C)",
+            "V_safe_core(mV)",
+            "V_safe_bram(mV)",
+            "capped",
+            "probes",
+        ],
+    );
+    for e in &store.entries {
+        tb.row(vec![
+            format!("fpga-{:02}", e.device),
+            format!("{:+.1}", e.vth_shift * 1000.0),
+            f2(e.margin_c),
+            mv(e.v_safe_core),
+            mv(e.v_safe_bram),
+            if e.capped { "yes" } else { "-" }.into(),
+            e.probes.to_string(),
+        ]);
+    }
+    tb.row(vec![
+        "FIXED".into(),
+        "-".into(),
+        f2(fixed_margin_c),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+    ]);
+    tb
+}
+
 /// Thermal-inertia comparison: the same fleet under the instantaneous
 /// first-order plant and the transient RC plant (`thermovolt bench`'s
 /// transient sweep prints and emits this next to `BENCH_transient.json`).

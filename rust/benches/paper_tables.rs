@@ -72,7 +72,7 @@ fn main() -> anyhow::Result<()> {
     })?;
 
     timed("F3 fig3", || -> anyhow::Result<()> {
-        let (l, r) = report::fig3(&cfg, !full);
+        let (l, r) = report::fig3(&cfg, !full)?;
         l.emit(out, "fig3_left")?;
         r.emit(out, "fig3_right")?;
         // ablation: the raw (independence-assumption) DSP curve

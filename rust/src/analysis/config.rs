@@ -1,0 +1,162 @@
+//! Lint configuration: rule scopes and the configurable symbol lists,
+//! loaded from `detlint.toml` (parsed with [`crate::util::tomlite`]) with
+//! compiled-in defaults matching the shipped tree.
+//!
+//! The D005 lists replace the CI grep gates verbatim: the call symbols are
+//! the module-qualified deprecated entry points, and the use-import rule
+//! (marker + banned-name) catches `use` lines that would let code call a
+//! shim unqualified. Editing `detlint.toml` retargets the gate without
+//! touching the linter.
+
+use crate::util::tomlite::Doc;
+
+/// Everything the rule engine consults besides the source text itself.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LintConfig {
+    /// Directories scanned, relative to the repo root.
+    pub roots: Vec<String>,
+    /// Path prefixes exempt from D003 (the perf harness measures
+    /// wall-clock by design).
+    pub d003_exempt: Vec<String>,
+    /// Path prefixes D004 applies to: library code on paths reachable from
+    /// `FlowSession`, where a panic escapes the typed `FlowError` contract.
+    pub d004_paths: Vec<String>,
+    /// D005 module-qualified deprecated call symbols (matched at an
+    /// identifier boundary, e.g. `alg1::run_with(`).
+    pub d005_calls: Vec<String>,
+    /// D005 `use`-line markers: module paths nobody may import banned
+    /// names from (e.g. `flow::alg1::`).
+    pub d005_use_markers: Vec<String>,
+    /// D005 banned names searched in the import tail after a marker
+    /// (`*` catches glob imports).
+    pub d005_use_names: Vec<String>,
+}
+
+impl Default for LintConfig {
+    fn default() -> LintConfig {
+        let s = |v: &[&str]| v.iter().map(|x| x.to_string()).collect();
+        LintConfig {
+            roots: s(&["rust/src", "rust/examples", "rust/benches", "rust/tests"]),
+            d003_exempt: s(&["rust/src/benchkit/"]),
+            d004_paths: s(&[
+                "rust/src/flow/",
+                "rust/src/coordinator/",
+                "rust/src/report/",
+                "rust/src/fleet/",
+                "rust/src/faults/",
+                "rust/src/timing/",
+            ]),
+            d005_calls: s(&[
+                "alg1::thermal_aware_voltage_selection(",
+                "alg1::run_with(",
+                "alg1::run_with_arena(",
+                "alg1::baseline(",
+                "alg1::baseline_with(",
+                "alg1::fixed_voltage_fixed_point(",
+                "alg2::thermal_aware_energy_optimization(",
+                "alg2::thermal_aware_energy_optimization_naive(",
+                "alg2::run_with(",
+                "alg2::run_with_arena(",
+                "alg2::run_naive_with(",
+                "alg2::baseline_energy(",
+                "VoltageLut::build(",
+                "VoltageLut::build_rate(",
+                "VoltageLut::fixed(",
+                "overscale::overscale(",
+                "overscale::error_model(",
+                "overscale::error_model_with(",
+                "scheduler::plan_legacy(",
+                "scheduler::execute_legacy(",
+                "sim::sample_mask(",
+            ]),
+            d005_use_markers: s(&[
+                "flow::alg1::",
+                "flow::alg2::",
+                "flow::overscale::",
+                "fleet::scheduler::",
+                "sim::",
+            ]),
+            d005_use_names: s(&[
+                "*",
+                "thermal_aware",
+                "run_with",
+                "run_naive_with",
+                "baseline",
+                "fixed_voltage_fixed_point",
+                "error_model",
+                "overscale",
+                "plan_legacy",
+                "execute_legacy",
+                "sample_mask",
+            ]),
+        }
+    }
+}
+
+impl LintConfig {
+    /// Parse a `detlint.toml`. Missing keys keep their compiled-in
+    /// defaults, so a config file can override just one list.
+    pub fn from_toml(text: &str) -> Result<LintConfig, String> {
+        let doc = Doc::parse(text).map_err(|e| e.to_string())?;
+        let mut cfg = LintConfig::default();
+        let take = |slot: &mut Vec<String>, key: &str| {
+            if let Some(v) = doc.str_array(key) {
+                *slot = v;
+            }
+        };
+        take(&mut cfg.roots, "lint.roots");
+        take(&mut cfg.d003_exempt, "d003.exempt");
+        take(&mut cfg.d004_paths, "d004.paths");
+        take(&mut cfg.d005_calls, "d005.calls");
+        take(&mut cfg.d005_use_markers, "d005.use_markers");
+        take(&mut cfg.d005_use_names, "d005.use_names");
+        Ok(cfg)
+    }
+
+    /// Render the config in the exact shape `from_toml` reads back
+    /// (round-trips through `tomlite`).
+    pub fn to_toml(&self) -> String {
+        fn arr(v: &[String]) -> String {
+            let quoted: Vec<String> = v.iter().map(|s| format!("\"{s}\"")).collect();
+            format!("[{}]", quoted.join(", "))
+        }
+        let mut out = String::new();
+        out.push_str("# detlint configuration (see DESIGN.md, section `analysis`)\n");
+        out.push_str("[lint]\n");
+        out.push_str(&format!("roots = {}\n\n", arr(&self.roots)));
+        out.push_str("[d003]\n");
+        out.push_str(&format!("exempt = {}\n\n", arr(&self.d003_exempt)));
+        out.push_str("[d004]\n");
+        out.push_str(&format!("paths = {}\n\n", arr(&self.d004_paths)));
+        out.push_str("[d005]\n");
+        out.push_str(&format!("calls = {}\n", arr(&self.d005_calls)));
+        out.push_str(&format!("use_markers = {}\n", arr(&self.d005_use_markers)));
+        out.push_str(&format!("use_names = {}\n", arr(&self.d005_use_names)));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_round_trips_through_tomlite() {
+        let cfg = LintConfig::default();
+        let parsed = LintConfig::from_toml(&cfg.to_toml()).unwrap();
+        assert_eq!(cfg, parsed);
+    }
+
+    #[test]
+    fn partial_config_keeps_defaults_for_missing_keys() {
+        let cfg = LintConfig::from_toml("[d004]\npaths = [\"rust/src/flow/\"]\n").unwrap();
+        assert_eq!(cfg.d004_paths, vec!["rust/src/flow/"]);
+        assert_eq!(cfg.roots, LintConfig::default().roots);
+        assert!(!cfg.d005_calls.is_empty());
+    }
+
+    #[test]
+    fn bad_toml_is_an_error_not_a_panic() {
+        assert!(LintConfig::from_toml("not = [unterminated").is_err());
+    }
+}

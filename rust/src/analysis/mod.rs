@@ -1,0 +1,215 @@
+//! `analysis` — detlint, the determinism & correctness static-analysis pass.
+//!
+//! The repo's headline numbers (paper power/energy tables, fleet
+//! serial≡parallel bit-identity, `GuardbandStore` fingerprints) all rest on
+//! two code-level invariants: results are pure functions of inputs, and
+//! float comparisons are total. Those used to be conventions plus four CI
+//! grep gates; this module turns them into machine-checked rules over a
+//! lightweight hand-rolled lexer (dependency-free, in the spirit of
+//! [`crate::util::tomlite`]).
+//!
+//! Pipeline: [`scanner`] strips comments/strings and marks `#[cfg(test)]`
+//! regions → [`rules`] applies D001–D005 (catalog in DESIGN.md, section
+//! `analysis`) under [`config::LintConfig`] scopes → findings render as
+//! `file:line [D00x] message` or `--json`. Suppression is only via inline
+//! `// detlint: allow(D00x) <reason>` (same line or the line above) or by
+//! editing `detlint.toml`; a reason-less directive suppresses nothing and
+//! is itself reported (D000).
+//!
+//! Entry points: `thermovolt lint`, the standalone `detlint` bin (the CI
+//! gate), and [`lint_tree`] / [`lint_source`] for tests.
+
+pub mod config;
+pub mod rules;
+pub mod scanner;
+
+pub use config::LintConfig;
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+/// One diagnostic: rule ID, repo-relative file, 1-based line.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub message: String,
+}
+
+/// The result of linting a tree: findings sorted by (file, line, rule).
+#[derive(Clone, Debug, Default)]
+pub struct LintReport {
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+}
+
+impl LintReport {
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// `file:line [D00x] message` per finding plus a one-line tally.
+    pub fn render_human(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            out.push_str(&format!("{}:{} [{}] {}\n", f.file, f.line, f.rule, f.message));
+        }
+        if self.findings.is_empty() {
+            out.push_str(&format!("detlint: {} files scanned, clean\n", self.files_scanned));
+        } else {
+            out.push_str(&format!(
+                "detlint: {} finding(s) in {} files scanned\n",
+                self.findings.len(),
+                self.files_scanned
+            ));
+        }
+        out
+    }
+
+    /// Machine output for the CI artifact: findings plus per-rule counts.
+    pub fn render_json(&self) -> String {
+        let mut counts: BTreeMap<&'static str, usize> = BTreeMap::new();
+        for f in &self.findings {
+            *counts.entry(f.rule).or_insert(0) += 1;
+        }
+        let mut out = String::from("{\n  \"tool\": \"detlint\",\n");
+        out.push_str(&format!("  \"files_scanned\": {},\n", self.files_scanned));
+        out.push_str(&format!("  \"finding_count\": {},\n", self.findings.len()));
+        out.push_str("  \"counts\": {");
+        let parts: Vec<String> = counts
+            .iter()
+            .map(|(r, n)| format!("\"{r}\": {n}"))
+            .collect();
+        out.push_str(&parts.join(", "));
+        out.push_str("},\n  \"findings\": [\n");
+        for (i, f) in self.findings.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"rule\": \"{}\", \"file\": \"{}\", \"line\": {}, \"message\": \"{}\"}}{}\n",
+                f.rule,
+                json_escape(&f.file),
+                f.line,
+                json_escape(&f.message),
+                if i + 1 < self.findings.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Lint one source text under a virtual repo-relative path (`/` separators).
+/// This is the fixture-test entry point: the path alone decides rule scopes.
+pub fn lint_source(path: &str, src: &str, cfg: &LintConfig) -> Vec<Finding> {
+    let whole_file_test = path.starts_with("rust/tests/");
+    let scanned = scanner::scan(src, whole_file_test);
+    let mut out = Vec::new();
+    rules::apply(path, &scanned, cfg, &mut out);
+    out
+}
+
+/// Walk `cfg.roots` under `repo_root`, lint every `.rs` file, and return the
+/// sorted report. The walk itself is deterministic (directory entries are
+/// sorted) so diagnostics and JSON artifacts are byte-stable across runs.
+pub fn lint_tree(repo_root: &Path, cfg: &LintConfig) -> io::Result<LintReport> {
+    let mut files: Vec<String> = Vec::new();
+    for root in &cfg.roots {
+        let dir = repo_root.join(root);
+        if dir.is_dir() {
+            collect_rs_files(&dir, root, &mut files)?;
+        }
+    }
+    files.sort();
+    let mut report = LintReport::default();
+    for rel in &files {
+        let src = fs::read_to_string(repo_root.join(rel))?;
+        report.findings.extend(lint_source(rel, &src, cfg));
+        report.files_scanned += 1;
+    }
+    report
+        .findings
+        .sort_by_key(|f| (f.file.clone(), f.line, f.rule));
+    Ok(report)
+}
+
+fn collect_rs_files(dir: &Path, rel: &str, out: &mut Vec<String>) -> io::Result<()> {
+    let mut entries: Vec<(String, bool)> = Vec::new();
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let name = entry.file_name().to_string_lossy().into_owned();
+        entries.push((name, entry.file_type()?.is_dir()));
+    }
+    entries.sort();
+    for (name, is_dir) in entries {
+        let child_rel = format!("{rel}/{name}");
+        if is_dir {
+            if name != "target" {
+                collect_rs_files(&dir.join(&name), &child_rel, out)?;
+            }
+        } else if name.ends_with(".rs") {
+            out.push(child_rel);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_renders_human_and_json() {
+        let report = LintReport {
+            findings: vec![Finding {
+                rule: "D001",
+                file: "rust/src/x.rs".into(),
+                line: 7,
+                message: "msg with \"quote\"".into(),
+            }],
+            files_scanned: 3,
+        };
+        let human = report.render_human();
+        assert!(human.contains("rust/src/x.rs:7 [D001]"));
+        assert!(human.contains("1 finding(s) in 3 files"));
+        let json = report.render_json();
+        assert!(json.contains("\"finding_count\": 1"));
+        assert!(json.contains("\"D001\": 1"));
+        assert!(json.contains("msg with \\\"quote\\\""));
+    }
+
+    #[test]
+    fn clean_report_renders_clean() {
+        let report = LintReport {
+            findings: vec![],
+            files_scanned: 42,
+        };
+        assert!(report.clean());
+        assert!(report.render_human().contains("42 files scanned, clean"));
+        assert!(report.render_json().contains("\"finding_count\": 0"));
+    }
+
+    #[test]
+    fn lint_source_scopes_by_virtual_path() {
+        let cfg = LintConfig::default();
+        let bad = "fn f() { let m = HashMap::new(); }";
+        assert_eq!(lint_source("rust/src/x.rs", bad, &cfg).len(), 1);
+        assert!(lint_source("rust/tests/x.rs", bad, &cfg).is_empty());
+    }
+}

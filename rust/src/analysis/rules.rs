@@ -1,0 +1,305 @@
+//! The determinism & correctness rules (rule catalog in DESIGN.md
+//! section `analysis`).
+//!
+//! Every rule skips test code (`#[cfg(test)]` regions and `rust/tests/`):
+//! tests may hash, time, and unwrap freely — the invariants protect the
+//! *results* the library produces, and the differential tests are exactly
+//! where the deprecated shims are still called on purpose. Scopes:
+//!
+//! | rule | scope | what it catches |
+//! |------|-------|-----------------|
+//! | D000 | everywhere | allow directive without a justification |
+//! | D001 | `rust/src` | `HashMap`/`HashSet` (process-seeded iteration order) |
+//! | D002 | everywhere | float comparators that are not total (`partial_cmp`) |
+//! | D003 | `rust/src` minus exempt | wall-clock / thread identity |
+//! | D004 | configured paths | `unwrap()`/`expect()` where `FlowError` is the contract |
+//! | D005 | everywhere | deprecated entry points (configurable symbol lists) |
+
+use super::config::LintConfig;
+use super::scanner::Scanned;
+use super::Finding;
+
+/// Apply every rule to one scanned file. `path` is repo-root-relative with
+/// `/` separators (it decides rule scopes).
+pub fn apply(path: &str, scanned: &Scanned, cfg: &LintConfig, out: &mut Vec<Finding>) {
+    let is_src = path.starts_with("rust/src/");
+    let d003_scope = is_src && !cfg.d003_exempt.iter().any(|p| path.starts_with(p.as_str()));
+    let d004_scope = cfg.d004_paths.iter().any(|p| path.starts_with(p.as_str()));
+
+    // D000: a directive that names rules but carries no reason suppresses
+    // nothing — surface it so a bare `allow` can't silently rot.
+    for a in &scanned.allows {
+        let in_test = scanned
+            .lines
+            .get(a.line - 1)
+            .map(|l| l.in_test)
+            .unwrap_or(false);
+        if !a.has_reason && !in_test {
+            out.push(Finding {
+                rule: "D000",
+                file: path.to_string(),
+                line: a.line,
+                message: format!(
+                    "allow({}) directive without a justification: add a reason after the rule list",
+                    a.rules.join(",")
+                ),
+            });
+        }
+    }
+
+    for (idx, line) in scanned.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        let lineno = idx + 1;
+        let code = line.code.as_str();
+        let trimmed = code.trim_start();
+        let is_use = trimmed.starts_with("use ") || trimmed.starts_with("pub use ");
+        let mut emit = |rule: &'static str, message: String| {
+            if !scanned.suppressed(rule, lineno) {
+                out.push(Finding {
+                    rule,
+                    file: path.to_string(),
+                    line: lineno,
+                    message,
+                });
+            }
+        };
+
+        // D001 — hash containers in library code. The lexer cannot prove a
+        // map is never iterated, so any use needs a BTree form, a
+        // sort-after-collect, or an allow directive documenting why the
+        // iteration order provably never reaches a result or fingerprint.
+        if is_src && !is_use {
+            for tok in ["HashMap", "HashSet"] {
+                if contains_ident(code, tok) {
+                    emit(
+                        "D001",
+                        format!(
+                            "{tok} in library code: iteration order is seeded per process; \
+                             use the BTree form, sort after collect, or document why order \
+                             never leaks (allow(D001) <reason>)"
+                        ),
+                    );
+                    break;
+                }
+            }
+        }
+
+        // D002 — float comparators must be total. `partial_cmp` unwraps to
+        // a panic (or silently misorders) the moment a NaN reaches a sort.
+        if code.contains(".partial_cmp(") {
+            emit(
+                "D002",
+                "float comparison via partial_cmp: use f64::total_cmp (total over NaN)"
+                    .to_string(),
+            );
+        } else if ["sort_by(", "max_by(", "min_by("]
+            .iter()
+            .any(|t| code.contains(t))
+            && !code.contains("total_cmp")
+        {
+            emit(
+                "D002",
+                "comparator-based sort/min/max without total_cmp on the same line: \
+                 make the comparator total (total_cmp or a sort_by_key Ord key)"
+                    .to_string(),
+            );
+        }
+
+        // D003 — wall-clock and thread identity make results depend on the
+        // machine, not the inputs; only benchkit (and the CLI display
+        // timers, individually justified) may time.
+        if d003_scope {
+            for tok in ["Instant::now", "SystemTime", "thread::current"] {
+                if contains_ident(code, tok) {
+                    emit(
+                        "D003",
+                        format!(
+                            "{tok} outside benchkit: results must be pure functions of \
+                             inputs; time only in the perf harness"
+                        ),
+                    );
+                    break;
+                }
+            }
+        }
+
+        // D004 — on FlowSession-reachable paths the error contract is the
+        // typed FlowError; a panic tears down fleet workers instead of
+        // surfacing a match-able failure.
+        if d004_scope && (code.contains(".unwrap()") || code.contains(".expect(")) {
+            emit(
+                "D004",
+                "unwrap()/expect() on a FlowSession-reachable path: return a typed \
+                 FlowError or a graceful fallback (allow(D004) <reason> for proven \
+                 invariants)"
+                    .to_string(),
+            );
+        }
+
+        // D005 — deprecated entry points, replacing the CI grep gates.
+        if is_use {
+            for marker in &cfg.d005_use_markers {
+                if let Some(tail) = tail_after_ident(code, marker) {
+                    if cfg.d005_use_names.iter().any(|n| tail.contains(n.as_str())) {
+                        emit(
+                            "D005",
+                            format!(
+                                "import from deprecated module path `{marker}`: call through \
+                                 flow::FlowSession / Fleet::plan / Fleet::execute instead"
+                            ),
+                        );
+                        break;
+                    }
+                }
+            }
+        } else {
+            for sym in &cfg.d005_calls {
+                if contains_ident(code, sym) {
+                    emit(
+                        "D005",
+                        format!(
+                            "call to deprecated entry point `{sym}..)`: construct flows \
+                             through flow::FlowSession, schedule through Fleet::plan/execute"
+                        ),
+                    );
+                    break;
+                }
+            }
+        }
+    }
+}
+
+/// Substring match anchored at an identifier boundary on the left, so
+/// `sim::sample_mask(` never matches inside `dsp_sim::…` and `HashMap`
+/// never matches inside `MyHashMapLike` — the char before the match must
+/// not be part of an identifier.
+fn contains_ident(code: &str, needle: &str) -> bool {
+    let mut from = 0;
+    while let Some(pos) = code[from..].find(needle) {
+        let at = from + pos;
+        let boundary = at == 0
+            || code[..at]
+                .chars()
+                .next_back()
+                .map(|c| !c.is_alphanumeric() && c != '_')
+                .unwrap_or(true);
+        if boundary {
+            return true;
+        }
+        from = at + needle.len();
+    }
+    false
+}
+
+/// The text after the first boundary-anchored occurrence of `marker`.
+fn tail_after_ident<'a>(code: &'a str, marker: &str) -> Option<&'a str> {
+    let mut from = 0;
+    while let Some(pos) = code[from..].find(marker) {
+        let at = from + pos;
+        let boundary = at == 0
+            || code[..at]
+                .chars()
+                .next_back()
+                .map(|c| !c.is_alphanumeric() && c != '_')
+                .unwrap_or(true);
+        if boundary {
+            return Some(&code[at + marker.len()..]);
+        }
+        from = at + marker.len();
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::scanner::scan;
+
+    fn lint(path: &str, src: &str) -> Vec<Finding> {
+        let cfg = LintConfig::default();
+        let mut out = Vec::new();
+        apply(path, &scan(src, path.starts_with("rust/tests/")), &cfg, &mut out);
+        out
+    }
+
+    #[test]
+    fn ident_boundary_matching() {
+        assert!(contains_ident("let m: HashMap<u32, u32> = x;", "HashMap"));
+        assert!(!contains_ident("let m: FxHashMap<u32, u32> = x;", "HashMap"));
+        assert!(contains_ident("crate::sim::sample_mask(1)", "sim::sample_mask("));
+        assert!(!contains_ident("dsp_sim::sample_mask(1)", "sim::sample_mask("));
+    }
+
+    #[test]
+    fn d001_fires_in_src_not_in_tests_or_use_lines() {
+        let bad = "fn f() { let m = HashMap::new(); }";
+        assert_eq!(lint("rust/src/x.rs", bad)[0].rule, "D001");
+        assert!(lint("rust/tests/x.rs", bad).is_empty());
+        assert!(lint("rust/src/x.rs", "use std::collections::HashMap;").is_empty());
+    }
+
+    #[test]
+    fn d002_partial_cmp_and_bare_sort() {
+        let f = lint("rust/src/x.rs", "v.sort_by(|a, b| a.partial_cmp(b).unwrap());");
+        assert!(f.iter().any(|f| f.rule == "D002"));
+        assert!(lint("rust/src/x.rs", "v.sort_by(|a, b| a.total_cmp(b));").is_empty());
+        assert!(lint("rust/src/x.rs", "v.sort_by_key(|a| a.id);").is_empty());
+        assert_eq!(lint("rust/src/x.rs", "let m = it.max_by(cmp_fn);")[0].rule, "D002");
+    }
+
+    #[test]
+    fn d003_scope_and_benchkit_exemption() {
+        let bad = "let t0 = Instant::now();";
+        assert_eq!(lint("rust/src/flow/x.rs", bad)[0].rule, "D003");
+        assert!(lint("rust/src/benchkit/mod.rs", bad).is_empty());
+        assert!(lint("rust/benches/x.rs", bad).is_empty());
+    }
+
+    #[test]
+    fn d004_only_on_configured_paths() {
+        let bad = "let v = m.lock().unwrap();";
+        assert_eq!(lint("rust/src/flow/session.rs", bad)[0].rule, "D004");
+        assert!(lint("rust/src/util/rng.rs", bad).is_empty());
+    }
+
+    #[test]
+    fn d005_calls_and_use_imports() {
+        assert_eq!(
+            lint("rust/src/x.rs", "let r = alg1::run_with(a, b);")[0].rule,
+            "D005"
+        );
+        assert_eq!(
+            lint("rust/src/x.rs", "use crate::fleet::scheduler::plan_legacy;")[0].rule,
+            "D005"
+        );
+        assert_eq!(
+            lint("rust/src/x.rs", "use crate::flow::alg1::*;")[0].rule,
+            "D005"
+        );
+        // legit imports from the same modules stay clean
+        assert!(lint(
+            "rust/src/x.rs",
+            "use crate::flow::alg1::{self, Alg1Result};"
+        )
+        .is_empty());
+        assert!(lint("rust/src/x.rs", "use crate::sim::ml_error_rates;").is_empty());
+    }
+
+    #[test]
+    fn allow_with_reason_suppresses_but_bare_allow_is_d000() {
+        let ok = "// detlint: allow(D001) membership set, never iterated\nlet m = HashSet::new();";
+        assert!(lint("rust/src/x.rs", ok).is_empty());
+        let bare = "// detlint: allow(D001)\nlet m = HashSet::new();";
+        let f = lint("rust/src/x.rs", bare);
+        assert!(f.iter().any(|f| f.rule == "D000"));
+        assert!(f.iter().any(|f| f.rule == "D001"), "bare allow must not suppress");
+    }
+
+    #[test]
+    fn string_literals_and_comments_never_fire() {
+        let src = "// HashMap in a comment\nlet s = \"Instant::now and HashSet\";";
+        assert!(lint("rust/src/x.rs", src).is_empty());
+    }
+}

@@ -1,0 +1,364 @@
+//! Line-oriented Rust source scanner for the lint pass.
+//!
+//! Not a real parser — in the spirit of `util::tomlite`, it is the smallest
+//! lexer that makes token matching trustworthy: it strips comments and
+//! string/char literals (so a rule symbol quoted in a doc comment or a
+//! message never fires), tracks `#[cfg(test)]` regions by brace depth (so
+//! test-only code is exempt from the library rules), and collects the
+//! inline `// detlint: allow(D00x) <reason>` suppression directives.
+//!
+//! The scanner is itself deterministic: output depends only on the file
+//! bytes, never on iteration order, the clock, or the environment.
+
+/// One suppression directive: `// detlint: allow(D001,D004) reason text`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Allow {
+    /// 1-based line the directive sits on. It suppresses matching findings
+    /// on its own line and on the line directly below it.
+    pub line: usize,
+    /// Rule ids named in the parentheses, e.g. `["D001"]`.
+    pub rules: Vec<String>,
+    /// A directive must carry a justification after the closing paren;
+    /// without one it suppresses nothing and is itself reported (D000).
+    pub has_reason: bool,
+}
+
+/// One scanned source line.
+#[derive(Clone, Debug)]
+pub struct Line {
+    /// Sanitized text: comments and string/char literals removed.
+    pub code: String,
+    /// True inside a `#[cfg(test)]` region (or anywhere in `rust/tests/`).
+    pub in_test: bool,
+}
+
+/// A fully scanned source file.
+#[derive(Clone, Debug, Default)]
+pub struct Scanned {
+    pub lines: Vec<Line>,
+    pub allows: Vec<Allow>,
+}
+
+impl Scanned {
+    /// Is a finding for `rule` at 1-based `line` suppressed by a directive
+    /// (on the same line or the line above) that carries a reason?
+    pub fn suppressed(&self, rule: &str, line: usize) -> bool {
+        self.allows.iter().any(|a| {
+            a.has_reason
+                && (a.line == line || a.line + 1 == line)
+                && a.rules.iter().any(|r| r == rule)
+        })
+    }
+}
+
+/// Lexer mode carried across lines (block comments, strings and raw
+/// strings all span lines in Rust).
+enum Mode {
+    Code,
+    /// Nesting depth (Rust block comments nest).
+    BlockComment(u32),
+    Str,
+    /// Number of `#` marks that close the raw string.
+    RawStr(u8),
+}
+
+/// Scan one source file. `whole_file_test` marks every line as test code
+/// (used for files under `rust/tests/`).
+pub fn scan(src: &str, whole_file_test: bool) -> Scanned {
+    let mut out = Scanned::default();
+    let mut mode = Mode::Code;
+    for (idx, raw) in src.lines().enumerate() {
+        if let Some(allow) = parse_allow(raw, idx + 1) {
+            out.allows.push(allow);
+        }
+        out.lines.push(Line {
+            code: sanitize(raw, &mut mode),
+            in_test: whole_file_test,
+        });
+    }
+    if !whole_file_test {
+        mark_test_regions(&mut out.lines);
+    }
+    out
+}
+
+/// Strip comments and string/char literals from one line, carrying
+/// multi-line state in `mode`. Stripped spans collapse to a single space so
+/// adjacent tokens never concatenate into a false match.
+fn sanitize(raw: &str, mode: &mut Mode) -> String {
+    let cs: Vec<char> = raw.chars().collect();
+    let mut out = String::with_capacity(raw.len());
+    let mut i = 0usize;
+    while i < cs.len() {
+        match *mode {
+            Mode::BlockComment(depth) => {
+                if cs[i] == '*' && cs.get(i + 1) == Some(&'/') {
+                    *mode = if depth > 1 {
+                        Mode::BlockComment(depth - 1)
+                    } else {
+                        Mode::Code
+                    };
+                    i += 2;
+                } else if cs[i] == '/' && cs.get(i + 1) == Some(&'*') {
+                    *mode = Mode::BlockComment(depth + 1);
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            Mode::Str => {
+                if cs[i] == '\\' {
+                    i += 2; // skip the escaped char (possibly the quote)
+                } else if cs[i] == '"' {
+                    *mode = Mode::Code;
+                    out.push(' ');
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            Mode::RawStr(hashes) => {
+                if cs[i] == '"' && closes_raw(&cs, i + 1, hashes) {
+                    *mode = Mode::Code;
+                    out.push(' ');
+                    i += 1 + hashes as usize;
+                } else {
+                    i += 1;
+                }
+            }
+            Mode::Code => {
+                let c = cs[i];
+                if c == '/' && cs.get(i + 1) == Some(&'/') {
+                    break; // line comment: drop the rest of the line
+                }
+                if c == '/' && cs.get(i + 1) == Some(&'*') {
+                    *mode = Mode::BlockComment(1);
+                    i += 2;
+                    continue;
+                }
+                // raw / byte-string starts: r" r#" br" b" — only when the
+                // prefix letter is not the tail of an identifier
+                if let Some((skip, hashes)) = raw_string_start(&cs, i) {
+                    *mode = Mode::RawStr(hashes);
+                    i += skip;
+                    continue;
+                }
+                if c == '"' || (c == 'b' && cs.get(i + 1) == Some(&'"') && !ident_tail(&cs, i)) {
+                    *mode = Mode::Str;
+                    i += if c == 'b' { 2 } else { 1 };
+                    continue;
+                }
+                if c == '\'' {
+                    if let Some(end) = char_literal_end(&cs, i) {
+                        out.push(' ');
+                        i = end;
+                        continue;
+                    }
+                    // otherwise a lifetime: keep the tick, scan on normally
+                }
+                out.push(c);
+                i += 1;
+            }
+        }
+    }
+    out
+}
+
+/// Is `cs[i]` preceded by an identifier character (so a leading `r`/`b` is
+/// part of a name like `for`/`b` rather than a literal prefix)?
+fn ident_tail(cs: &[char], i: usize) -> bool {
+    i > 0 && (cs[i - 1].is_alphanumeric() || cs[i - 1] == '_')
+}
+
+/// If a raw-string literal starts at `i`, return (chars to skip past the
+/// opening quote, number of closing `#` marks).
+fn raw_string_start(cs: &[char], i: usize) -> Option<(usize, u8)> {
+    if ident_tail(cs, i) {
+        return None;
+    }
+    let mut j = i;
+    if cs.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if cs.get(j) != Some(&'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0u8;
+    while cs.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if cs.get(j) == Some(&'"') {
+        Some((j + 1 - i, hashes))
+    } else {
+        None
+    }
+}
+
+/// Does position `i` start `hashes` consecutive `#` marks?
+fn closes_raw(cs: &[char], i: usize, hashes: u8) -> bool {
+    (0..hashes as usize).all(|k| cs.get(i + k) == Some(&'#'))
+}
+
+/// If a char literal starts at `i` (`'x'`, `'\n'`, `'\u{1F600}'`), return
+/// the index just past its closing quote; `None` for lifetimes.
+fn char_literal_end(cs: &[char], i: usize) -> Option<usize> {
+    if cs.get(i + 1) == Some(&'\\') {
+        // escaped: scan to the next unescaped closing quote (bounded)
+        let mut j = i + 2;
+        while j < cs.len() && j < i + 12 {
+            if cs[j] == '\'' {
+                return Some(j + 1);
+            }
+            j += 1;
+        }
+        None
+    } else if cs.get(i + 2) == Some(&'\'') && cs.get(i + 1) != Some(&'\'') {
+        Some(i + 3)
+    } else {
+        None
+    }
+}
+
+/// Parse a `detlint: allow(...)` directive from a raw line.
+fn parse_allow(raw: &str, lineno: usize) -> Option<Allow> {
+    let marker = "detlint: allow(";
+    let start = raw.find(marker)?;
+    let body = &raw[start + marker.len()..];
+    let close = body.find(')')?;
+    let rules: Vec<String> = body[..close]
+        .split(',')
+        .map(|r| r.trim().to_string())
+        .filter(|r| !r.is_empty())
+        .collect();
+    if rules.is_empty() {
+        return None;
+    }
+    let has_reason = !body[close + 1..].trim().is_empty();
+    Some(Allow {
+        line: lineno,
+        rules,
+        has_reason,
+    })
+}
+
+/// Mark every line inside a `#[cfg(test)]` item. Works on sanitized text,
+/// so braces in strings or comments never skew the depth count. Handles
+/// both braced items (`mod tests { … }`) and single-statement items
+/// (`#[cfg(test)] use …;`).
+fn mark_test_regions(lines: &mut [Line]) {
+    let mut depth: i64 = 0;
+    let mut pending = false; // saw #[cfg(test)], waiting for its item
+    let mut region_base: Option<i64> = None; // depth the region closes at
+    for line in lines.iter_mut() {
+        let mut in_test = region_base.is_some() || pending;
+        if region_base.is_none() && line.code.contains("#[cfg(test)]") {
+            pending = true;
+            in_test = true;
+        }
+        let opens = line.code.matches('{').count() as i64;
+        let closes = line.code.matches('}').count() as i64;
+        if pending && region_base.is_none() {
+            if opens > 0 {
+                region_base = Some(depth);
+                pending = false;
+            } else if line.code.trim_end().ends_with(';') {
+                pending = false; // single-statement item: ends here
+            }
+        }
+        depth += opens - closes;
+        if let Some(base) = region_base {
+            if depth <= base {
+                region_base = None;
+            }
+            in_test = true;
+        }
+        line.in_test = in_test;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn codes(src: &str) -> Vec<String> {
+        scan(src, false).lines.iter().map(|l| l.code.clone()).collect()
+    }
+
+    #[test]
+    fn strips_line_and_block_comments() {
+        let c = codes("let x = 1; // HashMap here\n/* HashSet\nstill comment */ let y = 2;");
+        assert_eq!(c[0].trim_end(), "let x = 1;");
+        assert!(!c[1].contains("HashSet"));
+        assert!(c[2].contains("let y = 2;"));
+    }
+
+    #[test]
+    fn strips_string_and_raw_string_literals() {
+        let c = codes("let s = \"HashMap::new()\";\nlet r = r#\"HashSet \"quoted\"\"#;");
+        assert!(!c[0].contains("HashMap"));
+        assert!(!c[1].contains("HashSet"));
+        assert!(c[0].contains("let s ="));
+    }
+
+    #[test]
+    fn multi_line_string_state_carries_over() {
+        let c = codes("let s = \"line one\nHashMap inside\nstill inside\";\nHashMap::new();");
+        assert!(!c[1].contains("HashMap"));
+        assert!(!c[2].contains("still"));
+        assert!(c[3].contains("HashMap::new()"));
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes() {
+        let c = codes("let q = '\"'; let n = '\\n'; fn f<'a>(x: &'a str) {}");
+        // the double-quote char literal must not open a string
+        assert!(c[0].contains("fn f<'a>"));
+        assert!(c[0].contains("&'a str"));
+    }
+
+    #[test]
+    fn cfg_test_region_by_brace_depth() {
+        let src = "fn lib() {}\n#[cfg(test)]\nmod tests {\n    fn t() { let x = 1; }\n}\nfn lib2() {}";
+        let s = scan(src, false);
+        let flags: Vec<bool> = s.lines.iter().map(|l| l.in_test).collect();
+        assert_eq!(flags, vec![false, true, true, true, true, false]);
+    }
+
+    #[test]
+    fn cfg_test_single_statement_item() {
+        let src = "#[cfg(test)]\nuse foo::bar;\nfn lib() {}";
+        let s = scan(src, false);
+        let flags: Vec<bool> = s.lines.iter().map(|l| l.in_test).collect();
+        assert_eq!(flags, vec![true, true, false]);
+    }
+
+    #[test]
+    fn allow_directive_parsing_and_suppression() {
+        let src = "// detlint: allow(D001) keyed lookups only\nlet m = foo();\n// detlint: allow(D002)\nlet n = bar();";
+        let s = scan(src, false);
+        assert_eq!(s.allows.len(), 2);
+        assert!(s.allows[0].has_reason);
+        assert!(!s.allows[1].has_reason);
+        assert!(s.suppressed("D001", 2));
+        assert!(!s.suppressed("D004", 2));
+        // a reason-less directive suppresses nothing
+        assert!(!s.suppressed("D002", 4));
+    }
+
+    #[test]
+    fn trailing_allow_suppresses_its_own_line() {
+        let src = "let m = foo(); // detlint: allow(D001, D004) never iterated";
+        let s = scan(src, false);
+        assert!(s.suppressed("D001", 1));
+        assert!(s.suppressed("D004", 1));
+        assert!(!s.suppressed("D003", 1));
+    }
+
+    #[test]
+    fn whole_file_test_flag() {
+        let s = scan("fn anything() {}", true);
+        assert!(s.lines[0].in_test);
+    }
+}

@@ -1,0 +1,97 @@
+//! `detlint` — standalone runner for the determinism & correctness lint
+//! (the CI gate). Same engine as `thermovolt lint`; see
+//! `thermovolt::analysis` and DESIGN.md, section `analysis`.
+//!
+//! Usage: `detlint [--json] [--root DIR] [--config FILE]`
+//!
+//! The repo root defaults to the nearest ancestor of the current directory
+//! containing `rust/src`; the config defaults to `<root>/detlint.toml`
+//! (compiled-in defaults if absent). Exits 1 on any unsuppressed finding,
+//! 2 on usage/IO errors.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use thermovolt::analysis::{lint_tree, LintConfig};
+
+fn main() -> ExitCode {
+    let mut json = false;
+    let mut root: Option<PathBuf> = None;
+    let mut config: Option<PathBuf> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--json" => json = true,
+            "--root" => root = args.next().map(PathBuf::from),
+            "--config" => config = args.next().map(PathBuf::from),
+            "--help" | "-h" => {
+                eprintln!("usage: detlint [--json] [--root DIR] [--config FILE]");
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("detlint: unknown argument `{other}` (see --help)");
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    let root = match root.or_else(find_repo_root) {
+        Some(r) => r,
+        None => {
+            eprintln!("detlint: no repo root found (no ancestor contains rust/src); use --root");
+            return ExitCode::from(2);
+        }
+    };
+    let cfg = match load_config(&root, config.as_deref()) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("detlint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let report = match lint_tree(&root, &cfg) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("detlint: scan failed: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    if json {
+        print!("{}", report.render_json());
+    } else {
+        print!("{}", report.render_human());
+    }
+    if report.clean() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}
+
+fn find_repo_root() -> Option<PathBuf> {
+    let mut dir = std::env::current_dir().ok()?;
+    loop {
+        if dir.join("rust/src").is_dir() {
+            return Some(dir);
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}
+
+fn load_config(root: &Path, explicit: Option<&Path>) -> Result<LintConfig, String> {
+    let path = match explicit {
+        Some(p) => p.to_path_buf(),
+        None => {
+            let p = root.join("detlint.toml");
+            if !p.is_file() {
+                return Ok(LintConfig::default());
+            }
+            p
+        }
+    };
+    let text = std::fs::read_to_string(&path)
+        .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+    LintConfig::from_toml(&text).map_err(|e| format!("{}: {e}", path.display()))
+}

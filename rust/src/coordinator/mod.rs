@@ -312,7 +312,9 @@ impl<F: Fn(f64, f64, f64) -> f64 + Send + Sync> DynamicController<F> {
             } else {
                 lag_buf.push_back(t_junct);
                 if lag_buf.len() > lag_steps {
-                    lag_buf.pop_front().unwrap()
+                    // still warming up on an empty pop (can't happen — we
+                    // just pushed): fall back to the live junction reading
+                    lag_buf.pop_front().unwrap_or(t_junct)
                 } else {
                     lag_buf[0]
                 }
@@ -483,6 +485,38 @@ mod tests {
         assert!(stats.energy_j > 0.0);
         assert!(stats.peak_power_w >= stats.mean_power_w);
         assert!(stats.peak_t_junct >= 25.0);
+    }
+
+    #[test]
+    fn lagged_sensor_ring_survives_boundary_lags() {
+        // Regression for the lag ring's warm-up edge: lag of exactly one
+        // control period, a fractional lag that rounds up, and a lag equal
+        // to the run length all have to run to completion (the ring used to
+        // lean on an unchecked pop at the warm-up boundary) and produce the
+        // same step count as the instantaneous sensor.
+        let trace = vec![(0.0, 25.0), (2_000.0, 60.0)];
+        let base_steps = controller().run_stats(&trace, 1.0, 500.0).unwrap().1.steps;
+        for lag_ms in [1.0, 1.5, 1_999.0, 2_000.0] {
+            let mut c = controller();
+            c.tsd.lag_ms = lag_ms;
+            let (log, stats) = c.run_stats(&trace, 1.0, 500.0).unwrap();
+            assert_eq!(stats.steps, base_steps, "lag {lag_ms} ms changed step count");
+            assert!(stats.peak_t_junct >= 25.0);
+            assert!(!log.is_empty());
+        }
+        // a lag longer than the whole run pins the sensor at the start
+        // temperature: the junction keeps warming while the key the
+        // controller acts on stays put — visible in stats, never a panic
+        let mut c = controller();
+        c.tsd.lag_ms = 10_000.0;
+        let (_, stats) = c.run_stats(&trace, 1.0, 500.0).unwrap();
+        assert_eq!(stats.steps, base_steps);
+        assert!(
+            stats.peak_t_junct > stats.peak_t_key_c + 3.0,
+            "frozen sensor: junction {} should outrun the pinned key {}",
+            stats.peak_t_junct,
+            stats.peak_t_key_c
+        );
     }
 
     #[test]

@@ -56,7 +56,7 @@ use crate::config::Config;
 use crate::faults::{self, BramMap, FaultSpec, GuardbandStore, Injector};
 use crate::flow::dynamic::VoltageLut;
 use crate::flow::{
-    Design, Effort, FlowSession, LutRequest, LutSpec, OverscaleRequest,
+    Design, Effort, FlowError, FlowSession, LutRequest, LutSpec, OverscaleRequest,
 };
 use crate::thermal::{RcNetwork, RcStage};
 use crate::util::mix64;
@@ -165,13 +165,18 @@ impl PowerSurface {
     pub fn build(design: &Design, cfg: &Config, f_clk: f64) -> PowerSurface {
         let pm = design.power_model();
         let n = design.dev.n_tiles();
+        // the nominal rail caps each axis; an empty grid (hand-built config
+        // bypassing validation) degrades to the nominal-only axis instead of
+        // panicking
         let mut vc_levels = cfg.vgrid.core_levels();
-        if cfg.arch.v_core_nom > *vc_levels.last().unwrap() + 1e-9 {
-            vc_levels.push(cfg.arch.v_core_nom);
+        match vc_levels.last() {
+            Some(&top) if cfg.arch.v_core_nom <= top + 1e-9 => {}
+            _ => vc_levels.push(cfg.arch.v_core_nom),
         }
         let mut vb_levels = cfg.vgrid.bram_levels();
-        if cfg.arch.v_bram_nom > *vb_levels.last().unwrap() + 1e-9 {
-            vb_levels.push(cfg.arch.v_bram_nom);
+        match vb_levels.last() {
+            Some(&top) if cfg.arch.v_bram_nom <= top + 1e-9 => {}
+            _ => vb_levels.push(cfg.arch.v_bram_nom),
         }
         // a config can pin a rail (v_min == v_max == nominal); bilinear
         // bracketing needs two grid points per axis, so pad with one step
@@ -528,8 +533,17 @@ impl Fleet {
         // is the small bin, only eligible for the smaller designs) plus
         // per-unit cooling / margin / process spread
         let mut rng = Xoshiro256::new(fcfg.seed);
-        let min_edge = kinds.iter().map(|k| k.grid_edge()).min().unwrap();
-        let max_edge = kinds.iter().map(|k| k.grid_edge()).max().unwrap();
+        let edges: Vec<usize> = kinds.iter().map(|k| k.grid_edge()).collect();
+        let (min_edge, max_edge) = match (edges.iter().min(), edges.iter().max()) {
+            (Some(&lo), Some(&hi)) => (lo, hi),
+            _ => {
+                return Err(FlowError::InvalidConfig {
+                    field: "benches",
+                    reason: "fleet needs at least one job kind".into(),
+                }
+                .into())
+            }
+        };
         let mut specs: Vec<DeviceSpec> = (0..fcfg.devices)
             .map(|id| DeviceSpec {
                 id,
@@ -567,11 +581,16 @@ impl Fleet {
         // LUT over the same ambient range the controllers will run, on the
         // largest BRAM map (the binding fault population)
         let guardbands = if fcfg.measured_guardbands {
-            let map = maps
-                .iter()
-                .max_by_key(|m| m.total_bits())
-                .cloned()
-                .expect("at least one job kind");
+            let map = match maps.iter().max_by_key(|m| m.total_bits()) {
+                Some(m) => m.clone(),
+                None => {
+                    return Err(FlowError::InvalidConfig {
+                        field: "benches",
+                        reason: "measured guardbands need at least one job kind".into(),
+                    }
+                    .into())
+                }
+            };
             let luts: Vec<Arc<VoltageLut>> = kinds.iter().map(|k| k.lut.clone()).collect();
             let sspec = faults::ShmooSpec {
                 t_lo: lut_lo,

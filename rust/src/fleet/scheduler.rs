@@ -323,6 +323,7 @@ impl<'a> PlanState<'a> {
             }
         }
         if let Some((_, _, src)) = best {
+            // detlint: allow(D004) `best` was drawn from this queue's front under the same borrow
             let job = self.queues[src].pop_front().expect("migration source queue");
             self.committed_until[src] = self.queues[src]
                 .iter()
@@ -391,16 +392,19 @@ pub fn execute(fleet: &Fleet, plan: &[Assignment], workers: usize) -> Vec<JobRes
                 // released before the next is taken — never hold two queue
                 // locks at once.
                 let pop = || {
+                    // detlint: allow(D004) work-stealing queue mutex; poisoning only follows a worker panic
                     let own = queues[w].lock().unwrap().pop_front();
                     if own.is_some() {
                         return own;
                     }
                     (1..workers)
                         .map(|d| (w + d) % workers)
+                        // detlint: allow(D004) work-stealing queue mutex; poisoning only follows a worker panic
                         .find_map(|v| queues[v].lock().unwrap().pop_back())
                 };
                 while let Some(i) = pop() {
                     let r = run_one(fleet, &plan[i]);
+                    // detlint: allow(D004) result slot mutex; poisoning only follows a worker panic
                     *slots[i].lock().unwrap() = Some(r);
                 }
             });
@@ -409,6 +413,7 @@ pub fn execute(fleet: &Fleet, plan: &[Assignment], workers: usize) -> Vec<JobRes
 
     let mut out: Vec<JobResult> = slots
         .into_iter()
+        // detlint: allow(D004) the pool drains every index before the scope joins; a hole is a pool bug
         .map(|m| m.into_inner().unwrap().expect("job not executed"))
         .collect();
     out.sort_by_key(|r| r.job_id);
@@ -441,6 +446,7 @@ fn simulate(
     // pads both ends) and dt is the fixed 1 ms control period, so neither
     // typed error is reachable here
     ctl.run_stats(local, dt_ms, sample_every_ms)
+        // detlint: allow(D004) trace::window pads to >= 2 breakpoints and dt is the fixed 1 ms period
         .expect("fleet trace window has >= 2 breakpoints")
         .1
 }
@@ -586,6 +592,7 @@ pub fn plan_legacy(fleet: &Fleet) -> Vec<Assignment> {
                 best = Some((idle, start, t_pred, spec.id));
             }
         }
+        // detlint: allow(D004) deprecated differential-test reference; plan() is the guarded path
         let (_, start, _, device) = best.expect("no eligible device for job kind");
         busy_until[device] = start + job.duration_ms;
         out.push(Assignment {
@@ -644,6 +651,7 @@ fn run_one_legacy(fleet: &Fleet, a: &Assignment) -> LegacyResult {
     };
     let (_, dyn_stats) = dynamic
         .run_stats(&local, dt_ms, sparse)
+        // detlint: allow(D004) trace::window pads to >= 2 breakpoints and dt is the fixed 1 ms period
         .expect("fleet trace window has >= 2 breakpoints");
 
     let static_surface = kind.surface.clone();
@@ -658,6 +666,7 @@ fn run_one_legacy(fleet: &Fleet, a: &Assignment) -> LegacyResult {
     };
     let (_, static_stats) = static_ctl
         .run_stats(&local, dt_ms, sparse)
+        // detlint: allow(D004) trace::window pads to >= 2 breakpoints and dt is the fixed 1 ms period
         .expect("fleet trace window has >= 2 breakpoints");
 
     LegacyResult {
@@ -668,5 +677,88 @@ fn run_one_legacy(fleet: &Fleet, a: &Assignment) -> LegacyResult {
         mean_power_static_w: static_stats.mean_power_w,
         violations: dyn_stats.violations,
         peak_t_junct_c: dyn_stats.peak_t_junct,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    // Event ordering is the scheduler's determinism anchor: the heap pops
+    // events in `Ord` order, so any lapse from a total order (the classic
+    // NaN-through-partial_cmp bug detlint rule D002 guards against) would
+    // make the plan depend on heap internals. Draw timestamps from a value
+    // set that includes the floats partial_cmp chokes on.
+    fn draw_event(rng: &mut Xoshiro256) -> Event {
+        const TIMES: [f64; 9] = [
+            f64::NEG_INFINITY,
+            -1.5,
+            -0.0,
+            0.0,
+            1.0,
+            1.0 + 1e-12,
+            3e7,
+            f64::INFINITY,
+            f64::NAN,
+        ];
+        let t_ms = TIMES[rng.below(TIMES.len())];
+        let rank = [RANK_FINISH, RANK_MIGRATE, RANK_ARRIVAL][rng.below(3)];
+        let seq = rng.next_u64() % 4;
+        let kind = match rank {
+            RANK_FINISH => EventKind::Finish {
+                device: rng.below(4),
+            },
+            RANK_MIGRATE => EventKind::Migrate {
+                device: rng.below(4),
+            },
+            _ => EventKind::Arrival {
+                job: rng.below(4),
+            },
+        };
+        Event {
+            t_ms,
+            rank,
+            seq,
+            kind,
+        }
+    }
+
+    #[test]
+    fn event_ordering_is_total_antisymmetric_transitive() {
+        let mut rng = Xoshiro256::new(0xE7E47);
+        for _ in 0..20_000 {
+            let a = draw_event(&mut rng);
+            let b = draw_event(&mut rng);
+            let c = draw_event(&mut rng);
+
+            // total: partial_cmp never abstains and always agrees with cmp
+            assert_eq!(a.partial_cmp(&b), Some(a.cmp(&b)));
+            // antisymmetric: cmp(a, b) is the reverse of cmp(b, a)
+            assert_eq!(a.cmp(&b), b.cmp(&a).reverse());
+            // reflexive under the same total order (NaN == NaN via total_cmp)
+            assert_eq!(a.cmp(&a), Ordering::Equal);
+            // transitive: a <= b and b <= c imply a <= c
+            if a.cmp(&b) != Ordering::Greater && b.cmp(&c) != Ordering::Greater {
+                assert_ne!(
+                    a.cmp(&c),
+                    Ordering::Greater,
+                    "transitivity broke: {a:?} <= {b:?} <= {c:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn event_key_equality_matches_ordering_equal() {
+        let mut rng = Xoshiro256::new(0x0DDE);
+        for _ in 0..20_000 {
+            let a = draw_event(&mut rng);
+            let b = draw_event(&mut rng);
+            let keys_equal = a.t_ms.total_cmp(&b.t_ms) == Ordering::Equal
+                && a.rank == b.rank
+                && a.seq == b.seq;
+            assert_eq!(a.cmp(&b) == Ordering::Equal, keys_equal);
+        }
     }
 }

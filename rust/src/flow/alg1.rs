@@ -136,6 +136,7 @@ pub(crate) fn run_impl(
     let mut infeasible = false;
 
     for iter in 0..cfg.flow.max_iters {
+        // detlint: allow(D003) per-iteration runtime feeds the display-only IterRecord.time_s
         let t0 = Instant::now();
         let mut evals = 0usize;
 
@@ -346,6 +347,7 @@ pub(crate) fn fixed_point_impl(
     let mut temp = vec![cfg.flow.t_amb; n];
     let mut iters = Vec::new();
     for _ in 0..cfg.flow.max_iters {
+        // detlint: allow(D003) per-iteration runtime feeds the display-only IterRecord.time_s
         let t0 = Instant::now();
         let pmap = pm.power_map(&temp, f_clk, vc, vb);
         let t_new = backend.steady_state(&pmap, cfg.flow.t_amb);

@@ -545,11 +545,14 @@ pub struct ShmooOutcome {
 struct DesignEntry {
     design: Arc<Design>,
     arena: StaCacheArena,
+    // detlint: allow(D001) keyed cache, get/entry only — iteration order never reaches a result
     backends: HashMap<u64, Box<dyn ThermalBackend>>,
+    // detlint: allow(D001) keyed cache, get/entry only — iteration order never reaches a result
     acts: HashMap<u64, Arc<Activities>>,
     /// RC thermal networks keyed by (θ_JA bits, τ bits, stages) — like the
     /// per-θ backends, a pure function of the key, so caching is
     /// observationally invisible (requests clone and reset the template).
+    // detlint: allow(D001) keyed cache, get/entry only — iteration order never reaches a result
     dynamics: HashMap<(u64, u64, usize), RcNetwork>,
 }
 
@@ -559,6 +562,7 @@ pub struct FlowSession {
     cfg: Arc<Config>,
     effort: Effort,
     table: Arc<CharTable>,
+    // detlint: allow(D001) keyed cache, get/entry only — iteration order never reaches a result
     designs: HashMap<(String, Effort), DesignEntry>,
 }
 
@@ -576,6 +580,7 @@ impl FlowSession {
             cfg: Arc::new(cfg),
             effort,
             table: CharTable::shared(),
+            // detlint: allow(D001) keyed cache, get/entry only
             designs: HashMap::new(),
         })
     }
@@ -866,6 +871,7 @@ impl FlowSession {
         let entry = self
             .designs
             .get_mut(&(req.bench.clone(), effort))
+            // detlint: allow(D004) ctx() above inserted this exact key; a miss is a session bug
             .expect("ctx built this design entry");
         let mut net = entry
             .dynamics
@@ -1053,6 +1059,7 @@ impl FlowSession {
     /// on first use. Associated function (not `&mut self`) so callers can
     /// split borrows between the cache and the base config.
     fn entry<'s>(
+        // detlint: allow(D001) keyed cache parameter, entry() access only
         designs: &'s mut HashMap<(String, Effort), DesignEntry>,
         base: &Config,
         bench: &str,
@@ -1065,8 +1072,11 @@ impl FlowSession {
                 Ok(v.insert(DesignEntry {
                     design: Arc::new(design),
                     arena: StaCacheArena::new(),
+                    // detlint: allow(D001) keyed caches, get/entry only
                     backends: HashMap::new(),
+                    // detlint: allow(D001) keyed caches, get/entry only
                     acts: HashMap::new(),
+                    // detlint: allow(D001) keyed caches, get/entry only
                     dynamics: HashMap::new(),
                 }))
             }
@@ -1079,6 +1089,7 @@ impl FlowSession {
     /// thermal backend for the resolved θ_JA (built on first use; both
     /// backends are stateless per solve, so reuse is bit-identical).
     fn ctx<'s>(
+        // detlint: allow(D001) keyed cache parameter, forwarded to entry()
         designs: &'s mut HashMap<(String, Effort), DesignEntry>,
         base: &Config,
         cfg: &Config,

@@ -40,6 +40,8 @@
 //! * [`timing::batch`] — batched, memoizing STA engine shared by every search
 //! * [`benchkit`] — in-repo perf harness (`thermovolt bench` → BENCH_search.json)
 //! * [`report`]  — regenerates every paper table/figure
+//! * [`analysis`]— detlint, the determinism & correctness lint
+//!   (`thermovolt lint` / the `detlint` bin; CI gate)
 
 // The crate predates clippy in CI; these style lints fire all over the
 // numeric kernels (index-heavy grid sweeps) where the "fix" would hurt
@@ -54,6 +56,7 @@
 )]
 
 pub mod activity;
+pub mod analysis;
 pub mod arch;
 pub mod benchkit;
 pub mod chardb;

@@ -29,6 +29,9 @@
 //!                   the thermal-inertia sweep BENCH_transient.json + the
 //!                   fault-injection/guardband sweep BENCH_faults.json
 //! thermovolt e2e    [--full]                      full-pipeline headline run
+//! thermovolt lint   [--json] [--root DIR] [--config FILE]
+//!                   detlint: determinism & correctness static analysis
+//!                   (rules D001-D005; exits non-zero on findings)
 //! ```
 
 use anyhow::Result;
@@ -324,6 +327,7 @@ fn run(args: &Args) -> Result<()> {
                 "shmoo: {} units x {} corners over {:.0}-{:.0} C on {bench}, seed {:#x}, {} worker(s)",
                 req.devices, req.corners, req.t_lo, req.t_hi, req.seed, req.workers
             );
+            // detlint: allow(D003) CLI progress display only; never reaches results
             let t0 = Instant::now();
             let o = session.shmoo(req)?;
             println!(
@@ -401,7 +405,7 @@ fn run(args: &Args) -> Result<()> {
                 c.emit(results, "fig2c")?;
             }
             if all || args.flag("fig3") {
-                let (l, r) = report::fig3(&cfg, effort == Effort::Quick);
+                let (l, r) = report::fig3(&cfg, effort == Effort::Quick)?;
                 l.emit(results, "fig3_left")?;
                 r.emit(results, "fig3_right")?;
             }
@@ -498,6 +502,7 @@ fn run(args: &Args) -> Result<()> {
                 "building job kinds (P&R + Algorithm-1 LUT per benchmark: {})…",
                 fcfg.benches.join(", ")
             );
+            // detlint: allow(D003) CLI progress display only; never reaches results
             let t0 = Instant::now();
             let fleet = Fleet::build(fcfg, &cfg)?;
             println!("fleet ready in {:.1} s:", t0.elapsed().as_secs_f64());
@@ -523,10 +528,12 @@ fn run(args: &Args) -> Result<()> {
                     plan.unplaceable.len()
                 );
             }
+            // detlint: allow(D003) speedup display; telemetry is fingerprint-checked below
             let t1 = Instant::now();
             let serial = fleet.execute(&plan, 1);
             let serial_s = t1.elapsed().as_secs_f64();
             let workers = fleet.effective_workers();
+            // detlint: allow(D003) wall-clock speedup display only
             let t2 = Instant::now();
             let parallel = fleet.execute(&plan, workers);
             let parallel_s = t2.elapsed().as_secs_f64();
@@ -665,9 +672,54 @@ fn run(args: &Args) -> Result<()> {
                 avg[3], avg[4]
             );
         }
+        "lint" => {
+            // detlint, in-process: same engine as the standalone `detlint`
+            // bin the CI gate runs (see analysis/).
+            let root = match args.opt("root") {
+                Some(r) => Path::new(r).to_path_buf(),
+                None => {
+                    let mut dir = std::env::current_dir()?;
+                    loop {
+                        if dir.join("rust/src").is_dir() {
+                            break dir;
+                        }
+                        anyhow::ensure!(
+                            dir.pop(),
+                            "no repo root found (no ancestor contains rust/src); use --root"
+                        );
+                    }
+                }
+            };
+            let lint_cfg = match args.opt("config") {
+                Some(p) => thermovolt::analysis::LintConfig::from_toml(
+                    &std::fs::read_to_string(p)?,
+                )
+                .map_err(|e| anyhow::anyhow!("{p}: {e}"))?,
+                None => {
+                    let p = root.join("detlint.toml");
+                    if p.is_file() {
+                        thermovolt::analysis::LintConfig::from_toml(&std::fs::read_to_string(
+                            &p,
+                        )?)
+                        .map_err(|e| anyhow::anyhow!("{}: {e}", p.display()))?
+                    } else {
+                        thermovolt::analysis::LintConfig::default()
+                    }
+                }
+            };
+            let lint_report = thermovolt::analysis::lint_tree(&root, &lint_cfg)?;
+            if args.flag("json") {
+                print!("{}", lint_report.render_json());
+            } else {
+                print!("{}", lint_report.render_human());
+            }
+            if !lint_report.clean() {
+                std::process::exit(1);
+            }
+        }
         "" | "help" => {
             println!(
-                "subcommands: characterize | bench-info | power-opt | energy-opt | overscale | report | serve | shmoo | fleet | bench | e2e"
+                "subcommands: characterize | bench-info | power-opt | energy-opt | overscale | report | serve | shmoo | fleet | bench | e2e | lint"
             );
         }
         other => anyhow::bail!("unknown subcommand `{other}` (try `help`)"),

@@ -155,6 +155,7 @@ pub fn read(text: &str) -> Result<Netlist, String> {
     // not required because we pre-create nets via placeholder Input cells —
     // instead we instantiate drivers, recording net name → NetId).
     let mut nl = Netlist::new(&model);
+    // detlint: allow(D001) name→net lookup: get/insert only, never iterated
     let mut net_of: HashMap<String, NetId> = HashMap::new();
     for name in &inputs {
         let cid = nl.add_cell(

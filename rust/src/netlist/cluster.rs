@@ -8,7 +8,12 @@
 
 use super::{CellKind, Netlist, NO_NET};
 use crate::config::ArchConfig;
-use std::collections::HashSet;
+// BTreeSet, deliberately: the candidate scan below iterates these sets, and
+// the greedy tie-break keeps the FIRST best-scoring BLE — with a HashSet the
+// visit order (and therefore the packing, the placement, and every
+// downstream fingerprint) changed from process to process. Detlint rule
+// D001 now guards this whole crate against the same regression.
+use std::collections::BTreeSet;
 
 /// Result of packing.
 #[derive(Clone, Debug, Default)]
@@ -119,17 +124,17 @@ pub fn cluster_netlist(nl: &Netlist, arch: &ArchConfig) -> Clustering {
         }
         let mut members = vec![seed];
         packed[seed] = true;
-        let mut input_nets: HashSet<u32> = ble_inputs(&bles[seed]).into_iter().collect();
-        let mut output_nets: HashSet<u32> = ble_outputs(&bles[seed]).into_iter().collect();
+        let mut input_nets: BTreeSet<u32> = ble_inputs(&bles[seed]).into_iter().collect();
+        let mut output_nets: BTreeSet<u32> = ble_outputs(&bles[seed]).into_iter().collect();
         // candidate BLEs: those touching our nets
         while members.len() < n {
             let mut best: Option<(usize, i64)> = None;
-            let mut seen: HashSet<usize> = HashSet::new();
+            let mut seen: BTreeSet<usize> = BTreeSet::new();
             // scan fanout of our outputs and drivers of our inputs
             let mut consider = |bi: usize,
                                 bles: &Vec<Ble>,
-                                input_nets: &HashSet<u32>,
-                                output_nets: &HashSet<u32>,
+                                input_nets: &BTreeSet<u32>,
+                                output_nets: &BTreeSet<u32>,
                                 best: &mut Option<(usize, i64)>| {
                 if packed[bi] || !seen.insert(bi) {
                     return;

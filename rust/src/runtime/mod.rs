@@ -66,6 +66,7 @@ mod pjrt {
     pub struct Runtime {
         pub client: xla::PjRtClient,
         artifacts_dir: PathBuf,
+        // detlint: allow(D001) keyed executable cache: get/insert only, never iterated
         cache: std::collections::HashMap<String, xla::PjRtLoadedExecutable>,
     }
 

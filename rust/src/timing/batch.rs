@@ -100,8 +100,11 @@ const MAX_FLAT_RESULTS: usize = 256;
 /// memo entries (eviction only rebuilds — it can never change a result).
 #[derive(Default)]
 pub struct StaCacheArena {
+    // detlint: allow(D001) keyed memo: get/insert/retain only; results never depend on iteration order
     core: HashMap<(i64, u64), Arc<Vec<f64>>>,
+    // detlint: allow(D001) keyed memo: get/insert/retain only; results never depend on iteration order
     bram: HashMap<(i64, u64), Arc<Vec<f64>>>,
+    // detlint: allow(D001) keyed memo: get/insert/retain only; results never depend on iteration order
     flat: HashMap<(u64, i64, i64), Arc<StaResult>>,
     /// Map fingerprints, least-recently-used first.
     fp_lru: Vec<u64>,

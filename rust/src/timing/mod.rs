@@ -148,6 +148,7 @@ impl<'a> Sta<'a> {
                         let slot = bnet
                             .sinks
                             .binary_search(&sink_block)
+                            // detlint: allow(D004) router invariant: every sink block is recorded on its net before STA runs
                             .expect("sink block must be on its net")
                             as u32;
                         let chain = &routing.paths[bn as usize][slot as usize];

@@ -138,6 +138,7 @@ impl Xoshiro256 {
             all
         } else {
             let mut out = Vec::with_capacity(k);
+            // detlint: allow(D001) membership probe only (insert/contains); never iterated
             let mut seen = std::collections::HashSet::with_capacity(k * 2);
             while out.len() < k {
                 let v = self.below(n);

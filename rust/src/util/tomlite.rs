@@ -143,6 +143,13 @@ impl Doc {
             .and_then(Value::as_array)
             .map(|a| a.iter().filter_map(Value::as_f64).collect())
     }
+    pub fn str_array(&self, key: &str) -> Option<Vec<String>> {
+        self.get(key).and_then(Value::as_array).map(|a| {
+            a.iter()
+                .filter_map(|v| v.as_str().map(String::from))
+                .collect()
+        })
+    }
 }
 
 fn strip_comment(line: &str) -> &str {
@@ -249,6 +256,15 @@ mod tests {
         assert_eq!(
             doc.f64_array("flow.search.v_core").unwrap(),
             vec![0.60, 0.70, 0.80]
+        );
+    }
+
+    #[test]
+    fn parses_string_arrays_with_punctuation() {
+        let doc = Doc::parse(r#"syms = ["alg1::run_with(", "a, b", "x"]"#).unwrap();
+        assert_eq!(
+            doc.str_array("syms").unwrap(),
+            vec!["alg1::run_with(", "a, b", "x"]
         );
     }
 

@@ -1,0 +1,229 @@
+//! Integration tests for `analysis` (detlint): fixture files exercise every
+//! rule with expected IDs and line numbers, the allow-directive contract,
+//! the `detlint.toml` round-trip, the deprecated-entry-point gate the CI
+//! greps used to enforce, and a self-check that the shipped tree lints
+//! clean (the same invariant the CI `detlint` step gates on).
+
+use std::path::Path;
+
+use thermovolt::analysis::{lint_source, lint_tree, LintConfig};
+
+fn ids(path: &str, src: &str) -> Vec<(&'static str, usize)> {
+    lint_source(path, src, &LintConfig::default())
+        .into_iter()
+        .map(|f| (f.rule, f.line))
+        .collect()
+}
+
+// ----------------------------------------------------- rule fixtures --
+
+#[test]
+fn d001_hash_containers_with_lines() {
+    let src = "use std::collections::HashMap;\n\
+               fn f() {\n\
+               \x20   let m: HashMap<u32, u32> = HashMap::new();\n\
+               \x20   let s = std::collections::HashSet::<u8>::new();\n\
+               \x20   let _ = (m, s);\n\
+               }\n";
+    // the use-line is exempt; each declaration line fires once
+    assert_eq!(ids("rust/src/fix.rs", src), vec![("D001", 3), ("D001", 4)]);
+    // outside rust/src (examples, benches) D001 does not apply
+    assert!(ids("rust/examples/fix.rs", src).is_empty());
+}
+
+#[test]
+fn d002_partial_cmp_and_bare_comparators_with_lines() {
+    let src = "fn f(v: &mut Vec<f64>) {\n\
+               \x20   v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n\
+               \x20   v.sort_by(|a, b| a.total_cmp(b));\n\
+               \x20   let _m = v.iter().max_by(|a, b| a.total_cmp(b));\n\
+               \x20   let _n = v.iter().min_by(cmp_fn);\n\
+               }\n";
+    // line 2 has partial_cmp (D004 also fires there on a flow path: unwrap);
+    // lines 3-4 carry total_cmp and stay clean; line 5 is a bare min_by
+    let got = ids("rust/src/util/fix.rs", src);
+    assert_eq!(got, vec![("D002", 2), ("D002", 5)]);
+}
+
+#[test]
+fn d003_wall_clock_with_lines_and_benchkit_exemption() {
+    let src = "fn f() {\n\
+               \x20   let t = std::time::Instant::now();\n\
+               \x20   let id = std::thread::current().id();\n\
+               \x20   let _ = (t, id);\n\
+               }\n";
+    assert_eq!(ids("rust/src/flow/fix.rs", src), vec![("D003", 2), ("D003", 3)]);
+    assert!(ids("rust/src/benchkit/fix.rs", src).is_empty());
+    assert!(ids("rust/benches/fix.rs", src).is_empty());
+}
+
+#[test]
+fn d004_unwrap_on_flow_paths_with_lines() {
+    let src = "fn f(x: Option<u32>) -> u32 {\n\
+               \x20   let a = x.unwrap();\n\
+               \x20   let b = x.expect(\"msg\");\n\
+               \x20   a + b\n\
+               }\n";
+    for p in [
+        "rust/src/flow/fix.rs",
+        "rust/src/coordinator/fix.rs",
+        "rust/src/report/fix.rs",
+        "rust/src/fleet/fix.rs",
+        "rust/src/faults/fix.rs",
+        "rust/src/timing/fix.rs",
+    ] {
+        assert_eq!(ids(p, src), vec![("D004", 2), ("D004", 3)], "path {p}");
+    }
+    // off the configured paths the same code is fine
+    assert!(ids("rust/src/util/fix.rs", src).is_empty());
+}
+
+#[test]
+fn d005_deprecated_calls_and_imports_with_lines() {
+    let src = "use crate::flow::alg1::run_with;\n\
+               fn f() {\n\
+               \x20   let r = alg1::run_with(a, b, c);\n\
+               \x20   let lut = VoltageLut::build(&d, &cfg);\n\
+               \x20   let m = sim::sample_mask(0.5, 9, 1);\n\
+               }\n";
+    assert_eq!(
+        ids("rust/src/fix.rs", src),
+        vec![("D005", 1), ("D005", 3), ("D005", 4), ("D005", 5)]
+    );
+}
+
+#[test]
+fn test_code_is_exempt_everywhere() {
+    let src = "fn lib() {}\n\
+               #[cfg(test)]\n\
+               mod tests {\n\
+               \x20   fn t() {\n\
+               \x20       let m = HashMap::new();\n\
+               \x20       let t0 = Instant::now();\n\
+               \x20       let v = m.get(&1).unwrap();\n\
+               \x20       let r = alg1::run_with(v);\n\
+               \x20   }\n\
+               }\n";
+    assert!(ids("rust/src/flow/fix.rs", src).is_empty());
+    // and files under rust/tests/ are whole-file exempt
+    assert!(ids("rust/tests/fix.rs", "let m = HashMap::new();\n").is_empty());
+}
+
+// ------------------------------------------------- allow directives --
+
+#[test]
+fn allow_with_reason_suppresses_same_line_and_next() {
+    let above = "// detlint: allow(D001) keyed cache, never iterated\n\
+                 let m = HashMap::new();\n";
+    assert!(ids("rust/src/fix.rs", above).is_empty());
+    let same = "let m = HashMap::new(); // detlint: allow(D001) keyed cache, never iterated\n";
+    assert!(ids("rust/src/fix.rs", same).is_empty());
+    // but not two lines down
+    let far = "// detlint: allow(D001) keyed cache, never iterated\n\
+               \n\
+               let m = HashMap::new();\n";
+    assert_eq!(ids("rust/src/fix.rs", far), vec![("D001", 3)]);
+}
+
+#[test]
+fn bare_allow_is_d000_and_suppresses_nothing() {
+    let src = "// detlint: allow(D001)\n\
+               let m = HashMap::new();\n";
+    let got = ids("rust/src/fix.rs", src);
+    assert!(got.contains(&("D000", 1)), "reason-less directive is itself a finding");
+    assert!(got.contains(&("D001", 2)), "reason-less directive must not suppress");
+}
+
+#[test]
+fn allow_only_covers_the_named_rules() {
+    let src = "// detlint: allow(D003) display-only timer\n\
+               let t = Instant::now(); let m = HashMap::new();\n";
+    // D003 suppressed, D001 still fires on the same line
+    assert_eq!(ids("rust/src/flow/fix.rs", src), vec![("D001", 2)]);
+}
+
+// ------------------------------------------------ detlint.toml gate --
+
+fn repo_root() -> &'static Path {
+    // rust/ is the manifest dir; the repo root (detlint.toml, rust/) is its parent
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("rust/ has a parent")
+}
+
+#[test]
+fn shipped_detlint_toml_parses_to_the_compiled_defaults() {
+    let text = std::fs::read_to_string(repo_root().join("detlint.toml"))
+        .expect("detlint.toml at the repo root");
+    let cfg = LintConfig::from_toml(&text).expect("shipped config parses");
+    assert_eq!(cfg, LintConfig::default(), "detlint.toml drifted from the defaults");
+}
+
+#[test]
+fn config_round_trips_through_tomlite() {
+    let cfg = LintConfig::default();
+    let back = LintConfig::from_toml(&cfg.to_toml()).expect("to_toml parses");
+    assert_eq!(back, cfg);
+}
+
+#[test]
+fn config_overrides_one_list_and_keeps_the_rest() {
+    let cfg = LintConfig::from_toml("[d004]\npaths = [\"rust/src/only/\"]\n").unwrap();
+    assert_eq!(cfg.d004_paths, vec!["rust/src/only/".to_string()]);
+    assert_eq!(cfg.roots, LintConfig::default().roots);
+    assert_eq!(cfg.d005_calls, LintConfig::default().d005_calls);
+}
+
+// ------------------------------- the old grep gates, now rule D005 --
+
+/// Reintroducing any of the calls the four CI greps used to hunt must trip
+/// D005 — this is the "equivalent or stronger" contract for retiring them.
+#[test]
+fn reintroducing_a_deprecated_entry_point_fails_the_gate() {
+    let fixtures = [
+        "let r = alg1::thermal_aware_voltage_selection(&d, &cfg, b, 1.0);",
+        "let r = alg2::thermal_aware_energy_optimization(&d, &cfg, b);",
+        "let lut = VoltageLut::build_rate(&d, &cfg, b, 20.0, 70.0, 25.0, 1.2);",
+        "let lut = VoltageLut::fixed(0.8, 0.95);",
+        "let o = overscale::overscale(&d, &cfg, b, 1.2);",
+        "let p = scheduler::plan_legacy(&fleet);",
+        "let r = scheduler::execute_legacy(&fleet, &p);",
+        "let m = sim::sample_mask(0.5, 9, 1);",
+        "use crate::flow::alg1::*;",
+        "use crate::flow::alg2::{run_naive_with, Alg2Result};",
+        "use crate::fleet::scheduler::plan_legacy;",
+    ];
+    for bad in fixtures {
+        let got = ids("rust/src/fix.rs", &format!("{bad}\n"));
+        assert_eq!(got, vec![("D005", 1)], "fixture must trip D005: {bad}");
+    }
+    // ...while the legitimate neighbours stay importable
+    let ok = [
+        "use crate::flow::alg1::{self, Alg1Result};",
+        "use crate::sim::ml_error_rates;",
+        "let lut = VoltageLut::fixed_rails(&spec);",
+        "let c = dsp_sim::sample_mask_like(x);",
+    ];
+    for good in ok {
+        assert!(
+            ids("rust/src/fix.rs", &format!("{good}\n")).is_empty(),
+            "false positive on: {good}"
+        );
+    }
+}
+
+// ----------------------------------------------- live-tree self-check --
+
+/// The shipped tree lints clean: every real violation this PR found was
+/// either fixed or carries an inline justification. CI gates on the same
+/// invariant via the `detlint` bin; this test catches it at `cargo test`.
+#[test]
+fn shipped_tree_lints_clean() {
+    let report = lint_tree(repo_root(), &LintConfig::default()).expect("tree walk");
+    assert!(report.files_scanned > 40, "walk found the tree ({} files)", report.files_scanned);
+    assert!(
+        report.clean(),
+        "detlint found unsuppressed violations:\n{}",
+        report.render_human()
+    );
+}

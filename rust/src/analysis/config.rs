@@ -18,9 +18,13 @@ pub struct LintConfig {
     /// Path prefixes exempt from D003 (the perf harness measures
     /// wall-clock by design).
     pub d003_exempt: Vec<String>,
-    /// Path prefixes D004 applies to: library code on paths reachable from
-    /// `FlowSession`, where a panic escapes the typed `FlowError` contract.
+    /// Path-prefix *override* list for D004: whole files kept in scope on
+    /// top of the computed reachability (for code the graph may
+    /// under-resolve, e.g. fn pointers). Entries matching no reachable
+    /// file are flagged stale (D007).
     pub d004_paths: Vec<String>,
+    /// The impl type whose methods root the D004 reachability computation.
+    pub d004_root_impl: String,
     /// D005 module-qualified deprecated call symbols (matched at an
     /// identifier boundary, e.g. `alg1::run_with(`).
     pub d005_calls: Vec<String>,
@@ -30,6 +34,12 @@ pub struct LintConfig {
     /// D005 banned names searched in the import tail after a marker
     /// (`*` catches glob imports).
     pub d005_use_names: Vec<String>,
+    /// PRNG constructor types for D006 (`Type::new(<literal>)` on a
+    /// library path is a hard-coded seed).
+    pub d006_ctors: Vec<String>,
+    /// Unit-suffix registry for U1001–U1003, `"suffix=dimension"` entries
+    /// (`"ms=time"`): identifiers ending `_<suffix>` carry that unit.
+    pub unit_suffixes: Vec<String>,
 }
 
 impl Default for LintConfig {
@@ -46,6 +56,7 @@ impl Default for LintConfig {
                 "rust/src/faults/",
                 "rust/src/timing/",
             ]),
+            d004_root_impl: "FlowSession".to_string(),
             d005_calls: s(&[
                 "alg1::thermal_aware_voltage_selection(",
                 "alg1::run_with(",
@@ -89,6 +100,25 @@ impl Default for LintConfig {
                 "execute_legacy",
                 "sample_mask",
             ]),
+            d006_ctors: s(&["Xoshiro256", "SplitMix64"]),
+            unit_suffixes: s(&[
+                "mv=volt",
+                "v=volt",
+                "uv=volt",
+                "c=temp",
+                "k=temp",
+                "ms=time",
+                "s=time",
+                "ns=time",
+                "us=time",
+                "mw=power",
+                "w=power",
+                "mj=energy",
+                "j=energy",
+                "mhz=freq",
+                "hz=freq",
+                "ghz=freq",
+            ]),
         }
     }
 }
@@ -110,6 +140,11 @@ impl LintConfig {
         take(&mut cfg.d005_calls, "d005.calls");
         take(&mut cfg.d005_use_markers, "d005.use_markers");
         take(&mut cfg.d005_use_names, "d005.use_names");
+        take(&mut cfg.d006_ctors, "d006.ctors");
+        take(&mut cfg.unit_suffixes, "units.suffixes");
+        if let Some(v) = doc.get("d004.root_impl").and_then(|v| v.as_str()) {
+            cfg.d004_root_impl = v.to_string();
+        }
         Ok(cfg)
     }
 
@@ -127,11 +162,16 @@ impl LintConfig {
         out.push_str("[d003]\n");
         out.push_str(&format!("exempt = {}\n\n", arr(&self.d003_exempt)));
         out.push_str("[d004]\n");
+        out.push_str(&format!("root_impl = \"{}\"\n", self.d004_root_impl));
         out.push_str(&format!("paths = {}\n\n", arr(&self.d004_paths)));
         out.push_str("[d005]\n");
         out.push_str(&format!("calls = {}\n", arr(&self.d005_calls)));
         out.push_str(&format!("use_markers = {}\n", arr(&self.d005_use_markers)));
-        out.push_str(&format!("use_names = {}\n", arr(&self.d005_use_names)));
+        out.push_str(&format!("use_names = {}\n\n", arr(&self.d005_use_names)));
+        out.push_str("[d006]\n");
+        out.push_str(&format!("ctors = {}\n\n", arr(&self.d006_ctors)));
+        out.push_str("[units]\n");
+        out.push_str(&format!("suffixes = {}\n", arr(&self.unit_suffixes)));
         out
     }
 }
@@ -153,6 +193,19 @@ mod tests {
         assert_eq!(cfg.d004_paths, vec!["rust/src/flow/"]);
         assert_eq!(cfg.roots, LintConfig::default().roots);
         assert!(!cfg.d005_calls.is_empty());
+    }
+
+    #[test]
+    fn semantic_keys_parse_and_override() {
+        let cfg = LintConfig::from_toml(
+            "[d004]\nroot_impl = \"Fleet\"\n\n[units]\nsuffixes = [\"ms=time\"]\n\n[d006]\nctors = [\"MyRng\"]\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.d004_root_impl, "Fleet");
+        assert_eq!(cfg.unit_suffixes, vec!["ms=time"]);
+        assert_eq!(cfg.d006_ctors, vec!["MyRng"]);
+        // untouched lists keep the defaults
+        assert_eq!(cfg.d004_paths, LintConfig::default().d004_paths);
     }
 
     #[test]

@@ -1,0 +1,388 @@
+//! Crate-wide symbol/call graph over the parsed files, and the computed
+//! `FlowSession` reachability that drives rule D004.
+//!
+//! Resolution is name-based with a qualifier filter: a path call
+//! `Type::name(…)` keeps only candidates whose `impl` type or qualified
+//! path contains `Type` (falling back to all same-name candidates when the
+//! filter empties — over-approximating keeps reachability sound for a
+//! lint); `self::` / `crate::` / `Self::` qualifiers do not filter. Method
+//! calls match every fn of that name (receiver types are unknown).
+//!
+//! Reachability from the root impl (default `FlowSession`) is the fixpoint
+//! of three closures, each excluding `#[cfg(test)]` items:
+//!
+//! 1. **forward** — everything the root methods transitively call;
+//! 2. **ancestors** — everything that transitively *calls* the forward
+//!    set (the report/fleet layers drive sessions, so a panic there tears
+//!    down the same worker);
+//! 3. **type references** — `impl` methods of any type a reachable fn
+//!    names in a path (`FlowError::…`), re-closed forward. This catches
+//!    trait-dispatched code (`Display::fmt`) that is never name-called.
+//!
+//! The result over-approximates true reachability — exactly what a
+//! "no panics on flow paths" rule wants — and is rendered as a DOT or
+//! JSON artifact by the `detlint --graph` flag.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::parse::{FnItem, ParsedFile};
+
+/// The assembled call graph: all fn items plus caller/callee edges.
+#[derive(Clone, Debug, Default)]
+pub struct CallGraph {
+    pub fns: Vec<FnItem>,
+    by_name: BTreeMap<String, Vec<usize>>,
+    by_impl: BTreeMap<String, Vec<usize>>,
+    pub callees: Vec<BTreeSet<usize>>,
+    pub callers: Vec<BTreeSet<usize>>,
+}
+
+impl CallGraph {
+    /// Assemble the graph from parsed files (order defines fn indices, so
+    /// a sorted file walk yields a deterministic graph).
+    pub fn build(files: &[ParsedFile]) -> CallGraph {
+        let mut fns: Vec<FnItem> = Vec::new();
+        for pf in files {
+            fns.extend(pf.fns.iter().cloned());
+        }
+        let n = fns.len();
+        let mut by_name: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+        let mut by_impl: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+        for (i, f) in fns.iter().enumerate() {
+            by_name.entry(f.name.clone()).or_default().push(i);
+            if let Some(ty) = &f.impl_type {
+                by_impl.entry(ty.clone()).or_default().push(i);
+            }
+        }
+        let mut g = CallGraph {
+            fns,
+            by_name,
+            by_impl,
+            callees: vec![BTreeSet::new(); n],
+            callers: vec![BTreeSet::new(); n],
+        };
+        let mut edges: Vec<(usize, usize)> = Vec::new();
+        for (i, f) in g.fns.iter().enumerate() {
+            for c in &f.calls {
+                for t in g.resolve(c.method, &c.segs) {
+                    edges.push((i, t));
+                }
+            }
+            for (_, segs) in &f.refs {
+                for t in g.resolve(false, segs) {
+                    edges.push((i, t));
+                }
+            }
+        }
+        for (a, b) in edges {
+            g.callees[a].insert(b);
+            g.callers[b].insert(a);
+        }
+        g
+    }
+
+    /// Candidate fn indices a call could land on (see module docs).
+    pub fn resolve(&self, method: bool, segs: &[String]) -> Vec<usize> {
+        let name = match segs.last() {
+            Some(s) => s.as_str(),
+            None => return Vec::new(),
+        };
+        let cands = match self.by_name.get(name) {
+            Some(v) => v,
+            None => return Vec::new(),
+        };
+        if !method && segs.len() > 1 {
+            let q = segs[segs.len() - 2].as_str();
+            if !matches!(q, "self" | "crate" | "Self") {
+                let filt: Vec<usize> = cands
+                    .iter()
+                    .copied()
+                    .filter(|&i| {
+                        let f = &self.fns[i];
+                        f.impl_type.as_deref() == Some(q)
+                            || f.qual.split("::").any(|s| s == q)
+                    })
+                    .collect();
+                if !filt.is_empty() {
+                    return filt;
+                }
+            }
+        }
+        cands.clone()
+    }
+
+    /// Non-test `impl <root_impl>` methods in `rust/src/` — the roots of
+    /// the D004 reachability computation.
+    pub fn roots(&self, root_impl: &str) -> BTreeSet<usize> {
+        (0..self.fns.len())
+            .filter(|&i| {
+                let f = &self.fns[i];
+                !f.in_test
+                    && f.file.starts_with("rust/src/")
+                    && f.impl_type.as_deref() == Some(root_impl)
+            })
+            .collect()
+    }
+
+    fn closure(&self, seed: &BTreeSet<usize>, forward: bool) -> BTreeSet<usize> {
+        let mut seen = seed.clone();
+        let mut work: Vec<usize> = seed.iter().copied().collect();
+        while let Some(x) = work.pop() {
+            let adj = if forward {
+                &self.callees[x]
+            } else {
+                &self.callers[x]
+            };
+            for &y in adj {
+                if !seen.contains(&y) && !self.fns[y].in_test {
+                    seen.insert(y);
+                    work.push(y);
+                }
+            }
+        }
+        seen
+    }
+
+    /// The full reachable set from `root_impl`: forward ∪ ancestors, then
+    /// the type-reference closure to a fixpoint.
+    pub fn reachable(&self, root_impl: &str) -> BTreeSet<usize> {
+        let roots = self.roots(root_impl);
+        let fwd = self.closure(&roots, true);
+        let mut seed = fwd.clone();
+        seed.extend(roots.iter().copied());
+        let anc = self.closure(&seed, false);
+        let mut reach: BTreeSet<usize> = fwd.union(&anc).copied().collect();
+        loop {
+            let mut quals: BTreeSet<&str> = BTreeSet::new();
+            for &i in &reach {
+                for c in &self.fns[i].calls {
+                    if !c.method && c.segs.len() > 1 {
+                        quals.insert(c.segs[c.segs.len() - 2].as_str());
+                    }
+                }
+                for (_, segs) in &self.fns[i].refs {
+                    if segs.len() > 1 {
+                        quals.insert(segs[segs.len() - 2].as_str());
+                    }
+                }
+            }
+            let mut add: BTreeSet<usize> = BTreeSet::new();
+            for q in quals {
+                if let Some(v) = self.by_impl.get(q) {
+                    for &i in v {
+                        if !reach.contains(&i) && !self.fns[i].in_test {
+                            add.insert(i);
+                        }
+                    }
+                }
+            }
+            if add.is_empty() {
+                break;
+            }
+            let grown = self.closure(&add, true);
+            reach.extend(grown);
+        }
+        reach
+    }
+
+    /// Files containing at least one reachable fn.
+    pub fn reachable_files(&self, reach: &BTreeSet<usize>) -> BTreeSet<String> {
+        reach.iter().map(|&i| self.fns[i].file.clone()).collect()
+    }
+
+    /// Reachable body line spans per file (the D004 scope).
+    pub fn reachable_spans(&self, reach: &BTreeSet<usize>) -> BTreeMap<String, Vec<(usize, usize)>> {
+        let mut out: BTreeMap<String, Vec<(usize, usize)>> = BTreeMap::new();
+        for &i in reach {
+            let f = &self.fns[i];
+            out.entry(f.file.clone())
+                .or_default()
+                .push((f.body_start, f.body_end));
+        }
+        out
+    }
+
+    /// GraphViz DOT of the `rust/src/` call graph; reachable nodes are
+    /// filled. Deterministic: nodes in index order, edges sorted.
+    pub fn render_dot(&self, reach: &BTreeSet<usize>) -> String {
+        let mut out = String::from("digraph detlint {\n  rankdir=LR;\n  node [shape=box, fontsize=9];\n");
+        let keep: Vec<usize> = (0..self.fns.len())
+            .filter(|&i| self.fns[i].file.starts_with("rust/src/") && !self.fns[i].in_test)
+            .collect();
+        let kept: BTreeSet<usize> = keep.iter().copied().collect();
+        for &i in &keep {
+            let f = &self.fns[i];
+            let style = if reach.contains(&i) {
+                ", style=filled, fillcolor=lightsteelblue"
+            } else {
+                ""
+            };
+            out.push_str(&format!(
+                "  n{} [label=\"{}\\n{}:{}\"{}];\n",
+                i,
+                dot_escape(&f.qual),
+                dot_escape(&f.file),
+                f.sig_line,
+                style
+            ));
+        }
+        for &i in &keep {
+            for &j in &self.callees[i] {
+                if kept.contains(&j) {
+                    out.push_str(&format!("  n{i} -> n{j};\n"));
+                }
+            }
+        }
+        out.push_str("}\n");
+        out
+    }
+
+    /// JSON artifact: every fn with its file, span, reachability flag and
+    /// callee indices. Byte-stable across runs (index order).
+    pub fn render_json(&self, reach: &BTreeSet<usize>) -> String {
+        let mut out = String::from("{\n  \"tool\": \"detlint-graph\",\n");
+        out.push_str(&format!("  \"fn_count\": {},\n", self.fns.len()));
+        out.push_str(&format!("  \"reachable_count\": {},\n", reach.len()));
+        out.push_str("  \"fns\": [\n");
+        for (i, f) in self.fns.iter().enumerate() {
+            let callees: Vec<String> = self.callees[i].iter().map(|j| j.to_string()).collect();
+            out.push_str(&format!(
+                "    {{\"id\": {}, \"qual\": \"{}\", \"file\": \"{}\", \"span\": [{}, {}], \
+                 \"in_test\": {}, \"reachable\": {}, \"callees\": [{}]}}{}\n",
+                i,
+                super::json_escape(&f.qual),
+                super::json_escape(&f.file),
+                f.body_start,
+                f.body_end,
+                f.in_test,
+                reach.contains(&i),
+                callees.join(", "),
+                if i + 1 < self.fns.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+}
+
+fn dot_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::parse::parse;
+    use crate::analysis::scanner::scan;
+
+    fn graph_of(files: &[(&str, &str)]) -> CallGraph {
+        let parsed: Vec<ParsedFile> = files
+            .iter()
+            .map(|(p, s)| parse(p, &scan(s, p.starts_with("rust/tests/"))))
+            .collect();
+        CallGraph::build(&parsed)
+    }
+
+    fn names(g: &CallGraph, set: &BTreeSet<usize>) -> BTreeSet<String> {
+        set.iter().map(|&i| g.fns[i].qual.clone()).collect()
+    }
+
+    #[test]
+    fn forward_and_ancestor_reachability() {
+        let g = graph_of(&[(
+            "rust/src/a.rs",
+            "struct FlowSession;\n\
+             impl FlowSession {\n    fn run(&self) { helper(); }\n}\n\
+             fn helper() { leaf(); }\n\
+             fn leaf() {}\n\
+             fn driver() { FlowSession::run(s); }\n\
+             fn unrelated() {}\n",
+        )]);
+        let reach = g.reachable("FlowSession");
+        let got = names(&g, &reach);
+        assert!(got.contains("a::FlowSession::run"));
+        assert!(got.contains("a::helper"), "forward closure");
+        assert!(got.contains("a::leaf"), "transitive forward");
+        assert!(got.contains("a::driver"), "ancestor closure");
+        assert!(!got.contains("a::unrelated"));
+    }
+
+    #[test]
+    fn call_cycles_terminate() {
+        let g = graph_of(&[(
+            "rust/src/a.rs",
+            "struct FlowSession;\nimpl FlowSession {\n    fn run(&self) { ping(); }\n}\n\
+             fn ping() { pong(); }\nfn pong() { ping(); }\n",
+        )]);
+        let reach = g.reachable("FlowSession");
+        let got = names(&g, &reach);
+        assert!(got.contains("a::ping") && got.contains("a::pong"));
+    }
+
+    #[test]
+    fn type_reference_closure_pulls_impl_methods() {
+        // Err(FlowError::bad()) makes FlowError's impls reachable even
+        // though `fmt` is never name-called (trait dispatch)
+        let g = graph_of(&[(
+            "rust/src/a.rs",
+            "struct FlowSession;\nstruct FlowError;\n\
+             impl FlowSession {\n    fn run(&self) { let e = FlowError::bad(); }\n}\n\
+             impl FlowError {\n    fn bad() {}\n    fn fmt_like(&self) { detail(); }\n}\n\
+             fn detail() {}\n",
+        )]);
+        let reach = g.reachable("FlowSession");
+        let got = names(&g, &reach);
+        assert!(got.contains("a::FlowError::bad"));
+        assert!(got.contains("a::FlowError::fmt_like"), "type-ref closure");
+        assert!(got.contains("a::detail"), "forward from type-ref");
+    }
+
+    #[test]
+    fn test_fns_are_excluded_from_closures() {
+        let g = graph_of(&[(
+            "rust/src/a.rs",
+            "struct FlowSession;\nimpl FlowSession {\n    fn run(&self) {}\n}\n\
+             #[cfg(test)]\nmod tests {\n    fn t() { FlowSession::run(x); helper(); }\n}\n\
+             fn helper() {}\n",
+        )]);
+        let reach = g.reachable("FlowSession");
+        let got = names(&g, &reach);
+        assert!(!got.iter().any(|q| q.contains("::t")));
+        assert!(!got.contains("a::helper"), "test-only caller adds nothing");
+    }
+
+    #[test]
+    fn qualifier_filter_separates_same_name_methods() {
+        let g = graph_of(&[(
+            "rust/src/a.rs",
+            "struct A;\nstruct B;\n\
+             impl A {\n    fn go() {}\n}\nimpl B {\n    fn go() {}\n}\n\
+             fn f() { A::go(); }\n",
+        )]);
+        // resolve the path call A::go — only A's impl should match
+        let segs: Vec<String> = vec!["A".into(), "go".into()];
+        let hit = g.resolve(false, &segs);
+        assert_eq!(hit.len(), 1);
+        assert_eq!(g.fns[hit[0]].qual, "a::A::go");
+        // a method call `x.go()` cannot see the receiver type: both match
+        let m = g.resolve(true, &["go".to_string()]);
+        assert_eq!(m.len(), 2);
+    }
+
+    #[test]
+    fn renders_are_deterministic_and_marked(){
+        let g = graph_of(&[(
+            "rust/src/a.rs",
+            "struct FlowSession;\nimpl FlowSession {\n    fn run(&self) { helper(); }\n}\nfn helper() {}\n",
+        )]);
+        let reach = g.reachable("FlowSession");
+        let dot1 = g.render_dot(&reach);
+        let dot2 = g.render_dot(&reach);
+        assert_eq!(dot1, dot2);
+        assert!(dot1.contains("digraph detlint"));
+        assert!(dot1.contains("lightsteelblue"));
+        let json = g.render_json(&reach);
+        assert!(json.contains("\"tool\": \"detlint-graph\""));
+        assert!(json.contains("\"reachable\": true"));
+    }
+}

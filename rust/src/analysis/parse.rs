@@ -1,0 +1,631 @@
+//! Item-level parser on top of the lexical [`super::scanner`].
+//!
+//! Still not rustc — in the `tomlite` spirit, this is the smallest
+//! syntactic pass that makes a crate-wide call graph trustworthy. It
+//! tokenizes the sanitized lines (comments and literals are already
+//! stripped, so tokens are real code), then walks the token stream with
+//! three context stacks — `mod`, `impl`, `fn` — extracting:
+//!
+//! * `fn` items with their parameter names, `self` receivers, a qualified
+//!   name (`module::Type::name`), and the 1-based line span of the body;
+//! * call sites inside fn bodies: method calls (`recv.name(…)`), path
+//!   calls (`a::b::name(…)`), and the lone-identifier shape of each
+//!   argument (for the unit-suffix rules);
+//! * bare multi-segment path references (`Type::assoc` passed as a value),
+//!   which create call-graph edges for higher-order uses.
+//!
+//! Known, accepted approximations: turbofish call sites (`f::<T>(…)`) and
+//! macro bodies are skipped, nested `fn` items inside a body attribute
+//! their calls to the enclosing item, and generic bounds are ignored.
+//! These lose edges conservatively *toward* fewer graph nodes, which the
+//! D004 reachability consumer compensates for with the ancestor and
+//! type-reference closures (see [`super::graph`]).
+
+use super::scanner::Scanned;
+
+/// Rust keywords the call extractor must never treat as a callee name.
+pub const KEYWORDS: &[&str] = &[
+    "if", "else", "for", "while", "loop", "match", "return", "fn", "let", "mut", "pub", "use",
+    "mod", "impl", "struct", "enum", "trait", "where", "in", "as", "ref", "move", "break",
+    "continue", "unsafe", "dyn", "self", "Self", "super", "crate", "const", "static", "type",
+    "async", "await", "true", "false",
+];
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Num,
+    Punct,
+}
+
+/// One token of sanitized source, tagged with its 1-based line.
+#[derive(Clone, Debug)]
+pub struct Token {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: usize,
+}
+
+/// One call site inside a fn body.
+#[derive(Clone, Debug)]
+pub struct CallSite {
+    pub line: usize,
+    /// `recv.name(…)` (true) vs `a::b::name(…)` / `name(…)` (false).
+    pub method: bool,
+    /// Path segments; a method call carries just the method name.
+    pub segs: Vec<String>,
+    /// Per argument: the identifier if the argument is a lone identifier
+    /// or a plain dotted/path chain (`a.b.c` → `c`), else `None`.
+    pub args: Vec<Option<String>>,
+}
+
+/// One `fn` item.
+#[derive(Clone, Debug)]
+pub struct FnItem {
+    pub name: String,
+    /// `module::Type::name` (module path from the file path + `mod` nesting).
+    pub qual: String,
+    /// Enclosing `impl` type, if any (`impl Foo` / `impl Trait for Foo` → `Foo`).
+    pub impl_type: Option<String>,
+    /// Parameter names in order, `self` excluded; `None` for patterns.
+    pub params: Vec<Option<String>>,
+    pub has_self: bool,
+    pub file: String,
+    pub sig_line: usize,
+    /// 1-based inclusive line span of the item (signature through close brace).
+    pub body_start: usize,
+    pub body_end: usize,
+    pub in_test: bool,
+    pub calls: Vec<CallSite>,
+    /// Bare multi-segment path references (line, segments).
+    pub refs: Vec<(usize, Vec<String>)>,
+}
+
+/// One parsed file: its tokens (for the token-level rules) and fn items.
+#[derive(Clone, Debug, Default)]
+pub struct ParsedFile {
+    pub path: String,
+    pub tokens: Vec<Token>,
+    pub fns: Vec<FnItem>,
+}
+
+/// Tokenize sanitized lines: identifiers, numbers (decimal, hex, float,
+/// exponent), and punctuation with the multi-char operators the rules
+/// depend on (`::`, `->`, `<=`, `+=`, …) kept as single tokens.
+pub fn tokenize(scanned: &Scanned) -> Vec<Token> {
+    let mut out = Vec::new();
+    for (idx, line) in scanned.lines.iter().enumerate() {
+        let ln = idx + 1;
+        let cs: Vec<char> = line.code.chars().collect();
+        let mut i = 0usize;
+        while i < cs.len() {
+            let c = cs[i];
+            if c.is_whitespace() {
+                i += 1;
+                continue;
+            }
+            if c.is_ascii_alphabetic() || c == '_' {
+                let start = i;
+                while i < cs.len() && (cs[i].is_ascii_alphanumeric() || cs[i] == '_') {
+                    i += 1;
+                }
+                out.push(Token {
+                    kind: TokKind::Ident,
+                    text: cs[start..i].iter().collect(),
+                    line: ln,
+                });
+                continue;
+            }
+            if c.is_ascii_digit() {
+                let start = i;
+                if c == '0' && matches!(cs.get(i + 1), Some('x') | Some('X')) {
+                    i += 2;
+                    while i < cs.len() && (cs[i].is_ascii_hexdigit() || cs[i] == '_') {
+                        i += 1;
+                    }
+                } else {
+                    while i < cs.len() && (cs[i].is_ascii_digit() || cs[i] == '_') {
+                        i += 1;
+                    }
+                    if i < cs.len() && cs[i] == '.' {
+                        i += 1;
+                        while i < cs.len() && (cs[i].is_ascii_digit() || cs[i] == '_') {
+                            i += 1;
+                        }
+                    }
+                    if i < cs.len() && (cs[i] == 'e' || cs[i] == 'E') {
+                        let mut j = i + 1;
+                        if matches!(cs.get(j), Some('+') | Some('-')) {
+                            j += 1;
+                        }
+                        if cs.get(j).map(|d| d.is_ascii_digit()).unwrap_or(false) {
+                            i = j + 1;
+                            while i < cs.len() && cs[i].is_ascii_digit() {
+                                i += 1;
+                            }
+                        }
+                    }
+                }
+                out.push(Token {
+                    kind: TokKind::Num,
+                    text: cs[start..i].iter().collect(),
+                    line: ln,
+                });
+                continue;
+            }
+            // punctuation: longest known operator first (3, 2, then 1 chars)
+            let take = |len: usize| -> String { cs[i..(i + len).min(cs.len())].iter().collect() };
+            let three = take(3);
+            let two = take(2);
+            let text = if matches!(three.as_str(), "<<=" | ">>=" | "..=") {
+                three
+            } else if matches!(
+                two.as_str(),
+                "&&" | "||" | "->" | "=>" | "::" | "<=" | ">=" | "==" | "!=" | "+=" | "-=" | "*="
+                    | "/=" | ".."
+            ) {
+                two
+            } else {
+                take(1)
+            };
+            i += text.chars().count();
+            out.push(Token {
+                kind: TokKind::Punct,
+                text,
+                line: ln,
+            });
+        }
+    }
+    out
+}
+
+/// Map a repo-relative path to its crate module path
+/// (`rust/src/flow/session.rs` → `flow::session`).
+fn mod_path_of(path: &str) -> String {
+    let mut p = path.strip_prefix("rust/src/").unwrap_or(path);
+    p = p.strip_suffix(".rs").unwrap_or(p);
+    p = p.strip_suffix("/mod").unwrap_or(p);
+    if p == "main" || p == "lib" {
+        return String::new();
+    }
+    p.replace('/', "::")
+}
+
+/// Parse one scanned file into fn items with their call sites.
+pub fn parse(path: &str, scanned: &Scanned) -> ParsedFile {
+    let toks = tokenize(scanned);
+    let n = toks.len();
+    let mut fns: Vec<FnItem> = Vec::new();
+    let mut depth: i64 = 0;
+    let mut mod_stack: Vec<(String, i64)> = Vec::new();
+    let mut impl_stack: Vec<(Option<String>, i64)> = Vec::new();
+    let mut fn_stack: Vec<(usize, i64)> = Vec::new();
+    let mut i = 0usize;
+    while i < n {
+        let t = toks[i].text.as_str();
+        let kind = toks[i].kind;
+        let ln = toks[i].line;
+        if kind == TokKind::Punct && t == "{" {
+            depth += 1;
+            i += 1;
+            continue;
+        }
+        if kind == TokKind::Punct && t == "}" {
+            depth -= 1;
+            while mod_stack.last().map(|m| depth < m.1).unwrap_or(false) {
+                mod_stack.pop();
+            }
+            while impl_stack.last().map(|m| depth < m.1).unwrap_or(false) {
+                impl_stack.pop();
+            }
+            while fn_stack.last().map(|m| depth < m.1).unwrap_or(false) {
+                if let Some((fidx, _)) = fn_stack.pop() {
+                    if let Some(f) = fns.get_mut(fidx) {
+                        f.body_end = ln;
+                    }
+                }
+            }
+            i += 1;
+            continue;
+        }
+        if kind == TokKind::Ident
+            && t == "mod"
+            && toks.get(i + 1).map(|x| x.kind == TokKind::Ident).unwrap_or(false)
+        {
+            let name = toks[i + 1].text.clone();
+            if toks.get(i + 2).map(|x| x.text == "{").unwrap_or(false) {
+                mod_stack.push((name, depth + 1));
+            }
+            i += 2;
+            continue;
+        }
+        if kind == TokKind::Ident && t == "impl" && fn_stack.is_empty() {
+            // scan the header to its `{` (or `;`), note a `for`, collect
+            // top-level identifiers; the type is the last identifier of the
+            // `for`-side (trait impls) or of the whole header (inherent)
+            let mut j = i + 1;
+            let mut ang: i64 = 0;
+            let mut cur: Vec<String> = Vec::new();
+            let mut after_for: Option<usize> = None;
+            while j < n {
+                let tt = toks[j].text.as_str();
+                if tt == "<" {
+                    ang += 1;
+                } else if tt == ">" {
+                    ang -= 1;
+                } else if ang == 0 && (tt == "{" || tt == ";") {
+                    break;
+                } else if ang == 0 {
+                    if tt == "for" {
+                        after_for = Some(j);
+                    } else if toks[j].kind == TokKind::Ident {
+                        cur.push(toks[j].text.clone());
+                    }
+                }
+                j += 1;
+            }
+            if j < n && toks[j].text == "{" {
+                let ty_toks: Vec<String> = match after_for {
+                    Some(f) => toks[f + 1..j]
+                        .iter()
+                        .filter(|x| x.kind == TokKind::Ident)
+                        .map(|x| x.text.clone())
+                        .collect(),
+                    None => cur,
+                };
+                let ty = ty_toks
+                    .into_iter()
+                    .rev()
+                    .find(|x| !matches!(x.as_str(), "dyn" | "where" | "Send" | "Sync"));
+                impl_stack.push((ty, depth + 1));
+            }
+            i = j;
+            continue;
+        }
+        if kind == TokKind::Ident
+            && t == "fn"
+            && toks.get(i + 1).map(|x| x.kind == TokKind::Ident).unwrap_or(false)
+            && fn_stack.is_empty()
+        {
+            let name = toks[i + 1].text.clone();
+            // skip generics to the parameter list
+            let mut j = i + 2;
+            while j < n && toks[j].text != "(" {
+                j += 1;
+            }
+            let mut par: i64 = 1;
+            let mut ang: i64 = 0;
+            j += 1;
+            let mut params_toks: Vec<Vec<(TokKind, String)>> = Vec::new();
+            let mut cur: Vec<(TokKind, String)> = Vec::new();
+            while j < n && par > 0 {
+                let tk = &toks[j];
+                let tt = tk.text.as_str();
+                if tt == "(" {
+                    par += 1;
+                } else if tt == ")" {
+                    par -= 1;
+                } else if tt == "<" {
+                    ang += 1;
+                } else if tt == ">" {
+                    ang -= 1;
+                }
+                if par == 1 && ang == 0 && tt == "," {
+                    params_toks.push(cur);
+                    cur = Vec::new();
+                } else if par > 0 {
+                    cur.push((tk.kind, tk.text.clone()));
+                }
+                j += 1;
+            }
+            if !cur.is_empty() {
+                params_toks.push(cur);
+            }
+            let mut has_self = false;
+            let mut params: Vec<Option<String>> = Vec::new();
+            for p in &params_toks {
+                let texts: Vec<&str> = p.iter().map(|(_, x)| x.as_str()).collect();
+                if texts.contains(&"self")
+                    && params.is_empty()
+                    && !has_self
+                    && !texts.iter().take(4).any(|x| *x == ":")
+                {
+                    has_self = true;
+                    continue;
+                }
+                let mut nm: Option<String> = None;
+                for (k, x) in p {
+                    if x == ":" {
+                        break;
+                    }
+                    if *k == TokKind::Ident && x != "mut" && x != "ref" {
+                        nm = Some(x.clone());
+                    }
+                }
+                params.push(nm);
+            }
+            // scan past return type / where clause to the body (or `;`)
+            let mut jj = j;
+            let mut ang2: i64 = 0;
+            while jj < n {
+                let tt = toks[jj].text.as_str();
+                if ang2 == 0 && (tt == "{" || tt == ";") {
+                    break;
+                }
+                if tt == "<" {
+                    ang2 += 1;
+                } else if tt == ">" {
+                    ang2 -= 1;
+                }
+                jj += 1;
+            }
+            let mod_path = mod_stack
+                .iter()
+                .map(|(nm, _)| nm.as_str())
+                .collect::<Vec<_>>()
+                .join("::");
+            let impl_type = impl_stack.last().and_then(|(ty, _)| ty.clone());
+            let mut parts: Vec<String> = Vec::new();
+            let file_mod = mod_path_of(path);
+            if !file_mod.is_empty() {
+                parts.push(file_mod);
+            }
+            if !mod_path.is_empty() {
+                parts.push(mod_path);
+            }
+            if let Some(ty) = &impl_type {
+                parts.push(ty.clone());
+            }
+            parts.push(name.clone());
+            fns.push(FnItem {
+                name,
+                qual: parts.join("::"),
+                impl_type,
+                params,
+                has_self,
+                file: path.to_string(),
+                sig_line: ln,
+                body_start: ln,
+                body_end: ln,
+                in_test: scanned.is_test_line(ln),
+                calls: Vec::new(),
+                refs: Vec::new(),
+            });
+            if jj < n && toks[jj].text == "{" {
+                fn_stack.push((fns.len() - 1, depth + 1));
+                depth += 1;
+                i = jj + 1;
+            } else {
+                i = jj;
+            }
+            continue;
+        }
+        // inside a fn body: record calls and path references
+        if let Some(&(fidx, _)) = fn_stack.last() {
+            if kind == TokKind::Ident && !KEYWORDS.contains(&t) {
+                let mut j = i;
+                let mut segs: Vec<String> = vec![toks[i].text.clone()];
+                while j + 2 < n
+                    && toks[j + 1].text == "::"
+                    && toks[j + 2].kind == TokKind::Ident
+                {
+                    segs.push(toks[j + 2].text.clone());
+                    j += 2;
+                }
+                let nxt = toks.get(j + 1).map(|x| x.text.as_str()).unwrap_or("");
+                let prev = if i > 0 { toks[i - 1].text.as_str() } else { "" };
+                if nxt == "!" {
+                    i = j + 2; // macro invocation: skip the bang
+                    continue;
+                }
+                if nxt == "(" && prev != "fn" {
+                    let method = prev == ".";
+                    let args = extract_args(&toks, j + 1);
+                    let segs = if method {
+                        segs.split_off(segs.len() - 1)
+                    } else {
+                        segs
+                    };
+                    if let Some(f) = fns.get_mut(fidx) {
+                        f.calls.push(CallSite {
+                            line: ln,
+                            method,
+                            segs,
+                            args,
+                        });
+                    }
+                    i = j + 1;
+                    continue;
+                }
+                if segs.len() > 1 {
+                    if let Some(f) = fns.get_mut(fidx) {
+                        f.refs.push((ln, segs));
+                    }
+                }
+                i = j + 1;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    ParsedFile {
+        path: path.to_string(),
+        tokens: toks,
+        fns,
+    }
+}
+
+/// Split the argument tokens of a call (open paren at `open_idx`) and
+/// reduce each argument to its lone-identifier shape.
+fn extract_args(toks: &[Token], open_idx: usize) -> Vec<Option<String>> {
+    let mut groups: Vec<Vec<(TokKind, String)>> = Vec::new();
+    let mut cur: Vec<(TokKind, String)> = Vec::new();
+    let mut par: i64 = 1;
+    let mut j = open_idx + 1;
+    while j < toks.len() && par > 0 {
+        let tk = &toks[j];
+        let tt = tk.text.as_str();
+        if tt == "(" {
+            par += 1;
+        } else if tt == ")" {
+            par -= 1;
+        }
+        if par == 0 {
+            break;
+        }
+        if par == 1 && tt == "," {
+            groups.push(cur);
+            cur = Vec::new();
+        } else {
+            cur.push((tk.kind, tk.text.clone()));
+        }
+        j += 1;
+    }
+    if !cur.is_empty() {
+        groups.push(cur);
+    }
+    groups.iter().map(|g| lone_ident(g)).collect()
+}
+
+/// The identifier an argument reduces to: a lone identifier, or the last
+/// segment of a plain `a.b.c` / `a::b` chain (references and `mut` are
+/// transparent). Anything with operators or calls is `None`.
+fn lone_ident(ts: &[(TokKind, String)]) -> Option<String> {
+    let ts: Vec<&(TokKind, String)> = ts
+        .iter()
+        .filter(|(_, x)| !matches!(x.as_str(), "&" | "mut" | "*"))
+        .collect();
+    let first = ts.first()?;
+    if ts.len() == 1 {
+        return if first.0 == TokKind::Ident {
+            Some(first.1.clone())
+        } else {
+            None
+        };
+    }
+    let mut expect_ident = true;
+    let mut last: Option<&str> = None;
+    for (k, x) in ts {
+        if expect_ident {
+            if *k == TokKind::Ident {
+                last = Some(x.as_str());
+                expect_ident = false;
+            } else {
+                return None;
+            }
+        } else if x == "." || x == "::" {
+            expect_ident = true;
+        } else {
+            return None;
+        }
+    }
+    if expect_ident {
+        None
+    } else {
+        last.map(|s| s.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::scanner::scan;
+
+    fn parse_src(path: &str, src: &str) -> ParsedFile {
+        parse(path, &scan(src, path.starts_with("rust/tests/")))
+    }
+
+    #[test]
+    fn extracts_fn_items_with_params_and_spans() {
+        let src = "fn alpha(dt_ms: f64, n: usize) -> f64 {\n    beta(dt_ms)\n}\n\
+                   fn beta(x: f64) -> f64 { x }\n";
+        let pf = parse_src("rust/src/x.rs", src);
+        assert_eq!(pf.fns.len(), 2);
+        assert_eq!(pf.fns[0].name, "alpha");
+        assert_eq!(
+            pf.fns[0].params,
+            vec![Some("dt_ms".to_string()), Some("n".to_string())]
+        );
+        assert_eq!((pf.fns[0].body_start, pf.fns[0].body_end), (1, 3));
+        assert_eq!(pf.fns[0].calls.len(), 1);
+        assert_eq!(pf.fns[0].calls[0].segs, vec!["beta"]);
+        assert_eq!(pf.fns[0].calls[0].args, vec![Some("dt_ms".to_string())]);
+    }
+
+    #[test]
+    fn impl_blocks_and_self_receivers() {
+        let src = "struct S;\nimpl S {\n    fn m(&self, v_mv: f64) -> f64 { v_mv }\n}\n\
+                   impl std::fmt::Display for S {\n    fn fmt(&self, f: &mut Fmt) -> R { ok() }\n}\n";
+        let pf = parse_src("rust/src/x.rs", src);
+        assert_eq!(pf.fns.len(), 2);
+        assert_eq!(pf.fns[0].impl_type.as_deref(), Some("S"));
+        assert!(pf.fns[0].has_self);
+        assert_eq!(pf.fns[0].params, vec![Some("v_mv".to_string())]);
+        assert_eq!(pf.fns[0].qual, "x::S::m");
+        // trait impl: the type is the `for` side, not the trait
+        assert_eq!(pf.fns[1].impl_type.as_deref(), Some("S"));
+        assert_eq!(pf.fns[1].name, "fmt");
+    }
+
+    #[test]
+    fn generic_fns_and_trait_bounds_parse() {
+        let src = "fn pick<T: Clone + Ord>(xs: &[T], k_ms: f64) -> Option<T>\nwhere T: Default {\n    helper(k_ms)\n}\nfn helper(t_ms: f64) {}\n";
+        let pf = parse_src("rust/src/x.rs", src);
+        assert_eq!(pf.fns[0].name, "pick");
+        assert_eq!(
+            pf.fns[0].params,
+            vec![Some("xs".to_string()), Some("k_ms".to_string())]
+        );
+        assert_eq!(pf.fns[0].calls[0].segs, vec!["helper"]);
+    }
+
+    #[test]
+    fn method_vs_path_calls_and_refs() {
+        let src = "fn f(s: &S) {\n    s.step(1.0);\n    S::assoc(2.0);\n    let g = S::make;\n    mac!(ignored);\n}\n";
+        let pf = parse_src("rust/src/x.rs", src);
+        let f = &pf.fns[0];
+        assert_eq!(f.calls.len(), 2);
+        assert!(f.calls[0].method);
+        assert_eq!(f.calls[0].segs, vec!["step"]);
+        assert!(!f.calls[1].method);
+        assert_eq!(f.calls[1].segs, vec!["S", "assoc"]);
+        // `S::make` without parens is a path reference (higher-order use)
+        assert_eq!(f.refs.len(), 1);
+        assert_eq!(f.refs[0].1, vec!["S", "make"]);
+    }
+
+    #[test]
+    fn nested_mods_qualify_names_and_test_fns_are_flagged() {
+        let src = "mod inner {\n    fn deep() {}\n}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\n";
+        let pf = parse_src("rust/src/flow/mod.rs", src);
+        assert_eq!(pf.fns[0].qual, "flow::inner::deep");
+        assert!(!pf.fns[0].in_test);
+        assert!(pf.fns[1].in_test);
+    }
+
+    #[test]
+    fn lone_ident_chains_and_rejections() {
+        let pf = parse_src(
+            "rust/src/x.rs",
+            "fn f(a: A) {\n    g(a.lag_ms, self.cfg.dt_s, a + b, h(), 3.0);\n}\n",
+        );
+        assert_eq!(
+            pf.fns[0].calls[0].args,
+            vec![
+                Some("lag_ms".to_string()),
+                Some("dt_s".to_string()),
+                None,
+                None,
+                None
+            ]
+        );
+    }
+
+    #[test]
+    fn tokenizer_keeps_multichar_operators_whole() {
+        let pf = parse_src("rust/src/x.rs", "fn f() { let x = a :: b; let y = c -> d; }\n");
+        let texts: Vec<&str> = pf.tokens.iter().map(|t| t.text.as_str()).collect();
+        assert!(texts.contains(&"::"));
+        assert!(texts.contains(&"->"));
+    }
+}

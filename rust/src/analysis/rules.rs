@@ -12,19 +12,40 @@
 //! | D001 | `rust/src` | `HashMap`/`HashSet` (process-seeded iteration order) |
 //! | D002 | everywhere | float comparators that are not total (`partial_cmp`) |
 //! | D003 | `rust/src` minus exempt | wall-clock / thread identity |
-//! | D004 | configured paths | `unwrap()`/`expect()` where `FlowError` is the contract |
+//! | D004 | computed reachability ∪ configured paths | `unwrap()`/`expect()` where `FlowError` is the contract |
 //! | D005 | everywhere | deprecated entry points (configurable symbol lists) |
+//! | D006 | `rust/src` | PRNG constructed from a literal seed |
+//! | D007 | tree level | stale `[d004] paths` override (see `analysis::analyze_tree`) |
+//! | U1001 | `rust/src` | call argument vs parameter unit-suffix mismatch |
+//! | U1002 | `rust/src` | additive arithmetic / comparison mixing unit dimensions |
+//! | U1003 | `rust/src` | struct-literal field assigned a conflicting unit |
+//!
+//! The lexical rules ([`apply`]) need only the scanned lines; the
+//! semantic rules ([`apply_semantic`]) also consume the token stream,
+//! the fn items and the crate [`CallGraph`]. D004's scope is the
+//! computed `FlowSession`-reachable fn spans — the `[d004] paths`
+//! config list is a whole-file override on top (kept honest by D007).
 
 use super::config::LintConfig;
+use super::graph::CallGraph;
+use super::parse::{ParsedFile, TokKind, Token};
 use super::scanner::Scanned;
 use super::Finding;
 
-/// Apply every rule to one scanned file. `path` is repo-root-relative with
-/// `/` separators (it decides rule scopes).
-pub fn apply(path: &str, scanned: &Scanned, cfg: &LintConfig, out: &mut Vec<Finding>) {
+/// Apply the lexical rules to one scanned file. `path` is
+/// repo-root-relative with `/` separators (it decides rule scopes);
+/// `d004_spans` holds the computed reachable body spans for this file,
+/// if a call graph was built (`None` falls back to the path list alone).
+pub fn apply(
+    path: &str,
+    scanned: &Scanned,
+    cfg: &LintConfig,
+    d004_spans: Option<&[(usize, usize)]>,
+    out: &mut Vec<Finding>,
+) {
     let is_src = path.starts_with("rust/src/");
     let d003_scope = is_src && !cfg.d003_exempt.iter().any(|p| path.starts_with(p.as_str()));
-    let d004_scope = cfg.d004_paths.iter().any(|p| path.starts_with(p.as_str()));
+    let d004_override = cfg.d004_paths.iter().any(|p| path.starts_with(p.as_str()));
 
     // D000: a directive that names rules but carries no reason suppresses
     // nothing — surface it so a bare `allow` can't silently rot.
@@ -127,7 +148,14 @@ pub fn apply(path: &str, scanned: &Scanned, cfg: &LintConfig, out: &mut Vec<Find
 
         // D004 — on FlowSession-reachable paths the error contract is the
         // typed FlowError; a panic tears down fleet workers instead of
-        // surfacing a match-able failure.
+        // surfacing a match-able failure. The scope is the *computed*
+        // reachable fn spans from the call graph; the configured path
+        // list is an additional whole-file override.
+        let d004_scope = d004_override
+            || (is_src
+                && d004_spans
+                    .map(|sp| sp.iter().any(|&(a, b)| a <= lineno && lineno <= b))
+                    .unwrap_or(false));
         if d004_scope && (code.contains(".unwrap()") || code.contains(".expect(")) {
             emit(
                 "D004",
@@ -169,6 +197,385 @@ pub fn apply(path: &str, scanned: &Scanned, cfg: &LintConfig, out: &mut Vec<Find
             }
         }
     }
+}
+
+// ------------------------------------------------------------------
+// semantic rules: physical-unit consistency (U100x) and seed
+// discipline (D006), over the token stream and the call graph
+
+/// The unit-suffix registry: identifier suffix → dimension, parsed from
+/// the `[units] suffixes` config entries (`"ms=time"` form).
+pub struct UnitRegistry {
+    map: std::collections::BTreeMap<String, String>,
+}
+
+impl UnitRegistry {
+    pub fn from_cfg(cfg: &LintConfig) -> UnitRegistry {
+        let mut map = std::collections::BTreeMap::new();
+        for entry in &cfg.unit_suffixes {
+            if let Some((suf, dim)) = entry.split_once('=') {
+                map.insert(suf.trim().to_string(), dim.trim().to_string());
+            }
+        }
+        UnitRegistry { map }
+    }
+
+    /// The (dimension, suffix) an identifier carries, if its trailing
+    /// `_suffix` is registered. Rate-style names (`_per_`) carry compound
+    /// units this registry cannot judge, so they are transparent.
+    pub fn unit_of<'a, 'b>(&'a self, name: &'b str) -> Option<(&'a str, &'b str)> {
+        if name.contains("_per_") {
+            return None;
+        }
+        let (base, suf) = name.rsplit_once('_')?;
+        if base.is_empty() {
+            return None;
+        }
+        self.map.get(suf).map(|dim| (dim.as_str(), suf))
+    }
+}
+
+const ARITH_OPS: &[&str] = &["+", "-", "<", ">", "<=", ">=", "==", "!=", "+=", "-="];
+const MULT_OPS: &[&str] = &["*", "/", "%"];
+const CMP_METHODS: &[&str] = &["min", "max", "clamp"];
+
+/// Apply the token/graph rules (U1001, U1002, U1003, D006) to one parsed
+/// file. Scoped to `rust/src/` — unit hygiene and seed discipline guard
+/// the library results, not examples or benches.
+pub fn apply_semantic(
+    parsed: &ParsedFile,
+    graph: &CallGraph,
+    scanned: &Scanned,
+    cfg: &LintConfig,
+    out: &mut Vec<Finding>,
+) {
+    let path = parsed.path.as_str();
+    if !path.starts_with("rust/src/") {
+        return;
+    }
+    let reg = UnitRegistry::from_cfg(cfg);
+    let toks = parsed.tokens.as_slice();
+    let n = toks.len();
+    let mut emit = |rule: &'static str, line: usize, message: String, out: &mut Vec<Finding>| {
+        if !scanned.suppressed(rule, line) {
+            out.push(Finding {
+                rule,
+                file: path.to_string(),
+                line,
+                message,
+            });
+        }
+    };
+
+    // U1002 — additive arithmetic and comparisons over identifiers whose
+    // suffixes disagree in dimension. Operands adjacent to `*`/`/`/`%`
+    // are skipped: products legitimately combine dimensions
+    // (`w * t_amb_c + power_w * r` is a weighted sum, not a mix-up).
+    for i in 0..n {
+        let op = &toks[i];
+        if op.kind != TokKind::Punct || !ARITH_OPS.contains(&op.text.as_str()) {
+            continue;
+        }
+        if scanned.is_test_line(op.line) || i == 0 || toks[i - 1].kind != TokKind::Ident {
+            continue;
+        }
+        let lhs = toks[i - 1].text.as_str();
+        let (ldim, lsuf) = match reg.unit_of(lhs) {
+            Some(u) => u,
+            None => continue,
+        };
+        // token just before the lhs dotted chain
+        let mut b = i - 1;
+        while b >= 2 && toks[b - 1].text == "." && toks[b - 2].kind == TokKind::Ident {
+            b -= 2;
+        }
+        let before = if b >= 1 { toks[b - 1].text.as_str() } else { "" };
+        if MULT_OPS.contains(&before) {
+            continue;
+        }
+        let mut j = i + 1;
+        while j < n && matches!(toks[j].text.as_str(), "&" | "-") {
+            j += 1;
+        }
+        if j >= n || toks[j].kind != TokKind::Ident {
+            continue;
+        }
+        if j + 1 < n && matches!(toks[j + 1].text.as_str(), "(" | "::" | "!" | "<") {
+            continue; // call / path / generic: not a plain identifier
+        }
+        let mut rhs = toks[j].text.as_str();
+        let mut is_call = false;
+        while j + 2 < n && toks[j + 1].text == "." && toks[j + 2].kind == TokKind::Ident {
+            j += 2;
+            rhs = toks[j].text.as_str();
+            if j + 1 < n && toks[j + 1].text == "(" {
+                is_call = true;
+                break;
+            }
+        }
+        if is_call {
+            continue;
+        }
+        let after = if j + 1 < n { toks[j + 1].text.as_str() } else { "" };
+        if MULT_OPS.contains(&after) {
+            continue;
+        }
+        let (rdim, rsuf) = match reg.unit_of(rhs) {
+            Some(u) => u,
+            None => continue,
+        };
+        // suffix-level comparison: `lag_ms + t_s` is a scale mix-up even
+        // though both are time — exactly the bug class this rule hunts
+        if lsuf != rsuf {
+            emit(
+                "U1002",
+                op.line,
+                format!(
+                    "`{lhs} {} {rhs}` mixes unit suffixes [{ldim}:{lsuf}] vs \
+                     [{rdim}:{rsuf}]: convert to one unit before combining",
+                    op.text
+                ),
+                out,
+            );
+        }
+    }
+
+    // U1002 (cont.) — min/max/clamp between conflicting suffixes.
+    for i in 0..n {
+        if toks[i].kind != TokKind::Ident || !CMP_METHODS.contains(&toks[i].text.as_str()) {
+            continue;
+        }
+        if i < 2 || toks[i - 1].text != "." || toks[i - 2].kind != TokKind::Ident {
+            continue;
+        }
+        if i + 1 >= n || toks[i + 1].text != "(" || scanned.is_test_line(toks[i].line) {
+            continue;
+        }
+        let recv = toks[i - 2].text.as_str();
+        let (rdim, rsuf) = match reg.unit_of(recv) {
+            Some(u) => u,
+            None => continue,
+        };
+        if i + 3 < n && toks[i + 2].kind == TokKind::Ident
+            && matches!(toks[i + 3].text.as_str(), ")" | ",")
+        {
+            let arg = toks[i + 2].text.as_str();
+            if let Some((adim, asuf)) = reg.unit_of(arg) {
+                if asuf != rsuf {
+                    emit(
+                        "U1002",
+                        toks[i].line,
+                        format!(
+                            "`{recv}.{}({arg})` compares [{rdim}:{rsuf}] against \
+                             [{adim}:{asuf}]: convert to one unit first",
+                            toks[i].text
+                        ),
+                        out,
+                    );
+                }
+            }
+        }
+    }
+
+    // U1003 — struct-literal fields assigned an identifier of a
+    // conflicting dimension (`ThermalCfg { lag_ms: lag_s, .. }`).
+    for i in 0..n {
+        let t = &toks[i];
+        let upper = t
+            .text
+            .chars()
+            .next()
+            .map(|c| c.is_ascii_uppercase())
+            .unwrap_or(false);
+        if t.kind != TokKind::Ident || !upper || i + 1 >= n || toks[i + 1].text != "{" {
+            continue;
+        }
+        if i > 0
+            && matches!(
+                toks[i - 1].text.as_str(),
+                "use" | "mod" | "struct" | "enum" | "trait" | "impl" | "fn" | "for"
+            )
+        {
+            continue;
+        }
+        let mut depth: i64 = 1;
+        let mut j = i + 2;
+        while j < n && depth > 0 {
+            let tt = toks[j].text.as_str();
+            if tt == "{" {
+                depth += 1;
+            } else if tt == "}" {
+                depth -= 1;
+            } else if depth == 1
+                && toks[j].kind == TokKind::Ident
+                && j + 1 < n
+                && toks[j + 1].text == ":"
+            {
+                let fld = toks[j].text.as_str();
+                if let Some((fdim, fsuf)) = reg.unit_of(fld) {
+                    if j + 3 < n
+                        && toks[j + 2].kind == TokKind::Ident
+                        && matches!(toks[j + 3].text.as_str(), "," | "}")
+                    {
+                        let val = toks[j + 2].text.as_str();
+                        if let Some((vdim, vsuf)) = reg.unit_of(val) {
+                            if vsuf != fsuf && !scanned.is_test_line(toks[j].line) {
+                                emit(
+                                    "U1003",
+                                    toks[j].line,
+                                    format!(
+                                        "struct field `{fld}` [{fdim}:{fsuf}] assigned \
+                                         from `{val}` [{vdim}:{vsuf}]: convert at the \
+                                         construction site"
+                                    ),
+                                    out,
+                                );
+                            }
+                        }
+                    }
+                }
+                j += 1;
+                continue;
+            }
+            j += 1;
+        }
+    }
+
+    // U1001 — call argument vs. parameter name, resolved through the
+    // crate call graph. Fires only when every candidate agrees on the
+    // parameter name at that position (ambiguity stays silent).
+    for f in &parsed.fns {
+        if f.in_test {
+            continue;
+        }
+        for c in &f.calls {
+            let cands = graph.resolve(c.method, &c.segs);
+            if cands.is_empty() {
+                continue;
+            }
+            for (pos, arg) in c.args.iter().enumerate() {
+                let a = match arg {
+                    Some(a) => a.as_str(),
+                    None => continue,
+                };
+                let (adim, asuf) = match reg.unit_of(a) {
+                    Some(u) => u,
+                    None => continue,
+                };
+                let mut agreed: Option<Option<&str>> = None;
+                let mut ok = true;
+                for &ci in &cands {
+                    let cf = &graph.fns[ci];
+                    let mut p = pos as i64;
+                    // UFCS: Type::method(&recv, args…) shifts positions by one
+                    if !c.method && cf.has_self && c.args.len() == cf.params.len() + 1 {
+                        p -= 1;
+                    }
+                    if p < 0 || p as usize >= cf.params.len() {
+                        ok = false;
+                        break;
+                    }
+                    let pn = cf.params[p as usize].as_deref();
+                    match &agreed {
+                        None => agreed = Some(pn),
+                        Some(prev) => {
+                            if *prev != pn {
+                                ok = false;
+                                break;
+                            }
+                        }
+                    }
+                }
+                if !ok {
+                    continue;
+                }
+                let pn = match agreed.flatten() {
+                    Some(p) => p,
+                    None => continue,
+                };
+                let (pdim, psuf) = match reg.unit_of(pn) {
+                    Some(u) => u,
+                    None => continue,
+                };
+                if psuf != asuf {
+                    emit(
+                        "U1001",
+                        c.line,
+                        format!(
+                            "argument `{a}` [{adim}:{asuf}] feeds parameter `{pn}` \
+                             [{pdim}:{psuf}] of `{}`: convert at the call site",
+                            c.segs.join("::")
+                        ),
+                        out,
+                    );
+                }
+            }
+        }
+    }
+
+    // D006 — PRNG constructed from a literal seed on a library path.
+    // Seeds must flow in from the config so experiments replay; literals
+    // fork an untracked stream (wall-clock seeds are already D003).
+    for i in 0..n {
+        if toks[i].kind != TokKind::Ident || toks[i].text != "new" {
+            continue;
+        }
+        if i < 2
+            || toks[i - 1].text != "::"
+            || !cfg.d006_ctors.iter().any(|ct| *ct == toks[i - 2].text)
+        {
+            continue;
+        }
+        if i + 1 >= n || toks[i + 1].text != "(" || scanned.is_test_line(toks[i].line) {
+            continue;
+        }
+        let mut depth: i64 = 1;
+        let mut j = i + 2;
+        let mut any = false;
+        let mut all_literal = true;
+        while j < n && depth > 0 {
+            let tt = toks[j].text.as_str();
+            if tt == "(" {
+                depth += 1;
+            } else if tt == ")" {
+                depth -= 1;
+            }
+            if depth > 0 {
+                any = true;
+                let literal = toks[j].kind == TokKind::Num
+                    || matches!(tt, "-" | "+" | "^" | "|" | "!" | "_")
+                    || numeric_suffix(toks[j].kind, tt);
+                if !literal {
+                    all_literal = false;
+                }
+            }
+            j += 1;
+        }
+        if any && all_literal {
+            emit(
+                "D006",
+                toks[i].line,
+                format!(
+                    "{}::new(<literal seed>) on a library path: thread the seed from \
+                     the config (derive per-stream seeds via SplitMix64/mix64) so \
+                     runs replay bit-identically",
+                    toks[i - 2].text
+                ),
+                out,
+            );
+        }
+    }
+}
+
+/// Integer/float type suffixes that keep a seed expression literal
+/// (`42u64` tokenizes as `42` + `u64`).
+fn numeric_suffix(kind: TokKind, t: &str) -> bool {
+    kind == TokKind::Ident
+        && matches!(
+            t,
+            "u8" | "u16" | "u32" | "u64" | "u128" | "usize" | "i8" | "i16" | "i32" | "i64"
+                | "i128" | "isize" | "f32" | "f64"
+        )
 }
 
 /// Substring match anchored at an identifier boundary on the left, so
@@ -220,7 +627,23 @@ mod tests {
     fn lint(path: &str, src: &str) -> Vec<Finding> {
         let cfg = LintConfig::default();
         let mut out = Vec::new();
-        apply(path, &scan(src, path.starts_with("rust/tests/")), &cfg, &mut out);
+        apply(
+            path,
+            &scan(src, path.starts_with("rust/tests/")),
+            &cfg,
+            None,
+            &mut out,
+        );
+        out
+    }
+
+    fn lint_semantic(path: &str, src: &str) -> Vec<Finding> {
+        let cfg = LintConfig::default();
+        let scanned = scan(src, path.starts_with("rust/tests/"));
+        let parsed = crate::analysis::parse::parse(path, &scanned);
+        let graph = CallGraph::build(std::slice::from_ref(&parsed));
+        let mut out = Vec::new();
+        apply_semantic(&parsed, &graph, &scanned, &cfg, &mut out);
         out
     }
 
@@ -258,10 +681,34 @@ mod tests {
     }
 
     #[test]
-    fn d004_only_on_configured_paths() {
-        let bad = "let v = m.lock().unwrap();";
+    fn d004_on_configured_paths_and_computed_spans() {
+        let bad = "fn f() {\n    let v = m.lock().unwrap();\n}\n";
+        // configured path override: fires without any span info
         assert_eq!(lint("rust/src/flow/session.rs", bad)[0].rule, "D004");
+        // off the paths, no spans: clean
         assert!(lint("rust/src/util/rng.rs", bad).is_empty());
+        // off the paths but inside a computed reachable span: fires
+        let cfg = LintConfig::default();
+        let mut out = Vec::new();
+        apply(
+            "rust/src/util/rng.rs",
+            &scan(bad, false),
+            &cfg,
+            Some(&[(1, 3)]),
+            &mut out,
+        );
+        assert_eq!(out.len(), 1);
+        assert_eq!((out[0].rule, out[0].line), ("D004", 2));
+        // a span that does not cover the line stays clean
+        let mut out2 = Vec::new();
+        apply(
+            "rust/src/util/rng.rs",
+            &scan(bad, false),
+            &cfg,
+            Some(&[(10, 20)]),
+            &mut out2,
+        );
+        assert!(out2.is_empty());
     }
 
     #[test]
@@ -301,5 +748,79 @@ mod tests {
     fn string_literals_and_comments_never_fire() {
         let src = "// HashMap in a comment\nlet s = \"Instant::now and HashSet\";";
         assert!(lint("rust/src/x.rs", src).is_empty());
+    }
+
+    // ------------------------------------------------ semantic rules --
+
+    #[test]
+    fn unit_registry_suffix_lookup() {
+        let reg = UnitRegistry::from_cfg(&LintConfig::default());
+        assert_eq!(reg.unit_of("lag_ms"), Some(("time", "ms")));
+        assert_eq!(reg.unit_of("margin_c"), Some(("temp", "c")));
+        assert_eq!(reg.unit_of("vdd_mv"), Some(("volt", "mv")));
+        assert!(reg.unit_of("slew_v_per_ms").is_none(), "rates are transparent");
+        assert!(reg.unit_of("count").is_none());
+        assert!(reg.unit_of("_ms").is_none(), "bare suffix is not a unit name");
+    }
+
+    #[test]
+    fn u1001_argument_vs_parameter_suffix() {
+        let src = "fn sense(lag_ms: f64) -> f64 { lag_ms }\n\
+                   fn f(delay_s: f64) {\n    sense(delay_s);\n}\n";
+        let got = lint_semantic("rust/src/x.rs", src);
+        // `_s` into `_ms` is same-dimension but a scale mix-up: the
+        // comparison is suffix-level, so it fires
+        assert_eq!(got.len(), 1);
+        assert_eq!((got[0].rule, got[0].line), ("U1001", 3));
+        let ok = "fn sense(lag_ms: f64) -> f64 { lag_ms }\n\
+                  fn f(delay_ms: f64) {\n    sense(delay_ms);\n}\n";
+        assert!(lint_semantic("rust/src/x.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn u1002_arithmetic_and_comparators() {
+        let src = "fn f(t_c: f64, dt_ms: f64) -> f64 {\n    t_c + dt_ms\n}\n";
+        let got = lint_semantic("rust/src/x.rs", src);
+        assert_eq!(got.len(), 1);
+        assert_eq!((got[0].rule, got[0].line), ("U1002", 2));
+        // multiplicative context is exempt: weighted sums are fine
+        let ok = "fn f(w: f64, t_amb_c: f64, power_w: f64, r: f64) -> f64 {\n    w * t_amb_c + power_w * r\n}\n";
+        assert!(lint_semantic("rust/src/x.rs", ok).is_empty());
+        // min/max between dimensions fires
+        let m = "fn f(t_c: f64, v_mv: f64) -> f64 {\n    t_c.max(v_mv)\n}\n";
+        let got = lint_semantic("rust/src/x.rs", m);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].rule, "U1002");
+    }
+
+    #[test]
+    fn u1003_struct_literal_fields() {
+        let src = "fn f(lag_s: f64) -> C {\n    C { lag_ms: lag_s, n: 3 }\n}\n";
+        let got = lint_semantic("rust/src/x.rs", src);
+        assert_eq!(got.len(), 1);
+        assert_eq!((got[0].rule, got[0].line), ("U1003", 2));
+        // same dimension is fine; non-unit names are transparent
+        let ok = "fn f(lag_ms: f64) -> C {\n    C { lag_ms: lag_ms, n: 3 }\n}\n";
+        assert!(lint_semantic("rust/src/x.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn d006_literal_seed_on_library_path() {
+        let src = "fn f() -> Xoshiro256 {\n    Xoshiro256::new(12345)\n}\n";
+        let got = lint_semantic("rust/src/x.rs", src);
+        assert_eq!(got.len(), 1);
+        assert_eq!((got[0].rule, got[0].line), ("D006", 2));
+        // a seed that flows from a parameter is the contract
+        let ok = "fn f(seed: u64) -> Xoshiro256 {\n    Xoshiro256::new(seed)\n}\n";
+        assert!(lint_semantic("rust/src/x.rs", ok).is_empty());
+        // literal seeds in test code are fine
+        let test = "#[cfg(test)]\nmod tests {\n    fn t() { let r = Xoshiro256::new(7); }\n}\n";
+        assert!(lint_semantic("rust/src/x.rs", test).is_empty());
+    }
+
+    #[test]
+    fn semantic_rules_respect_allow_directives() {
+        let src = "fn f(t_c: f64, dt_ms: f64) -> f64 {\n    // detlint: allow(U1002) dimensionless blend, proven in docs\n    t_c + dt_ms\n}\n";
+        assert!(lint_semantic("rust/src/x.rs", src).is_empty());
     }
 }

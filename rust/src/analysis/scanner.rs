@@ -3,9 +3,16 @@
 //! Not a real parser — in the spirit of `util::tomlite`, it is the smallest
 //! lexer that makes token matching trustworthy: it strips comments and
 //! string/char literals (so a rule symbol quoted in a doc comment or a
-//! message never fires), tracks `#[cfg(test)]` regions by brace depth (so
-//! test-only code is exempt from the library rules), and collects the
-//! inline `// detlint: allow(D00x) <reason>` suppression directives.
+//! message never fires), tracks `#[cfg(test)]` regions character-by-character
+//! (so test-only code is exempt from the library rules even when several
+//! items share a line), and collects the inline
+//! `// detlint: allow(D00x) <reason>` suppression directives.
+//!
+//! Allow directives are only recognised inside genuine `//` line comments:
+//! the directive text appearing in a string literal (raw or plain) or a
+//! block comment registers nothing. This closed a real hole — a raw string
+//! such as `r#"// detlint: allow(D001) x"#` used to register a phantom
+//! directive that could suppress a finding on the following line.
 //!
 //! The scanner is itself deterministic: output depends only on the file
 //! bytes, never on iteration order, the clock, or the environment.
@@ -49,6 +56,12 @@ impl Scanned {
                 && a.rules.iter().any(|r| r == rule)
         })
     }
+
+    /// Is 1-based `line` inside a `#[cfg(test)]` region (or a whole-file
+    /// test scope)? Out-of-range lines count as non-test.
+    pub fn is_test_line(&self, line: usize) -> bool {
+        line >= 1 && self.lines.get(line - 1).map(|l| l.in_test).unwrap_or(false)
+    }
 }
 
 /// Lexer mode carried across lines (block comments, strings and raw
@@ -68,11 +81,14 @@ pub fn scan(src: &str, whole_file_test: bool) -> Scanned {
     let mut out = Scanned::default();
     let mut mode = Mode::Code;
     for (idx, raw) in src.lines().enumerate() {
-        if let Some(allow) = parse_allow(raw, idx + 1) {
-            out.allows.push(allow);
+        let (code, comment) = sanitize(raw, &mut mode);
+        if let Some(text) = comment {
+            if let Some(allow) = parse_allow(&text, idx + 1) {
+                out.allows.push(allow);
+            }
         }
         out.lines.push(Line {
-            code: sanitize(raw, &mut mode),
+            code,
             in_test: whole_file_test,
         });
     }
@@ -84,10 +100,13 @@ pub fn scan(src: &str, whole_file_test: bool) -> Scanned {
 
 /// Strip comments and string/char literals from one line, carrying
 /// multi-line state in `mode`. Stripped spans collapse to a single space so
-/// adjacent tokens never concatenate into a false match.
-fn sanitize(raw: &str, mode: &mut Mode) -> String {
+/// adjacent tokens never concatenate into a false match. Returns the
+/// sanitized code plus the text of a genuine `//` line comment, if the
+/// line ends in one (the only place allow directives are honoured).
+fn sanitize(raw: &str, mode: &mut Mode) -> (String, Option<String>) {
     let cs: Vec<char> = raw.chars().collect();
     let mut out = String::with_capacity(raw.len());
+    let mut comment: Option<String> = None;
     let mut i = 0usize;
     while i < cs.len() {
         match *mode {
@@ -129,7 +148,9 @@ fn sanitize(raw: &str, mode: &mut Mode) -> String {
             Mode::Code => {
                 let c = cs[i];
                 if c == '/' && cs.get(i + 1) == Some(&'/') {
-                    break; // line comment: drop the rest of the line
+                    // genuine line comment: drop the rest, keep its text
+                    comment = Some(cs[i..].iter().collect());
+                    break;
                 }
                 if c == '/' && cs.get(i + 1) == Some(&'*') {
                     *mode = Mode::BlockComment(1);
@@ -161,7 +182,7 @@ fn sanitize(raw: &str, mode: &mut Mode) -> String {
             }
         }
     }
-    out
+    (out, comment)
 }
 
 /// Is `cs[i]` preceded by an identifier character (so a leading `r`/`b` is
@@ -221,11 +242,11 @@ fn char_literal_end(cs: &[char], i: usize) -> Option<usize> {
     }
 }
 
-/// Parse a `detlint: allow(...)` directive from a raw line.
-fn parse_allow(raw: &str, lineno: usize) -> Option<Allow> {
+/// Parse a `detlint: allow(...)` directive from line-comment text.
+fn parse_allow(comment: &str, lineno: usize) -> Option<Allow> {
     let marker = "detlint: allow(";
-    let start = raw.find(marker)?;
-    let body = &raw[start + marker.len()..];
+    let start = comment.find(marker)?;
+    let body = &comment[start + marker.len()..];
     let close = body.find(')')?;
     let rules: Vec<String> = body[..close]
         .split(',')
@@ -244,35 +265,61 @@ fn parse_allow(raw: &str, lineno: usize) -> Option<Allow> {
 }
 
 /// Mark every line inside a `#[cfg(test)]` item. Works on sanitized text,
-/// so braces in strings or comments never skew the depth count. Handles
-/// both braced items (`mod tests { … }`) and single-statement items
-/// (`#[cfg(test)] use …;`).
+/// so braces in strings or comments never skew the depth count, and walks
+/// characters rather than counting braces per line — a close brace and a
+/// fresh `#[cfg(test)] mod …` sharing one line each get the right scope.
+/// Handles braced items (`mod tests { … }`) and single-statement items
+/// (`#[cfg(test)] use …;` — the pending attribute is consumed by a `;` at
+/// the depth the attribute appeared at).
 fn mark_test_regions(lines: &mut [Line]) {
+    let marker = "#[cfg(test)]";
     let mut depth: i64 = 0;
     let mut pending = false; // saw #[cfg(test)], waiting for its item
+    let mut pend_depth: i64 = 0; // depth where the pending attribute sits
     let mut region_base: Option<i64> = None; // depth the region closes at
     for line in lines.iter_mut() {
         let mut in_test = region_base.is_some() || pending;
-        if region_base.is_none() && line.code.contains("#[cfg(test)]") {
-            pending = true;
-            in_test = true;
+        // byte offsets of every marker occurrence on this line
+        let mut marker_at: Vec<usize> = Vec::new();
+        let mut from = 0usize;
+        while let Some(p) = line.code[from..].find(marker) {
+            marker_at.push(from + p);
+            from += p + marker.len();
         }
-        let opens = line.code.matches('{').count() as i64;
-        let closes = line.code.matches('}').count() as i64;
-        if pending && region_base.is_none() {
-            if opens > 0 {
-                region_base = Some(depth);
-                pending = false;
-            } else if line.code.trim_end().ends_with(';') {
-                pending = false; // single-statement item: ends here
+        let mut mk = 0usize;
+        for (pos, c) in line.code.char_indices() {
+            while mk < marker_at.len() && marker_at[mk] <= pos {
+                if marker_at[mk] == pos && region_base.is_none() {
+                    pending = true;
+                    pend_depth = depth;
+                    in_test = true;
+                }
+                mk += 1;
             }
-        }
-        depth += opens - closes;
-        if let Some(base) = region_base {
-            if depth <= base {
-                region_base = None;
+            match c {
+                '{' => {
+                    if pending && region_base.is_none() {
+                        region_base = Some(depth);
+                        pending = false;
+                        in_test = true;
+                    }
+                    depth += 1;
+                }
+                '}' => {
+                    depth -= 1;
+                    if let Some(base) = region_base {
+                        if depth <= base {
+                            region_base = None;
+                        }
+                    }
+                }
+                ';' => {
+                    if pending && region_base.is_none() && depth == pend_depth {
+                        pending = false; // single-statement item: ends here
+                    }
+                }
+                _ => {}
             }
-            in_test = true;
         }
         line.in_test = in_test;
     }
@@ -300,6 +347,14 @@ mod tests {
         assert!(!c[0].contains("HashMap"));
         assert!(!c[1].contains("HashSet"));
         assert!(c[0].contains("let s ="));
+    }
+
+    #[test]
+    fn raw_string_with_multiple_hash_delimiters() {
+        // r##"…"# …"## — the single-hash close inside must not end it
+        let c = codes("let r = r##\"body \"# still inside\"##; let after = 1;");
+        assert!(!c[0].contains("still inside"));
+        assert!(c[0].contains("let after = 1;"));
     }
 
     #[test]
@@ -335,6 +390,27 @@ mod tests {
     }
 
     #[test]
+    fn cfg_test_item_opening_after_a_close_brace_on_the_same_line() {
+        // per-line brace *counting* used to cancel the region immediately
+        // (one `}` plus one `{` nets to zero); the char-level walk keeps it
+        let src = "mod m {\n    fn lib() {}\n} #[cfg(test)] mod t {\n    fn q() {}\n}\nfn lib2() {}";
+        let s = scan(src, false);
+        let flags: Vec<bool> = s.lines.iter().map(|l| l.in_test).collect();
+        assert_eq!(flags, vec![false, false, true, true, true, false]);
+    }
+
+    #[test]
+    fn nested_cfg_test_item_inside_non_test_module() {
+        let src = "mod m {\n    fn lib() {}\n    #[cfg(test)]\n    mod tests {\n        fn t() {}\n    }\n    fn lib2() {}\n}";
+        let s = scan(src, false);
+        let flags: Vec<bool> = s.lines.iter().map(|l| l.in_test).collect();
+        assert_eq!(
+            flags,
+            vec![false, false, true, true, true, true, false, false]
+        );
+    }
+
+    #[test]
     fn allow_directive_parsing_and_suppression() {
         let src = "// detlint: allow(D001) keyed lookups only\nlet m = foo();\n// detlint: allow(D002)\nlet n = bar();";
         let s = scan(src, false);
@@ -357,8 +433,26 @@ mod tests {
     }
 
     #[test]
+    fn allow_text_inside_a_string_literal_registers_nothing() {
+        // the directive sits inside a raw string — it must not create a
+        // phantom allow that suppresses a finding on the next line
+        let src = "let s = r#\"// detlint: allow(D001) fake\"#;\nlet m = foo();";
+        let s = scan(src, false);
+        assert!(s.allows.is_empty());
+        assert!(!s.suppressed("D001", 2));
+        // same for a plain string and a block comment
+        let s2 = scan("let s = \"detlint: allow(D001) fake\";", false);
+        assert!(s2.allows.is_empty());
+        let s3 = scan("/* detlint: allow(D001) fake */\nlet m = foo();", false);
+        assert!(s3.allows.is_empty());
+    }
+
+    #[test]
     fn whole_file_test_flag() {
         let s = scan("fn anything() {}", true);
         assert!(s.lines[0].in_test);
+        assert!(s.is_test_line(1));
+        assert!(!s.is_test_line(0));
+        assert!(!s.is_test_line(99));
     }
 }

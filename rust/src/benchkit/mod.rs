@@ -180,6 +180,7 @@ pub fn run(cfg_in: &Config, opts: &BenchOpts, out: &Path) -> anyhow::Result<Benc
     s.alg2_thermal_reused = fast.thermal_reused;
     let arena = alg2_session
         .arena_stats(&opts.bench, None)
+        // detlint: allow(D004) alg2 ran this bench two lines up, so stats exist
         .expect("alg2 session ran requests for this bench");
     s.arena_core_hits = arena.core_hits;
     s.arena_core_misses = arena.core_misses;

@@ -2,30 +2,43 @@
 //! (the CI gate). Same engine as `thermovolt lint`; see
 //! `thermovolt::analysis` and DESIGN.md, section `analysis`.
 //!
-//! Usage: `detlint [--json] [--root DIR] [--config FILE]`
+//! Usage: `detlint [--json] [--graph dot|json] [--root DIR] [--config FILE]`
 //!
 //! The repo root defaults to the nearest ancestor of the current directory
 //! containing `rust/src`; the config defaults to `<root>/detlint.toml`
-//! (compiled-in defaults if absent). Exits 1 on any unsuppressed finding,
-//! 2 on usage/IO errors.
+//! (compiled-in defaults if absent). `--graph` prints the crate call
+//! graph (reachable fns marked) instead of the findings and always exits
+//! 0 — it is the artifact surface, not the gate. Otherwise exits 1 on any
+//! unsuppressed finding, 2 on usage/IO errors.
 
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
-use thermovolt::analysis::{lint_tree, LintConfig};
+use thermovolt::analysis::{analyze_tree, LintConfig};
 
 fn main() -> ExitCode {
     let mut json = false;
+    let mut graph: Option<String> = None;
     let mut root: Option<PathBuf> = None;
     let mut config: Option<PathBuf> = None;
     let mut args = std::env::args().skip(1);
     while let Some(a) = args.next() {
         match a.as_str() {
             "--json" => json = true,
+            "--graph" => {
+                graph = args.next();
+                match graph.as_deref() {
+                    Some("dot") | Some("json") => {}
+                    _ => {
+                        eprintln!("detlint: --graph takes `dot` or `json`");
+                        return ExitCode::from(2);
+                    }
+                }
+            }
             "--root" => root = args.next().map(PathBuf::from),
             "--config" => config = args.next().map(PathBuf::from),
             "--help" | "-h" => {
-                eprintln!("usage: detlint [--json] [--root DIR] [--config FILE]");
+                eprintln!("usage: detlint [--json] [--graph dot|json] [--root DIR] [--config FILE]");
                 return ExitCode::SUCCESS;
             }
             other => {
@@ -49,13 +62,23 @@ fn main() -> ExitCode {
             return ExitCode::from(2);
         }
     };
-    let report = match lint_tree(&root, &cfg) {
-        Ok(r) => r,
+    let analysis = match analyze_tree(&root, &cfg) {
+        Ok(a) => a,
         Err(e) => {
             eprintln!("detlint: scan failed: {e}");
             return ExitCode::from(2);
         }
     };
+    if let Some(fmt) = graph {
+        let rendered = if fmt == "dot" {
+            analysis.graph.render_dot(&analysis.reachable)
+        } else {
+            analysis.graph.render_json(&analysis.reachable)
+        };
+        print!("{rendered}");
+        return ExitCode::SUCCESS;
+    }
+    let report = &analysis.report;
     if json {
         print!("{}", report.render_json());
     } else {

@@ -83,7 +83,17 @@ impl ResourceType {
     }
 
     pub fn index(self) -> usize {
-        ALL_RESOURCES.iter().position(|&r| r == self).unwrap()
+        // must mirror the ALL_RESOURCES order (pinned by a test below)
+        match self {
+            ResourceType::Lut => 0,
+            ResourceType::SbMux => 1,
+            ResourceType::CbMux => 2,
+            ResourceType::LocalMux => 3,
+            ResourceType::Ff => 4,
+            ResourceType::Carry => 5,
+            ResourceType::Bram => 6,
+            ResourceType::Dsp => 7,
+        }
     }
 }
 
@@ -266,6 +276,13 @@ mod tests {
 
     fn db() -> CharDb {
         CharDb::analytic()
+    }
+
+    #[test]
+    fn index_mirrors_all_resources_order() {
+        for (i, &r) in ALL_RESOURCES.iter().enumerate() {
+            assert_eq!(r.index(), i, "{}", r.name());
+        }
     }
 
     // ---- Fig. 2(a): SB delay @40 °C is ~0.85× of @100 °C at 0.8 V ----

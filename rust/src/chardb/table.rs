@@ -270,6 +270,7 @@ fn read_vec<R: Read>(r: &mut R) -> anyhow::Result<Vec<f64>> {
     r.read_exact(&mut buf)?;
     Ok(buf
         .chunks_exact(8)
+        // detlint: allow(D004) chunks_exact(8) guarantees 8-byte slices
         .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
         .collect())
 }

@@ -29,9 +29,11 @@
 //!                   the thermal-inertia sweep BENCH_transient.json + the
 //!                   fault-injection/guardband sweep BENCH_faults.json
 //! thermovolt e2e    [--full]                      full-pipeline headline run
-//! thermovolt lint   [--json] [--root DIR] [--config FILE]
+//! thermovolt lint   [--json] [--graph dot|json] [--root DIR] [--config FILE]
 //!                   detlint: determinism & correctness static analysis
-//!                   (rules D001-D005; exits non-zero on findings)
+//!                   (rules D000-D007 + unit rules U1001-U1003; exits
+//!                   non-zero on findings; --graph prints the crate call
+//!                   graph with FlowSession-reachable fns marked)
 //! ```
 
 use anyhow::Result;
@@ -118,7 +120,7 @@ fn run(args: &Args) -> Result<()> {
                 &["name", "domain", "LUTs", "FFs", "BRAMs", "DSPs", "depth"],
             );
             for name in synth::benchmark_names() {
-                let p = synth::benchmark(name).unwrap();
+                let p = synth::benchmark(name)?;
                 t.row(vec![
                     p.name.into(),
                     p.domain.into(),
@@ -666,7 +668,10 @@ fn run(args: &Args) -> Result<()> {
             let mut session = FlowSession::with_effort(cfg.clone(), effort)?;
             let t = report::fig6(&mut session, 40.0, 12.0, &run_names)?;
             t.emit(results, "e2e_fig6a")?;
-            let avg = t.rows.last().unwrap();
+            let avg = t
+                .rows
+                .last()
+                .ok_or_else(|| anyhow::anyhow!("fig6 produced no rows"))?;
             println!(
                 "HEADLINE: avg power saving @40C = {}–{} %  (paper: 28.3–36.0 %)",
                 avg[3], avg[4]
@@ -707,7 +712,23 @@ fn run(args: &Args) -> Result<()> {
                     }
                 }
             };
-            let lint_report = thermovolt::analysis::lint_tree(&root, &lint_cfg)?;
+            let analysis = thermovolt::analysis::analyze_tree(&root, &lint_cfg)?;
+            if let Some(fmt) = args.opt("graph") {
+                // artifact surface, not the gate: print the call graph
+                // (reachable fns marked) and exit clean
+                anyhow::ensure!(
+                    fmt == "dot" || fmt == "json",
+                    "--graph takes `dot` or `json`"
+                );
+                let rendered = if fmt == "dot" {
+                    analysis.graph.render_dot(&analysis.reachable)
+                } else {
+                    analysis.graph.render_json(&analysis.reachable)
+                };
+                print!("{rendered}");
+                return Ok(());
+            }
+            let lint_report = &analysis.report;
             if args.flag("json") {
                 print!("{}", lint_report.render_json());
             } else {

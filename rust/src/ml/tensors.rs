@@ -32,6 +32,7 @@ impl Tensor {
         Ok(self
             .raw
             .chunks_exact(4)
+            // detlint: allow(D004) chunks_exact(4) guarantees 4-byte slices
             .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
             .collect())
     }
@@ -40,6 +41,7 @@ impl Tensor {
         Ok(self
             .raw
             .chunks_exact(4)
+            // detlint: allow(D004) chunks_exact(4) guarantees 4-byte slices
             .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
             .collect())
     }

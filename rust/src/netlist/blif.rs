@@ -20,46 +20,58 @@ pub fn write(nl: &Netlist) -> String {
             format!("n_{}", nl.cells[d].name)
         }
     };
-    writeln!(out, ".model {}", nl.name).unwrap();
+    let _ = writeln!(out, ".model {}", nl.name);
     let ins: Vec<String> = nl
         .cells
         .iter()
         .filter(|c| c.kind == CellKind::Input)
         .map(|c| net_name(c.output))
         .collect();
-    writeln!(out, ".inputs {}", ins.join(" ")).unwrap();
+    let _ = writeln!(out, ".inputs {}", ins.join(" "));
     let outs: Vec<String> = nl
         .cells
         .iter()
         .filter(|c| c.kind == CellKind::Output)
         .map(|c| net_name(c.inputs[0]))
         .collect();
-    writeln!(out, ".outputs {}", outs.join(" ")).unwrap();
+    let _ = writeln!(out, ".outputs {}", outs.join(" "));
     for c in &nl.cells {
         match &c.kind {
             CellKind::Input | CellKind::Output => {}
             CellKind::Lut(tt) => {
                 let ins: Vec<String> = c.inputs.iter().map(|&n| net_name(n)).collect();
-                writeln!(out, ".names {} {}", ins.join(" "), net_name(c.output)).unwrap();
-                writeln!(out, ".tt {:#018x} {}", tt.0, c.inputs.len()).unwrap();
+                let _ = writeln!(out, ".names {} {}", ins.join(" "), net_name(c.output));
+                let _ = writeln!(out, ".tt {:#018x} {}", tt.0, c.inputs.len());
             }
             CellKind::Ff => {
-                writeln!(out, ".latch {} {} re clk 0", net_name(c.inputs[0]), net_name(c.output))
-                    .unwrap();
+                let _ = writeln!(
+                    out,
+                    ".latch {} {} re clk 0",
+                    net_name(c.inputs[0]),
+                    net_name(c.output)
+                );
             }
             CellKind::Bram => {
                 let ins: Vec<String> = c.inputs.iter().map(|&n| net_name(n)).collect();
-                writeln!(out, ".subckt bram out={} in={}", net_name(c.output), ins.join(","))
-                    .unwrap();
+                let _ = writeln!(
+                    out,
+                    ".subckt bram out={} in={}",
+                    net_name(c.output),
+                    ins.join(",")
+                );
             }
             CellKind::Dsp => {
                 let ins: Vec<String> = c.inputs.iter().map(|&n| net_name(n)).collect();
-                writeln!(out, ".subckt dsp out={} in={}", net_name(c.output), ins.join(","))
-                    .unwrap();
+                let _ = writeln!(
+                    out,
+                    ".subckt dsp out={} in={}",
+                    net_name(c.output),
+                    ins.join(",")
+                );
             }
         }
     }
-    writeln!(out, ".end").unwrap();
+    let _ = writeln!(out, ".end");
     out
 }
 
@@ -95,7 +107,10 @@ pub fn read(text: &str) -> Result<Netlist, String> {
             continue;
         }
         let mut toks = line.split_whitespace();
-        let head = toks.next().unwrap();
+        let head = match toks.next() {
+            Some(h) => h,
+            None => continue, // unreachable: line is non-empty after trim
+        };
         let rest: Vec<&str> = toks.collect();
         match head {
             ".model" => model = rest.first().unwrap_or(&"top").to_string(),

@@ -210,6 +210,7 @@ mod pjrt {
 
     impl ThermalBackend for ThermalArtifact<'_> {
         fn steady_state(&mut self, power: &[f64], t_amb: f64) -> Vec<f64> {
+            // detlint: allow(D004) ThermalBackend is infallible by contract; a PJRT fault is unrecoverable
             self.solve(power, t_amb).expect("PJRT thermal solve failed")
         }
         fn name(&self) -> &'static str {
@@ -298,6 +299,7 @@ mod pjrt {
 
     impl ThermalBackend for OwnedThermalArtifact {
         fn steady_state(&mut self, power: &[f64], t_amb: f64) -> Vec<f64> {
+            // detlint: allow(D004) ThermalBackend is infallible by contract; a PJRT fault is unrecoverable
             self.solve(power, t_amb).expect("PJRT thermal solve failed")
         }
         fn name(&self) -> &'static str {

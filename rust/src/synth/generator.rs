@@ -197,6 +197,7 @@ impl Gen {
             last = self.make_lut(l);
         }
         let _ = last;
+        // detlint: allow(D004) the loop above pushed a LUT at `depth`
         let out = self.by_depth[depth].last().copied().unwrap();
         self.make_ff(out);
     }

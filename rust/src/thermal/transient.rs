@@ -218,10 +218,12 @@ impl ThermalDynamics for RcNetwork {
             for i in 0..self.stages.len() {
                 let tgt = self.target(i, power_w, t_amb_c);
                 let tau = self.stages[i].tau_ms;
+                // detlint: allow(D004) ensure_init set y = Some above
                 let y = &mut self.y.as_mut().expect("initialized above")[i];
                 *y = tgt + (*y - tgt) * (-dt_ms / tau).exp();
             }
         }
+        // detlint: allow(D004) ensure_init set y = Some above
         self.y.as_ref().expect("initialized above").iter().sum()
     }
 

@@ -18,10 +18,8 @@ impl Args {
     pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
         let mut out = Args::default();
         let mut it = argv.into_iter().peekable();
-        if let Some(first) = it.peek() {
-            if !first.starts_with('-') {
-                out.subcommand = it.next().unwrap();
-            }
+        if let Some(first) = it.next_if(|f| !f.starts_with('-')) {
+            out.subcommand = first;
         }
         while let Some(arg) = it.next() {
             if let Some(body) = arg.strip_prefix("--") {
@@ -30,12 +28,11 @@ impl Args {
                         .insert(body[..eq].to_string(), body[eq + 1..].to_string());
                 } else {
                     // A following token that does not start with `--` is the value.
-                    match it.peek() {
-                        Some(next) if !next.starts_with("--") => {
-                            let v = it.next().unwrap();
+                    match it.next_if(|next| !next.starts_with("--")) {
+                        Some(v) => {
                             out.options.insert(body.to_string(), v);
                         }
-                        _ => out.flags.push(body.to_string()),
+                        None => out.flags.push(body.to_string()),
                     }
                 }
             } else {

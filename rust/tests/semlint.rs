@@ -1,0 +1,411 @@
+//! Integration tests for the semantic analysis stage (semlint): the
+//! item parser, the crate call graph, the *computed* D004 reachability
+//! (with its differential guarantee against the old configured path
+//! list), the unit-consistency rules U1001–U1003, seed discipline D006,
+//! the stale-config diagnostic D007, and the `--graph` renderers.
+//!
+//! The physical-unit regression tests at the bottom pin the real ms↔s
+//! conversions in the coordinator the U-rules exist to protect.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use thermovolt::analysis::{
+    analyze_sources, analyze_tree, lint_source, parse, scanner, LintConfig,
+};
+use thermovolt::coordinator::{DynamicController, PlantModel, Regulator, Tsd};
+use thermovolt::flow::dynamic::{LutEntry, VoltageLut};
+
+fn repo_root() -> &'static Path {
+    // tests run with CWD = rust/; the repo root is one level up
+    Path::new(env!("CARGO_MANIFEST_DIR")).parent().expect("rust/ has a parent")
+}
+
+fn src(path: &str, text: &str) -> (String, String) {
+    (path.to_string(), text.to_string())
+}
+
+fn ids(findings: &[thermovolt::analysis::Finding]) -> Vec<(&str, usize)> {
+    findings.iter().map(|f| (f.rule, f.line)).collect()
+}
+
+// ------------------------------------------------------------------
+// parser corner cases
+
+#[test]
+fn parser_generics_trait_impls_and_assoc_calls() {
+    let text = "pub struct Store<T> { items: Vec<T> }\n\
+                impl<T: Clone + Ord> Store<T> {\n\
+                \x20   pub fn push(&mut self, item_c: T) { self.items.push(item_c); }\n\
+                }\n\
+                pub struct Registry;\n\
+                impl Default for Registry {\n\
+                \x20   fn default() -> Self { make_store(); Registry }\n\
+                }\n\
+                fn make_store() -> Store<u8> { helper() }\n\
+                fn helper() -> Store<u8> { Store { items: Vec::new() } }\n";
+    let scanned = scanner::scan(text, false);
+    let parsed = parse::parse("rust/src/store.rs", &scanned);
+    let quals: Vec<&str> = parsed.fns.iter().map(|f| f.qual.as_str()).collect();
+    assert_eq!(
+        quals,
+        vec![
+            "store::Store::push",
+            "store::Registry::default",
+            "store::make_store",
+            "store::helper"
+        ]
+    );
+    // `impl Trait for Type` attributes methods to the `for` type
+    assert_eq!(parsed.fns[1].impl_type.as_deref(), Some("Registry"));
+    // method receivers and param names survive the generics
+    assert!(parsed.fns[0].has_self);
+    assert_eq!(parsed.fns[0].params, vec![Some("item_c".to_string())]);
+    // default() calls make_store() which calls helper()
+    assert!(parsed.fns[1].calls.iter().any(|c| c.segs == ["make_store"]));
+    assert!(parsed.fns[2].calls.iter().any(|c| c.segs == ["helper"]));
+}
+
+#[test]
+fn parser_method_vs_assoc_calls_and_renamed_imports() {
+    let text = "use crate::other::compute as run_it;\n\
+                fn a() {\n\
+                \x20   let x = Widget::build();\n\
+                \x20   x.refresh();\n\
+                \x20   run_it();\n\
+                }\n";
+    let scanned = scanner::scan(text, false);
+    let parsed = parse::parse("rust/src/m.rs", &scanned);
+    let f = &parsed.fns[0];
+    let call = |name: &str| f.calls.iter().find(|c| c.segs.last().map(|s| s == name) == Some(true));
+    // assoc call keeps the qualifier; method call is marked as such
+    let build = call("build").expect("assoc call recorded");
+    assert!(!build.method);
+    assert_eq!(build.segs, vec!["Widget".to_string(), "build".to_string()]);
+    let refresh = call("refresh").expect("method call recorded");
+    assert!(refresh.method);
+    // a renamed import is called under its local alias: the parser records
+    // the alias call (resolution simply finds no target named `run_it`)
+    assert!(call("run_it").is_some());
+}
+
+#[test]
+fn graph_handles_call_cycles_across_files() {
+    let cfg = LintConfig::default();
+    let sources = vec![
+        src(
+            "rust/src/a.rs",
+            "struct FlowSession;\nimpl FlowSession {\n    fn run(&self) { crate::b::ping(); }\n}\n",
+        ),
+        src(
+            "rust/src/b.rs",
+            "pub fn ping() { crate::c::pong(); }\n",
+        ),
+        src(
+            "rust/src/c.rs",
+            "pub fn pong() {\n    crate::b::ping();\n    let x = y.unwrap();\n}\n",
+        ),
+    ];
+    let a = analyze_sources(&sources, &cfg);
+    // the b→c→b cycle terminates and both sides are D004-covered
+    assert_eq!(
+        ids(&a.report.findings),
+        vec![("D004", 3)],
+        "{:?}",
+        a.report.findings
+    );
+    assert_eq!(a.report.findings[0].file, "rust/src/c.rs");
+}
+
+// ------------------------------------------------------------------
+// computed D004 + differential guarantee
+
+#[test]
+fn d004_differential_computed_covers_configured_paths() {
+    // The old detlint hard-coded the D004 scope as a path list; the scope
+    // is computed from the call graph now. The contract for the switch:
+    // on the live tree, every file under the old configured paths must be
+    // computed-reachable (the computed set is a superset of the old one).
+    let cfg = LintConfig::default();
+    let a = analyze_tree(repo_root(), &cfg).expect("analyze_tree");
+    let reach_files = a.graph.reachable_files(&a.reachable);
+    for p in &cfg.d004_paths {
+        assert!(
+            reach_files.iter().any(|f| f.starts_with(p.as_str())),
+            "configured path {p} has no computed-reachable file (differential broken)"
+        );
+    }
+    // and the per-path file sets: anything under a configured path that
+    // defines fns must itself be reachable
+    let all_files: std::collections::BTreeSet<&str> =
+        a.graph.fns.iter().map(|f| f.file.as_str()).collect();
+    for file in all_files {
+        if cfg.d004_paths.iter().any(|p| file.starts_with(p.as_str())) {
+            assert!(
+                reach_files.contains(file),
+                "{file} is under a configured d004 path but not computed-reachable"
+            );
+        }
+    }
+}
+
+#[test]
+fn d004_fires_off_the_configured_paths_when_reachable() {
+    let cfg = LintConfig::default();
+    let sources = vec![
+        src(
+            "rust/src/virt/session.rs",
+            "struct FlowSession;\nimpl FlowSession {\n    fn run(&self) { self.step() }\n    fn step(&self) { crate::virt::util::quantize(x) }\n}\n",
+        ),
+        src(
+            "rust/src/virt/util.rs",
+            "pub fn quantize(x: f64) -> u32 {\n    let v: u32 = x.try_into().unwrap();\n    v\n}\n\
+             pub fn orphan(x: f64) -> u32 {\n    x.try_into().unwrap()\n}\n",
+        ),
+    ];
+    let a = analyze_sources(&sources, &cfg);
+    // quantize is reached through a method chain; orphan is not called
+    let d004: Vec<(&str, usize)> = a
+        .report
+        .findings
+        .iter()
+        .filter(|f| f.rule == "D004")
+        .map(|f| (f.file.as_str(), f.line))
+        .collect();
+    assert_eq!(d004, vec![("rust/src/virt/util.rs", 2)]);
+}
+
+#[test]
+fn live_tree_is_clean_and_fully_covered() {
+    let cfg = LintConfig::default();
+    let a = analyze_tree(repo_root(), &cfg).expect("analyze_tree");
+    assert!(
+        a.report.clean(),
+        "shipped tree must lint clean:\n{}",
+        a.report.render_human()
+    );
+    // the crate is small enough that every src file hosts flow-reachable
+    // code; if this ever regresses, D004 coverage silently shrank
+    let reach_files = a.graph.reachable_files(&a.reachable);
+    let src_files: std::collections::BTreeSet<&str> = a
+        .graph
+        .fns
+        .iter()
+        .filter(|f| f.file.starts_with("rust/src/"))
+        .map(|f| f.file.as_str())
+        .collect();
+    for f in src_files {
+        assert!(reach_files.contains(f), "{f} fell out of the reachable set");
+    }
+}
+
+// ------------------------------------------------------------------
+// U100x / D006 fixtures
+
+#[test]
+fn u1001_call_site_mismatch_with_lines() {
+    let cfg = LintConfig::default();
+    let sources = vec![src(
+        "rust/src/u.rs",
+        "fn set_lag(lag_ms: f64) -> f64 { lag_ms }\n\
+         fn apply(delay_s: f64, gain: f64) {\n\
+         \x20   set_lag(delay_s);\n\
+         \x20   set_lag(gain);\n\
+         }\n",
+    )];
+    let got = analyze_sources(&sources, &cfg).report.findings;
+    assert_eq!(ids(&got), vec![("U1001", 3)], "{got:?}");
+    assert!(got[0].message.contains("delay_s") && got[0].message.contains("lag_ms"));
+}
+
+#[test]
+fn u1002_arithmetic_comparison_and_minmax_with_lines() {
+    let cfg = LintConfig::default();
+    let sources = vec![src(
+        "rust/src/u.rs",
+        "fn f(t_c: f64, dt_ms: f64, v_mv: f64, p_w: f64, r: f64) -> f64 {\n\
+         \x20   let a = t_c + dt_ms;\n\
+         \x20   let b = v_mv > t_c;\n\
+         \x20   let c = t_c.max(v_mv);\n\
+         \x20   let ok = p_w * dt_ms + t_c * r;\n\
+         \x20   a\n\
+         }\n",
+    )];
+    let got = analyze_sources(&sources, &cfg).report.findings;
+    assert_eq!(
+        ids(&got),
+        vec![("U1002", 2), ("U1002", 3), ("U1002", 4)],
+        "{got:?}"
+    );
+}
+
+#[test]
+fn u1003_struct_literal_with_lines() {
+    let cfg = LintConfig::default();
+    let sources = vec![src(
+        "rust/src/u.rs",
+        "fn build(lag_s: f64, t_c: f64) -> Cfg {\n\
+         \x20   Cfg {\n\
+         \x20       lag_ms: lag_s,\n\
+         \x20       limit_c: t_c,\n\
+         \x20   }\n\
+         }\n",
+    )];
+    let got = analyze_sources(&sources, &cfg).report.findings;
+    assert_eq!(ids(&got), vec![("U1003", 3)], "{got:?}");
+}
+
+#[test]
+fn u_rules_are_suppressible_and_test_exempt() {
+    let cfg = LintConfig::default();
+    // an allow with a reason silences the rule at the site
+    let allowed = "fn f(t_c: f64, dt_ms: f64) -> f64 {\n\
+                   \x20   // detlint: allow(U1002) dimensionless ratio, see DESIGN.md\n\
+                   \x20   t_c + dt_ms\n\
+                   }\n";
+    assert!(lint_source("rust/src/u.rs", allowed, &cfg).is_empty());
+    // test code may mix freely
+    let in_test = "#[cfg(test)]\nmod tests {\n    fn t(t_c: f64, dt_ms: f64) -> f64 { t_c + dt_ms }\n}\n";
+    assert!(lint_source("rust/src/u.rs", in_test, &cfg).is_empty());
+}
+
+#[test]
+fn d006_literal_seed_with_lines() {
+    let cfg = LintConfig::default();
+    let sources = vec![src(
+        "rust/src/r.rs",
+        "fn a() -> Xoshiro256 {\n\
+         \x20   Xoshiro256::new(0xDEAD ^ 42)\n\
+         }\n\
+         fn b(seed: u64) -> SplitMix64 {\n\
+         \x20   SplitMix64::new(seed)\n\
+         }\n\
+         fn c(cfg_seed: u64) -> SplitMix64 {\n\
+         \x20   SplitMix64::new(cfg_seed ^ 7)\n\
+         }\n",
+    )];
+    let got = analyze_sources(&sources, &cfg).report.findings;
+    // only the fully-literal seed fires; seeds derived from a flowing
+    // parameter (even mixed with literals) are the intended pattern
+    assert_eq!(ids(&got), vec![("D006", 2)], "{got:?}");
+}
+
+// ------------------------------------------------------------------
+// D007 stale-config
+
+#[test]
+fn d007_fires_for_a_stale_d004_path_on_the_live_tree() {
+    let mut cfg = LintConfig::default();
+    cfg.d004_paths.push("rust/src/retired_subsystem/".to_string());
+    let a = analyze_tree(repo_root(), &cfg).expect("analyze_tree");
+    let d007: Vec<&thermovolt::analysis::Finding> =
+        a.report.findings.iter().filter(|f| f.rule == "D007").collect();
+    assert_eq!(d007.len(), 1, "{:?}", a.report.findings);
+    assert_eq!(d007[0].file, "detlint.toml");
+    assert!(d007[0].message.contains("retired_subsystem"));
+    // the shipped config raises no D007 (checked by live_tree_is_clean,
+    // but assert the specific rule here for a sharper failure)
+    let clean = analyze_tree(repo_root(), &LintConfig::default()).expect("analyze_tree");
+    assert!(clean.report.findings.iter().all(|f| f.rule != "D007"));
+}
+
+// ------------------------------------------------------------------
+// --graph renderers
+
+#[test]
+fn graph_renders_are_deterministic_on_the_live_tree() {
+    let cfg = LintConfig::default();
+    let a1 = analyze_tree(repo_root(), &cfg).expect("analyze_tree");
+    let a2 = analyze_tree(repo_root(), &cfg).expect("analyze_tree");
+    let dot1 = a1.graph.render_dot(&a1.reachable);
+    let dot2 = a2.graph.render_dot(&a2.reachable);
+    assert_eq!(dot1, dot2, "DOT render must be byte-stable");
+    let json1 = a1.graph.render_json(&a1.reachable);
+    let json2 = a2.graph.render_json(&a2.reachable);
+    assert_eq!(json1, json2, "JSON render must be byte-stable");
+    assert!(dot1.contains("digraph detlint"));
+    assert!(json1.contains("\"tool\": \"detlint-graph\""));
+    // the root methods themselves are in the reachable set
+    assert!(json1.contains("FlowSession"));
+}
+
+// ------------------------------------------------------------------
+// scanner edge cases, end to end
+
+#[test]
+fn raw_strings_and_nested_cfg_test_do_not_leak_into_rules() {
+    let cfg = LintConfig::default();
+    // the unwrap text lives inside a #-delimited raw string: no D004 even
+    // on a configured path, and the allow-looking text registers nothing
+    let raw = "fn f() -> &'static str {\n\
+               \x20   r##\"x.unwrap() // detlint: allow(D004) fake\"##\n\
+               }\n";
+    assert!(lint_source("rust/src/flow/r.rs", raw, &cfg).is_empty());
+    // a cfg(test) item opening on the same line a non-test block closes
+    let nested = "pub fn lib() -> u32 {\n\
+                  \x20   1\n\
+                  } #[cfg(test)] mod t {\n\
+                  \x20   fn x() { let v = o.unwrap(); }\n\
+                  }\n";
+    assert!(lint_source("rust/src/flow/n.rs", nested, &cfg).is_empty());
+}
+
+// ------------------------------------------------------------------
+// physical-unit regression tests: the real conversions the U-rules guard
+
+fn toy_lut() -> VoltageLut {
+    VoltageLut {
+        entries: vec![
+            LutEntry { t_junct: 45.0, v_core: 0.68, v_bram: 0.80, power: 0.3 },
+            LutEntry { t_junct: 65.0, v_core: 0.72, v_bram: 0.86, power: 0.4 },
+            LutEntry { t_junct: 90.0, v_core: 0.76, v_bram: 0.92, power: 0.5 },
+        ],
+        v_core_nom: 0.80,
+        v_bram_nom: 0.95,
+    }
+}
+
+#[test]
+fn regulator_slew_is_volts_per_millisecond() {
+    let mut reg = Regulator::new(0.70);
+    reg.command(0.80);
+    // 10 mV/ms over 5 ms = 50 mV, not 10 V (a ms/s mix-up would slam the
+    // rail to the target in one tick)
+    reg.tick(5.0);
+    assert!(
+        (reg.v_now - 0.75).abs() < 1e-12,
+        "slew moved to {} (expected 0.75)",
+        reg.v_now
+    );
+    reg.tick(1000.0);
+    assert!((reg.v_now - 0.80).abs() < 1e-12, "settles at the VID target");
+}
+
+#[test]
+fn energy_integral_is_joules_from_watts_times_seconds() {
+    let c = DynamicController {
+        lut: Arc::new(toy_lut()),
+        theta_ja: 12.0,
+        tau_ms: 3000.0,
+        margin: 5.0,
+        tsd: Tsd::default(),
+        plant: PlantModel::FirstOrder,
+        // constant power: the integral is exactly P × span
+        power_fn: |_vc: f64, _vb: f64, _tj: f64| 2.5,
+    };
+    let trace = vec![(0.0, 25.0), (10_000.0, 25.0)];
+    let (_log, stats) = c.run_stats(&trace, 1.0, 250.0).expect("run");
+    // 2.5 W for 10 s = 25 J; a W·ms integral would report 25 000
+    assert!(
+        (stats.energy_j - 25.0).abs() / 25.0 < 1e-3,
+        "energy {} J (expected 25, span {} ms)",
+        stats.energy_j,
+        stats.sim_ms
+    );
+    // and mean power round-trips the same ms→s conversion
+    assert!(
+        (stats.mean_power_w - 2.5).abs() < 1e-6,
+        "mean power {} W",
+        stats.mean_power_w
+    );
+}

@@ -38,12 +38,20 @@
 //! the fixed and the measured margins — the measured run must come in at
 //! lower dynamic energy with zero violations and zero injected faults —
 //! emitting `BENCH_faults.json`.
+//!
+//! [`run_stream`] is the online-service companion: one seeded open-arrival
+//! stream (`fleet::stream`) built once and executed serial *and* with 8
+//! workers (telemetry and admission fingerprints hard-checked identical),
+//! then the same stream re-run under a power cap at ~45 % of the uncapped
+//! peak — the capped leg must actually shed/degrade/violate and spend
+//! cap-bound autoscaler ticks — emitting `BENCH_stream.json`.
 
 use std::path::Path;
 use std::time::Instant;
 
 use crate::config::Config;
 use crate::fleet::policy::PolicyKind;
+use crate::fleet::stream::{StreamConfig, StreamSim};
 use crate::fleet::telemetry::FleetTelemetry;
 use crate::fleet::trace::Scenario;
 use crate::fleet::{Fleet, FleetConfig};
@@ -724,6 +732,181 @@ pub fn run_faults(
     Ok(s)
 }
 
+/// Measured numbers of the streaming-fleet bench (`BENCH_stream.json`).
+#[derive(Clone, Debug, Default)]
+pub struct StreamBenchSummary {
+    pub quick: bool,
+    pub bench: String,
+    pub scenario: String,
+    pub racks: usize,
+    pub devices_per_rack: usize,
+    pub horizon_ms: f64,
+    pub arrival_rate_hz: f64,
+    /// LUT sweeps + arrival synthesis, once (shared by every leg).
+    pub build_s: f64,
+    pub serial_s: f64,
+    pub parallel_s: f64,
+    pub workers: usize,
+    pub offered: u64,
+    pub admitted: u64,
+    pub shed: u64,
+    pub degraded: u64,
+    pub deferred: u64,
+    pub completed: u64,
+    pub sla_violations: u64,
+    /// Streaming-sketch percentiles of the uncapped run.
+    pub queue_p95_s: f64,
+    pub sojourn_p95_s: f64,
+    pub energy_static_j: f64,
+    pub energy_dyn_j: f64,
+    pub saving_dyn: f64,
+    pub peak_power_w: f64,
+    /// Hex telemetry fingerprint of the uncapped run (string in the JSON —
+    /// a u64 does not survive a round-trip through a JSON double).
+    pub fingerprint: u64,
+    /// Serial and 8-worker runs produced bit-identical telemetry *and*
+    /// admission-decision fingerprints.
+    pub fingerprint_match: bool,
+    /// The power cap of the constrained leg (~45 % of the uncapped peak).
+    pub cap_w: f64,
+    pub capped_shed: u64,
+    pub capped_degraded: u64,
+    pub capped_sla_violations: u64,
+    pub capped_cap_bound_ticks: u64,
+    pub capped_racks_powered_max: usize,
+    pub capped_peak_power_w: f64,
+}
+
+/// Streaming-fleet bench: build one seeded open-arrival simulation
+/// (`fleet::stream`), execute it serial and with 8 workers — telemetry and
+/// admission fingerprints hard-checked bit-identical — then re-run the
+/// *same* arrivals under a power cap at ~45 % of the uncapped peak. The
+/// capped leg must shed/degrade/violate at least once and spend cap-bound
+/// autoscaler ticks, or the admission/autoscaler path is dead code.
+/// Summary in `out` (`BENCH_stream.json`).
+pub fn run_stream(
+    cfg_in: &Config,
+    opts: &BenchOpts,
+    out: &Path,
+) -> anyhow::Result<StreamBenchSummary> {
+    let scenario = Scenario::Diurnal;
+    let (racks, dpr, rate_hz, horizon_ms) = if opts.quick {
+        (12, 8, 20.0, 240_000.0)
+    } else {
+        (32, 16, 80.0, 480_000.0)
+    };
+    let mut s = StreamBenchSummary {
+        quick: opts.quick,
+        bench: opts.bench.clone(),
+        scenario: scenario.name().to_string(),
+        racks,
+        devices_per_rack: dpr,
+        horizon_ms,
+        arrival_rate_hz: rate_hz,
+        workers: 8,
+        ..StreamBenchSummary::default()
+    };
+
+    // same deployment-corner adjustment the session front door applies
+    let (t_base, theta) = scenario.corner();
+    let mut base = cfg_in.clone();
+    base.flow.t_amb = t_base;
+    base.thermal.theta_ja = theta;
+    let mut session = FlowSession::with_effort(base, Effort::Quick)?;
+
+    let mut scfg = StreamConfig::new(racks, dpr, scenario);
+    scfg.benches = vec![opts.bench.clone()];
+    scfg.arrival_rate_hz = rate_hz;
+    scfg.duration_mean_ms = 3_000.0;
+    scfg.horizon_ms = horizon_ms;
+    let t0 = Instant::now();
+    let mut sim = StreamSim::build(&mut session, &scfg)?;
+    s.build_s = t0.elapsed().as_secs_f64();
+    println!(
+        "[bench] stream: {} jobs offered to {} racks x {} devices over {:.0} s…",
+        sim.jobs.len(),
+        racks,
+        dpr,
+        horizon_ms / 1e3
+    );
+
+    // ---- uncapped: serial vs 8 workers, bit-identical or bust ----
+    let t0 = Instant::now();
+    let tel1 = sim.run(1);
+    s.serial_s = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let tel8 = sim.run(s.workers);
+    s.parallel_s = t0.elapsed().as_secs_f64();
+    s.fingerprint = tel1.fingerprint();
+    s.fingerprint_match = tel1.fingerprint() == tel8.fingerprint()
+        && tel1.decision_fingerprint == tel8.decision_fingerprint;
+    anyhow::ensure!(
+        s.fingerprint_match,
+        "{}-worker stream run diverged from the serial run",
+        s.workers
+    );
+    s.offered = tel1.offered;
+    s.admitted = tel1.admitted;
+    s.shed = tel1.shed;
+    s.degraded = tel1.degraded;
+    s.deferred = tel1.deferred;
+    s.completed = tel1.completed;
+    s.sla_violations = tel1.sla_violations;
+    s.queue_p95_s = tel1.queue_p(95.0) / 1e3;
+    s.sojourn_p95_s = tel1.sojourn_p(95.0) / 1e3;
+    s.energy_static_j = tel1.energy_static_j;
+    s.energy_dyn_j = tel1.energy_dyn_j;
+    s.saving_dyn = tel1.saving();
+    s.peak_power_w = tel1.peak_power_w;
+    println!(
+        "[bench] stream: {} offered / {} admitted / {} shed, queue p95 {:.2} s, \
+         peak {:.1} W, serial {:.2} s vs {}-worker {:.2} s, fingerprints bit-identical",
+        s.offered, s.admitted, s.shed, s.queue_p95_s, s.peak_power_w, s.workers, s.parallel_s
+    );
+
+    // ---- the same arrivals under a power cap ----
+    s.cap_w = 0.45 * tel1.peak_power_w;
+    sim.cfg.power_cap_w = s.cap_w;
+    let telc = sim.run(s.workers);
+    s.capped_shed = telc.shed;
+    s.capped_degraded = telc.degraded;
+    s.capped_sla_violations = telc.sla_violations;
+    s.capped_cap_bound_ticks = telc.cap_bound_ticks;
+    s.capped_racks_powered_max = telc.racks_powered_max;
+    s.capped_peak_power_w = telc.peak_power_w;
+    anyhow::ensure!(
+        telc.shed + telc.degraded + telc.sla_violations > 0,
+        "capped stream run ({:.1} W) shed nothing, degraded nothing and met every SLA — \
+         admission control is not engaging",
+        s.cap_w
+    );
+    anyhow::ensure!(
+        telc.cap_bound_ticks > 0,
+        "capped stream run ({:.1} W) never hit the cap in the autoscaler",
+        s.cap_w
+    );
+    println!(
+        "[bench] stream: cap {:.1} W → {} shed / {} degraded / {} SLA misses, \
+         {} cap-bound ticks, peak {:.1} W",
+        s.cap_w,
+        s.capped_shed,
+        s.capped_degraded,
+        s.capped_sla_violations,
+        s.capped_cap_bound_ticks,
+        s.capped_peak_power_w
+    );
+
+    let json = stream_to_json(&s);
+    if let Some(dir) = out.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(out, &json)?;
+    println!("[bench] wrote {}", out.display());
+    Ok(s)
+}
+
 fn alg2_identical(a: &crate::flow::Alg2Result, b: &crate::flow::Alg2Result) -> bool {
     a.v_core.to_bits() == b.v_core.to_bits()
         && a.v_bram.to_bits() == b.v_bram.to_bits()
@@ -989,6 +1172,75 @@ fn faults_to_json(s: &FaultsBenchSummary) -> String {
     )
 }
 
+/// Hand-rolled JSON for the streaming-fleet bench (same conventions as
+/// [`to_json`]; the telemetry fingerprint is a hex *string* — a u64 does
+/// not survive a round-trip through a JSON double).
+fn stream_to_json(s: &StreamBenchSummary) -> String {
+    let esc = json_escape;
+    let b = json_bool;
+    format!(
+        concat!(
+            "{{\n",
+            "  \"schema\": \"thermovolt-bench-stream/1\",\n",
+            "  \"quick\": {quick},\n",
+            "  \"bench\": \"{bench}\",\n",
+            "  \"scenario\": \"{scenario}\",\n",
+            "  \"racks\": {racks},\n",
+            "  \"devices_per_rack\": {dpr},\n",
+            "  \"horizon_ms\": {horizon},\n",
+            "  \"arrival_rate_hz\": {rate},\n",
+            "  \"timing\": {{ \"build_s\": {build}, \"serial_s\": {serial}, ",
+            "\"parallel_s\": {parallel}, \"workers\": {workers} }},\n",
+            "  \"admission\": {{ \"offered\": {off}, \"admitted\": {adm}, ",
+            "\"shed\": {shed}, \"degraded\": {deg}, \"deferred\": {def}, ",
+            "\"completed\": {comp}, \"sla_violations\": {sla} }},\n",
+            "  \"service\": {{ \"queue_p95_s\": {qp95}, \"sojourn_p95_s\": {sp95}, ",
+            "\"energy_static_j\": {e_st}, \"energy_dyn_j\": {e_dy}, ",
+            "\"saving_dyn\": {s_dy}, \"peak_power_w\": {peak} }},\n",
+            "  \"determinism\": {{ \"fingerprint\": \"{fp:#018x}\", ",
+            "\"fingerprint_match\": {fpm} }},\n",
+            "  \"capped\": {{ \"cap_w\": {cap}, \"shed\": {cshed}, ",
+            "\"degraded\": {cdeg}, \"sla_violations\": {csla}, ",
+            "\"cap_bound_ticks\": {cticks}, \"racks_powered_max\": {cracks}, ",
+            "\"peak_power_w\": {cpeak} }}\n",
+            "}}\n"
+        ),
+        quick = b(s.quick),
+        bench = esc(&s.bench),
+        scenario = esc(&s.scenario),
+        racks = s.racks,
+        dpr = s.devices_per_rack,
+        horizon = s.horizon_ms,
+        rate = s.arrival_rate_hz,
+        build = s.build_s,
+        serial = s.serial_s,
+        parallel = s.parallel_s,
+        workers = s.workers,
+        off = s.offered,
+        adm = s.admitted,
+        shed = s.shed,
+        deg = s.degraded,
+        def = s.deferred,
+        comp = s.completed,
+        sla = s.sla_violations,
+        qp95 = s.queue_p95_s,
+        sp95 = s.sojourn_p95_s,
+        e_st = s.energy_static_j,
+        e_dy = s.energy_dyn_j,
+        s_dy = s.saving_dyn,
+        peak = s.peak_power_w,
+        fp = s.fingerprint,
+        fpm = b(s.fingerprint_match),
+        cap = s.cap_w,
+        cshed = s.capped_shed,
+        cdeg = s.capped_degraded,
+        csla = s.capped_sla_violations,
+        cticks = s.capped_cap_bound_ticks,
+        cracks = s.capped_racks_powered_max,
+        cpeak = s.capped_peak_power_w,
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1081,6 +1333,39 @@ mod tests {
             "\"store_fingerprint\": \"0x00000000deadbeef\"",
             "\"cliff_v_bram\": -1",
             "\"injected_faults\"",
+        ] {
+            assert!(j.contains(key), "missing {key} in:\n{j}");
+        }
+    }
+
+    #[test]
+    fn stream_json_shape_is_valid_enough() {
+        let s = StreamBenchSummary {
+            bench: "mkPktMerge".to_string(),
+            scenario: "diurnal".to_string(),
+            racks: 12,
+            devices_per_rack: 8,
+            workers: 8,
+            fingerprint: 0xDEAD_BEEF,
+            fingerprint_match: true,
+            capped_cap_bound_ticks: 17,
+            ..StreamBenchSummary::default()
+        };
+        let j = stream_to_json(&s);
+        assert_eq!(
+            j.matches('{').count(),
+            j.matches('}').count(),
+            "unbalanced braces:\n{j}"
+        );
+        for key in [
+            "\"thermovolt-bench-stream/1\"",
+            "\"timing\"",
+            "\"admission\"",
+            "\"service\"",
+            "\"determinism\"",
+            "\"capped\"",
+            "\"fingerprint\": \"0x00000000deadbeef\"",
+            "\"cap_bound_ticks\": 17",
         ] {
             assert!(j.contains(key), "missing {key} in:\n{j}");
         }

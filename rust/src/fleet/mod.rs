@@ -17,9 +17,14 @@
 //!   rails at a configurable CP-violation rate with an error/quality
 //!   model); every job is simulated under all three;
 //! * [`telemetry`] — fleet-wide power/energy/violation/throughput
-//!   aggregation with percentiles via `util::stats`, carrying the
-//!   three-way policy comparison, expected timing errors, quality,
-//!   migration and unplaceable counts.
+//!   aggregation with percentiles via `util::sketch` streaming quantile
+//!   sketches, carrying the three-way policy comparison, expected timing
+//!   errors, quality, migration and unplaceable counts;
+//! * [`stream`] — the online service on top of the same machinery: open
+//!   Poisson arrivals (diurnally modulated, per-kind derived seeds), SLA
+//!   deadlines and priorities, admission control with queue shedding, and
+//!   a rack autoscaler under a fleet-wide power cap, with per-rack event
+//!   shards merged deterministically so any worker count is bit-identical.
 //!
 //! Heterogeneity model: every device gets its own θ_JA (cooling spread),
 //! thermal time constant, rack-position ambient offset, per-unit guardband
@@ -47,8 +52,11 @@
 
 pub mod policy;
 pub mod scheduler;
+pub mod stream;
 pub mod telemetry;
 pub mod trace;
+
+pub use stream::{StreamConfig, StreamSim, StreamTelemetry};
 
 use std::sync::Arc;
 
@@ -294,6 +302,28 @@ impl JobKind {
         lut_step: f64,
         overscale_rate: Option<f64>,
     ) -> anyhow::Result<JobKind> {
+        Ok(Self::try_build(
+            session,
+            bench,
+            lut_lo,
+            lut_hi,
+            lut_step,
+            overscale_rate,
+        )?)
+    }
+
+    /// [`JobKind::build`] with the typed error surfaced: every failure on
+    /// this path is a [`FlowError`] from the session, and callers that sit
+    /// behind the typed facade (`FlowSession::stream`) must not erase it
+    /// into `anyhow`.
+    pub fn try_build(
+        session: &mut FlowSession,
+        bench: &str,
+        lut_lo: f64,
+        lut_hi: f64,
+        lut_step: f64,
+        overscale_rate: Option<f64>,
+    ) -> Result<JobKind, FlowError> {
         let cfg = session.config().clone();
         // an all-infeasible safe sweep is fatal for the kind (the session
         // reports it as the typed FlowError::InfeasibleSweep)
@@ -334,7 +364,7 @@ impl JobKind {
                 )) {
                     Ok(out) => Some(out.lut),
                     Err(crate::flow::FlowError::InfeasibleSweep { .. }) => None,
-                    Err(e) => return Err(e.into()),
+                    Err(e) => return Err(e),
                 };
                 match (o.alg1.infeasible, lut_os) {
                     (false, Some(lut_os)) => Some(Arc::new(OverscaleSpec {

@@ -1,5 +1,7 @@
 //! Fleet-wide telemetry: per-device and aggregate power / energy /
-//! violation / throughput metrics with percentiles via `util::stats`, now
+//! violation / throughput metrics with percentiles via `util::sketch`
+//! streaming quantile sketches (a single-pass fold — no collect-then-sort
+//! job vectors on the aggregation path), now
 //! carrying the **three-way policy comparison** (static vs dynamic vs
 //! overscaled-dynamic) plus the overscaled policy's expected-error and
 //! quality figures, migration counts, and unplaceable jobs.
@@ -11,7 +13,7 @@
 //! reproduced the serial run exactly.
 
 use super::policy::PolicyKind;
-use crate::util::stats;
+use crate::util::sketch::QuantileSketch;
 
 /// Outcome of one executed job: the three policy simulations over the same
 /// plant, plus the overscaled policy's error/quality model outputs.
@@ -193,7 +195,14 @@ impl FleetTelemetry {
         let mut injected_faults = 0u64;
         let mut expected_errors = 0.0;
         let mut migrations = 0usize;
+        // streaming percentile state: fixed-size mergeable sketches folded
+        // in the same pass as the sums — the collect-then-sort job vectors
+        // this used to build are gone from the telemetry hot path
+        let mut queue_sketch = QuantileSketch::new();
+        let mut power_sketch = QuantileSketch::new();
         for r in &jobs {
+            queue_sketch.record(r.queue_ms);
+            power_sketch.record(r.mean_power_dyn_w);
             let d = &mut per_device[r.device];
             d.jobs += 1;
             d.migrations += r.migrated as usize;
@@ -237,20 +246,11 @@ impl FleetTelemetry {
         } else {
             0.0
         };
-        let queues: Vec<f64> = jobs.iter().map(|r| r.queue_ms).collect();
-        let powers: Vec<f64> = jobs.iter().map(|r| r.mean_power_dyn_w).collect();
-        let pctl = |xs: &[f64], p: f64| {
-            if xs.is_empty() {
-                0.0
-            } else {
-                stats::percentile(xs, p)
-            }
-        };
         FleetTelemetry {
-            queue_p50_ms: pctl(&queues, 50.0),
-            queue_p95_ms: pctl(&queues, 95.0),
-            job_power_p50_w: pctl(&powers, 50.0),
-            job_power_p95_w: pctl(&powers, 95.0),
+            queue_p50_ms: queue_sketch.quantile(50.0),
+            queue_p95_ms: queue_sketch.quantile(95.0),
+            job_power_p50_w: power_sketch.quantile(50.0),
+            job_power_p95_w: power_sketch.quantile(95.0),
             jobs,
             per_device,
             energy_dyn_j,

@@ -63,6 +63,11 @@ pub enum FlowError {
     /// A fault-injection specification with unusable knobs (cluster size
     /// below one bit, non-positive exposure, zero samples).
     BadFaultSpec { reason: String },
+    /// A streaming-fleet specification that cannot run: zero racks or
+    /// devices, a fleet or job count past the simulator's envelope,
+    /// non-positive rate / duration / horizon, deadline slack below 1, or
+    /// a negative power cap.
+    BadStreamSpec { reason: String },
 }
 
 impl fmt::Display for FlowError {
@@ -117,6 +122,9 @@ impl fmt::Display for FlowError {
             FlowError::BadFaultSpec { reason } => {
                 write!(f, "bad fault spec: {reason}")
             }
+            FlowError::BadStreamSpec { reason } => {
+                write!(f, "bad stream spec: {reason}")
+            }
         }
     }
 }
@@ -155,6 +163,10 @@ mod tests {
             reason: "samples 0 not in 1..=64".into(),
         };
         assert!(e.to_string().contains("samples 0"));
+        let e = FlowError::BadStreamSpec {
+            reason: "racks must be 1..=4096 (got 0)".into(),
+        };
+        assert!(e.to_string().contains("got 0"));
     }
 
     #[test]

@@ -24,7 +24,7 @@ pub use error::FlowError;
 pub use session::{
     Alg1Outcome, Alg1Request, Alg2Outcome, Alg2Request, BaselineRequest, Condition, Fidelity,
     FlowSession, LutOutcome, LutRequest, LutSpec, OverscaleOutcome, OverscaleRequest,
-    ShmooOutcome, ShmooRequest, TransientOutcome, TransientRequest,
+    ShmooOutcome, ShmooRequest, StreamOutcome, StreamRequest, TransientOutcome, TransientRequest,
 };
 
 // the fault-injection knobs ride on `ShmooRequest`, so re-export them here

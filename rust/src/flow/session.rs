@@ -66,6 +66,8 @@ use crate::config::Config;
 use crate::faults::{
     self, AccuracyPoint, BramMap, FaultSpec, GuardbandStore, Injector, Protection, ShmooResult,
 };
+use crate::fleet::stream::{StreamConfig, StreamSim, StreamTelemetry};
+use crate::fleet::trace::Scenario;
 use crate::flow::alg1::{self, Alg1Result};
 use crate::flow::alg2::{self, Alg2Result};
 use crate::flow::design::{Design, Effort};
@@ -434,6 +436,95 @@ impl ShmooRequest {
     }
 }
 
+/// Request for the online streaming fleet service (`fleet::stream`): open
+/// Poisson arrivals with SLA deadlines and priorities, admission control
+/// with queue shedding, and a rack autoscaler under a fleet-wide power
+/// cap. One arrival stream per benchmark; every stream runs on its own
+/// derived seed, and the whole run is bit-identical for any `workers`
+/// count.
+#[derive(Clone, Debug)]
+pub struct StreamRequest {
+    /// Primary benchmark stream.
+    pub bench: String,
+    /// Additional benchmark streams (each is its own independent arrival
+    /// process; the fleet-wide rate splits evenly across all of them).
+    pub extra_benches: Vec<String>,
+    pub scenario: Scenario,
+    pub racks: usize,
+    pub devices_per_rack: usize,
+    /// Arrival-generation window (virtual ms); admitted jobs then drain.
+    pub horizon_ms: f64,
+    /// Fleet-wide mean arrival rate (jobs/s).
+    pub arrival_rate_hz: f64,
+    /// Mean job duration (virtual ms; clamped exponential per job).
+    pub duration_mean_ms: f64,
+    /// SLA slack: deadline = arrival + slack × duration (≥ 1).
+    pub deadline_slack: f64,
+    /// Fleet power cap (W) the autoscaler must respect; 0 ⇒ uncapped.
+    pub power_cap_w: f64,
+    pub seed: u64,
+    /// Data-plane worker threads (telemetry is bit-identical for any
+    /// count — CI pins 1 vs 4 vs 8).
+    pub workers: usize,
+    /// Ambient step of the per-design LUT sweep (°C).
+    pub lut_step_c: f64,
+    pub effort: Option<Effort>,
+}
+
+impl StreamRequest {
+    /// Defaults: one `bench` stream into an 8 × 8 diurnal fleet, 1 job/s
+    /// with 20 s mean service time, 2.5× deadline slack, no power cap,
+    /// one data-plane worker over a 10-minute arrival window.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use thermovolt::flow::StreamRequest;
+    ///
+    /// let req = StreamRequest { racks: 4, workers: 8, ..StreamRequest::new("sha") };
+    /// assert_eq!(req.devices_per_rack, 8);
+    /// assert!(req.deadline_slack >= 1.0); // deadline = arrival + slack × duration
+    /// assert_eq!(req.power_cap_w, 0.0); // uncapped unless the caller says otherwise
+    /// ```
+    pub fn new(bench: impl Into<String>) -> StreamRequest {
+        StreamRequest {
+            bench: bench.into(),
+            extra_benches: Vec::new(),
+            scenario: Scenario::Diurnal,
+            racks: 8,
+            devices_per_rack: 8,
+            horizon_ms: 600_000.0,
+            arrival_rate_hz: 1.0,
+            duration_mean_ms: 20_000.0,
+            deadline_slack: 2.5,
+            power_cap_w: 0.0,
+            seed: 0x5742_EA5E,
+            workers: 1,
+            lut_step_c: 12.0,
+            effort: None,
+        }
+    }
+
+    /// The engine-facing [`StreamConfig`] this request resolves to.
+    pub fn to_config(&self) -> StreamConfig {
+        let mut benches = vec![self.bench.clone()];
+        benches.extend(self.extra_benches.iter().cloned());
+        StreamConfig {
+            racks: self.racks,
+            devices_per_rack: self.devices_per_rack,
+            scenario: self.scenario,
+            seed: self.seed,
+            horizon_ms: self.horizon_ms,
+            benches,
+            arrival_rate_hz: self.arrival_rate_hz,
+            duration_mean_ms: self.duration_mean_ms,
+            deadline_slack: self.deadline_slack,
+            power_cap_w: self.power_cap_w,
+            lut_step_c: self.lut_step_c,
+        }
+    }
+}
+
 // ------------------------------------------------------------ outcomes --
 
 /// Operating condition a request resolved to (base config + overrides) —
@@ -532,6 +623,23 @@ pub struct ShmooOutcome {
     /// The same sweep with the deepest LeNet reduction layer protected
     /// (run at nominal rail via a dual-rail bank).
     pub accuracy_protected: Vec<AccuracyPoint>,
+}
+
+/// Outcome of [`FlowSession::stream`]: the streaming-service telemetry of
+/// one seeded open-arrival run, plus the bit-exact fingerprint callers pin
+/// across worker counts.
+#[derive(Clone, Debug)]
+pub struct StreamOutcome {
+    /// Primary benchmark stream (the request may carry extra kinds).
+    pub bench: String,
+    pub condition: Condition,
+    pub racks: usize,
+    pub devices_per_rack: usize,
+    /// Data-plane worker threads this run used (any count is identical).
+    pub workers: usize,
+    pub telemetry: StreamTelemetry,
+    /// `telemetry.fingerprint()` — counters, energy, decisions, sketches.
+    pub fingerprint: u64,
 }
 
 // ------------------------------------------------------------- session --
@@ -1027,6 +1135,43 @@ impl FlowSession {
         })
     }
 
+    /// Run the online streaming fleet service (`fleet::stream`): seeded
+    /// open Poisson arrivals with SLA deadlines and priorities, admission
+    /// control with queue shedding, and a rack autoscaler under the
+    /// request's fleet-wide power cap.
+    ///
+    /// Validation runs before any design is built, so a bad spec costs
+    /// nothing. Like the batch fleet, designs are priced at the scenario's
+    /// deployment corner (θ_JA, base ambient) through a corner-adjusted
+    /// inner session; the outcome's [`Condition`] reports that corner.
+    ///
+    /// Fully determined by `req.seed` and bit-identical for any `workers`
+    /// count: the control plane (every admission/shed/scale decision) is
+    /// serial, and the parallel data plane is a pure per-job function.
+    pub fn stream(&mut self, req: StreamRequest) -> Result<StreamOutcome, FlowError> {
+        if req.workers == 0 || req.workers > 64 {
+            return Err(FlowError::BadStreamSpec {
+                reason: format!("{} workers (must be 1..=64)", req.workers),
+            });
+        }
+        let scfg = req.to_config();
+        scfg.validate()?;
+        let (t_base, theta) = req.scenario.corner();
+        let cfg = self.resolved(Some(t_base), Some(theta), None, None)?;
+        let mut inner = FlowSession::with_effort(cfg, req.effort.unwrap_or(self.effort))?;
+        let sim = StreamSim::build(&mut inner, &scfg)?;
+        let telemetry = sim.run(req.workers);
+        Ok(StreamOutcome {
+            bench: req.bench,
+            condition: condition_of(inner.config()),
+            racks: scfg.racks,
+            devices_per_rack: scfg.devices_per_rack,
+            workers: req.workers,
+            fingerprint: telemetry.fingerprint(),
+            telemetry,
+        })
+    }
+
     // ------------------------------------------------------- plumbing --
 
     /// Base config with per-request overrides applied, re-validated so a
@@ -1489,6 +1634,52 @@ mod tests {
         assert!(matches!(
             s.shmoo(bad_fault),
             Err(FlowError::BadFaultSpec { .. })
+        ));
+        // none of the rejections paid for a design build
+        assert_eq!(s.cached_designs(), 0);
+    }
+
+    #[test]
+    fn bad_stream_specs_are_rejected_before_any_build() {
+        let mut s = FlowSession::new(Config::new()).unwrap();
+        assert!(matches!(
+            s.stream(StreamRequest {
+                racks: 0,
+                ..StreamRequest::new("mkPktMerge")
+            }),
+            Err(FlowError::BadStreamSpec { .. })
+        ));
+        assert!(matches!(
+            s.stream(StreamRequest {
+                workers: 0,
+                ..StreamRequest::new("mkPktMerge")
+            }),
+            Err(FlowError::BadStreamSpec { .. })
+        ));
+        // a slack below 1 would make every admitted job a violation by
+        // construction — reject it as a spec error instead
+        assert!(matches!(
+            s.stream(StreamRequest {
+                deadline_slack: 0.5,
+                ..StreamRequest::new("mkPktMerge")
+            }),
+            Err(FlowError::BadStreamSpec { .. })
+        ));
+        assert!(matches!(
+            s.stream(StreamRequest {
+                arrival_rate_hz: f64::NAN,
+                ..StreamRequest::new("mkPktMerge")
+            }),
+            Err(FlowError::BadStreamSpec { .. })
+        ));
+        // an open stream of ~10^9 jobs is a typo, not a workload
+        assert!(matches!(
+            s.stream(StreamRequest {
+                arrival_rate_hz: 1e6,
+                horizon_ms: 1e9,
+                ..StreamRequest::new("mkPktMerge")
+            }),
+            Err(FlowError::BadStreamSpec { .. })
         ));
         // none of the rejections paid for a design build
         assert_eq!(s.cached_designs(), 0);

@@ -36,7 +36,10 @@
 //! * [`fleet`]   — multi-device datacenter fleet simulator: event-driven
 //!   thermal-aware scheduler (arrival/finish/migration events) + the
 //!   three-way rail-provisioning policy engine (static / dynamic /
-//!   overscaled-dynamic)
+//!   overscaled-dynamic); [`fleet::stream`] adds the online streaming
+//!   service — open Poisson arrivals with SLA deadlines, priority-tiered
+//!   admission control (shed/degrade) and a rack autoscaler under a fleet
+//!   power cap, sharded per rack with a deterministic cross-shard merge
 //! * [`timing::batch`] — batched, memoizing STA engine shared by every search
 //! * [`benchkit`] — in-repo perf harness (`thermovolt bench` → BENCH_search.json)
 //! * [`report`]  — regenerates every paper table/figure

@@ -9,6 +9,14 @@
 //! thermovolt report --table1|--fig2|--fig3|--fig4|--table2|--fig6|--fig7
 //!                   |--fig8|--runtime|--leakage|--all  [--full]
 //! thermovolt serve  --bench <b> [--transient]     dynamic controller demo
+//! thermovolt serve  --stream [--bench <b>] [--scenario <name>] [--racks N]
+//!                   [--devices-per-rack N] [--rate HZ] [--duration-s T]
+//!                   [--deadline-slack X] [--power-cap W] [--horizon-s T]
+//!                   [--seed S] [--workers W]
+//!                   online streaming fleet: open arrivals with SLA
+//!                   deadlines, admission control (shed/degrade), rack
+//!                   autoscaling under an optional power cap; the N-worker
+//!                   run is replayed serially and fingerprint-checked
 //! thermovolt shmoo  --bench <b> [--devices N] [--seed S] [--workers W]
 //!                   [--corners K] [--t-lo T] [--t-hi T] [--out F]
 //!                   per-device undervolt shmoo: learns measured guardbands
@@ -22,12 +30,13 @@
 //!                                                 (RC thermal transients;
 //!                                                 measured per-unit margins)
 //! thermovolt bench  [--quick] [--bench <b>] [--out F] [--fleet-out F]
-//!                   [--transient-out F] [--faults-out F]
+//!                   [--transient-out F] [--faults-out F] [--stream-out F]
 //!                   perf harness: Alg1 / Alg2 (batched vs --naive path,
 //!                   bit-checked) / LUT build / fleet; emits
 //!                   BENCH_search.json + a ≥2048-device BENCH_fleet.json +
 //!                   the thermal-inertia sweep BENCH_transient.json + the
-//!                   fault-injection/guardband sweep BENCH_faults.json
+//!                   fault-injection/guardband sweep BENCH_faults.json +
+//!                   the streaming-fleet bench BENCH_stream.json
 //! thermovolt e2e    [--full]                      full-pipeline headline run
 //! thermovolt lint   [--json] [--graph dot|json] [--root DIR] [--config FILE]
 //!                   detlint: determinism & correctness static analysis
@@ -50,7 +59,7 @@ use thermovolt::fleet::trace::Scenario;
 use thermovolt::fleet::{Fleet, FleetConfig};
 use thermovolt::flow::{
     Alg1Request, Alg2Request, BaselineRequest, Effort, Fidelity, FlowSession, LutRequest,
-    LutSpec, OverscaleRequest, ShmooRequest,
+    LutSpec, OverscaleRequest, ShmooRequest, StreamRequest,
 };
 use thermovolt::report;
 use thermovolt::synth;
@@ -230,6 +239,77 @@ fn run(args: &Args) -> Result<()> {
             );
         }
         "serve" => {
+            // --stream: the online streaming fleet front door — open
+            // arrivals with SLA deadlines, priority-tiered admission
+            // control and rack autoscaling under an optional power cap.
+            // Without the flag, the original single-device controller demo.
+            if args.flag("stream") {
+                let bench = args.opt_or("bench", "sha");
+                let scen_name = args.opt_or("scenario", "diurnal");
+                let scenario = Scenario::from_name(scen_name).ok_or_else(|| {
+                    let names: Vec<&str> =
+                        Scenario::all().iter().map(|s| s.name()).collect();
+                    anyhow::anyhow!(
+                        "unknown scenario `{scen_name}` (one of: {})",
+                        names.join(", ")
+                    )
+                })?;
+                let mut req = StreamRequest::new(bench);
+                req.scenario = scenario;
+                req.racks = args.opt_usize("racks", req.racks);
+                req.devices_per_rack =
+                    args.opt_usize("devices-per-rack", req.devices_per_rack);
+                req.arrival_rate_hz = args.opt_f64("rate", req.arrival_rate_hz);
+                req.duration_mean_ms =
+                    args.opt_f64("duration-s", req.duration_mean_ms / 1e3) * 1e3;
+                req.deadline_slack = args.opt_f64("deadline-slack", req.deadline_slack);
+                req.power_cap_w = args.opt_f64("power-cap", req.power_cap_w);
+                req.horizon_ms = args.opt_f64("horizon-s", req.horizon_ms / 1e3) * 1e3;
+                req.seed = args.opt_u64("seed", req.seed);
+                req.workers = args.opt_usize("workers", 4).max(1);
+                req.effort = Some(effort);
+                let (t_base, theta) = scenario.corner();
+                println!(
+                    "stream: {} racks x {} devices, scenario {} ({t_base} C corner, theta_JA {theta} C/W), {:.1} jobs/s over {:.0} s, seed {:#x}, {} worker(s)",
+                    req.racks,
+                    req.devices_per_rack,
+                    scenario.name(),
+                    req.arrival_rate_hz,
+                    req.horizon_ms / 1e3,
+                    req.seed,
+                    req.workers
+                );
+                let mut session = FlowSession::with_effort(cfg.clone(), effort)?;
+                // detlint: allow(D003) CLI progress display only; never reaches results
+                let t0 = Instant::now();
+                let o = session.stream(req.clone())?;
+                println!(
+                    "stream done in {:.1} s: {} offered, {} admitted, makespan {:.0} s",
+                    t0.elapsed().as_secs_f64(),
+                    o.telemetry.offered,
+                    o.telemetry.admitted,
+                    o.telemetry.makespan_ms / 1e3
+                );
+                if req.workers > 1 {
+                    let serial = session.stream(StreamRequest { workers: 1, ..req })?;
+                    anyhow::ensure!(
+                        serial.fingerprint == o.fingerprint
+                            && serial.telemetry.decision_fingerprint
+                                == o.telemetry.decision_fingerprint,
+                        "{}-worker stream run diverged from the serial replay",
+                        o.workers
+                    );
+                    println!(
+                        "serial replay bit-identical (fingerprint {:#018x})",
+                        o.fingerprint
+                    );
+                }
+                std::fs::create_dir_all(results)?;
+                let t = report::stream_table(&o.telemetry);
+                t.emit(results, "stream")?;
+                println!("{}", t.render());
+                return Ok(());
+            }
             let bench = args.opt_or("bench", "mkPktMerge");
             let mut session = FlowSession::with_effort(cfg.clone(), effort)?;
             println!("building (T → V) lookup table for {bench}…");
@@ -649,6 +729,22 @@ fn run(args: &Args) -> Result<()> {
                 fa.fleet_energy_fixed_j,
                 fa.fleet_energy_measured_j,
                 fa.fleet_energy_saving * 100.0
+            );
+            // streaming-fleet bench: open arrivals, serial-vs-8-worker
+            // fingerprints, then the same arrivals under a power cap
+            // → BENCH_stream.json
+            let stream_out =
+                Path::new(args.opt_or("stream-out", "BENCH_stream.json")).to_path_buf();
+            let st = thermovolt::benchkit::run_stream(&cfg, &opts, &stream_out)?;
+            println!(
+                "stream bench: {} offered / {} shed uncapped, cap {:.0} W → {} shed / {} degraded / {} SLA misses ({} cap-bound ticks)",
+                st.offered,
+                st.shed,
+                st.cap_w,
+                st.capped_shed,
+                st.capped_degraded,
+                st.capped_sla_violations,
+                st.capped_cap_bound_ticks
             );
         }
         "e2e" => {

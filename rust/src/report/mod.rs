@@ -6,6 +6,7 @@
 use crate::activity::{dsp_sim, estimate};
 use crate::chardb::{CharDb, CharTable, Rail, ResourceType, ALL_RESOURCES};
 use crate::config::Config;
+use crate::fleet::stream::StreamTelemetry;
 use crate::fleet::telemetry::FleetTelemetry;
 use crate::fleet::DeviceSpec;
 use crate::flow::{
@@ -740,6 +741,62 @@ pub fn transient_table(instant: &FleetTelemetry, transient: &FleetTelemetry) -> 
     tb
 }
 
+/// Streaming-service run summary (`thermovolt serve --stream`): offered /
+/// admitted / shed / degraded traffic, SLA wait-and-sojourn percentiles
+/// straight from the streaming quantile sketches (no job vector exists to
+/// sort), dynamic-vs-static energy, and the autoscaler trajectory under
+/// the fleet power cap.
+pub fn stream_table(t: &StreamTelemetry) -> Table {
+    let mut tb = Table::new(
+        "Stream — open arrivals, admission control, autoscaled racks",
+        &["metric", "value"],
+    );
+    tb.row(vec!["offered jobs".into(), t.offered.to_string()]);
+    tb.row(vec!["admitted".into(), t.admitted.to_string()]);
+    tb.row(vec!["shed (rejected)".into(), t.shed.to_string()]);
+    tb.row(vec!["degraded (short-run)".into(), t.degraded.to_string()]);
+    tb.row(vec!["deferred (queued)".into(), t.deferred.to_string()]);
+    tb.row(vec!["completed".into(), t.completed.to_string()]);
+    tb.row(vec![
+        "SLA violations".into(),
+        format!("{} ({})", t.sla_violations, pct(t.sla_violation_rate())),
+    ]);
+    tb.row(vec!["queue wait p50 (s)".into(), f2(t.queue_p(50.0) / 1e3)]);
+    tb.row(vec!["queue wait p95 (s)".into(), f2(t.queue_p(95.0) / 1e3)]);
+    tb.row(vec!["sojourn p95 (s)".into(), f2(t.sojourn_p(95.0) / 1e3)]);
+    tb.row(vec!["job power p50 (W)".into(), f2(t.power_p(50.0))]);
+    tb.row(vec!["job power p95 (W)".into(), f2(t.power_p(95.0))]);
+    tb.row(vec!["E_static (J)".into(), f2(t.energy_static_j)]);
+    tb.row(vec!["E_dyn (J)".into(), f2(t.energy_dyn_j)]);
+    tb.row(vec!["saving_dyn (%)".into(), pct(t.saving())]);
+    tb.row(vec!["peak T_junct (C)".into(), f1(t.peak_t_junct_c)]);
+    tb.row(vec!["peak fleet power (W)".into(), f1(t.peak_power_w)]);
+    tb.row(vec![
+        "power cap (W)".into(),
+        if t.power_cap_w > 0.0 {
+            f1(t.power_cap_w)
+        } else {
+            "-".into()
+        },
+    ]);
+    tb.row(vec!["cap-bound ticks".into(), t.cap_bound_ticks.to_string()]);
+    tb.row(vec![
+        "scale ups / downs".into(),
+        format!("{} / {}", t.scale_ups, t.scale_downs),
+    ]);
+    tb.row(vec![
+        "racks powered min/mean/max".into(),
+        format!(
+            "{} / {} / {}",
+            t.racks_powered_min,
+            f1(t.racks_powered_mean),
+            t.racks_powered_max
+        ),
+    ]);
+    tb.row(vec!["makespan (s)".into(), f1(t.makespan_ms / 1e3)]);
+    tb
+}
+
 /// Generate the characterized library table (also saved as an artifact).
 pub fn characterize(cfg: &Config) -> anyhow::Result<CharTable> {
     let db = CharDb::analytic();
@@ -790,6 +847,52 @@ mod tests {
         assert_eq!(t.rows.len(), 7);
         let r = t.render();
         assert!(r.contains("instantaneous") && r.contains("migrations"));
+    }
+
+    #[test]
+    fn stream_table_has_one_row_per_metric() {
+        use crate::util::sketch::QuantileSketch;
+        let mut queue_sketch = QuantileSketch::new();
+        let mut sojourn_sketch = QuantileSketch::new();
+        let mut power_sketch = QuantileSketch::new();
+        for v in [100.0, 2_000.0, 9_500.0] {
+            queue_sketch.record(v);
+            sojourn_sketch.record(v + 20_000.0);
+            power_sketch.record(3.0);
+        }
+        let t = StreamTelemetry {
+            offered: 12,
+            admitted: 10,
+            shed: 2,
+            degraded: 1,
+            deferred: 3,
+            completed: 10,
+            sla_violations: 1,
+            energy_dyn_j: 70.0,
+            energy_static_j: 100.0,
+            busy_ms: 200_000.0,
+            peak_t_junct_c: 71.5,
+            queue_sketch,
+            sojourn_sketch,
+            power_sketch,
+            peak_power_w: 42.0,
+            power_cap_w: 0.0,
+            cap_bound_ticks: 0,
+            scale_ups: 2,
+            scale_downs: 1,
+            racks_powered_min: 1,
+            racks_powered_max: 4,
+            racks_powered_mean: 2.5,
+            decision_fingerprint: 7,
+            horizon_ms: 600_000.0,
+            makespan_ms: 615_000.0,
+        };
+        let tbl = stream_table(&t);
+        assert_eq!(tbl.rows.len(), 22);
+        let r = tbl.render();
+        assert!(r.contains("SLA violations") && r.contains("saving_dyn"));
+        // uncapped runs print "-" for the cap, not 0.0
+        assert!(tbl.rows.iter().any(|row| row[0].contains("power cap") && row[1] == "-"));
     }
 
     #[test]

@@ -1,7 +1,9 @@
-//! Dependency-free utilities: PRNG, statistics, config parsing, CLI, tables.
+//! Dependency-free utilities: PRNG, statistics, streaming sketches, config
+//! parsing, CLI, tables.
 
 pub mod cli;
 pub mod rng;
+pub mod sketch;
 pub mod stats;
 pub mod table;
 pub mod tomlite;

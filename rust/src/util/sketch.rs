@@ -1,0 +1,445 @@
+//! Fixed-size, mergeable streaming quantile sketch.
+//!
+//! `fleet::stream` serves an open arrival process: job results are folded
+//! into telemetry as they complete, and percentiles must be answerable at
+//! any point without materializing (and sorting) the full per-job vector
+//! the way `FleetTelemetry::aggregate` used to. The sketch here is a
+//! log-spaced histogram in the spirit of DDSketch (Masson et al., VLDB
+//! 2019): bucket `i` covers `[MIN_TRACKED·γ^i, MIN_TRACKED·γ^(i+1))`, so
+//! the bucket count is fixed regardless of stream length and the relative
+//! width of every bucket is `γ − 1`.
+//!
+//! Two properties matter for the determinism contract:
+//!
+//! - **Multiset purity.** The state is a pure function of the *multiset*
+//!   of recorded values — never of insertion order or of how the stream
+//!   was partitioned. Compactor-based sketches (KLL/GK) do not have this
+//!   property: their internal state depends on grouping, so per-shard
+//!   sketches merged under different shard counts diverge bit-wise even
+//!   when the data is identical. A histogram's counts are addition, which
+//!   is commutative and associative over `u64`.
+//! - **Mergeability.** [`QuantileSketch::merge`] is elementwise count
+//!   addition plus min/max combine, so `sketch(A ∪ B) == merge(sketch(A),
+//!   sketch(B))` *exactly*, for any partition of the data. Per-shard
+//!   telemetry therefore folds to the same bits at 1, 4, or 8 shards.
+//!
+//! # Error bound
+//!
+//! For a query `p ∈ [0, 100]` over `n` recorded values with target rank
+//! `r = (p/100)·(n−1)` (the same rank convention as `stats::percentile`),
+//! the returned value `v` satisfies, for some order statistic `x_j` with
+//! `j ∈ {⌊r⌋, ⌈r⌉}`:
+//!
+//! ```text
+//! |v − x_j| ≤ REL_ERR_BOUND · x_j + ABS_ERR_FLOOR
+//! ```
+//!
+//! provided the data is non-negative and `x_j < max_tracked()` (values at
+//! or above `max_tracked()` saturate into the top bucket; fleet telemetry
+//! values — milliseconds, watts, joules — sit many decades below it). The
+//! absolute floor covers the underflow bucket: values in
+//! `[0, MIN_TRACKED)` share one bucket. Negative values are accepted and
+//! counted (they widen the underflow bucket down to the tracked minimum)
+//! but only the exact min is guaranteed for them. `p ≤ 0` and `p ≥ 100`
+//! return the exact tracked min/max.
+
+use crate::util::mix64;
+
+/// Bucket growth factor γ. Relative bucket width (and thus the relative
+/// error bound) is γ − 1 = 5 %.
+pub const GAMMA: f64 = 1.05;
+
+/// `ln(GAMMA)`, precomputed (no `const fn ln`). Bucket index of a value
+/// `x ≥ MIN_TRACKED` is `⌊ln(x / MIN_TRACKED) / LN_GAMMA⌋`.
+const LN_GAMMA: f64 = 0.048_790_164_169_432_01;
+
+/// Smallest positively-tracked value; anything below (zero, negatives,
+/// denormals) lands in the underflow bucket.
+pub const MIN_TRACKED: f64 = 1e-9;
+
+/// Number of log-spaced buckets. `MIN_TRACKED · γ^1152 ≈ 2.6e15`, which
+/// comfortably covers milliseconds-to-joules fleet telemetry; values
+/// beyond saturate into the top bucket.
+pub const N_BUCKETS: usize = 1152;
+
+/// Documented relative rank-error bound (γ − 1).
+pub const REL_ERR_BOUND: f64 = GAMMA - 1.0;
+
+/// Documented absolute error floor (width of the underflow bucket).
+pub const ABS_ERR_FLOOR: f64 = MIN_TRACKED;
+
+/// Upper edge of the top bucket; recorded values at or above this are
+/// clamped into it and fall outside the documented bound.
+pub fn max_tracked() -> f64 {
+    MIN_TRACKED * (N_BUCKETS as f64 * LN_GAMMA).exp()
+}
+
+/// A fixed-size mergeable quantile sketch (log-spaced histogram).
+///
+/// Memory is `N_BUCKETS + 1` u64 counters (~9 KiB) regardless of how many
+/// values are recorded. Non-finite values are ignored.
+#[derive(Clone, Debug)]
+pub struct QuantileSketch {
+    /// Count per log bucket; bucket `i` covers
+    /// `[MIN_TRACKED·γ^i, MIN_TRACKED·γ^(i+1))`.
+    buckets: Vec<u64>,
+    /// Underflow: values `< MIN_TRACKED` (including zero and negatives).
+    low: u64,
+    count: u64,
+    min: f64,
+    max: f64,
+}
+
+impl QuantileSketch {
+    pub fn new() -> QuantileSketch {
+        QuantileSketch {
+            buckets: vec![0u64; N_BUCKETS],
+            low: 0,
+            count: 0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Record one value. NaN and ±∞ are ignored; values below
+    /// `MIN_TRACKED` go to the underflow bucket; values at or beyond the
+    /// top bucket saturate into it.
+    pub fn record(&mut self, x: f64) {
+        if !x.is_finite() {
+            return;
+        }
+        self.count += 1;
+        if x < self.min {
+            self.min = x;
+        }
+        if x > self.max {
+            self.max = x;
+        }
+        if x < MIN_TRACKED {
+            self.low += 1;
+            return;
+        }
+        let i = ((x / MIN_TRACKED).ln() / LN_GAMMA).floor();
+        let i = if i < 0.0 {
+            0
+        } else {
+            (i as usize).min(N_BUCKETS - 1)
+        };
+        self.buckets[i] += 1;
+    }
+
+    /// Merge another sketch into this one. Elementwise count addition plus
+    /// min/max combine: exact, commutative and associative, so the merged
+    /// state equals the sketch of the concatenated stream for any
+    /// partition of the data.
+    pub fn merge(&mut self, other: &QuantileSketch) {
+        for (b, &o) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *b += o;
+        }
+        self.low += other.low;
+        self.count += other.count;
+        if other.min < self.min {
+            self.min = other.min;
+        }
+        if other.max > self.max {
+            self.max = other.max;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Exact minimum of recorded values (0.0 when empty).
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    /// Exact maximum of recorded values (0.0 when empty).
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Approximate `p`-th percentile (0..=100), `stats::percentile` rank
+    /// convention: target rank `r = (p/100)·(count−1)`. Empty sketch
+    /// returns 0.0 (mirroring `stats::percentile`); `p ≤ 0` / `p ≥ 100`
+    /// return the exact min/max. See the module docs for the error bound.
+    pub fn quantile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        if p <= 0.0 {
+            return self.min;
+        }
+        if p >= 100.0 {
+            return self.max;
+        }
+        let rank = (p / 100.0) * (self.count - 1) as f64;
+        // Find the bucket holding order statistic ⌊rank⌋ (0-based).
+        let target = rank.floor() as u64;
+        let mut cum = 0u64;
+        // Underflow bucket spans [min(min, 0), MIN_TRACKED).
+        if self.low > 0 && target < self.low {
+            let lo = if self.min < 0.0 { self.min } else { 0.0 };
+            let frac = ((rank - cum as f64 + 0.5) / self.low as f64).clamp(0.0, 1.0);
+            let v = lo + frac * (MIN_TRACKED - lo);
+            return v.clamp(self.min, self.max);
+        }
+        cum += self.low;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if target < cum + c {
+                let lo = MIN_TRACKED * (i as f64 * LN_GAMMA).exp();
+                let hi = MIN_TRACKED * ((i + 1) as f64 * LN_GAMMA).exp();
+                let frac = ((rank - cum as f64 + 0.5) / c as f64).clamp(0.0, 1.0);
+                let v = lo + frac * (hi - lo);
+                return v.clamp(self.min, self.max);
+            }
+            cum += c;
+        }
+        // Unreachable when counts are consistent; fall back to max.
+        self.max
+    }
+
+    /// Bit-exact digest of the sketch state (counts, extrema). Folded into
+    /// telemetry fingerprints so the determinism tests cover percentile
+    /// state, not just scalar sums.
+    pub fn fingerprint(&self) -> u64 {
+        let mut acc = 0x5ce7_c4aa_11e5_ee0d_u64;
+        acc = mix64(acc, self.count);
+        acc = mix64(acc, self.low);
+        acc = mix64(acc, self.min().to_bits());
+        acc = mix64(acc, self.max().to_bits());
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if c != 0 {
+                acc = mix64(acc, i as u64);
+                acc = mix64(acc, c);
+            }
+        }
+        acc
+    }
+}
+
+impl Default for QuantileSketch {
+    fn default() -> Self {
+        QuantileSketch::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+    use crate::util::stats;
+
+    /// Randomized workloads drawn from mixed distributions: uniform,
+    /// exponential, heavy-tailed (spanning ~12 decades), plus duplicates
+    /// and exact zeros.
+    fn workload(seed: u64, n: usize) -> Vec<f64> {
+        let mut rng = Xoshiro256::new(seed);
+        let mut xs = Vec::with_capacity(n);
+        for i in 0..n {
+            let u = rng.next_f64().max(1e-12);
+            let x = match i % 4 {
+                0 => rng.uniform(0.0, 1e3),
+                1 => -u.ln() * 250.0,
+                2 => 10f64.powf(rng.uniform(-3.0, 9.0)),
+                _ => {
+                    if u < 0.3 {
+                        0.0
+                    } else {
+                        42.0 // duplicates
+                    }
+                }
+            };
+            xs.push(x);
+        }
+        xs
+    }
+
+    fn sketch_of(xs: &[f64]) -> QuantileSketch {
+        let mut s = QuantileSketch::new();
+        for &x in xs {
+            s.record(x);
+        }
+        s
+    }
+
+    /// Differential test against exact order statistics, pinning the
+    /// documented rank-error bound: the answer must be within
+    /// `REL_ERR_BOUND · x_j + ABS_ERR_FLOOR` of `x_j` for `j = ⌊r⌋` or
+    /// `j = ⌈r⌉` — the two order statistics `stats::percentile`
+    /// interpolates between.
+    #[test]
+    fn differential_vs_exact_percentile_pins_rank_error_bound() {
+        for seed in 0..30u64 {
+            let n = 1 + (seed as usize * 37) % 400;
+            let xs = workload(0xD1FF_0000 + seed, n);
+            let s = sketch_of(&xs);
+            let mut sorted = xs.clone();
+            sorted.sort_by(|a, b| a.total_cmp(b));
+            let ps = [0.0, 1.0, 5.0, 25.0, 50.0, 75.0, 90.0, 95.0, 99.0, 100.0];
+            for &p in &ps {
+                let v = s.quantile(p);
+                let rank = (p / 100.0) * (n - 1) as f64;
+                let j0 = rank.floor() as usize;
+                let j1 = rank.ceil() as usize;
+                let ok = [j0, j1].iter().any(|&j| {
+                    let x = sorted[j];
+                    (v - x).abs() <= REL_ERR_BOUND * x.abs() + ABS_ERR_FLOOR
+                });
+                assert!(
+                    ok,
+                    "seed {seed} n {n} p {p}: sketch {v} vs order stats \
+                     [{}, {}] (exact percentile {})",
+                    sorted[j0],
+                    sorted[j1],
+                    stats::percentile(&xs, p)
+                );
+                // Implied bracket against the exact interpolated percentile:
+                // v must lie within the bound-widened [x_⌊r⌋, x_⌈r⌉] window.
+                let lo = sorted[j0] - REL_ERR_BOUND * sorted[j0].abs() - ABS_ERR_FLOOR;
+                let hi = sorted[j1] + REL_ERR_BOUND * sorted[j1].abs() + ABS_ERR_FLOOR;
+                assert!(
+                    v >= lo && v <= hi,
+                    "seed {seed} p {p}: {v} outside widened window [{lo}, {hi}]"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn quantile_is_monotone_in_p() {
+        let xs = workload(0x0070_10E5, 257);
+        let s = sketch_of(&xs);
+        let mut prev = f64::NEG_INFINITY;
+        for i in 0..=100 {
+            let v = s.quantile(i as f64);
+            assert!(v >= prev, "p {i}: {v} < {prev}");
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn p0_and_p100_are_exact_min_max() {
+        let xs = workload(0x00E0_0E07, 99);
+        let s = sketch_of(&xs);
+        let mut sorted = xs.clone();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        assert_eq!(s.quantile(0.0), sorted[0]);
+        assert_eq!(s.quantile(100.0), sorted[sorted.len() - 1]);
+        assert_eq!(s.min(), sorted[0]);
+        assert_eq!(s.max(), sorted[sorted.len() - 1]);
+    }
+
+    /// merge(a, b) ≡ merge(b, a), and merge is associative — checked
+    /// bit-exactly via the state fingerprint.
+    #[test]
+    fn merge_commutes_and_associates_bit_exactly() {
+        let a = sketch_of(&workload(0xAAAA, 120));
+        let b = sketch_of(&workload(0xBBBB, 77));
+        let c = sketch_of(&workload(0xCCCC, 203));
+
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab.fingerprint(), ba.fingerprint(), "merge not commutative");
+
+        let mut ab_c = ab.clone();
+        ab_c.merge(&c);
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut a_bc = a.clone();
+        a_bc.merge(&bc);
+        assert_eq!(
+            ab_c.fingerprint(),
+            a_bc.fingerprint(),
+            "merge not associative"
+        );
+    }
+
+    /// The property the sharded fleet telemetry depends on: the sketch of
+    /// the whole stream equals the merge of per-shard sketches for *any*
+    /// partition (1/4/8 shards, round-robin or contiguous).
+    #[test]
+    fn partition_invariance_any_shard_count() {
+        let xs = workload(0x5AAD_0001, 500);
+        let whole = sketch_of(&xs).fingerprint();
+        for &shards in &[1usize, 4, 8] {
+            // round-robin partition
+            let mut parts = vec![QuantileSketch::new(); shards];
+            for (i, &x) in xs.iter().enumerate() {
+                parts[i % shards].record(x);
+            }
+            let mut merged = QuantileSketch::new();
+            for p in &parts {
+                merged.merge(p);
+            }
+            assert_eq!(merged.fingerprint(), whole, "{shards} shards diverged");
+        }
+    }
+
+    #[test]
+    fn empty_sketch_edge_cases() {
+        let e = QuantileSketch::new();
+        assert!(e.is_empty());
+        assert_eq!(e.count(), 0);
+        assert_eq!(e.quantile(50.0), 0.0); // mirrors stats::percentile
+        assert_eq!(e.min(), 0.0);
+        assert_eq!(e.max(), 0.0);
+
+        // merging an empty sketch is the identity
+        let s = sketch_of(&workload(0xE0E0, 64));
+        let mut m = s.clone();
+        m.merge(&QuantileSketch::new());
+        assert_eq!(m.fingerprint(), s.fingerprint());
+        let mut m2 = QuantileSketch::new();
+        m2.merge(&s);
+        assert_eq!(m2.fingerprint(), s.fingerprint());
+    }
+
+    #[test]
+    fn single_value_and_underflow_and_nan() {
+        let mut s = QuantileSketch::new();
+        s.record(123.456);
+        for p in [0.0, 37.0, 50.0, 100.0] {
+            let v = s.quantile(p);
+            assert!((v - 123.456).abs() <= REL_ERR_BOUND * 123.456 + ABS_ERR_FLOOR);
+        }
+
+        // zeros and negatives live in the underflow bucket; answers clamp
+        // to the tracked extrema
+        let mut u = QuantileSketch::new();
+        u.record(0.0);
+        u.record(-5.0);
+        u.record(1e-12);
+        assert_eq!(u.count(), 3);
+        assert_eq!(u.quantile(0.0), -5.0);
+        assert!(u.quantile(50.0) <= MIN_TRACKED);
+        assert!(u.quantile(50.0) >= -5.0);
+
+        // NaN / infinities are ignored
+        let mut n = QuantileSketch::new();
+        n.record(f64::NAN);
+        n.record(f64::INFINITY);
+        n.record(f64::NEG_INFINITY);
+        assert!(n.is_empty());
+        n.record(7.0);
+        assert_eq!(n.count(), 1);
+    }
+}

@@ -1,0 +1,195 @@
+//! Streaming-fleet integration tests: the open-arrival service must be a
+//! pure function of `(config, seed)` — bit-identical telemetry *and*
+//! admission decisions for any data-plane worker count (CI pins 1 vs 4 vs
+//! 8), reproducible across rebuilds, divergent across seeds. Plus the
+//! arrival-process rate property (diurnal thinning preserves the mean
+//! rate), the power-cap leg (admission control must actually shed /
+//! degrade and the autoscaler must spend cap-bound ticks), telemetry
+//! invariants (conservation of jobs, sketch-percentile monotonicity), and
+//! the `FlowSession::stream` front door end to end.
+
+use thermovolt::config::Config;
+use thermovolt::fleet::stream::{kind_streams, StreamConfig, StreamSim};
+use thermovolt::fleet::trace::{self, Scenario};
+use thermovolt::flow::{Effort, FlowError, FlowSession, StreamRequest};
+
+/// Small stream that exercises queueing + the autoscaler but stays fast:
+/// one benchmark (single P&R + LUT build), ~90 jobs, short horizon.
+fn small_sim(seed: u64) -> StreamSim {
+    let mut scfg = StreamConfig::new(3, 2, Scenario::Diurnal);
+    scfg.seed = seed;
+    scfg.horizon_ms = 240_000.0;
+    scfg.benches = vec!["mkPktMerge".to_string()];
+    scfg.arrival_rate_hz = 0.4;
+    scfg.duration_mean_ms = 8_000.0;
+    scfg.lut_step_c = 25.0;
+    // same deployment-corner adjustment the session front door applies
+    let (t_base, theta) = scfg.scenario.corner();
+    let mut cfg = Config::new();
+    cfg.flow.t_amb = t_base;
+    cfg.thermal.theta_ja = theta;
+    let mut session = FlowSession::with_effort(cfg, Effort::Quick).expect("session");
+    StreamSim::build(&mut session, &scfg).expect("stream build")
+}
+
+#[test]
+fn stream_is_bit_identical_across_worker_counts_1_4_8() {
+    let sim = small_sim(0x57AE_A31);
+    let t1 = sim.run(1);
+    let t4 = sim.run(4);
+    let t8 = sim.run(8);
+    assert_eq!(t1.fingerprint(), t4.fingerprint(), "1 vs 4 workers diverged");
+    assert_eq!(t1.fingerprint(), t8.fingerprint(), "1 vs 8 workers diverged");
+    // the control plane is shared, but pin the admission decisions too —
+    // a fingerprint collision must not mask a divergent shed/degrade path
+    assert_eq!(t1.decision_fingerprint, t4.decision_fingerprint);
+    assert_eq!(t1.decision_fingerprint, t8.decision_fingerprint);
+    assert_eq!(t1.shed, t8.shed);
+    assert_eq!(t1.degraded, t8.degraded);
+    assert_eq!(t1.sla_violations, t8.sla_violations);
+
+    // a fresh build from the same seed reproduces everything end to end
+    let again = small_sim(0x57AE_A31);
+    let t2 = again.run(2);
+    assert_eq!(t1.fingerprint(), t2.fingerprint(), "rebuild diverged");
+
+    // and a different seed must not collide
+    let other = small_sim(0x0BAD_5EED);
+    let to = other.run(2);
+    assert_ne!(t1.fingerprint(), to.fingerprint());
+}
+
+#[test]
+fn stream_telemetry_conserves_jobs_and_orders_percentiles() {
+    let sim = small_sim(0x7E1E);
+    let tel = sim.run(4);
+    assert!(tel.offered > 0, "no arrivals over a 4-minute window");
+    // conservation: every offered job is either admitted or shed, and
+    // every admitted job runs to completion (the drain phase is unbounded)
+    assert_eq!(tel.offered, tel.admitted + tel.shed);
+    assert_eq!(tel.completed, tel.admitted);
+    assert!(tel.deferred <= tel.admitted);
+    assert!(tel.degraded <= tel.admitted);
+    assert!(tel.sla_violations <= tel.completed);
+    let rate = tel.sla_violation_rate();
+    assert!((0.0..=1.0).contains(&rate));
+    // sketch percentiles are monotone in p and non-negative
+    assert!(tel.queue_p(50.0) >= 0.0);
+    assert!(tel.queue_p(95.0) >= tel.queue_p(50.0) - 1e-9);
+    assert!(tel.sojourn_p(95.0) >= tel.sojourn_p(50.0) - 1e-9);
+    // a job's sojourn includes its queue wait, so the percentile envelopes
+    // must order the same way at the top
+    assert!(tel.sojourn_p(100.0) >= tel.queue_p(100.0) - 1e-9);
+    // thermal-aware voltage scaling must save dynamic energy vs nominal
+    let saving = tel.saving();
+    assert!(
+        (0.0..1.0).contains(&saving),
+        "stream saving {saving} implausible"
+    );
+    assert!(tel.energy_dyn_j > 0.0);
+    assert!(tel.peak_power_w > 0.0);
+    assert!(tel.makespan_ms >= tel.horizon_ms * 0.1);
+    assert!(tel.racks_powered_min <= tel.racks_powered_max);
+    assert!(tel.racks_powered_mean <= tel.racks_powered_max as f64 + 1e-9);
+}
+
+#[test]
+fn power_cap_forces_shedding_and_cap_bound_scaling() {
+    // uncapped first, to learn the natural peak; then the same arrivals
+    // under a cap at 35 % of it — admission control must engage
+    let mut sim = small_sim(0xCA9);
+    let free = sim.run(2);
+    assert_eq!(free.cap_bound_ticks, 0, "uncapped run reported cap pressure");
+    sim.cfg.power_cap_w = 0.35 * free.peak_power_w;
+    let capped = sim.run(2);
+    assert!(
+        capped.cap_bound_ticks > 0,
+        "autoscaler never hit the {:.1} W cap",
+        sim.cfg.power_cap_w
+    );
+    assert!(
+        capped.shed + capped.degraded + capped.sla_violations > 0,
+        "a 65 % power cut shed nothing, degraded nothing and met every SLA"
+    );
+    assert!(
+        capped.racks_powered_max <= free.racks_powered_max,
+        "the cap powered more racks ({} > {})",
+        capped.racks_powered_max,
+        free.racks_powered_max
+    );
+    // conservation holds under pressure too
+    assert_eq!(capped.offered, capped.admitted + capped.shed);
+    assert_eq!(capped.completed, capped.admitted);
+    // the capped run is itself still deterministic
+    assert_eq!(capped.fingerprint(), sim.run(8).fingerprint());
+}
+
+#[test]
+fn prop_arrival_rate_tracks_the_trace_mean() {
+    // diurnal thinning modulates the instantaneous rate with the ambient
+    // trace but must preserve the configured mean: over a long window the
+    // realized count lands near rate × horizon (Poisson noise ≈ √n)
+    let horizon_ms = 400_000.0;
+    let rate_hz = 5.0;
+    for seed in [1u64, 0x5EED, 0xA11CE] {
+        let amb = trace::ambient_trace(Scenario::Diurnal, horizon_ms, seed);
+        let streams = kind_streams(&amb, 2, rate_hz, horizon_ms, 3_000.0, seed);
+        assert_eq!(streams.len(), 2);
+        let total: usize = streams.iter().map(Vec::len).sum();
+        let expected = rate_hz * horizon_ms / 1e3;
+        let err = (total as f64 - expected).abs() / expected;
+        assert!(
+            err < 0.10,
+            "seed {seed:#x}: {total} arrivals vs {expected} expected ({:.1} % off)",
+            err * 100.0
+        );
+        // per-stream arrivals are time-sorted and inside the window
+        for s in &streams {
+            for w in s.windows(2) {
+                assert!(w[1].arrival_ms >= w[0].arrival_ms);
+            }
+            for p in s {
+                assert!(p.arrival_ms >= 0.0 && p.arrival_ms < horizon_ms);
+                assert!(p.duration_ms > 0.0);
+            }
+        }
+    }
+}
+
+#[test]
+fn flow_session_stream_front_door_runs_end_to_end() {
+    let mut session = FlowSession::new(Config::new()).expect("session");
+    let req = StreamRequest {
+        racks: 2,
+        devices_per_rack: 2,
+        horizon_ms: 120_000.0,
+        arrival_rate_hz: 0.2,
+        duration_mean_ms: 5_000.0,
+        lut_step_c: 25.0,
+        workers: 2,
+        ..StreamRequest::new("mkPktMerge")
+    };
+    let o = session.stream(req.clone()).expect("stream outcome");
+    assert_eq!(o.bench, "mkPktMerge");
+    assert_eq!(o.racks, 2);
+    assert_eq!(o.devices_per_rack, 2);
+    assert_eq!(o.workers, 2);
+    // the outcome fingerprint is the telemetry's, verbatim
+    assert_eq!(o.fingerprint, o.telemetry.fingerprint());
+    assert_eq!(o.telemetry.offered, o.telemetry.admitted + o.telemetry.shed);
+    // the condition reflects the scenario's deployment corner, not the
+    // session's base config
+    let (t_base, theta) = req.scenario.corner();
+    assert!((o.condition.t_amb_c - t_base).abs() < 1e-9);
+    assert!((o.condition.theta_ja - theta).abs() < 1e-9);
+    // the front door is as deterministic as the engine underneath
+    let o2 = session.stream(req).expect("stream outcome (replay)");
+    assert_eq!(o.fingerprint, o2.fingerprint);
+
+    // and it validates before building anything
+    let bad = session.stream(StreamRequest {
+        deadline_slack: 0.0,
+        ..StreamRequest::new("mkPktMerge")
+    });
+    assert!(matches!(bad, Err(FlowError::BadStreamSpec { .. })));
+}

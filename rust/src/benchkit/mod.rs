@@ -45,6 +45,13 @@
 //! then the same stream re-run under a power cap at ~45 % of the uncapped
 //! peak — the capped leg must actually shed/degrade/violate and spend
 //! cap-bound autoscaler ticks — emitting `BENCH_stream.json`.
+//!
+//! [`run_coupling`] is the thermal co-scheduling companion: the same
+//! heat-wave fleet uncoupled, coupled under the coupling-blind planner and
+//! coupled under the lookahead planner, plus the same coupled stream under
+//! both autoscaler rankings — coupling must never lower energy, lookahead
+//! must never raise it or the SLA-miss count, and every coupled leg is
+//! serial-vs-parallel fingerprint-checked — emitting `BENCH_coupling.json`.
 
 use std::path::Path;
 use std::time::Instant;
@@ -53,7 +60,7 @@ use crate::config::Config;
 use crate::fleet::policy::PolicyKind;
 use crate::fleet::stream::{StreamConfig, StreamSim};
 use crate::fleet::telemetry::FleetTelemetry;
-use crate::fleet::trace::Scenario;
+use crate::fleet::trace::{CouplingSpec, Scenario};
 use crate::fleet::{Fleet, FleetConfig};
 use crate::faults::AccuracyPoint;
 use crate::flow::{
@@ -907,6 +914,225 @@ pub fn run_stream(
     Ok(s)
 }
 
+/// Measured numbers of the thermal co-scheduling bench
+/// (`BENCH_coupling.json`).
+#[derive(Clone, Debug, Default)]
+pub struct CouplingBenchSummary {
+    pub quick: bool,
+    pub bench: String,
+    pub scenario: String,
+    pub devices: usize,
+    pub jobs: usize,
+    pub horizon_ms: f64,
+    /// Exhaust fraction of the coupled legs' [`CouplingSpec`].
+    pub exhaust_fraction: f64,
+    /// Placement / autoscaler lookahead horizon of the lookahead legs.
+    pub lookahead_ms: f64,
+    /// Batch fleet, uncoupled physics, instantaneous planner.
+    pub uncoupled_energy_dyn_j: f64,
+    pub uncoupled_violations: u64,
+    /// Batch fleet, coupled physics, instantaneous (coupling-blind)
+    /// planner — same plan as the uncoupled leg, hotter physics.
+    pub coupled_energy_dyn_j: f64,
+    pub coupled_violations: u64,
+    pub coupled_rise_mean_c: f64,
+    pub coupled_rise_max_c: f64,
+    /// Batch fleet, coupled physics, lookahead planner.
+    pub lookahead_energy_dyn_j: f64,
+    pub lookahead_violations: u64,
+    pub lookahead_rise_mean_c: f64,
+    /// Physics penalty: coupled-instant minus uncoupled dynamic energy.
+    pub delta_coupling_energy_j: f64,
+    /// Planner recovery: lookahead minus coupled-instant dynamic energy
+    /// (must be ≤ 0 — the lookahead planner may never spend more).
+    pub delta_lookahead_energy_j: f64,
+    /// Serial and parallel coupled-fleet fingerprints were bit-identical.
+    pub fleet_fingerprint_match: bool,
+    pub stream_racks: usize,
+    pub stream_devices_per_rack: usize,
+    /// Streaming service, coupled physics, legacy instantaneous autoscaler.
+    pub stream_instant_sla: u64,
+    pub stream_instant_energy_dyn_j: f64,
+    /// The same arrivals with the predicted-over-horizon autoscaler.
+    pub stream_lookahead_sla: u64,
+    pub stream_lookahead_energy_dyn_j: f64,
+    /// Serial and 8-worker stream fingerprints were bit-identical per leg.
+    pub stream_fingerprint_match: bool,
+}
+
+/// Thermal co-scheduling bench: the same heat-wave fleet three ways —
+/// uncoupled, coupled under the instantaneous (coupling-blind) planner,
+/// and coupled under the lookahead planner — then the same coupled
+/// open-arrival stream under the legacy and the predicted autoscaler
+/// rankings. Hard-checks: coupling never *lowers* fleet energy, the
+/// lookahead planner never spends more energy or takes more thermal
+/// violations than the coupling-blind one, the predicted autoscaler never
+/// misses more SLAs, and every coupled leg is serial-vs-parallel
+/// bit-identical. Summary in `out` (`BENCH_coupling.json`).
+pub fn run_coupling(
+    cfg_in: &Config,
+    opts: &BenchOpts,
+    out: &Path,
+) -> anyhow::Result<CouplingBenchSummary> {
+    let scenario = Scenario::HeatWave;
+    let (devices, jobs, horizon_ms) = if opts.quick {
+        (8, 24, 240_000.0)
+    } else {
+        (16, 48, 600_000.0)
+    };
+    let spec = CouplingSpec::rack(0.5);
+    let lookahead_ms = 120_000.0;
+    let mut s = CouplingBenchSummary {
+        quick: opts.quick,
+        bench: opts.bench.clone(),
+        scenario: scenario.name().to_string(),
+        devices,
+        jobs,
+        horizon_ms,
+        exhaust_fraction: spec.exhaust_fraction,
+        lookahead_ms,
+        ..CouplingBenchSummary::default()
+    };
+
+    // ---- batch fleet: one roster, three planners/physics ----
+    let build = |coupled: bool, look_ms: f64| -> anyhow::Result<Fleet> {
+        let mut fcfg = FleetConfig::new(devices, jobs, scenario);
+        fcfg.benches = vec![opts.bench.clone()];
+        fcfg.horizon_ms = horizon_ms;
+        if coupled {
+            fcfg.coupling = spec;
+        }
+        fcfg.lookahead_ms = look_ms;
+        Fleet::build(fcfg, cfg_in)
+    };
+
+    println!("[bench] coupling: uncoupled fleet, instantaneous planner…");
+    let un = build(false, 0.0)?;
+    let plan_u = un.plan();
+    let tel_u = FleetTelemetry::aggregate(devices, un.execute(&plan_u, 1))
+        .with_unplaceable(plan_u.unplaceable.len());
+
+    println!("[bench] coupling: coupled fleet, coupling-blind planner…");
+    let ci = build(true, 0.0)?;
+    let plan_i = ci.plan();
+    let tel_i_serial = FleetTelemetry::aggregate(devices, ci.execute(&plan_i, 1));
+    let workers = ci.effective_workers();
+    let tel_i = FleetTelemetry::aggregate(devices, ci.execute(&plan_i, workers))
+        .with_unplaceable(plan_i.unplaceable.len());
+
+    println!("[bench] coupling: the same coupled fleet, lookahead planner…");
+    let cl = build(true, lookahead_ms)?;
+    let plan_l = cl.plan();
+    let tel_l_serial = FleetTelemetry::aggregate(devices, cl.execute(&plan_l, 1));
+    let tel_l = FleetTelemetry::aggregate(devices, cl.execute(&plan_l, workers))
+        .with_unplaceable(plan_l.unplaceable.len());
+
+    s.fleet_fingerprint_match = tel_i_serial.fingerprint() == tel_i.fingerprint()
+        && tel_l_serial.fingerprint() == tel_l.fingerprint();
+    anyhow::ensure!(
+        s.fleet_fingerprint_match,
+        "coupled fleet telemetry diverged between serial and {workers}-worker runs"
+    );
+    anyhow::ensure!(
+        tel_i.energy_dyn_j >= tel_u.energy_dyn_j - 1e-9,
+        "coupled fleet reported LESS dynamic energy ({:.3} J) than the uncoupled one \
+         ({:.3} J) — neighbor exhaust must never cool the fleet",
+        tel_i.energy_dyn_j,
+        tel_u.energy_dyn_j
+    );
+    anyhow::ensure!(
+        tel_l.energy_dyn_j <= tel_i.energy_dyn_j + 1e-9,
+        "lookahead planner spent MORE dynamic energy ({:.3} J) than the coupling-blind \
+         one ({:.3} J) on the same coupled fleet",
+        tel_l.energy_dyn_j,
+        tel_i.energy_dyn_j
+    );
+    anyhow::ensure!(
+        tel_l.violations <= tel_i.violations,
+        "lookahead planner took more thermal violations ({}) than the coupling-blind \
+         one ({})",
+        tel_l.violations,
+        tel_i.violations
+    );
+
+    s.uncoupled_energy_dyn_j = tel_u.energy_dyn_j;
+    s.uncoupled_violations = tel_u.violations;
+    s.coupled_energy_dyn_j = tel_i.energy_dyn_j;
+    s.coupled_violations = tel_i.violations;
+    s.coupled_rise_mean_c = tel_i.coupling_offset_mean_c;
+    s.coupled_rise_max_c = tel_i.coupling_offset_max_c;
+    s.lookahead_energy_dyn_j = tel_l.energy_dyn_j;
+    s.lookahead_violations = tel_l.violations;
+    s.lookahead_rise_mean_c = tel_l.coupling_offset_mean_c;
+    s.delta_coupling_energy_j = tel_i.energy_dyn_j - tel_u.energy_dyn_j;
+    s.delta_lookahead_energy_j = tel_l.energy_dyn_j - tel_i.energy_dyn_j;
+    println!("{}", crate::report::coupling_table(&tel_i, &tel_l).render());
+
+    // ---- stream: the same coupled arrivals, two autoscaler rankings ----
+    let (racks, dpr, rate_hz, s_horizon_ms) = if opts.quick {
+        (8, 8, 12.0, 240_000.0)
+    } else {
+        (16, 16, 40.0, 480_000.0)
+    };
+    s.stream_racks = racks;
+    s.stream_devices_per_rack = dpr;
+    let (t_base, theta) = scenario.corner();
+    let mut base = cfg_in.clone();
+    base.flow.t_amb = t_base;
+    base.thermal.theta_ja = theta;
+    let mut session = FlowSession::with_effort(base, Effort::Quick)?;
+    let mut scfg = StreamConfig::new(racks, dpr, scenario);
+    scfg.benches = vec![opts.bench.clone()];
+    scfg.arrival_rate_hz = rate_hz;
+    scfg.duration_mean_ms = 3_000.0;
+    scfg.horizon_ms = s_horizon_ms;
+    scfg.coupling = spec;
+    let mut sim = StreamSim::build(&mut session, &scfg)?;
+    println!(
+        "[bench] coupling: stream of {} jobs into {} coupled racks, both rankings…",
+        sim.jobs.len(),
+        racks
+    );
+
+    let tel_si = sim.run(1);
+    let tel_si_8 = sim.run(8);
+    sim.cfg.lookahead_ms = lookahead_ms;
+    let tel_sl = sim.run(1);
+    let tel_sl_8 = sim.run(8);
+    s.stream_fingerprint_match = tel_si.fingerprint() == tel_si_8.fingerprint()
+        && tel_sl.fingerprint() == tel_sl_8.fingerprint();
+    anyhow::ensure!(
+        s.stream_fingerprint_match,
+        "coupled stream telemetry diverged between serial and 8-worker runs"
+    );
+    anyhow::ensure!(
+        tel_sl.sla_violations <= tel_si.sla_violations,
+        "predicted autoscaler missed more SLAs ({}) than the instantaneous one ({})",
+        tel_sl.sla_violations,
+        tel_si.sla_violations
+    );
+    s.stream_instant_sla = tel_si.sla_violations;
+    s.stream_instant_energy_dyn_j = tel_si.energy_dyn_j;
+    s.stream_lookahead_sla = tel_sl.sla_violations;
+    s.stream_lookahead_energy_dyn_j = tel_sl.energy_dyn_j;
+    println!(
+        "[bench] coupling: fleet ΔE coupled {:+.2} J, lookahead {:+.2} J; \
+         stream SLA {} → {}",
+        s.delta_coupling_energy_j, s.delta_lookahead_energy_j, s.stream_instant_sla,
+        s.stream_lookahead_sla
+    );
+
+    let json = coupling_to_json(&s);
+    if let Some(dir) = out.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(out, &json)?;
+    println!("[bench] wrote {}", out.display());
+    Ok(s)
+}
+
 fn alg2_identical(a: &crate::flow::Alg2Result, b: &crate::flow::Alg2Result) -> bool {
     a.v_core.to_bits() == b.v_core.to_bits()
         && a.v_bram.to_bits() == b.v_bram.to_bits()
@@ -1241,9 +1467,105 @@ fn stream_to_json(s: &StreamBenchSummary) -> String {
     )
 }
 
+fn coupling_to_json(s: &CouplingBenchSummary) -> String {
+    let esc = json_escape;
+    let b = json_bool;
+    format!(
+        concat!(
+            "{{\n",
+            "  \"schema\": \"thermovolt-bench-coupling/1\",\n",
+            "  \"quick\": {quick},\n",
+            "  \"bench\": \"{bench}\",\n",
+            "  \"scenario\": \"{scenario}\",\n",
+            "  \"devices\": {devices},\n",
+            "  \"jobs\": {jobs},\n",
+            "  \"horizon_ms\": {horizon},\n",
+            "  \"exhaust_fraction\": {ef},\n",
+            "  \"lookahead_ms\": {look},\n",
+            "  \"fleet\": {{\n",
+            "    \"uncoupled\": {{ \"energy_dyn_j\": {u_e}, \"violations\": {u_v} }},\n",
+            "    \"coupled_instant\": {{ \"energy_dyn_j\": {i_e}, \"violations\": {i_v}, ",
+            "\"rise_mean_c\": {i_rm}, \"rise_max_c\": {i_rx} }},\n",
+            "    \"coupled_lookahead\": {{ \"energy_dyn_j\": {l_e}, \"violations\": {l_v}, ",
+            "\"rise_mean_c\": {l_rm} }},\n",
+            "    \"delta\": {{ \"coupling_energy_j\": {d_c}, \"lookahead_energy_j\": {d_l} }}\n",
+            "  }},\n",
+            "  \"stream\": {{\n",
+            "    \"racks\": {s_racks},\n",
+            "    \"devices_per_rack\": {s_dpr},\n",
+            "    \"instant\": {{ \"sla_violations\": {si_s}, \"energy_dyn_j\": {si_e} }},\n",
+            "    \"lookahead\": {{ \"sla_violations\": {sl_s}, \"energy_dyn_j\": {sl_e} }}\n",
+            "  }},\n",
+            "  \"determinism\": {{ \"fleet_fingerprint_match\": {f_fpm}, ",
+            "\"stream_fingerprint_match\": {s_fpm} }}\n",
+            "}}\n"
+        ),
+        quick = b(s.quick),
+        bench = esc(&s.bench),
+        scenario = esc(&s.scenario),
+        devices = s.devices,
+        jobs = s.jobs,
+        horizon = s.horizon_ms,
+        ef = s.exhaust_fraction,
+        look = s.lookahead_ms,
+        u_e = s.uncoupled_energy_dyn_j,
+        u_v = s.uncoupled_violations,
+        i_e = s.coupled_energy_dyn_j,
+        i_v = s.coupled_violations,
+        i_rm = s.coupled_rise_mean_c,
+        i_rx = s.coupled_rise_max_c,
+        l_e = s.lookahead_energy_dyn_j,
+        l_v = s.lookahead_violations,
+        l_rm = s.lookahead_rise_mean_c,
+        d_c = s.delta_coupling_energy_j,
+        d_l = s.delta_lookahead_energy_j,
+        s_racks = s.stream_racks,
+        s_dpr = s.stream_devices_per_rack,
+        si_s = s.stream_instant_sla,
+        si_e = s.stream_instant_energy_dyn_j,
+        sl_s = s.stream_lookahead_sla,
+        sl_e = s.stream_lookahead_energy_dyn_j,
+        f_fpm = b(s.fleet_fingerprint_match),
+        s_fpm = b(s.stream_fingerprint_match),
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn coupling_json_shape_is_valid_enough() {
+        let s = CouplingBenchSummary {
+            bench: "mkPktMerge".to_string(),
+            scenario: "heat-wave".to_string(),
+            devices: 8,
+            jobs: 24,
+            exhaust_fraction: 0.5,
+            delta_lookahead_energy_j: -1.25,
+            fleet_fingerprint_match: true,
+            stream_fingerprint_match: true,
+            ..CouplingBenchSummary::default()
+        };
+        let j = coupling_to_json(&s);
+        assert_eq!(
+            j.matches('{').count(),
+            j.matches('}').count(),
+            "unbalanced braces:\n{j}"
+        );
+        for key in [
+            "\"thermovolt-bench-coupling/1\"",
+            "\"exhaust_fraction\": 0.5",
+            "\"uncoupled\"",
+            "\"coupled_instant\"",
+            "\"coupled_lookahead\"",
+            "\"lookahead_energy_j\": -1.25",
+            "\"stream\"",
+            "\"fleet_fingerprint_match\": true",
+        ] {
+            assert!(j.contains(key), "missing {key} in:\n{j}");
+        }
+    }
 
     #[test]
     fn transient_json_shape_is_valid_enough() {

@@ -57,6 +57,7 @@ pub mod telemetry;
 pub mod trace;
 
 pub use stream::{StreamConfig, StreamSim, StreamTelemetry};
+pub use trace::{CouplingMatrix, CouplingSpec};
 
 use std::sync::Arc;
 
@@ -78,6 +79,14 @@ use trace::Scenario;
 /// (`tau_ms`, [40]) while the sink behind it drifts for minutes — the
 /// inertia that makes job-timescale transients worth modeling.
 pub const SINK_TAU_RATIO: f64 = 25.0;
+
+/// Extra headroom (°C) added to the LUT sweep's upper ambient bound when
+/// inter-device coupling is enabled: neighbor exhaust raises inlets beyond
+/// the trace + rack-offset envelope, and the per-device powers that size the
+/// real rise are not known until the kinds are built against this range.
+/// Generous by design — a too-high bound costs a few sweep points, a
+/// too-low one sends controllers to nominal rails mid-scenario.
+pub const COUPLING_LUT_HEADROOM_C: f64 = 6.0;
 
 /// One simulated FPGA unit in the fleet.
 #[derive(Clone, Debug)]
@@ -436,6 +445,18 @@ pub struct FleetConfig {
     /// Fault-injection knobs shared by the campaign's shmoo probes and the
     /// executor's per-job population draws.
     pub fault: FaultSpec,
+    /// Inter-device thermal coupling: how much of a busy device's exhaust
+    /// recirculates into its rack neighbors' inlets. Disabled by default
+    /// ([`trace::CouplingSpec::none`]) — disabled fleets run the exact
+    /// pre-coupling code paths and stay bit-identical to every prior result.
+    pub coupling: trace::CouplingSpec,
+    /// Planner lookahead horizon (ms): when > 0, placement scores each
+    /// candidate device by its *predicted mean junction temperature over
+    /// the lookahead window* (RC `predict` under the ambient forecast plus
+    /// the coupled neighbor rise) instead of the instantaneous estimate,
+    /// and short deferrals that bank thermal mass become admissible. 0
+    /// keeps the instantaneous planner bit-identical to prior results.
+    pub lookahead_ms: f64,
 }
 
 impl FleetConfig {
@@ -457,6 +478,8 @@ impl FleetConfig {
             rc_stages: 2,
             measured_guardbands: false,
             fault: FaultSpec::default(),
+            coupling: trace::CouplingSpec::none(),
+            lookahead_ms: 0.0,
         }
     }
 }
@@ -492,6 +515,9 @@ pub struct Fleet {
     /// Fault-injection context (always present; sampling at commanded rails
     /// is structurally fault-free, so the fixed-margin fleet pays nothing).
     pub faults: FleetFaults,
+    /// Inter-device coupling matrix over the roster (empty rows when
+    /// [`FleetConfig::coupling`] is disabled).
+    pub coupling: trace::CouplingMatrix,
 }
 
 impl Fleet {
@@ -500,13 +526,19 @@ impl Fleet {
         anyhow::ensure!(fcfg.jobs > 0, "need at least one job");
         anyhow::ensure!(!fcfg.benches.is_empty(), "need at least one benchmark");
         anyhow::ensure!(
-            !fcfg.transient || (1..=8).contains(&fcfg.rc_stages),
-            "transient mode needs 1..=8 RC stages (got {})",
+            !(fcfg.transient || fcfg.lookahead_ms > 0.0) || (1..=8).contains(&fcfg.rc_stages),
+            "transient/lookahead mode needs 1..=8 RC stages (got {})",
             fcfg.rc_stages
         );
         if let Err(reason) = fcfg.fault.validate() {
             anyhow::bail!("bad fleet fault spec: {reason}");
         }
+        fcfg.coupling.validate()?;
+        anyhow::ensure!(
+            fcfg.lookahead_ms.is_finite() && fcfg.lookahead_ms >= 0.0,
+            "lookahead_ms must be finite and >= 0 (got {})",
+            fcfg.lookahead_ms
+        );
 
         let (t_base, theta) = fcfg.scenario.corner();
         let mut base = base_in.clone();
@@ -520,8 +552,13 @@ impl Fleet {
         let lut_lo = (stats::min(&amb_temps) - 5.0).max(0.0);
         // cover the hottest junction any unit can reach (hottest inlet +
         // self-heating) so the controller never falls back to nominal rails
-        // mid-scenario
-        let lut_hi = stats::max(&amb_temps) + max_off + 25.0;
+        // mid-scenario; coupled fleets additionally see neighbor exhaust on
+        // the inlet, so reserve constant headroom for it (device powers are
+        // not known yet — kinds are built below against this very range)
+        let mut lut_hi = stats::max(&amb_temps) + max_off + 25.0;
+        if fcfg.coupling.enabled() {
+            lut_hi += COUPLING_LUT_HEADROOM_C;
+        }
 
         // job kinds: the expensive part (P&R + Algorithm-1 LUT sweep per
         // benchmark, plus the §III-D over-scaled sweep when enabled),
@@ -677,6 +714,8 @@ impl Fleet {
                 })
                 .collect();
 
+        let coupling = trace::CouplingMatrix::build(&fcfg.coupling, fcfg.devices);
+
         Ok(Fleet {
             cfg: fcfg,
             specs,
@@ -689,6 +728,7 @@ impl Fleet {
                 base: base_inj,
                 guardbands,
             },
+            coupling,
         })
     }
 

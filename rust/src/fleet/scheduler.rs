@@ -54,6 +54,22 @@ use crate::util::stats::interp1;
 /// hot racks, it never piles onto them.
 pub const MIGRATE_MAX_HOTTER_C: f64 = 2.0;
 
+/// Samples of the lookahead scoring window: the planner averages the
+/// predicted junction temperature at this many midpoints across
+/// `min(duration, lookahead)` instead of probing one instant.
+pub const LOOKAHEAD_SAMPLES: usize = 8;
+
+/// Thermal-mass banking: a lookahead planner may *defer* a job onto a busy
+/// device (queue behind it) instead of starting it on an idle one, but only
+/// when the wait is at most this fraction of the job's own duration — the
+/// banked margin must not be bought with unbounded latency.
+pub const BANKING_MAX_DELAY_FRACTION: f64 = 0.25;
+
+/// Thermal-mass banking fires only when the queued candidate's predicted
+/// temperature beats the best idle device by at least this much (°C);
+/// smaller gains never justify leaving an idle device idle.
+pub const BANKING_MIN_GAIN_C: f64 = 1.0;
+
 /// One design job in the stream.
 #[derive(Clone, Copy, Debug)]
 pub struct Job {
@@ -75,6 +91,11 @@ pub struct Assignment {
     /// True when the event pass moved this queued job off its original
     /// device onto one that freed up earlier.
     pub migrated: bool,
+    /// Inter-device coupled ambient rise (°C) at this device when the job
+    /// started — neighbor exhaust recirculating into its inlet. Exactly
+    /// `0.0` when the fleet's coupling is disabled (the executor then takes
+    /// the pre-coupling code path verbatim).
+    pub coupling_offset_c: f64,
 }
 
 /// Output of the event-driven planner.
@@ -145,14 +166,19 @@ struct PlanState<'a> {
     assignments: Vec<Assignment>,
     migrations: usize,
     /// Per-device RC networks for transient placement predictions
-    /// (`None` ⇒ instantaneous `T_amb + θ_JA·P̂`).
+    /// (`None` ⇒ instantaneous `T_amb + θ_JA·P̂`). Also built — regardless
+    /// of the execution plant — whenever the lookahead planner is active,
+    /// because its scoring window runs on `predict`.
     nets: Option<Vec<RcNetwork>>,
+    /// Estimated dissipated power (W) of each device's *running* job; only
+    /// meaningful where `busy_until[j] > now`, and only read there.
+    running_p_w: Vec<f64>,
 }
 
 impl<'a> PlanState<'a> {
     fn new(fleet: &'a Fleet) -> PlanState<'a> {
         let n = fleet.specs.len();
-        let nets = fleet.cfg.transient.then(|| {
+        let nets = (fleet.cfg.transient || fleet.cfg.lookahead_ms > 0.0).then(|| {
             fleet
                 .specs
                 .iter()
@@ -171,6 +197,7 @@ impl<'a> PlanState<'a> {
             assignments: Vec::with_capacity(fleet.jobs.len()),
             migrations: 0,
             nets,
+            running_p_w: vec![0.0; n],
         }
     }
 
@@ -206,7 +233,68 @@ impl<'a> PlanState<'a> {
         }
     }
 
+    /// Coupled ambient rise (°C) at `device` from the neighbors that are
+    /// still running at `at_ms`. `running_p_w` is only consulted where
+    /// `busy_until` proves the slot busy, so stale entries never leak.
+    fn coupled_rise_c(&self, device: usize, at_ms: f64) -> f64 {
+        self.fleet.coupling.rise_with(device, |j| {
+            if self.busy_until[j] > at_ms + 1e-9 {
+                self.running_p_w[j]
+            } else {
+                0.0
+            }
+        })
+    }
+
+    /// Placement score of `device` for `kind` starting at `at_ms`.
+    ///
+    /// Without a lookahead horizon this *is* [`PlanState::t_pred`] — the
+    /// instantaneous planner stays bit-identical to every prior result (and
+    /// deliberately coupling-blind: it is the uncoupled baseline the bench
+    /// compares against). With `lookahead_ms > 0` the score is the mean
+    /// predicted junction temperature over `min(duration, lookahead)`:
+    /// [`LOOKAHEAD_SAMPLES`] midpoint samples of the ambient forecast plus
+    /// the coupled neighbor rise (who is still running at each sample falls
+    /// out of `busy_until`), each pushed through the device RC network's
+    /// `predict` — a device that is warm now but about to cool (a neighbor
+    /// finishing, a heat wave passing its rack later) outranks one that is
+    /// cool now but heating.
+    fn t_score(&self, device: usize, kind: &JobKind, at_ms: f64, run_ms: f64) -> f64 {
+        let lookahead = self.fleet.cfg.lookahead_ms;
+        if lookahead <= 0.0 {
+            return self.t_pred(device, kind, at_ms, run_ms);
+        }
+        let spec = &self.fleet.specs[device];
+        let p = kind.power_estimate() * spec.power_scale;
+        let win_ms = run_ms.min(lookahead).max(1.0);
+        let coupled = self.fleet.cfg.coupling.enabled();
+        let mut acc_c = 0.0;
+        for s in 0..LOOKAHEAD_SAMPLES {
+            let dt_ms = (s as f64 + 0.5) / LOOKAHEAD_SAMPLES as f64 * win_ms;
+            let at = at_ms + dt_ms;
+            let mut amb_c = interp1(&self.times, &self.temps, at) + spec.rack_offset_c;
+            if coupled {
+                amb_c += self.coupled_rise_c(device, at);
+            }
+            acc_c += match &self.nets {
+                Some(nets) => nets[device].predict(p, amb_c, dt_ms.max(1.0)),
+                None => amb_c + spec.theta_ja * p,
+            };
+        }
+        acc_c / LOOKAHEAD_SAMPLES as f64
+    }
+
     fn start(&mut self, device: usize, job: Job, t_ms: f64, migrated: bool) {
+        // the coupled inlet rise this job starts under (its neighbors' view
+        // of it updates via `running_p_w` below); exactly 0.0 when disabled
+        let coupling_offset_c = if self.fleet.cfg.coupling.enabled() {
+            self.coupled_rise_c(device, t_ms)
+        } else {
+            0.0
+        };
+        let kind = &self.fleet.kinds[job.kind];
+        self.running_p_w[device] =
+            kind.power_estimate() * self.fleet.specs[device].power_scale;
         let end = t_ms + job.duration_ms;
         self.busy_until[device] = end;
         if self.committed_until[device] < end {
@@ -219,6 +307,7 @@ impl<'a> PlanState<'a> {
             start_ms: t_ms,
             queue_ms: t_ms - job.arrival_ms,
             migrated,
+            coupling_offset_c,
         });
     }
 
@@ -234,7 +323,7 @@ impl<'a> PlanState<'a> {
         let mut best_queued: Option<(f64, f64, usize)> = None;
         for spec in fleet.specs.iter().filter(|s| s.grid_edge >= edge) {
             if self.idle(spec.id, t_ms) {
-                let tp = self.t_pred(spec.id, kind, t_ms, job.duration_ms);
+                let tp = self.t_score(spec.id, kind, t_ms, job.duration_ms);
                 let better = match best_idle {
                     None => true,
                     Some((b_tp, _)) => tp < b_tp - 1e-12,
@@ -244,7 +333,7 @@ impl<'a> PlanState<'a> {
                 }
             } else {
                 let start = self.committed_until[spec.id].max(t_ms);
-                let tp = self.t_pred(spec.id, kind, start, job.duration_ms);
+                let tp = self.t_score(spec.id, kind, start, job.duration_ms);
                 let better = match best_queued {
                     None => true,
                     Some((b_start, b_tp, _)) => {
@@ -258,6 +347,20 @@ impl<'a> PlanState<'a> {
                 if better {
                     best_queued = Some((start, tp, spec.id));
                 }
+            }
+        }
+        // thermal-mass banking (lookahead mode only): leave the best idle
+        // device idle — banking its cold thermal mass for what's coming —
+        // and queue behind a busy one instead, when the wait is a small
+        // fraction of the job and the queued slot is predicted meaningfully
+        // cooler over the horizon. Off the lookahead path this never fires,
+        // so the instantaneous planner is untouched.
+        if let (Some((idle_tp, _)), Some((q_start, q_tp, _))) = (best_idle, best_queued) {
+            if self.fleet.cfg.lookahead_ms > 0.0
+                && q_start - t_ms <= BANKING_MAX_DELAY_FRACTION * job.duration_ms
+                && q_tp < idle_tp - BANKING_MIN_GAIN_C
+            {
+                best_idle = None;
             }
         }
         if let Some((_, device)) = best_idle {
@@ -306,8 +409,8 @@ impl<'a> PlanState<'a> {
             // thermal guard: never migrate onto a meaningfully hotter unit
             // (in transient mode both sides are end-of-job *predictions*,
             // so the ≤ 2 °C rule compares what the job will actually see)
-            let tp_dest = self.t_pred(device, kind, t_ms, job.duration_ms);
-            let tp_src = self.t_pred(src, kind, src_start, job.duration_ms);
+            let tp_dest = self.t_score(device, kind, t_ms, job.duration_ms);
+            let tp_src = self.t_score(src, kind, src_start, job.duration_ms);
             if tp_dest > tp_src + MIGRATE_MAX_HOTTER_C {
                 continue;
             }
@@ -457,9 +560,17 @@ fn simulate(
 fn run_one(fleet: &Fleet, a: &Assignment) -> JobResult {
     let spec = &fleet.specs[a.device];
     let kind = &fleet.kinds[a.job.kind];
+    // coupled fleets run each job at its start-time coupled inlet (the
+    // planner's committed offset); disabled fleets bind the exact
+    // pre-coupling value so the executed physics stays bit-identical
+    let offset_c = if fleet.cfg.coupling.enabled() {
+        spec.rack_offset_c + a.coupling_offset_c
+    } else {
+        spec.rack_offset_c
+    };
     let local = trace::window(
         &fleet.ambient,
-        spec.rack_offset_c,
+        offset_c,
         a.start_ms,
         a.start_ms + a.job.duration_ms,
         5_000.0,
@@ -547,6 +658,7 @@ fn run_one(fleet: &Fleet, a: &Assignment) -> JobResult {
         injected_faults,
         peak_t_junct_c: dyn_stats.peak_t_junct,
         overshoot_c: dyn_stats.peak_overshoot_c,
+        coupling_offset_c: a.coupling_offset_c,
     }
 }
 
@@ -601,6 +713,7 @@ pub fn plan_legacy(fleet: &Fleet) -> Vec<Assignment> {
             start_ms: start,
             queue_ms: start - job.arrival_ms,
             migrated: false,
+            coupling_offset_c: 0.0,
         });
     }
     out

@@ -66,6 +66,13 @@ pub struct JobResult {
     /// inertia — die-scale (seconds of τ) under the default first-order
     /// plant, minutes-scale under the transient RC plant's heatsink pole.
     pub overshoot_c: f64,
+    /// Coupled inlet rise (°C) the job started under — neighbor exhaust
+    /// recirculating into its device's inlet. Exactly `0.0` in uncoupled
+    /// fleets. Deliberately *not* folded into the fingerprint: disabled
+    /// coupling must stay fingerprint-equal to every pre-coupling run, and
+    /// when coupling is on the rise already moves every fingerprinted
+    /// energy/temperature figure.
+    pub coupling_offset_c: f64,
 }
 
 impl JobResult {
@@ -166,6 +173,10 @@ pub struct FleetTelemetry {
     pub unplaceable: usize,
     /// Hottest per-job transient overshoot seen fleet-wide (°C).
     pub peak_overshoot_c: f64,
+    /// Mean coupled inlet rise over all jobs (°C; 0 in uncoupled fleets).
+    pub coupling_offset_mean_c: f64,
+    /// Largest coupled inlet rise any job started under (°C).
+    pub coupling_offset_max_c: f64,
     /// First arrival → last completion (virtual ms).
     pub makespan_ms: f64,
     /// Completed jobs per virtual hour.
@@ -231,6 +242,15 @@ impl FleetTelemetry {
         };
         let quality_min = jobs.iter().map(|r| r.quality).fold(1.0f64, f64::min);
         let peak_overshoot_c = jobs.iter().map(|r| r.overshoot_c).fold(0.0f64, f64::max);
+        let coupling_offset_mean_c = if jobs.is_empty() {
+            0.0
+        } else {
+            jobs.iter().map(|r| r.coupling_offset_c).sum::<f64>() / jobs.len() as f64
+        };
+        let coupling_offset_max_c = jobs
+            .iter()
+            .map(|r| r.coupling_offset_c)
+            .fold(0.0f64, f64::max);
         let first_arrival = jobs
             .iter()
             .map(|r| r.arrival_ms)
@@ -265,6 +285,8 @@ impl FleetTelemetry {
             quality_mean,
             quality_min,
             peak_overshoot_c,
+            coupling_offset_mean_c,
+            coupling_offset_max_c,
             migrations,
             unplaceable: 0,
             makespan_ms,
@@ -376,6 +398,7 @@ mod tests {
             injected_faults: 0,
             peak_t_junct_c: 50.0,
             overshoot_c: 0.0,
+            coupling_offset_c: 0.0,
         }
     }
 

@@ -6,6 +6,7 @@
 //! fleet run is bit-reproducible: same seed → same traces → same schedule →
 //! same telemetry, regardless of worker-thread count.
 
+use crate::flow::FlowError;
 use crate::util::rng::Xoshiro256;
 use crate::util::stats::interp1;
 
@@ -158,6 +159,181 @@ pub fn job_arrivals(s: Scenario, jobs: usize, horizon_ms: f64, seed: u64) -> Vec
         .collect()
 }
 
+/// Inter-device thermal-coupling specification: how much of a busy device's
+/// dissipated power recirculates into its rack neighbors' inlet air.
+///
+/// The physical picture is exhaust recirculation in a rack: device `j`
+/// dissipating `P_j` watts warms the inlet of nearby slot `i` by
+/// `k(i, j) · P_j` where `k` falls off geometrically with slot distance.
+/// [`CouplingSpec::none`] disables the mechanism entirely — disabled runs
+/// take the exact pre-coupling code paths and stay bit-identical to them.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CouplingSpec {
+    /// Fraction of a device's dissipated power that recirculates into its
+    /// neighbors' inlets, split across both sides. `0` disables coupling;
+    /// the row-sum bound of [`CouplingMatrix`] needs it strictly below 1.
+    pub exhaust_fraction: f64,
+    /// Air-path thermal resistance (°C/W): inlet-temperature rise per watt
+    /// of recirculated exhaust power.
+    pub theta_air_c_per_w: f64,
+    /// Coupling radius in rack slots: each device couples to up to this
+    /// many neighbors on each side.
+    pub neighbors: usize,
+    /// Geometric falloff per extra slot of distance, in `(0, 1]`.
+    pub decay: f64,
+}
+
+impl CouplingSpec {
+    /// No coupling at all: every run is bit-identical to a fleet built
+    /// before the coupling mechanism existed.
+    pub fn none() -> CouplingSpec {
+        CouplingSpec {
+            exhaust_fraction: 0.0,
+            theta_air_c_per_w: 1.0,
+            neighbors: 1,
+            decay: 0.5,
+        }
+    }
+
+    /// Rack-scale defaults at a given exhaust fraction: 2-slot radius,
+    /// halving per slot, and an air-path resistance sized so neighbor rises
+    /// are on the order of a degree at the fleet's ~0.2 W device powers.
+    pub fn rack(exhaust_fraction: f64) -> CouplingSpec {
+        CouplingSpec {
+            exhaust_fraction,
+            theta_air_c_per_w: 30.0,
+            neighbors: 2,
+            decay: 0.5,
+        }
+    }
+
+    /// Whether the mechanism is active. Disabled specs must never perturb a
+    /// result: callers branch to the exact pre-coupling code on `false`.
+    pub fn enabled(&self) -> bool {
+        self.exhaust_fraction > 0.0
+    }
+
+    /// Validate the spec before any build work happens.
+    pub fn validate(&self) -> Result<(), FlowError> {
+        let bad = |reason: String| Err(FlowError::BadCouplingSpec { reason });
+        if !self.exhaust_fraction.is_finite() || !(0.0..1.0).contains(&self.exhaust_fraction) {
+            return bad(format!(
+                "exhaust_fraction must be finite in [0, 1) (got {})",
+                self.exhaust_fraction
+            ));
+        }
+        if !self.theta_air_c_per_w.is_finite()
+            || self.theta_air_c_per_w <= 0.0
+            || self.theta_air_c_per_w > 200.0
+        {
+            return bad(format!(
+                "theta_air_c_per_w must be finite in (0, 200] (got {})",
+                self.theta_air_c_per_w
+            ));
+        }
+        if self.neighbors == 0 || self.neighbors > 8 {
+            return bad(format!(
+                "neighbors must be 1..=8 (got {})",
+                self.neighbors
+            ));
+        }
+        if !self.decay.is_finite() || self.decay <= 0.0 || self.decay > 1.0 {
+            return bad(format!(
+                "decay must be finite in (0, 1] (got {})",
+                self.decay
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Sparse inter-device thermal coupling matrix over `n` rack slots.
+///
+/// `rows[i]` holds the *incoming* couplings of slot `i`: entries
+/// `(j, k_c_per_w)` such that slot `i`'s ambient rises by
+/// `Σ k(i, j) · P_j` over the devices `j` currently dissipating `P_j`.
+///
+/// Construction guarantees two properties the physics tests pin:
+///
+/// * **Symmetry** — `k(i, j) = k(j, i)`: both directions use the same
+///   distance weight and the same *constant* normalizer, so the matrix is
+///   symmetric even at the rack edges.
+/// * **Row-sum bound** — the power fraction a slot redistributes,
+///   `Σ_j k(i, j) / theta_air`, is at most `exhaust_fraction < 1`
+///   (edge slots recirculate strictly less — lost exhaust leaves the
+///   rack). Coupling therefore redistributes heat without creating it,
+///   and the implied fixed point of mutual heating exists because the
+///   per-watt feedback gain is below 1.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CouplingMatrix {
+    n: usize,
+    rows: Vec<Vec<(usize, f64)>>,
+}
+
+impl CouplingMatrix {
+    /// Build the matrix for `n` slots. A disabled spec (or a single slot)
+    /// yields an all-empty matrix whose `rise_with` is exactly `0.0`.
+    pub fn build(spec: &CouplingSpec, n: usize) -> CouplingMatrix {
+        let mut rows: Vec<Vec<(usize, f64)>> = vec![Vec::new(); n];
+        if spec.enabled() && n > 1 {
+            // distance weights w_d = decay^(d-1), normalized by the full
+            // two-sided weight mass so the normalizer is position-free
+            // (that constant is what makes k symmetric at the edges)
+            let radius = spec.neighbors;
+            let mass: f64 = (1..=radius)
+                .map(|d| spec.decay.powi(d as i32 - 1))
+                .sum::<f64>()
+                * 2.0;
+            for (i, row) in rows.iter_mut().enumerate() {
+                for d in 1..=radius {
+                    let w = spec.decay.powi(d as i32 - 1) / mass;
+                    let k_c_per_w = spec.theta_air_c_per_w * spec.exhaust_fraction * w;
+                    if i >= d {
+                        row.push((i - d, k_c_per_w));
+                    }
+                    if i + d < n {
+                        row.push((i + d, k_c_per_w));
+                    }
+                }
+                row.sort_by_key(|&(j, _)| j);
+            }
+        }
+        CouplingMatrix { n, rows }
+    }
+
+    /// Number of slots the matrix covers.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Incoming coupling entries `(j, k_c_per_w)` of slot `i`.
+    pub fn row(&self, i: usize) -> &[(usize, f64)] {
+        &self.rows[i]
+    }
+
+    /// The coupling coefficient `k(i, j)` (°C per watt dissipated at `j`).
+    pub fn entry(&self, i: usize, j: usize) -> f64 {
+        self.rows[i]
+            .iter()
+            .find(|&&(jj, _)| jj == j)
+            .map_or(0.0, |&(_, k)| k)
+    }
+
+    /// Ambient rise (°C) at slot `i` given per-slot dissipated powers via
+    /// the `p_of` lookup. Entries are visited in slot order, so the float
+    /// accumulation order is deterministic.
+    pub fn rise_with(&self, i: usize, p_of: impl Fn(usize) -> f64) -> f64 {
+        self.rows[i]
+            .iter()
+            .map(|&(j, k_c_per_w)| k_c_per_w * p_of(j))
+            .sum()
+    }
+}
+
 /// Slice a device's view of the shared trace for a job window: sample
 /// `base + offset` every `step_ms` across `[t0, t1]` and rebase times to 0.
 /// `interp1` clamps at the trace ends, so windows that run past the horizon
@@ -238,6 +414,106 @@ mod tests {
         // top of rack clearly hotter than bottom despite jitter
         assert!(offs[7] > offs[0] + 4.0, "{offs:?}");
         assert!(offs.iter().all(|&o| (0.0..10.0).contains(&o)));
+    }
+
+    #[test]
+    fn coupling_spec_validation_rejects_bad_knobs() {
+        assert!(CouplingSpec::none().validate().is_ok());
+        assert!(CouplingSpec::rack(0.4).validate().is_ok());
+        let bad = [
+            CouplingSpec {
+                exhaust_fraction: 1.0,
+                ..CouplingSpec::rack(0.4)
+            },
+            CouplingSpec {
+                exhaust_fraction: f64::NAN,
+                ..CouplingSpec::rack(0.4)
+            },
+            CouplingSpec {
+                theta_air_c_per_w: 0.0,
+                ..CouplingSpec::rack(0.4)
+            },
+            CouplingSpec {
+                neighbors: 0,
+                ..CouplingSpec::rack(0.4)
+            },
+            CouplingSpec {
+                neighbors: 9,
+                ..CouplingSpec::rack(0.4)
+            },
+            CouplingSpec {
+                decay: 0.0,
+                ..CouplingSpec::rack(0.4)
+            },
+            CouplingSpec {
+                decay: 1.5,
+                ..CouplingSpec::rack(0.4)
+            },
+        ];
+        for spec in bad {
+            assert!(
+                matches!(spec.validate(), Err(FlowError::BadCouplingSpec { .. })),
+                "{spec:?} should have been rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn coupling_matrix_is_symmetric_with_bounded_rows() {
+        let spec = CouplingSpec::rack(0.6);
+        let m = CouplingMatrix::build(&spec, 9);
+        assert_eq!(m.len(), 9);
+        for i in 0..9 {
+            for j in 0..9 {
+                assert_eq!(m.entry(i, j).to_bits(), m.entry(j, i).to_bits());
+            }
+            // self-coupling never appears, nothing outside the radius does
+            assert_eq!(m.entry(i, i), 0.0);
+            // redistributed power fraction bounded by the exhaust fraction
+            let frac: f64 = m.row(i).iter().map(|&(_, k)| k).sum::<f64>()
+                / spec.theta_air_c_per_w;
+            assert!(frac <= spec.exhaust_fraction + 1e-12, "row {i}: {frac}");
+            assert!(frac > 0.0);
+        }
+        // interior rows hit the bound exactly; edge rows fall short (lost
+        // exhaust leaves the rack)
+        let interior: f64 = m.row(4).iter().map(|&(_, k)| k).sum();
+        let edge: f64 = m.row(0).iter().map(|&(_, k)| k).sum();
+        assert!((interior / spec.theta_air_c_per_w - spec.exhaust_fraction).abs() < 1e-12);
+        assert!(edge < interior);
+    }
+
+    #[test]
+    fn disabled_coupling_builds_an_empty_matrix() {
+        let m = CouplingMatrix::build(&CouplingSpec::none(), 6);
+        for i in 0..6 {
+            assert!(m.row(i).is_empty());
+            assert_eq!(m.rise_with(i, |_| 10.0), 0.0);
+        }
+        // a single slot has no neighbors to couple to
+        let one = CouplingMatrix::build(&CouplingSpec::rack(0.5), 1);
+        assert!(one.row(0).is_empty());
+    }
+
+    #[test]
+    fn coupling_rise_tracks_neighbor_power() {
+        let spec = CouplingSpec {
+            exhaust_fraction: 0.5,
+            theta_air_c_per_w: 10.0,
+            neighbors: 2,
+            decay: 0.5,
+        };
+        let m = CouplingMatrix::build(&spec, 5);
+        // nearest neighbors weigh twice the next ring (decay 0.5)
+        assert!((m.entry(2, 1) / m.entry(2, 0) - 2.0).abs() < 1e-12);
+        // rise is linear in neighbor power and ignores the slot itself
+        let r1 = m.rise_with(2, |j| if j == 1 { 1.0 } else { 0.0 });
+        let r2 = m.rise_with(2, |j| if j == 1 { 2.0 } else { 0.0 });
+        assert!((r2 - 2.0 * r1).abs() < 1e-12);
+        assert_eq!(m.rise_with(2, |j| if j == 2 { 5.0 } else { 0.0 }), 0.0);
+        // full-rack uniform power: interior rise = theta_air · ef · P
+        let uniform = m.rise_with(2, |_| 0.2);
+        assert!((uniform - 10.0 * 0.5 * 0.2).abs() < 1e-12);
     }
 
     #[test]

@@ -68,6 +68,12 @@ pub enum FlowError {
     /// non-positive rate / duration / horizon, deadline slack below 1, or
     /// a negative power cap.
     BadStreamSpec { reason: String },
+    /// An inter-device thermal-coupling specification that cannot produce a
+    /// bounded coupling matrix: exhaust fraction outside `[0, 1)` (the
+    /// row-sum bound needs it below 1 for the mutual-heating fixed point to
+    /// exist), non-positive air-path resistance, a zero or absurd neighbor
+    /// radius, or a decay outside `(0, 1]`.
+    BadCouplingSpec { reason: String },
 }
 
 impl fmt::Display for FlowError {
@@ -125,6 +131,9 @@ impl fmt::Display for FlowError {
             FlowError::BadStreamSpec { reason } => {
                 write!(f, "bad stream spec: {reason}")
             }
+            FlowError::BadCouplingSpec { reason } => {
+                write!(f, "bad coupling spec: {reason}")
+            }
         }
     }
 }
@@ -167,6 +176,10 @@ mod tests {
             reason: "racks must be 1..=4096 (got 0)".into(),
         };
         assert!(e.to_string().contains("got 0"));
+        let e = FlowError::BadCouplingSpec {
+            reason: "exhaust_fraction must be finite in [0, 1) (got 1)".into(),
+        };
+        assert!(e.to_string().contains("got 1"));
     }
 
     #[test]

@@ -29,3 +29,6 @@ pub use session::{
 
 // the fault-injection knobs ride on `ShmooRequest`, so re-export them here
 pub use crate::faults::FaultSpec;
+// the thermal-coupling knobs ride on `StreamRequest` (and the batch
+// fleet's `FleetConfig`), so re-export them here too
+pub use crate::fleet::trace::CouplingSpec;

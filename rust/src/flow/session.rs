@@ -67,7 +67,7 @@ use crate::faults::{
     self, AccuracyPoint, BramMap, FaultSpec, GuardbandStore, Injector, Protection, ShmooResult,
 };
 use crate::fleet::stream::{StreamConfig, StreamSim, StreamTelemetry};
-use crate::fleet::trace::Scenario;
+use crate::fleet::trace::{CouplingSpec, Scenario};
 use crate::flow::alg1::{self, Alg1Result};
 use crate::flow::alg2::{self, Alg2Result};
 use crate::flow::design::{Design, Effort};
@@ -468,6 +468,12 @@ pub struct StreamRequest {
     pub workers: usize,
     /// Ambient step of the per-design LUT sweep (°C).
     pub lut_step_c: f64,
+    /// Inter-rack thermal coupling (exhaust recirculation between
+    /// neighbors); [`CouplingSpec::none`] disables it bit-exactly.
+    pub coupling: CouplingSpec,
+    /// Autoscaler predictive-ranking horizon (virtual ms); 0 keeps the
+    /// legacy instantaneous rack ranking.
+    pub lookahead_ms: f64,
     pub effort: Option<Effort>,
 }
 
@@ -501,6 +507,8 @@ impl StreamRequest {
             seed: 0x5742_EA5E,
             workers: 1,
             lut_step_c: 12.0,
+            coupling: CouplingSpec::none(),
+            lookahead_ms: 0.0,
             effort: None,
         }
     }
@@ -521,6 +529,8 @@ impl StreamRequest {
             deadline_slack: self.deadline_slack,
             power_cap_w: self.power_cap_w,
             lut_step_c: self.lut_step_c,
+            coupling: self.coupling,
+            lookahead_ms: self.lookahead_ms,
         }
     }
 }
@@ -1677,6 +1687,26 @@ mod tests {
             s.stream(StreamRequest {
                 arrival_rate_hz: 1e6,
                 horizon_ms: 1e9,
+                ..StreamRequest::new("mkPktMerge")
+            }),
+            Err(FlowError::BadStreamSpec { .. })
+        ));
+        // an exhaust fraction of 1 has no bounded mutual-heating fixed
+        // point — rejected with the coupling-specific typed error
+        assert!(matches!(
+            s.stream(StreamRequest {
+                coupling: CouplingSpec {
+                    exhaust_fraction: 1.0,
+                    ..CouplingSpec::rack(0.2)
+                },
+                ..StreamRequest::new("mkPktMerge")
+            }),
+            Err(FlowError::BadCouplingSpec { .. })
+        ));
+        // a negative lookahead horizon is a stream-spec error
+        assert!(matches!(
+            s.stream(StreamRequest {
+                lookahead_ms: -1.0,
                 ..StreamRequest::new("mkPktMerge")
             }),
             Err(FlowError::BadStreamSpec { .. })

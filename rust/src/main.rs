@@ -12,11 +12,14 @@
 //! thermovolt serve  --stream [--bench <b>] [--scenario <name>] [--racks N]
 //!                   [--devices-per-rack N] [--rate HZ] [--duration-s T]
 //!                   [--deadline-slack X] [--power-cap W] [--horizon-s T]
-//!                   [--seed S] [--workers W]
+//!                   [--seed S] [--workers W] [--coupling F] [--lookahead-s T]
 //!                   online streaming fleet: open arrivals with SLA
 //!                   deadlines, admission control (shed/degrade), rack
 //!                   autoscaling under an optional power cap; the N-worker
-//!                   run is replayed serially and fingerprint-checked
+//!                   run is replayed serially and fingerprint-checked.
+//!                   --coupling F couples rack neighbors at exhaust
+//!                   fraction F; --lookahead-s T ranks racks by predicted
+//!                   temperature over the next T seconds
 //! thermovolt shmoo  --bench <b> [--devices N] [--seed S] [--workers W]
 //!                   [--corners K] [--t-lo T] [--t-hi T] [--out F]
 //!                   per-device undervolt shmoo: learns measured guardbands
@@ -26,17 +29,24 @@
 //!                   [--seed S] [--workers W] [--benches a,b] [--horizon-s T]
 //!                   [--policy static|dynamic|overscaled] [--overscale-rate R]
 //!                   [--transient] [--rc-stages N] [--measured-guardbands]
+//!                   [--coupling F] [--lookahead-s T]
 //!                                                 datacenter fleet simulation
 //!                                                 (RC thermal transients;
-//!                                                 measured per-unit margins)
+//!                                                 measured per-unit margins;
+//!                                                 --coupling couples rack
+//!                                                 neighbors, --lookahead-s
+//!                                                 places on predicted-
+//!                                                 coolest-over-horizon)
 //! thermovolt bench  [--quick] [--bench <b>] [--out F] [--fleet-out F]
 //!                   [--transient-out F] [--faults-out F] [--stream-out F]
+//!                   [--coupling-out F]
 //!                   perf harness: Alg1 / Alg2 (batched vs --naive path,
 //!                   bit-checked) / LUT build / fleet; emits
 //!                   BENCH_search.json + a ≥2048-device BENCH_fleet.json +
 //!                   the thermal-inertia sweep BENCH_transient.json + the
 //!                   fault-injection/guardband sweep BENCH_faults.json +
-//!                   the streaming-fleet bench BENCH_stream.json
+//!                   the streaming-fleet bench BENCH_stream.json + the
+//!                   thermal co-scheduling bench BENCH_coupling.json
 //! thermovolt e2e    [--full]                      full-pipeline headline run
 //! thermovolt lint   [--json] [--graph dot|json] [--root DIR] [--config FILE]
 //!                   detlint: determinism & correctness static analysis
@@ -58,8 +68,8 @@ use thermovolt::fleet::telemetry::FleetTelemetry;
 use thermovolt::fleet::trace::Scenario;
 use thermovolt::fleet::{Fleet, FleetConfig};
 use thermovolt::flow::{
-    Alg1Request, Alg2Request, BaselineRequest, Effort, Fidelity, FlowSession, LutRequest,
-    LutSpec, OverscaleRequest, ShmooRequest, StreamRequest,
+    Alg1Request, Alg2Request, BaselineRequest, CouplingSpec, Effort, Fidelity, FlowSession,
+    LutRequest, LutSpec, OverscaleRequest, ShmooRequest, StreamRequest,
 };
 use thermovolt::report;
 use thermovolt::synth;
@@ -267,6 +277,12 @@ fn run(args: &Args) -> Result<()> {
                 req.horizon_ms = args.opt_f64("horizon-s", req.horizon_ms / 1e3) * 1e3;
                 req.seed = args.opt_u64("seed", req.seed);
                 req.workers = args.opt_usize("workers", 4).max(1);
+                let coupling_f = args.opt_f64("coupling", 0.0);
+                if coupling_f > 0.0 {
+                    req.coupling = CouplingSpec::rack(coupling_f);
+                }
+                req.lookahead_ms =
+                    args.opt_f64("lookahead-s", req.lookahead_ms / 1e3) * 1e3;
                 req.effort = Some(effort);
                 let (t_base, theta) = scenario.corner();
                 println!(
@@ -549,6 +565,15 @@ fn run(args: &Args) -> Result<()> {
             // build time and schedule with learned margins instead of the
             // fixed sensor margin
             fcfg.measured_guardbands = args.flag("measured-guardbands");
+            // --coupling F: couple rack neighbors through exhaust recirculation
+            // at exhaust fraction F; --lookahead-s T: place each job on the
+            // device predicted coolest over the next T seconds (RC forecast)
+            // instead of the instantaneous estimate
+            let coupling_f = args.opt_f64("coupling", 0.0);
+            if coupling_f > 0.0 {
+                fcfg.coupling = CouplingSpec::rack(coupling_f);
+            }
+            fcfg.lookahead_ms = args.opt_f64("lookahead-s", fcfg.lookahead_ms / 1e3) * 1e3;
             if let Some(p) = args.opt("policy") {
                 fcfg.policy = PolicyKind::from_name(p).ok_or_else(|| {
                     anyhow::anyhow!("unknown policy `{p}` (one of: static, dynamic, overscaled)")
@@ -645,6 +670,21 @@ fn run(args: &Args) -> Result<()> {
                 println!(
                     "transient plant: peak overshoot {:.2} C above the instantaneous steady state",
                     tel.peak_overshoot_c
+                );
+            }
+            if fleet.cfg.coupling.enabled() {
+                println!(
+                    "neighbor coupling: inlet rise mean {:.2} C / max {:.2} C over executed jobs{}",
+                    tel.coupling_offset_mean_c,
+                    tel.coupling_offset_max_c,
+                    if fleet.cfg.lookahead_ms > 0.0 {
+                        format!(
+                            " (lookahead {:.0} s)",
+                            fleet.cfg.lookahead_ms / 1e3
+                        )
+                    } else {
+                        String::new()
+                    }
                 );
             }
             if fleet.cfg.measured_guardbands {
@@ -745,6 +785,23 @@ fn run(args: &Args) -> Result<()> {
                 st.capped_degraded,
                 st.capped_sla_violations,
                 st.capped_cap_bound_ticks
+            );
+            // thermal co-scheduling bench: coupled vs uncoupled fleet and the
+            // instantaneous vs lookahead planner/autoscaler on a heat wave
+            // → BENCH_coupling.json
+            let coupling_out =
+                Path::new(args.opt_or("coupling-out", "BENCH_coupling.json")).to_path_buf();
+            let cp = thermovolt::benchkit::run_coupling(&cfg, &opts, &coupling_out)?;
+            println!(
+                "coupling bench: coupling {:+.1} J dyn, lookahead {:+.1} J dyn / {} → {} violations; stream SLA {} → {} (fingerprints serial==parallel: fleet {}, stream {})",
+                cp.delta_coupling_energy_j,
+                cp.delta_lookahead_energy_j,
+                cp.coupled_violations,
+                cp.lookahead_violations,
+                cp.stream_instant_sla,
+                cp.stream_lookahead_sla,
+                cp.fleet_fingerprint_match,
+                cp.stream_fingerprint_match
             );
         }
         "e2e" => {

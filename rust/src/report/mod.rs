@@ -741,6 +741,69 @@ pub fn transient_table(instant: &FleetTelemetry, transient: &FleetTelemetry) -> 
     tb
 }
 
+/// Thermal co-scheduling comparison: the same coupled fleet planned by
+/// the instantaneous (coupling-blind) planner and by the lookahead
+/// planner (`thermovolt bench`'s coupling sweep prints and emits this
+/// next to `BENCH_coupling.json`).
+pub fn coupling_table(instant: &FleetTelemetry, lookahead: &FleetTelemetry) -> Table {
+    let mut tb = Table::new(
+        "Coupling — instantaneous vs lookahead planner (same coupled fleet, same jobs)",
+        &["metric", "instantaneous", "lookahead", "delta"],
+    );
+    let d = |a: f64, b: f64| format!("{:+.3}", b - a);
+    tb.row(vec![
+        "E_static (J)".into(),
+        f2(instant.energy_static_j),
+        f2(lookahead.energy_static_j),
+        d(instant.energy_static_j, lookahead.energy_static_j),
+    ]);
+    tb.row(vec![
+        "E_dyn (J)".into(),
+        f2(instant.energy_dyn_j),
+        f2(lookahead.energy_dyn_j),
+        d(instant.energy_dyn_j, lookahead.energy_dyn_j),
+    ]);
+    tb.row(vec![
+        "saving_dyn (%)".into(),
+        pct(instant.saving()),
+        pct(lookahead.saving()),
+        d(instant.saving() * 100.0, lookahead.saving() * 100.0),
+    ]);
+    tb.row(vec![
+        "violations".into(),
+        instant.violations.to_string(),
+        lookahead.violations.to_string(),
+        format!("{:+}", lookahead.violations as i64 - instant.violations as i64),
+    ]);
+    tb.row(vec![
+        "peak T_junct (C)".into(),
+        f1(instant
+            .jobs
+            .iter()
+            .map(|j| j.peak_t_junct_c)
+            .fold(0.0f64, f64::max)),
+        f1(lookahead
+            .jobs
+            .iter()
+            .map(|j| j.peak_t_junct_c)
+            .fold(0.0f64, f64::max)),
+        "-".into(),
+    ]);
+    tb.row(vec![
+        "coupling rise mean (C)".into(),
+        f2(instant.coupling_offset_mean_c),
+        f2(lookahead.coupling_offset_mean_c),
+        d(instant.coupling_offset_mean_c, lookahead.coupling_offset_mean_c),
+    ]);
+    tb.row(vec![
+        "coupling rise max (C)".into(),
+        f2(instant.coupling_offset_max_c),
+        f2(lookahead.coupling_offset_max_c),
+        d(instant.coupling_offset_max_c, lookahead.coupling_offset_max_c),
+    ]);
+    tb
+}
+
 /// Streaming-service run summary (`thermovolt serve --stream`): offered /
 /// admitted / shed / degraded traffic, SLA wait-and-sojourn percentiles
 /// straight from the streaming quantile sketches (no job vector exists to
@@ -837,6 +900,15 @@ mod tests {
         let row40 = a.rows.iter().find(|r| r[0] == "40").unwrap();
         let v: f64 = row40[sb_col].parse().unwrap();
         assert!((0.83..=0.87).contains(&v), "SB@40 = {v}");
+    }
+
+    #[test]
+    fn coupling_table_has_one_row_per_metric() {
+        let a = FleetTelemetry::aggregate(2, vec![]);
+        let b = FleetTelemetry::aggregate(2, vec![]);
+        let t = coupling_table(&a, &b);
+        assert_eq!(t.rows.len(), 7);
+        assert!(t.render().contains("coupling rise mean"));
     }
 
     #[test]

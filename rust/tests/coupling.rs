@@ -1,0 +1,483 @@
+//! Physics property tests pinning the rack-scale thermal-coupling layer:
+//! the sparse coupling matrix (symmetry, row-sum energy bound — coupling
+//! redistributes heat, it never creates it), monotonicity (more coupling
+//! never lowers the reported peak temperature or energy), the
+//! zero-coupling differential (a *disabled* spec — any disabled spec, not
+//! just the default — runs bit-identical to the pre-coupling paths at 1/4/8
+//! workers for both the batch fleet and the stream), the lookahead-placement
+//! regression (a hand-built heat-wave fixture where the lookahead planner
+//! places the long job on the device that is warmer *now* but cooler over
+//! the horizon, while the instantaneous planner provably picks the other),
+//! the predicted-over-horizon autoscaler ranking, and the CI-pinned seed
+//! sweep: coupled fleet + stream fingerprints equal across worker counts
+//! for every seed, distinct across seeds.
+
+use thermovolt::config::Config;
+use thermovolt::fleet::scheduler::Job;
+use thermovolt::fleet::stream::{predicted_rack_score_c, RackSpec, StreamConfig, StreamSim};
+use thermovolt::fleet::telemetry::FleetTelemetry;
+use thermovolt::fleet::trace::Scenario;
+use thermovolt::fleet::{CouplingMatrix, CouplingSpec, Fleet, FleetConfig};
+use thermovolt::flow::{Effort, FlowSession};
+
+/// Small fleet with explicit coupling/lookahead knobs: one benchmark
+/// (single P&R + LUT build), short horizon, long overlapping jobs so
+/// neighbor exhaust actually lands on running work.
+fn small_fleet(
+    scenario: Scenario,
+    devices: usize,
+    jobs: usize,
+    seed: u64,
+    coupling: CouplingSpec,
+    lookahead_ms: f64,
+) -> Fleet {
+    let mut fcfg = FleetConfig::new(devices, jobs, scenario);
+    fcfg.seed = seed;
+    fcfg.horizon_ms = 240_000.0;
+    fcfg.benches = vec!["mkPktMerge".to_string()];
+    fcfg.lut_step_c = 25.0;
+    fcfg.coupling = coupling;
+    fcfg.lookahead_ms = lookahead_ms;
+    Fleet::build(fcfg, &Config::new()).expect("fleet build")
+}
+
+/// Small stream with explicit coupling/lookahead knobs, built through the
+/// same deployment-corner adjustment the session front door applies.
+fn small_sim(seed: u64, coupling: CouplingSpec, lookahead_ms: f64) -> StreamSim {
+    let mut scfg = StreamConfig::new(3, 2, Scenario::Diurnal);
+    scfg.seed = seed;
+    scfg.horizon_ms = 240_000.0;
+    scfg.benches = vec!["mkPktMerge".to_string()];
+    scfg.arrival_rate_hz = 0.4;
+    scfg.duration_mean_ms = 8_000.0;
+    scfg.lut_step_c = 25.0;
+    scfg.coupling = coupling;
+    scfg.lookahead_ms = lookahead_ms;
+    let (t_base, theta) = scfg.scenario.corner();
+    let mut cfg = Config::new();
+    cfg.flow.t_amb = t_base;
+    cfg.thermal.theta_ja = theta;
+    let mut session = FlowSession::with_effort(cfg, Effort::Quick).expect("session");
+    StreamSim::build(&mut session, &scfg).expect("stream build")
+}
+
+#[test]
+fn coupling_matrix_symmetry_and_row_bounds_hold_across_specs() {
+    // the two properties the fixed point rests on, over a grid of specs:
+    // symmetry (both directions of a pair couple identically, even at the
+    // rack edges) and the row-sum energy bound (a slot redistributes at
+    // most `exhaust_fraction < 1` of a neighbor watt — heat moves, it is
+    // never created, and the mutual-heating feedback gain stays below 1)
+    for &n in &[1usize, 2, 3, 8, 16] {
+        for &neighbors in &[1usize, 2, 4] {
+            for &decay in &[0.35, 0.5, 1.0] {
+                for &ef in &[0.15, 0.6] {
+                    let spec = CouplingSpec {
+                        exhaust_fraction: ef,
+                        theta_air_c_per_w: 30.0,
+                        neighbors,
+                        decay,
+                    };
+                    spec.validate().expect("grid spec must be valid");
+                    let m = CouplingMatrix::build(&spec, n);
+                    assert_eq!(m.len(), n);
+                    for i in 0..n {
+                        for j in 0..n {
+                            assert_eq!(
+                                m.entry(i, j).to_bits(),
+                                m.entry(j, i).to_bits(),
+                                "k({i},{j}) != k({j},{i}) at n={n} r={neighbors}"
+                            );
+                        }
+                        assert_eq!(
+                            m.entry(i, i).to_bits(),
+                            0.0f64.to_bits(),
+                            "self-coupling at slot {i}"
+                        );
+                        // row sum as a power fraction: bounded by ef
+                        // everywhere, exactly ef for interior slots, and at
+                        // most ef/2 on the first slot (its whole left-side
+                        // exhaust leaves the rack)
+                        let frac: f64 = m
+                            .row(i)
+                            .iter()
+                            .map(|&(_, k)| k / spec.theta_air_c_per_w)
+                            .sum();
+                        assert!(
+                            frac <= ef + 1e-12,
+                            "row {i} redistributes {frac} > {ef} at n={n}"
+                        );
+                        if i >= neighbors && i + neighbors < n {
+                            assert!(
+                                (frac - ef).abs() < 1e-12,
+                                "interior row {i} sums to {frac}, want {ef}"
+                            );
+                        }
+                    }
+                    if n >= 2 {
+                        let edge: f64 = m
+                            .row(0)
+                            .iter()
+                            .map(|&(_, k)| k / spec.theta_air_c_per_w)
+                            .sum();
+                        assert!(edge <= 0.5 * ef + 1e-12, "edge slot exceeds ef/2");
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn disabled_or_singleton_coupling_is_exactly_zero() {
+    // a disabled matrix is not "small" — it is structurally empty, and its
+    // rise is the literal 0.0 the bit-identity contract needs
+    for m in [
+        CouplingMatrix::build(&CouplingSpec::none(), 8),
+        CouplingMatrix::build(&CouplingSpec::rack(0.0), 8),
+        CouplingMatrix::build(&CouplingSpec::rack(0.5), 1),
+    ] {
+        for i in 0..m.len() {
+            assert!(m.row(i).is_empty());
+            assert_eq!(m.rise_with(i, |_| 10.0).to_bits(), 0.0f64.to_bits());
+        }
+    }
+    assert!(!CouplingSpec::none().enabled());
+    assert!(!CouplingSpec::rack(0.0).enabled());
+    assert!(CouplingSpec::rack(0.1).enabled());
+}
+
+#[test]
+fn fleet_build_rejects_bad_coupling_and_lookahead() {
+    // validation runs before any expensive build work
+    let mut fcfg = FleetConfig::new(2, 2, Scenario::Diurnal);
+    fcfg.coupling = CouplingSpec {
+        exhaust_fraction: 1.0,
+        ..CouplingSpec::rack(0.2)
+    };
+    let err = match Fleet::build(fcfg, &Config::new()) {
+        Ok(_) => panic!("ef=1.0 must be rejected"),
+        Err(e) => e,
+    };
+    assert!(
+        err.to_string().contains("exhaust_fraction"),
+        "unexpected error: {err}"
+    );
+
+    let mut fcfg = FleetConfig::new(2, 2, Scenario::Diurnal);
+    fcfg.lookahead_ms = -1.0;
+    let err = match Fleet::build(fcfg, &Config::new()) {
+        Ok(_) => panic!("negative lookahead must be rejected"),
+        Err(e) => e,
+    };
+    assert!(
+        err.to_string().contains("lookahead_ms"),
+        "unexpected error: {err}"
+    );
+}
+
+#[test]
+fn zero_coupling_fleet_is_bit_identical_to_the_default_path_across_workers() {
+    // the differential the whole gating scheme answers for: ANY disabled
+    // spec — not just the default `none()` — must leave the fleet on the
+    // exact pre-coupling code paths. A weird-but-disabled spec and the
+    // default must collide bitwise at every worker count.
+    let base = small_fleet(Scenario::Diurnal, 4, 10, 0xC0_0B1E, CouplingSpec::none(), 0.0);
+    let weird_off = CouplingSpec {
+        exhaust_fraction: 0.0,
+        theta_air_c_per_w: 77.0,
+        neighbors: 5,
+        decay: 0.9,
+    };
+    let off = small_fleet(Scenario::Diurnal, 4, 10, 0xC0_0B1E, weird_off, 0.0);
+    let plan_base = base.plan();
+    let plan_off = off.plan();
+    assert_eq!(plan_base.assignments.len(), plan_off.assignments.len());
+    for (a, b) in plan_base.assignments.iter().zip(&plan_off.assignments) {
+        assert_eq!(a.device, b.device);
+        assert_eq!(a.start_ms.to_bits(), b.start_ms.to_bits());
+        assert_eq!(a.coupling_offset_c.to_bits(), 0.0f64.to_bits());
+        assert_eq!(b.coupling_offset_c.to_bits(), 0.0f64.to_bits());
+    }
+    let fp_base = FleetTelemetry::aggregate(4, base.execute(&plan_base, 1)).fingerprint();
+    for workers in [1usize, 4, 8] {
+        let t = FleetTelemetry::aggregate(4, off.execute(&plan_off, workers));
+        assert_eq!(
+            fp_base,
+            t.fingerprint(),
+            "disabled coupling diverged at {workers} workers"
+        );
+        assert_eq!(t.coupling_offset_max_c.to_bits(), 0.0f64.to_bits());
+    }
+}
+
+#[test]
+fn zero_coupling_stream_is_bit_identical_to_the_default_path_across_workers() {
+    let base = small_sim(0x57AE_A31, CouplingSpec::none(), 0.0);
+    let weird_off = CouplingSpec {
+        exhaust_fraction: 0.0,
+        theta_air_c_per_w: 77.0,
+        neighbors: 5,
+        decay: 0.9,
+    };
+    let off = small_sim(0x57AE_A31, weird_off, 0.0);
+    let t_base = base.run(1);
+    for workers in [1usize, 4, 8] {
+        let t = off.run(workers);
+        assert_eq!(
+            t_base.fingerprint(),
+            t.fingerprint(),
+            "disabled coupling diverged at {workers} workers"
+        );
+        assert_eq!(t_base.decision_fingerprint, t.decision_fingerprint);
+    }
+}
+
+#[test]
+fn more_coupling_never_lowers_peak_temperature_or_energy() {
+    // monotonicity: the instantaneous planner is coupling-blind, so the
+    // placement is pinned across exhaust fractions and only the physics
+    // moves — hotter inlets can only raise the junction peaks and the
+    // energy the LUT must spend to hold timing at them
+    let efs = [0.0, 0.2, 0.5, 0.8];
+    let mut prev_peak_c = f64::NEG_INFINITY;
+    let mut prev_energy_j = f64::NEG_INFINITY;
+    let mut tels: Vec<FleetTelemetry> = Vec::new();
+    let mut first_plan: Option<Vec<(usize, u64)>> = None;
+    for &ef in &efs {
+        let fleet = small_fleet(Scenario::HeatWave, 3, 12, 0x1707, CouplingSpec::rack(ef), 0.0);
+        let plan = fleet.plan();
+        let shape: Vec<(usize, u64)> = plan
+            .assignments
+            .iter()
+            .map(|a| (a.device, a.start_ms.to_bits()))
+            .collect();
+        match &first_plan {
+            None => first_plan = Some(shape),
+            Some(p) => assert_eq!(p, &shape, "coupling leaked into the instantaneous planner"),
+        }
+        let tel = FleetTelemetry::aggregate(3, fleet.execute(&plan, 2));
+        let peak_c = tel
+            .jobs
+            .iter()
+            .map(|j| j.peak_t_junct_c)
+            .fold(f64::NEG_INFINITY, f64::max);
+        assert!(
+            peak_c >= prev_peak_c - 1e-9,
+            "peak fell from {prev_peak_c} to {peak_c} at ef={ef}"
+        );
+        assert!(
+            tel.energy_dyn_j >= prev_energy_j - 1e-9,
+            "dyn energy fell from {prev_energy_j} to {} at ef={ef}",
+            tel.energy_dyn_j
+        );
+        prev_peak_c = peak_c;
+        prev_energy_j = tel.energy_dyn_j;
+        tels.push(tel);
+    }
+    // 12 long jobs on 3 coupled devices overlap heavily: the coupled runs
+    // must actually see neighbor exhaust, and linearly in ef (identical
+    // plan + busy pattern, k ∝ ef)
+    assert!(tels[1].coupling_offset_max_c > 0.0, "no job ever saw a busy neighbor");
+    assert!(
+        (tels[3].coupling_offset_max_c - 4.0 * tels[1].coupling_offset_max_c).abs()
+            < 1e-6 * tels[3].coupling_offset_max_c,
+        "coupled rise is not linear in exhaust_fraction"
+    );
+    // and the coupled fleet is genuinely different from the uncoupled one
+    assert_ne!(tels[0].fingerprint(), tels[2].fingerprint());
+}
+
+/// Hand-built heat-wave fixture: 4 slots `[D, A, B, C]` with radius-1
+/// coupling sized so one busy neighbor raises an inlet by ≈ 2 °C.
+///
+/// * slot 0 (D) runs a short job `[0, 5 s)`;
+/// * slot 3 (C) runs a long job `[0, 150 s)`;
+/// * the probe job (100 s) arrives at t = 1 s with slots 1 (A, offset
+///   +0.5 °C) and 2 (B, +0.2 °C) idle.
+///
+/// *Now*, A is the warmer choice: its neighbor D is still busy (+2 °C ⇒
+/// amb + 2.5) vs B's busy neighbor C (amb + 2.2) — and even coupling-blind,
+/// A's static offset alone makes it warmer. *Over the 100 s horizon* the
+/// picture inverts: D finishes at 5 s (every lookahead sample sees A at
+/// amb + 0.5) while C burns on until 150 s (B stays at amb + 2.2).
+fn lookahead_fixture(lookahead_ms: f64) -> Fleet {
+    let mut fcfg = FleetConfig::new(4, 3, Scenario::HeatWave);
+    fcfg.seed = 0xF17;
+    fcfg.horizon_ms = 240_000.0;
+    fcfg.benches = vec!["mkPktMerge".to_string()];
+    fcfg.lut_step_c = 25.0;
+    fcfg.lookahead_ms = lookahead_ms;
+    let mut fleet = Fleet::build(fcfg, &Config::new()).expect("fleet build");
+    // equalize the roster so placement is decided by offsets + coupling
+    // alone, then pin the offsets the scenario narrative needs
+    let offsets_c = [0.0, 0.5, 0.2, 0.0];
+    for (spec, &off_c) in fleet.specs.iter_mut().zip(&offsets_c) {
+        spec.theta_ja = 6.0;
+        spec.tau_ms = 2_000.0;
+        spec.power_scale = 1.0;
+        spec.rack_offset_c = off_c;
+    }
+    // slow 45 → 65 °C ramp: the ambient forecast is smooth and identical
+    // for every slot, so it cancels out of the placement comparison
+    fleet.ambient = vec![(0.0, 45.0), (240_000.0, 65.0)];
+    fleet.jobs = vec![
+        Job { id: 0, kind: 0, arrival_ms: 0.0, duration_ms: 5_000.0 },
+        Job { id: 1, kind: 0, arrival_ms: 0.0, duration_ms: 150_000.0 },
+        Job { id: 2, kind: 0, arrival_ms: 1_000.0, duration_ms: 100_000.0 },
+    ];
+    // radius-1 coupling sized so k·P̂ ≈ 2 °C per busy neighbor
+    // (k = θ_air · ef / 2 with the two-sided mass of radius 1)
+    let p_w = fleet.kinds[0].power_estimate();
+    let spec = CouplingSpec {
+        exhaust_fraction: 0.4,
+        theta_air_c_per_w: 2.0 / (0.2 * p_w),
+        neighbors: 1,
+        decay: 0.5,
+    };
+    fleet.cfg.coupling = spec;
+    fleet.coupling = CouplingMatrix::build(&spec, 4);
+    fleet
+}
+
+#[test]
+fn lookahead_places_the_long_job_on_the_cooler_over_horizon_device() {
+    // sanity-check the fixture's coupling scale: one busy neighbor ≈ 2 °C
+    let probe = lookahead_fixture(0.0);
+    let p_w = probe.kinds[0].power_estimate();
+    let rise_c = probe.coupling.rise_with(1, |j| if j == 0 { p_w } else { 0.0 });
+    assert!((rise_c - 2.0).abs() < 1e-9, "fixture rise {rise_c} != 2 C");
+
+    // instantaneous planner: coupling-blind, so the probe job goes to B
+    // (slot 2, +0.2 °C) — the slot that will bake next to C for 150 s
+    let plan_i = probe.plan();
+    assert_eq!(plan_i.assignments[0].device, 0, "short job must open on D");
+    assert_eq!(plan_i.assignments[1].device, 3, "long job must open on C");
+    assert_eq!(
+        plan_i.assignments[2].device, 2,
+        "the instantaneous planner must pick B on its static offset"
+    );
+    assert!((plan_i.assignments[2].start_ms - 1_000.0).abs() < 1e-9);
+
+    // lookahead planner: same fleet, 100 s horizon — the probe job goes to
+    // A, warmer now (busy neighbor D + bigger offset) but cooler over the
+    // horizon once D finishes at 5 s
+    let look = lookahead_fixture(100_000.0);
+    let plan_l = look.plan();
+    assert_eq!(plan_l.assignments[0].device, 0);
+    assert_eq!(plan_l.assignments[1].device, 3);
+    assert_eq!(
+        plan_l.assignments[2].device, 1,
+        "the lookahead planner must pick A — cooler over the horizon"
+    );
+    // banking must not have deferred it: A is idle and the queued slots
+    // offer no ≥ 1 °C gain, so the job starts at its arrival
+    assert!((plan_l.assignments[2].start_ms - 1_000.0).abs() < 1e-9);
+    // the probe job starts under D's exhaust — the recorded offset says so
+    assert!((plan_l.assignments[2].coupling_offset_c - 2.0).abs() < 1e-6);
+}
+
+#[test]
+fn predicted_autoscaler_ranks_racks_by_horizon_not_instant() {
+    // 4 racks, radius-1 coupling with k = 2 °C/W. Rack 0 holds a deep
+    // queue (occupied for the whole horizon), rack 3 is draining (5 % of
+    // it). Instantaneous offsets say rack 1 (+0.2) is cooler than rack 2
+    // (+0.8); the horizon forecast says the opposite — rack 1 sits next to
+    // the still-busy rack 0 (+2.0 °C) while rack 2's neighbor is almost
+    // done (+0.1 °C).
+    let spec = CouplingSpec {
+        exhaust_fraction: 0.5,
+        theta_air_c_per_w: 8.0,
+        neighbors: 1,
+        decay: 0.5,
+    };
+    let coupling = CouplingMatrix::build(&spec, 4);
+    let racks: Vec<RackSpec> = [0.0, 0.2, 0.8, 0.0]
+        .iter()
+        .enumerate()
+        .map(|(id, &offset_c)| RackSpec { id, theta_ja: 5.0, offset_c })
+        .collect();
+    let amb_times = [0.0, 100_000.0];
+    let amb_temps = [50.0, 50.0];
+    let lookahead_ms = 20_000.0;
+    let busy_w = [1.0, 0.0, 0.0, 1.0];
+    let drain_ms = [200_000.0, 0.0, 0.0, 1_000.0];
+    let score = |r: usize| {
+        predicted_rack_score_c(
+            &racks[r],
+            &coupling,
+            (&amb_times[..], &amb_temps[..]),
+            0.0,
+            lookahead_ms,
+            &busy_w,
+            &drain_ms,
+        )
+    };
+    assert!((score(0) - 50.0).abs() < 1e-9, "idle-neighbor rack 0 is just ambient");
+    assert!((score(1) - 52.2).abs() < 1e-9, "rack 1 bakes next to the deep queue");
+    assert!((score(2) - 50.9).abs() < 1e-9, "rack 2's neighbor is 5 % occupied");
+    assert!(
+        score(2) < score(1),
+        "predicted ranking must invert the static-offset order"
+    );
+    // instantaneous (static-offset) order would rank rack 1 first — that
+    // inversion is exactly the bug the predicted autoscaler fixes
+    assert!(racks[1].offset_c < racks[2].offset_c);
+
+    // a disabled matrix degrades the score to forecast + offset, exactly
+    let none = CouplingMatrix::build(&CouplingSpec::none(), 4);
+    let flat = predicted_rack_score_c(
+        &racks[2],
+        &none,
+        (&amb_times[..], &amb_temps[..]),
+        0.0,
+        lookahead_ms,
+        &busy_w,
+        &drain_ms,
+    );
+    assert_eq!(flat.to_bits(), (50.0 + 0.8f64).to_bits());
+}
+
+#[test]
+fn coupled_fleet_and_stream_fingerprints_are_seed_stable_across_workers() {
+    // CI pins this one: with coupling AND lookahead on, every seed must be
+    // bit-identical across 1/4/8 workers, and seeds must not collide
+    let mut fleet_fps = Vec::new();
+    let mut stream_fps = Vec::new();
+    for &seed in &[0xA11CE_u64, 0x0B0B, 0xC4_A51E] {
+        let fleet = small_fleet(
+            Scenario::HeatWave,
+            4,
+            10,
+            seed,
+            CouplingSpec::rack(0.3),
+            60_000.0,
+        );
+        let plan = fleet.plan();
+        let fp1 = FleetTelemetry::aggregate(4, fleet.execute(&plan, 1)).fingerprint();
+        for workers in [4usize, 8] {
+            let fp = FleetTelemetry::aggregate(4, fleet.execute(&plan, workers)).fingerprint();
+            assert_eq!(fp1, fp, "seed {seed:#x} fleet diverged at {workers} workers");
+        }
+        fleet_fps.push(fp1);
+
+        let sim = small_sim(seed, CouplingSpec::rack(0.3), 30_000.0);
+        let t1 = sim.run(1);
+        for workers in [4usize, 8] {
+            let t = sim.run(workers);
+            assert_eq!(
+                t1.fingerprint(),
+                t.fingerprint(),
+                "seed {seed:#x} stream diverged at {workers} workers"
+            );
+            assert_eq!(t1.decision_fingerprint, t.decision_fingerprint);
+        }
+        stream_fps.push(t1.fingerprint());
+    }
+    for i in 0..fleet_fps.len() {
+        for j in (i + 1)..fleet_fps.len() {
+            assert_ne!(fleet_fps[i], fleet_fps[j], "fleet seeds {i} and {j} collided");
+            assert_ne!(stream_fps[i], stream_fps[j], "stream seeds {i} and {j} collided");
+        }
+    }
+}
